@@ -1,0 +1,62 @@
+//! Compare every scheduling algorithm on one cluster configuration with
+//! common random numbers — a compact version of the paper's Tables IX–XI
+//! row set, runnable in seconds (heuristics) or minutes (with RL rows).
+//!
+//!     cargo run --release --example compare_policies -- \
+//!         [--nodes 4] [--rate 0.05] [--episodes 3] [--algs greedy,random,...]
+
+use eat::config::{Algorithm, ExperimentConfig};
+use eat::coordinator::evaluate;
+use eat::experiments::trained_policy;
+use eat::runtime::Runtime;
+use eat::util::cli::Args;
+use eat::util::table::{f, Table};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let nodes = args.get_usize("nodes", 4);
+    let rate = args.get_f64("rate", 0.05);
+    let episodes = args.get_usize("episodes", 3);
+    let train_episodes = args.get_usize("train-episodes", 1);
+    let algs: Vec<Algorithm> = match args.get("algs") {
+        // Default to the fast heuristic set; add RL names to include them.
+        None => vec![
+            Algorithm::Greedy,
+            Algorithm::Random,
+            Algorithm::Harmony,
+            Algorithm::Genetic,
+        ],
+        Some(s) => s
+            .split(',')
+            .map(|x| Algorithm::parse(x.trim()))
+            .collect::<Result<_, _>>()?,
+    };
+    let needs_rt = algs.iter().any(|a| a.artifact_key().is_some());
+    let rt = if needs_rt {
+        Some(Runtime::new("artifacts")?)
+    } else {
+        None
+    };
+
+    let mut table = Table::new(
+        &format!("Policy comparison ({nodes} nodes, rate {rate}, {episodes} episodes)"),
+        &["Algorithm", "Quality", "Latency (s)", "Reload", "Efficiency", "Decision (s)"],
+    );
+    for alg in algs {
+        let mut cfg = ExperimentConfig::preset(nodes);
+        cfg.env.arrival_rate = rate;
+        cfg.algorithm = alg;
+        let mut policy = trained_policy(&cfg, rt.as_ref(), train_episodes, false)?;
+        let s = evaluate(&cfg, policy.as_mut(), episodes);
+        table.row(vec![
+            s.algorithm.clone(),
+            f(s.avg_quality, 3),
+            f(s.avg_response_latency, 1),
+            f(s.reload_rate, 3),
+            format!("{:.2e}", s.efficiency),
+            format!("{:.2e}", s.decision_latency_s),
+        ]);
+    }
+    println!("{}", table.render());
+    Ok(())
+}

@@ -1,0 +1,43 @@
+//! Quickstart: build an 8-server edge cluster, run one episode with the
+//! Greedy baseline and (if `make artifacts` has been run) one with the EAT
+//! diffusion policy, and print the QoS metrics the paper optimises.
+//!
+//!     cargo run --release --example quickstart
+
+use eat::config::{Algorithm, ExperimentConfig};
+use eat::coordinator::run_episode;
+use eat::policy::{build_policy, GreedyPolicy};
+use eat::runtime::Runtime;
+use eat::sim::env::EdgeEnv;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Configure the paper's 8-node cluster at arrival rate 0.1.
+    let cfg = ExperimentConfig::preset_8node(0.1);
+
+    // 2. Run the Greedy baseline (no artifacts needed).
+    let mut env = EdgeEnv::new(cfg.env.clone(), cfg.seed);
+    let mut greedy = GreedyPolicy::new(cfg.env.clone());
+    let report = run_episode(&mut env, &mut greedy, None);
+    println!(
+        "Greedy : quality {:.3}  response latency {:.1}s  reload rate {:.2}",
+        report.avg_quality, report.avg_response_latency, report.reload_rate
+    );
+
+    // 3. Run the (untrained) EAT diffusion policy through the PJRT runtime.
+    match Runtime::new(&cfg.artifacts_dir) {
+        Ok(rt) => {
+            let mut eat_cfg = cfg.clone();
+            eat_cfg.algorithm = Algorithm::Eat;
+            let mut policy = build_policy(&eat_cfg, Some(&rt))?;
+            let mut env = EdgeEnv::new(cfg.env.clone(), cfg.seed);
+            let report = run_episode(&mut env, policy.as_mut(), None);
+            println!(
+                "EAT    : quality {:.3}  response latency {:.1}s  reload rate {:.2}  \
+                 (untrained weights; see `eat train`)",
+                report.avg_quality, report.avg_response_latency, report.reload_rate
+            );
+        }
+        Err(e) => println!("EAT    : skipped ({e}); run `make artifacts` first"),
+    }
+    Ok(())
+}

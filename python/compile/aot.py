@@ -1,0 +1,300 @@
+"""AOT bridge: lower every (algorithm x topology) act/train function to HLO
+text, dump freshly-initialised parameter vectors, and write the manifest the
+rust runtime consumes.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version behind the published `xla` crate) rejects; the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage (from python/):
+    python -m compile.aot --out-dir ../artifacts            # full grid
+    python -m compile.aot --out-dir ../artifacts --quick    # n8l8, eat+ppo
+"""
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+# Topologies matching the paper's 4/8/12-node clusters (rust
+# config::ExperimentConfig presets use the same queue windows).
+TOPOLOGIES = {
+    "n4l6": (4, 6),
+    "n8l8": (8, 8),
+    "n12l8": (12, 8),
+}
+SAC_ALGS = ["eat", "eat_a", "eat_d", "eat_da"]
+ALL_ALGS = SAC_ALGS + ["ppo"]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec_entry(name, arr_or_shape):
+    shape = list(arr_or_shape.shape) if hasattr(arr_or_shape, "shape") else list(arr_or_shape)
+    return {"name": name, "shape": shape}
+
+
+def _write(path, text):
+    with open(path, "w") as f:
+        f.write(text)
+
+
+def _dump_f32(path, arr):
+    np.asarray(arr, dtype="<f4").tofile(path)
+
+
+def lower_sac(alg: str, topo: str, out_dir: str, batch: int, denoise: int, manifest):
+    servers, window = TOPOLOGIES[topo]
+    spec = model.make_spec(
+        alg, servers, window, denoise_steps=denoise, batch_size=batch
+    )
+    built = model.build_sac(spec)
+    P = built["actor_flat0"].shape[0]
+    C = built["critic1_flat0"].shape[0]
+    A = spec.action_dim
+    S = spec.state_dim
+    T1 = spec.denoise_steps + 1 if spec.use_diffusion else 0
+    f32 = jnp.float32
+    sds = jax.ShapeDtypeStruct
+
+    key = f"{alg}_{topo}"
+    use_diffusion = T1 > 0  # EAT-D / EAT-DA lower without chain inputs
+
+    # --- act ---------------------------------------------------------------
+    act_inputs = [
+        ("actor", (P,)),
+        ("state", (S,)),
+    ]
+    if use_diffusion:
+        act_inputs.append(("chain_noise", (T1, A)))
+    act_inputs.append(("expl_noise", (A,)))
+    lowered = jax.jit(built["act"]).lower(*[sds(s, f32) for _, s in act_inputs])
+    act_file = f"{key}_act.hlo.txt"
+    _write(os.path.join(out_dir, act_file), to_hlo_text(lowered))
+    manifest["entries"][f"{key}_act"] = {
+        "file": act_file,
+        "inputs": [_spec_entry(n, s) for n, s in act_inputs],
+        "outputs": [
+            _spec_entry("action", (A,)),
+            _spec_entry("mean", (A,)),
+            _spec_entry("log_sigma", (A,)),
+        ],
+    }
+
+    # --- train -------------------------------------------------------------
+    B = spec.batch_size
+    train_inputs = [
+        ("actor", (P,)),
+        ("critic1", (C,)),
+        ("critic2", (C,)),
+        ("critic1_target", (C,)),
+        ("critic2_target", (C,)),
+        ("m_actor", (P,)),
+        ("v_actor", (P,)),
+        ("m_critic1", (C,)),
+        ("v_critic1", (C,)),
+        ("m_critic2", (C,)),
+        ("v_critic2", (C,)),
+        ("t", ()),
+        ("s", (B, S)),
+        ("a", (B, A)),
+        ("r", (B,)),
+        ("s2", (B, S)),
+        ("done", (B,)),
+    ]
+    if use_diffusion:
+        train_inputs.append(("chain_s", (B, T1, A)))
+        train_inputs.append(("chain_s2", (B, T1, A)))
+    train_inputs.append(("expl_s", (B, A)))
+    train_inputs.append(("expl_s2", (B, A)))
+    lowered = jax.jit(built["train"]).lower(*[sds(s, f32) for _, s in train_inputs])
+    train_file = f"{key}_train.hlo.txt"
+    _write(os.path.join(out_dir, train_file), to_hlo_text(lowered))
+    manifest["entries"][f"{key}_train"] = {
+        "file": train_file,
+        "inputs": [_spec_entry(n, s) for n, s in train_inputs],
+        "outputs": [
+            _spec_entry(n, s)
+            for n, s in [
+                ("actor", (P,)),
+                ("critic1", (C,)),
+                ("critic2", (C,)),
+                ("critic1_target", (C,)),
+                ("critic2_target", (C,)),
+                ("m_actor", (P,)),
+                ("v_actor", (P,)),
+                ("m_critic1", (C,)),
+                ("v_critic1", (C,)),
+                ("m_critic2", (C,)),
+                ("v_critic2", (C,)),
+                ("t", ()),
+                ("actor_loss", ()),
+                ("critic_loss", ()),
+                ("mean_q", ()),
+                ("entropy", ()),
+            ]
+        ],
+    }
+
+    # --- initial parameters --------------------------------------------------
+    init_files = {}
+    for net, arr in [
+        ("actor", built["actor_flat0"]),
+        ("critic1", built["critic1_flat0"]),
+        ("critic2", built["critic2_flat0"]),
+    ]:
+        fname = f"{key}_init_{net}.f32"
+        _dump_f32(os.path.join(out_dir, fname), arr)
+        init_files[net] = fname
+    manifest["params"][key] = {
+        "actor_len": int(P),
+        "critic_len": int(C),
+        "action_dim": int(A),
+        "state_dim": int(S),
+        "chain_steps": int(T1),
+        "batch_size": int(B),
+        "init_files": init_files,
+    }
+
+
+def lower_ppo(topo: str, out_dir: str, batch: int, manifest):
+    servers, window = TOPOLOGIES[topo]
+    spec = model.make_spec("ppo", servers, window, batch_size=batch)
+    built = model.build_ppo(spec)
+    P = built["actor_flat0"].shape[0]
+    C = built["critic_flat0"].shape[0]
+    A = spec.action_dim
+    S = spec.state_dim
+    f32 = jnp.float32
+    sds = jax.ShapeDtypeStruct
+    key = f"ppo_{topo}"
+
+    act_inputs = [
+        ("actor", (P,)),
+        ("critic", (C,)),
+        ("state", (S,)),
+        ("expl_noise", (A,)),
+    ]
+    lowered = jax.jit(built["act"]).lower(*[sds(s, f32) for _, s in act_inputs])
+    act_file = f"{key}_act.hlo.txt"
+    _write(os.path.join(out_dir, act_file), to_hlo_text(lowered))
+    manifest["entries"][f"{key}_act"] = {
+        "file": act_file,
+        "inputs": [_spec_entry(n, s) for n, s in act_inputs],
+        "outputs": [
+            _spec_entry("action", (A,)),
+            _spec_entry("logp", ()),
+            _spec_entry("value", ()),
+        ],
+    }
+
+    B = spec.batch_size
+    train_inputs = [
+        ("actor", (P,)),
+        ("critic", (C,)),
+        ("m_actor", (P,)),
+        ("v_actor", (P,)),
+        ("m_critic", (C,)),
+        ("v_critic", (C,)),
+        ("t", ()),
+        ("s", (B, S)),
+        ("a", (B, A)),
+        ("old_logp", (B,)),
+        ("adv", (B,)),
+        ("ret", (B,)),
+    ]
+    lowered = jax.jit(built["train"]).lower(*[sds(s, f32) for _, s in train_inputs])
+    train_file = f"{key}_train.hlo.txt"
+    _write(os.path.join(out_dir, train_file), to_hlo_text(lowered))
+    manifest["entries"][f"{key}_train"] = {
+        "file": train_file,
+        "inputs": [_spec_entry(n, s) for n, s in train_inputs],
+        "outputs": [
+            _spec_entry(n, s)
+            for n, s in [
+                ("actor", (P,)),
+                ("critic", (C,)),
+                ("m_actor", (P,)),
+                ("v_actor", (P,)),
+                ("m_critic", (C,)),
+                ("v_critic", (C,)),
+                ("t", ()),
+                ("pi_loss", ()),
+                ("v_loss", ()),
+                ("entropy", ()),
+                ("approx_kl", ()),
+            ]
+        ],
+    }
+
+    init_files = {}
+    for net, arr in [("actor", built["actor_flat0"]), ("critic", built["critic_flat0"])]:
+        fname = f"{key}_init_{net}.f32"
+        _dump_f32(os.path.join(out_dir, fname), arr)
+        init_files[net] = fname
+    manifest["params"][key] = {
+        "actor_len": int(P),
+        "critic_len": int(C),
+        "action_dim": int(A),
+        "state_dim": int(S),
+        "chain_steps": 0,
+        "batch_size": int(B),
+        "init_files": init_files,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--topos", nargs="*", default=list(TOPOLOGIES))
+    ap.add_argument("--algs", nargs="*", default=ALL_ALGS)
+    ap.add_argument("--batch", type=int, default=128)
+    ap.add_argument("--denoise", type=int, default=10)
+    ap.add_argument("--quick", action="store_true", help="n8l8, eat+ppo only")
+    args = ap.parse_args()
+    if args.quick:
+        args.topos = ["n8l8"]
+        args.algs = ["eat", "ppo"]
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {
+        "version": 1,
+        "batch_size": args.batch,
+        "denoise_steps": args.denoise,
+        "entries": {},
+        "params": {},
+    }
+    t_start = time.time()
+    for topo in args.topos:
+        for alg in args.algs:
+            t0 = time.time()
+            if alg == "ppo":
+                lower_ppo(topo, args.out_dir, args.batch, manifest)
+            else:
+                lower_sac(alg, topo, args.out_dir, args.batch, args.denoise, manifest)
+            print(f"lowered {alg}_{topo} in {time.time() - t0:.1f}s", flush=True)
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(
+        f"wrote {len(manifest['entries'])} artifacts + manifest to "
+        f"{args.out_dir} in {time.time() - t_start:.1f}s"
+    )
+
+
+if __name__ == "__main__":
+    main()

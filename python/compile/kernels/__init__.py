@@ -1,0 +1,14 @@
+"""Layer-1 Pallas kernels (interpret mode) and their pure-jnp oracles.
+
+The scheduler's compute hot spots are (a) the attention feature extraction
+over the state sequence (paper Eq. 9) and (b) the diffusion denoiser MLP
+applied T times per action (paper Eqs. 10-12). Both are implemented as
+fused Pallas kernels so the whole per-decision compute is two kernel
+launches per denoise step; `ref.py` holds the jnp reference implementations
+that pytest checks them against.
+"""
+
+from compile.kernels.attention import attention_feature
+from compile.kernels.denoise import denoiser_mlp
+
+__all__ = ["attention_feature", "denoiser_mlp"]

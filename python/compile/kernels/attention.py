@@ -1,0 +1,104 @@
+"""Fused single-head self-attention feature extractor (Pallas, L1).
+
+The EAT state (Eq. 6) is a 3x(|E|+l) matrix; each column (one server or one
+queue slot) is a token. The kernel embeds each 3-vector token to d_model,
+runs scaled-dot-product self-attention (Eq. 9) over the N tokens, and
+projects each token back to a scalar, producing the feature vector
+f_s in R^N that conditions the diffusion policy (Table VII: attention layer
+output units = |E| + l).
+
+Everything (embed -> QKV -> softmax(QK^T/sqrt(d))V -> scalar head) is fused
+in one Pallas kernel: for the paper's sizes (N <= 20, d = 16) all operands
+fit VMEM comfortably (a few KiB per sample), so the whole computation is a
+single block with no HBM round-trips between the five matmuls. The batched
+variant keeps the batch dimension inside the same block — at B = 128,
+N = 20, d = 16 the live set is ~0.7 MiB, still far under a TPU core's
+~16 MiB VMEM (DESIGN.md §Perf has the footprint table).
+
+interpret=True: the CPU PJRT plugin cannot run Mosaic custom-calls; the
+interpret path lowers to plain HLO, which is what the AOT bridge ships to
+the rust runtime. See DESIGN.md §Hardware-Adaptation.
+"""
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _attention_kernel_batched(x_ref, we_ref, wq_ref, wk_ref, wv_ref, wo_ref, o_ref):
+    """x: (B, N, 3) tokens; we: (3, d); wq/wk/wv: (d, d); wo: (d, 1)."""
+    x = x_ref[...]
+    h = jnp.einsum("bnc,cd->bnd", x, we_ref[...])
+    q = jnp.einsum("bnd,de->bne", h, wq_ref[...])
+    k = jnp.einsum("bnd,de->bne", h, wk_ref[...])
+    v = jnp.einsum("bnd,de->bne", h, wv_ref[...])
+    d_k = q.shape[-1]
+    scores = jnp.einsum("bnd,bmd->bnm", q, k) / math.sqrt(d_k)
+    # Numerically stable softmax, single pass over VMEM-resident scores.
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores - m)
+    attn = e / jnp.sum(e, axis=-1, keepdims=True)
+    ctx = jnp.einsum("bnm,bmd->bnd", attn, v)
+    o_ref[...] = jnp.einsum("bnd,do->bno", ctx, wo_ref[...])[:, :, 0]
+
+
+def _attention_pallas(x, we, wq, wk, wv, wo):
+    b, n, _ = x.shape
+    return pl.pallas_call(
+        _attention_kernel_batched,
+        out_shape=jax.ShapeDtypeStruct((b, n), x.dtype),
+        interpret=True,
+    )(x, we, wq, wk, wv, wo)
+
+
+def _attention_ref(x, we, wq, wk, wv, wo):
+    h = jnp.einsum("bnc,cd->bnd", x, we)
+    q = jnp.einsum("bnd,de->bne", h, wq)
+    k = jnp.einsum("bnd,de->bne", h, wk)
+    v = jnp.einsum("bnd,de->bne", h, wv)
+    scores = jnp.einsum("bnd,bmd->bnm", q, k) / math.sqrt(q.shape[-1])
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores - m)
+    attn = e / jnp.sum(e, axis=-1, keepdims=True)
+    ctx = jnp.einsum("bnm,bmd->bnd", attn, v)
+    return jnp.einsum("bnd,do->bno", ctx, wo)[:, :, 0]
+
+
+@jax.custom_vjp
+def attention_feature_batched(x, we, wq, wk, wv, wo):
+    """f_s = fused-attention(x) for a batch of state matrices.
+
+    Args:
+      x: (B, N, 3) state tokens (columns of the Eq. 6 matrix, transposed).
+      we: (3, d) embedding; wq/wk/wv: (d, d); wo: (d, 1) scalar head.
+
+    Returns:
+      (B, N) feature vectors f_s.
+
+    Forward = fused Pallas kernel; backward = VJP of the bit-identical
+    reference (interpret-mode pallas_call has no reverse-mode rule; a real
+    TPU build would register a fused backward kernel here instead).
+    """
+    return _attention_pallas(x, we, wq, wk, wv, wo)
+
+
+def _attention_fwd(x, we, wq, wk, wv, wo):
+    out = _attention_pallas(x, we, wq, wk, wv, wo)
+    return out, (x, we, wq, wk, wv, wo)
+
+
+def _attention_bwd(res, g):
+    _, vjp = jax.vjp(_attention_ref, *res)
+    return vjp(g)
+
+
+attention_feature_batched.defvjp(_attention_fwd, _attention_bwd)
+
+
+@functools.partial(jax.jit)
+def attention_feature(x, we, wq, wk, wv, wo):
+    """Single-sample convenience wrapper: (N, 3) -> (N,)."""
+    return attention_feature_batched(x[None, ...], we, wq, wk, wv, wo)[0]

@@ -1,0 +1,33 @@
+"""Pure-jnp oracles for the Pallas kernels (pytest compares against these).
+
+Keep these boring and obviously correct: straight-line jnp with no Pallas,
+no fusion tricks. They double as the reference used by hypothesis sweeps in
+python/tests/test_kernels.py.
+"""
+
+import math
+
+import jax.numpy as jnp
+
+
+def mish(x):
+    return x * jnp.tanh(jnp.logaddexp(x, 0.0))
+
+
+def attention_feature_ref(x, we, wq, wk, wv, wo):
+    """Reference for kernels.attention.attention_feature."""
+    h = x @ we
+    q = h @ wq
+    k = h @ wk
+    v = h @ wv
+    scores = (q @ k.T) / math.sqrt(q.shape[-1])
+    attn = jnp.exp(scores - jnp.max(scores, axis=-1, keepdims=True))
+    attn = attn / jnp.sum(attn, axis=-1, keepdims=True)
+    return ((attn @ v) @ wo)[:, 0]
+
+
+def denoiser_mlp_ref(z, w1, b1, w2, b2, w3, b3):
+    """Reference for kernels.denoise.denoiser_mlp."""
+    h1 = mish(z @ w1 + b1)
+    h2 = mish(h1 @ w2 + b2)
+    return h2 @ w3 + b3

@@ -1,0 +1,560 @@
+"""Layer-2 JAX model: the EAT policy/critic networks and whole train steps.
+
+Implements, per the paper:
+  - attention feature extraction over the state sequence (Eq. 9, via the
+    L1 Pallas kernel `kernels.attention`),
+  - the diffusion-based policy (Eqs. 10-13, Fig. 3): T reverse-diffusion
+    steps through the fused denoiser-MLP kernel, a tanh-bounded action
+    mean, and a variance head producing an exploration Gaussian,
+  - SAC training (Eqs. 14-22): double critics, target networks, entropy
+    regularised actor objective, in-graph Adam (Table VIII) — the whole
+    update is ONE jitted function lowered to ONE HLO module,
+  - the PPO baseline (clip objective; GAE advantages computed by the rust
+    driver and passed in),
+  - the ablations: EAT-A (no attention), EAT-D (no diffusion), EAT-DA
+    (neither) — selected via `use_attention` / `use_diffusion`.
+
+Everything stochastic (diffusion chain noise, exploration noise) enters as
+explicit tensor inputs so the lowered HLO is pure; the rust coordinator's
+PCG64 supplies the noise at runtime.
+
+Parameters cross the AOT boundary as flat f32 vectors (ravel_pytree); the
+unflattener is baked into the lowered module, and `aot.py` records each
+network's length plus freshly-initialised parameter dumps in the manifest.
+"""
+
+import dataclasses
+import math
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
+
+from compile.kernels.attention import attention_feature_batched
+from compile.kernels.denoise import denoiser_mlp
+
+HIDDEN = 256          # FC width (Table VII)
+D_MODEL = 16          # attention embed dim
+TIME_DIM = 16         # diffusion timestep embedding (Table VII)
+LOG_SIG_MIN = -5.0
+LOG_SIG_MAX = 2.0
+
+
+@dataclasses.dataclass(frozen=True)
+class AlgoSpec:
+    """Static architecture description for one algorithm x topology."""
+
+    name: str             # eat | eat_a | eat_d | eat_da | ppo
+    num_servers: int      # |E|
+    queue_window: int     # l
+    denoise_steps: int    # T
+    batch_size: int       # B
+    gamma: float
+    entropy_alpha: float
+    soft_tau: float
+    lr_actor: float
+    lr_critic: float
+    weight_decay: float
+    ppo_clip: float = 0.2
+    ppo_value_coef: float = 0.5
+    ppo_entropy_coef: float = 0.01
+
+    @property
+    def n_cols(self):  # N = |E| + l
+        return self.num_servers + self.queue_window
+
+    @property
+    def state_dim(self):  # S = 3N
+        return 3 * self.n_cols
+
+    @property
+    def action_dim(self):  # A = [a_c, a_s, a_k1..a_kl]
+        return 2 + self.queue_window
+
+    @property
+    def use_attention(self):
+        return self.name in ("eat", "eat_d")
+
+    @property
+    def use_diffusion(self):
+        return self.name in ("eat", "eat_a")
+
+    @property
+    def feature_dim(self):
+        # Attention path emits f_s in R^N (Table VII); MLP path consumes
+        # the flat state directly.
+        return self.n_cols if self.use_attention else self.state_dim
+
+
+# --------------------------------------------------------------------------
+# Parameter initialisation
+# --------------------------------------------------------------------------
+
+
+def _dense_init(key, fan_in, fan_out):
+    lim = 1.0 / math.sqrt(fan_in)
+    kw, kb = jax.random.split(key)
+    w = jax.random.uniform(kw, (fan_in, fan_out), jnp.float32, -lim, lim)
+    b = jax.random.uniform(kb, (fan_out,), jnp.float32, -lim, lim)
+    return w, b
+
+
+def init_actor_params(spec: AlgoSpec, key):
+    """Actor parameter pytree (attention + eps-net/MLP + variance head)."""
+    params = {}
+    keys = jax.random.split(key, 8)
+    if spec.use_attention:
+        lim = 1.0 / math.sqrt(3)
+        params["att_we"] = jax.random.uniform(keys[0], (3, D_MODEL), jnp.float32, -lim, lim)
+        lim = 1.0 / math.sqrt(D_MODEL)
+        params["att_wq"] = jax.random.uniform(keys[1], (D_MODEL, D_MODEL), jnp.float32, -lim, lim)
+        params["att_wk"] = jax.random.uniform(keys[2], (D_MODEL, D_MODEL), jnp.float32, -lim, lim)
+        params["att_wv"] = jax.random.uniform(keys[3], (D_MODEL, D_MODEL), jnp.float32, -lim, lim)
+        params["att_wo"] = jax.random.uniform(keys[4], (D_MODEL, 1), jnp.float32, -lim, lim)
+    a_dim = spec.action_dim
+    if spec.use_diffusion:
+        c_in = a_dim + TIME_DIM + spec.feature_dim
+    else:
+        c_in = spec.feature_dim
+    w1, b1 = _dense_init(keys[5], c_in, HIDDEN)
+    w2, b2 = _dense_init(keys[6], HIDDEN, HIDDEN)
+    w3, b3 = _dense_init(keys[7], HIDDEN, a_dim)
+    params.update(mlp_w1=w1, mlp_b1=b1, mlp_w2=w2, mlp_b2=b2, mlp_w3=w3, mlp_b3=b3)
+    # Variance head: mean -> log sigma (paper: "passing the mean through an
+    # additional linear layer").
+    kv = jax.random.split(keys[7])[0]
+    wv, bv = _dense_init(kv, a_dim, a_dim)
+    params["var_w"] = wv
+    params["var_b"] = bv - 1.0  # start with small sigma
+    return params
+
+
+def init_critic_params(spec: AlgoSpec, key):
+    """Q(s, a) critic (or V(s) for PPO): 256x256 MLP on [state, action]."""
+    in_dim = spec.state_dim + (0 if spec.name == "ppo" else spec.action_dim)
+    k1, k2, k3 = jax.random.split(key, 3)
+    w1, b1 = _dense_init(k1, in_dim, HIDDEN)
+    w2, b2 = _dense_init(k2, HIDDEN, HIDDEN)
+    w3, b3 = _dense_init(k3, HIDDEN, 1)
+    return dict(mlp_w1=w1, mlp_b1=b1, mlp_w2=w2, mlp_b2=b2, mlp_w3=w3, mlp_b3=b3)
+
+
+# --------------------------------------------------------------------------
+# Forward passes
+# --------------------------------------------------------------------------
+
+
+def _time_embedding(t_index, steps):
+    """Sinusoidal TIME_DIM-dim embedding of diffusion step i in [1, T]."""
+    half = TIME_DIM // 2
+    freqs = jnp.exp(jnp.arange(half) * (-math.log(10000.0) / max(half - 1, 1)))
+    ang = (t_index / max(steps, 1)) * freqs * steps
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)])
+
+
+def extract_features(spec: AlgoSpec, params, state):
+    """f_s from a batch of flat states (B, 3N)."""
+    b = state.shape[0]
+    if not spec.use_attention:
+        return state
+    n = spec.n_cols
+    # Eq. 6 layout is row-major 3xN; tokens are columns -> (B, N, 3).
+    tokens = state.reshape(b, 3, n).transpose(0, 2, 1)
+    return attention_feature_batched(
+        tokens,
+        params["att_we"],
+        params["att_wq"],
+        params["att_wk"],
+        params["att_wv"],
+        params["att_wo"],
+    )
+
+
+def _trunk(params, z):
+    return denoiser_mlp(
+        z,
+        params["mlp_w1"],
+        params["mlp_b1"],
+        params["mlp_w2"],
+        params["mlp_b2"],
+        params["mlp_w3"],
+        params["mlp_b3"],
+    )
+
+
+def _diffusion_schedule(steps):
+    betas = jnp.linspace(1e-4, 0.2, steps, dtype=jnp.float32)
+    alphas = 1.0 - betas
+    abar = jnp.cumprod(alphas)
+    return betas, alphas, abar
+
+
+def actor_mean(spec: AlgoSpec, params, state, chain_noise):
+    """Action mean x_0 (B, A).
+
+    Diffusion path (Eqs. 10-12): start from x_T = chain_noise[:, -1], run T
+    reverse steps; per-step posterior noise comes from chain_noise[:, i].
+    MLP path: tanh(MLP(f_s)).
+    """
+    feats = extract_features(spec, params, state)
+    if not spec.use_diffusion:
+        return jnp.tanh(_trunk(params, feats))
+    t_steps = spec.denoise_steps
+    betas, alphas, abar = _diffusion_schedule(t_steps)
+    x = chain_noise[:, t_steps, :]  # x_T ~ N(0, I)
+    for i in range(t_steps - 1, -1, -1):
+        temb = _time_embedding(jnp.float32(i + 1), t_steps)
+        temb_b = jnp.broadcast_to(temb, (x.shape[0], TIME_DIM))
+        z = jnp.concatenate([x, temb_b, feats], axis=-1)
+        eps = _trunk(params, z)
+        mu = (x - betas[i] * eps / jnp.sqrt(1.0 - abar[i])) / jnp.sqrt(alphas[i])
+        if i > 0:
+            abar_prev = abar[i - 1]
+            sigma = jnp.sqrt(betas[i] * (1.0 - abar_prev) / (1.0 - abar[i]))
+            x = mu + sigma * chain_noise[:, i, :]
+        else:
+            x = mu
+    return jnp.tanh(x)
+
+
+def actor_dist(spec: AlgoSpec, params, state, chain_noise):
+    """(mean, log_sigma) of the Gaussian action distribution (Eq. 13)."""
+    mean = actor_mean(spec, params, state, chain_noise)
+    log_sigma = jnp.clip(
+        mean @ params["var_w"] + params["var_b"], LOG_SIG_MIN, LOG_SIG_MAX
+    )
+    return mean, log_sigma
+
+
+def actor_sample(spec: AlgoSpec, params, state, chain_noise, expl_noise):
+    """Reparameterised sample a = clip(mean + sigma*eps) plus entropy."""
+    mean, log_sigma = actor_dist(spec, params, state, chain_noise)
+    sigma = jnp.exp(log_sigma)
+    action = jnp.clip(mean + sigma * expl_noise, -1.0, 1.0)
+    # Eq. 14: H = 1/2 sum log(2 pi e sigma^2).
+    entropy = 0.5 * jnp.sum(
+        jnp.log(2.0 * math.pi * math.e) + 2.0 * log_sigma, axis=-1
+    )
+    return action, mean, log_sigma, entropy
+
+
+def critic_q(params, state, action):
+    z = jnp.concatenate([state, action], axis=-1)
+    return _trunk(params, z)[:, 0]
+
+
+def critic_v(params, state):
+    return _trunk(params, state)[:, 0]
+
+
+def gaussian_logp(mean, log_sigma, action):
+    sigma = jnp.exp(log_sigma)
+    z = (action - mean) / sigma
+    return jnp.sum(
+        -0.5 * z * z - log_sigma - 0.5 * math.log(2.0 * math.pi), axis=-1
+    )
+
+
+# --------------------------------------------------------------------------
+# In-graph Adam (Table VIII: Adam, lr 3e-4, weight decay 1e-4)
+# --------------------------------------------------------------------------
+
+
+def adam_update(flat_params, flat_grad, m, v, t, lr, weight_decay):
+    """One Adam step over flat vectors; returns (params', m', v')."""
+    b1, b2, eps = 0.9, 0.999, 1e-8
+    g = flat_grad + weight_decay * flat_params
+    m = b1 * m + (1.0 - b1) * g
+    v = b2 * v + (1.0 - b2) * g * g
+    mhat = m / (1.0 - b1**t)
+    vhat = v / (1.0 - b2**t)
+    return flat_params - lr * mhat / (jnp.sqrt(vhat) + eps), m, v
+
+
+# --------------------------------------------------------------------------
+# SAC family (EAT / EAT-A / EAT-D / EAT-DA): act + train step
+# --------------------------------------------------------------------------
+
+
+def build_sac(spec: AlgoSpec):
+    """Build pure flat-I/O `act` and `train` functions plus metadata."""
+    key = jax.random.PRNGKey(hash((spec.name, spec.n_cols)) % (2**31))
+    ka, kc1, kc2 = jax.random.split(key, 3)
+    actor0 = init_actor_params(spec, ka)
+    critic10 = init_critic_params(spec, kc1)
+    critic20 = init_critic_params(spec, kc2)
+    actor_flat0, unravel_actor = ravel_pytree(actor0)
+    critic1_flat0, unravel_critic = ravel_pytree(critic10)
+    critic2_flat0, _ = ravel_pytree(critic20)
+
+    # Non-diffusion variants (EAT-D / EAT-DA) never read the chain noise;
+    # XLA prunes unused parameters at lowering, so their AOT signatures
+    # must omit it entirely (manifest chain_steps = 0 tells rust).
+    t_chain = spec.denoise_steps + 1 if spec.use_diffusion else 0
+    a_dim = spec.action_dim
+    dummy_chain1 = jnp.zeros((1, 1, a_dim), jnp.float32)
+
+    def act_diffusion(actor_flat, state, chain_noise, expl_noise):
+        """Single-state action (Algorithm 1 lines 4-12).
+
+        state: (S,), chain_noise: (T+1, A), expl_noise: (A,).
+        Returns (action, mean, log_sigma), each (A,).
+        """
+        p = unravel_actor(actor_flat)
+        action, mean, log_sigma, _ = actor_sample(
+            spec, p, state[None, :], chain_noise[None, :, :], expl_noise[None, :]
+        )
+        return action[0], mean[0], log_sigma[0]
+
+    def act_mlp(actor_flat, state, expl_noise):
+        p = unravel_actor(actor_flat)
+        action, mean, log_sigma, _ = actor_sample(
+            spec, p, state[None, :], dummy_chain1, expl_noise[None, :]
+        )
+        return action[0], mean[0], log_sigma[0]
+
+    act = act_diffusion if spec.use_diffusion else act_mlp
+
+    def train_core(
+        actor_flat,
+        c1_flat,
+        c2_flat,
+        c1t_flat,
+        c2t_flat,
+        m_a,
+        v_a,
+        m_c1,
+        v_c1,
+        m_c2,
+        v_c2,
+        t,
+        s,
+        a,
+        r,
+        s2,
+        done,
+        chain_s,
+        chain_s2,
+        expl_s,
+        expl_s2,
+    ):
+        """One full SAC update (Algorithm 2 lines 19-22) as a single graph.
+
+        Shapes: s/s2 (B,S); a (B,A); r/done (B,); chain_* (B,T+1,A);
+        expl_* (B,A); t scalar step count (float32, >= 1).
+        """
+        tq = t + 1.0
+
+        # ---- critic update (Eqs. 19-20) --------------------------------
+        def critic_loss_fn(c1f, c2f):
+            p_a = unravel_actor(actor_flat)
+            a2, _, _, _ = actor_sample(spec, p_a, s2, chain_s2, expl_s2)
+            q1t = critic_q(unravel_critic(c1t_flat), s2, a2)
+            q2t = critic_q(unravel_critic(c2t_flat), s2, a2)
+            qt = jnp.minimum(q1t, q2t)  # Eq. 18 on targets
+            y = r + spec.gamma * (1.0 - done) * qt  # Eq. 20
+            y = jax.lax.stop_gradient(y)
+            q1 = critic_q(unravel_critic(c1f), s, a)
+            q2 = critic_q(unravel_critic(c2f), s, a)
+            loss = jnp.mean((y - q1) ** 2) + jnp.mean((y - q2) ** 2)
+            return loss, (jnp.mean(q1), jnp.mean(y))
+
+        (critic_loss, (mean_q, _)), (g_c1, g_c2) = jax.value_and_grad(
+            critic_loss_fn, argnums=(0, 1), has_aux=True
+        )(c1_flat, c2_flat)
+        c1_new, m_c1, v_c1 = adam_update(
+            c1_flat, g_c1, m_c1, v_c1, tq, spec.lr_critic, spec.weight_decay
+        )
+        c2_new, m_c2, v_c2 = adam_update(
+            c2_flat, g_c2, m_c2, v_c2, tq, spec.lr_critic, spec.weight_decay
+        )
+
+        # ---- actor update (Eqs. 15-17) ----------------------------------
+        def actor_loss_fn(af):
+            p = unravel_actor(af)
+            a_pi, _, _, entropy = actor_sample(spec, p, s, chain_s, expl_s)
+            q1 = critic_q(unravel_critic(c1_new), s, a_pi)
+            q2 = critic_q(unravel_critic(c2_new), s, a_pi)
+            q = jnp.minimum(q1, q2)
+            loss = -jnp.mean(q + spec.entropy_alpha * entropy)
+            return loss, jnp.mean(entropy)
+
+        (actor_loss, entropy), g_a = jax.value_and_grad(actor_loss_fn, has_aux=True)(
+            actor_flat
+        )
+        actor_new, m_a, v_a = adam_update(
+            actor_flat, g_a, m_a, v_a, tq, spec.lr_actor, spec.weight_decay
+        )
+
+        # ---- soft target update (Eq. 22) ---------------------------------
+        tau = spec.soft_tau
+        c1t_new = tau * c1_new + (1.0 - tau) * c1t_flat
+        c2t_new = tau * c2_new + (1.0 - tau) * c2t_flat
+
+        return (
+            actor_new,
+            c1_new,
+            c2_new,
+            c1t_new,
+            c2t_new,
+            m_a,
+            v_a,
+            m_c1,
+            v_c1,
+            m_c2,
+            v_c2,
+            tq,
+            actor_loss,
+            critic_loss,
+            mean_q,
+            entropy,
+        )
+
+    if spec.use_diffusion:
+        train = train_core
+    else:
+
+        def train(*args):
+            """Chain-free signature: same as train_core minus chain_s/s2."""
+            (head, tail) = (args[:17], args[17:])
+            b = args[12].shape[0]
+            dummy = jnp.zeros((b, 1, a_dim), jnp.float32)
+            return train_core(*head, dummy, dummy, *tail)
+
+    return dict(
+        spec=spec,
+        act=act,
+        train=train,
+        actor_flat0=actor_flat0,
+        critic1_flat0=critic1_flat0,
+        critic2_flat0=critic2_flat0,
+        chain_shape=(t_chain, a_dim),
+    )
+
+
+# --------------------------------------------------------------------------
+# PPO baseline
+# --------------------------------------------------------------------------
+
+
+def build_ppo(spec: AlgoSpec):
+    """PPO act + train step. GAE advantages/returns come from rust."""
+    assert spec.name == "ppo"
+    key = jax.random.PRNGKey(hash(("ppo", spec.n_cols)) % (2**31))
+    ka, kc = jax.random.split(key)
+    actor0 = init_actor_params(spec, ka)
+    critic0 = init_critic_params(spec, kc)
+    actor_flat0, unravel_actor = ravel_pytree(actor0)
+    critic_flat0, unravel_critic = ravel_pytree(critic0)
+    dummy_chain = jnp.zeros((1, 1, spec.action_dim), jnp.float32)
+
+    def act(actor_flat, critic_flat, state, expl_noise):
+        """Returns (action, logp, value) for one state."""
+        p = unravel_actor(actor_flat)
+        s = state[None, :]
+        mean, log_sigma = actor_dist(spec, p, s, dummy_chain)
+        sigma = jnp.exp(log_sigma)
+        action = jnp.clip(mean + sigma * expl_noise[None, :], -1.0, 1.0)
+        logp = gaussian_logp(mean, log_sigma, action)
+        value = critic_v(unravel_critic(critic_flat), s)
+        return action[0], logp[0], value[0]
+
+    def train(
+        actor_flat,
+        critic_flat,
+        m_a,
+        v_a,
+        m_c,
+        v_c,
+        t,
+        s,
+        a,
+        old_logp,
+        adv,
+        ret,
+    ):
+        """One PPO epoch over a minibatch (clip objective + value MSE)."""
+        tq = t + 1.0
+        dummy = jnp.zeros((s.shape[0], 1, spec.action_dim), jnp.float32)
+
+        def actor_loss_fn(af):
+            p = unravel_actor(af)
+            mean, log_sigma = actor_dist(spec, p, s, dummy)
+            logp = gaussian_logp(mean, log_sigma, a)
+            ratio = jnp.exp(logp - old_logp)
+            adv_n = (adv - jnp.mean(adv)) / (jnp.std(adv) + 1e-8)
+            unclipped = ratio * adv_n
+            clipped = jnp.clip(ratio, 1.0 - spec.ppo_clip, 1.0 + spec.ppo_clip) * adv_n
+            entropy = jnp.mean(
+                0.5 * jnp.sum(jnp.log(2.0 * math.pi * math.e) + 2.0 * log_sigma, axis=-1)
+            )
+            pi_loss = -jnp.mean(jnp.minimum(unclipped, clipped))
+            loss = pi_loss - spec.ppo_entropy_coef * entropy
+            approx_kl = jnp.mean(old_logp - logp)
+            return loss, (pi_loss, entropy, approx_kl)
+
+        (_, (pi_loss, entropy, approx_kl)), g_a = jax.value_and_grad(
+            actor_loss_fn, has_aux=True
+        )(actor_flat)
+        actor_new, m_a, v_a = adam_update(
+            actor_flat, g_a, m_a, v_a, tq, spec.lr_actor, spec.weight_decay
+        )
+
+        def value_loss_fn(cf):
+            v = critic_v(unravel_critic(cf), s)
+            return spec.ppo_value_coef * jnp.mean((v - ret) ** 2)
+
+        v_loss, g_c = jax.value_and_grad(value_loss_fn)(critic_flat)
+        critic_new, m_c, v_c = adam_update(
+            critic_flat, g_c, m_c, v_c, tq, spec.lr_critic, spec.weight_decay
+        )
+
+        return (
+            actor_new,
+            critic_new,
+            m_a,
+            v_a,
+            m_c,
+            v_c,
+            tq,
+            pi_loss,
+            v_loss,
+            entropy,
+            approx_kl,
+        )
+
+    return dict(
+        spec=spec,
+        act=act,
+        train=train,
+        actor_flat0=actor_flat0,
+        critic_flat0=critic_flat0,
+    )
+
+
+def make_spec(
+    name: str,
+    num_servers: int,
+    queue_window: int,
+    denoise_steps: int = 10,
+    batch_size: int = 128,
+    gamma: float = 0.95,
+    entropy_alpha: float = 0.05,
+    soft_tau: float = 0.005,
+    lr: float = 3e-4,
+    weight_decay: float = 1e-4,
+) -> AlgoSpec:
+    return AlgoSpec(
+        name=name,
+        num_servers=num_servers,
+        queue_window=queue_window,
+        denoise_steps=denoise_steps,
+        batch_size=batch_size,
+        gamma=gamma,
+        entropy_alpha=entropy_alpha,
+        soft_tau=soft_tau,
+        lr_actor=lr,
+        lr_critic=lr,
+        weight_decay=weight_decay,
+    )

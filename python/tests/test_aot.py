@@ -1,0 +1,86 @@
+"""AOT bridge tests: lowering produces parseable HLO text with the right
+parameter signature, and the manifest agrees with the dumped init files."""
+
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="module")
+def quick_artifacts():
+    """Lower the quick subset (eat + ppo on n8l8) into a temp dir once."""
+    tmp = tempfile.mkdtemp(prefix="eat_aot_test_")
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out-dir", tmp, "--quick", "--batch", "8"],
+        check=True,
+        cwd=root,
+    )
+    return tmp
+
+
+def test_manifest_structure(quick_artifacts):
+    with open(os.path.join(quick_artifacts, "manifest.json")) as f:
+        m = json.load(f)
+    assert m["version"] == 1
+    assert m["batch_size"] == 8
+    assert "eat_n8l8_act" in m["entries"]
+    assert "eat_n8l8_train" in m["entries"]
+    assert "ppo_n8l8_act" in m["entries"]
+    p = m["params"]["eat_n8l8"]
+    assert p["state_dim"] == 48
+    assert p["action_dim"] == 10
+    assert p["chain_steps"] == 11  # T+1 for T=10
+
+
+def test_hlo_text_parsable_and_has_entry(quick_artifacts):
+    path = os.path.join(quick_artifacts, "eat_n8l8_act.hlo.txt")
+    with open(path) as f:
+        text = f.read()
+    assert "ENTRY" in text and "HloModule" in text
+    # act has 4 params: actor, state, chain, expl.
+    assert text.count("parameter(") >= 4
+
+
+def test_init_files_match_manifest_lengths(quick_artifacts):
+    with open(os.path.join(quick_artifacts, "manifest.json")) as f:
+        m = json.load(f)
+    p = m["params"]["eat_n8l8"]
+    actor = np.fromfile(
+        os.path.join(quick_artifacts, p["init_files"]["actor"]), dtype="<f4"
+    )
+    assert actor.shape[0] == p["actor_len"]
+    assert np.all(np.isfinite(actor))
+    # Sane init scale: bounded uniform, not all zeros.
+    assert 0.0 < np.abs(actor).max() < 2.0
+    c1 = np.fromfile(
+        os.path.join(quick_artifacts, p["init_files"]["critic1"]), dtype="<f4"
+    )
+    c2 = np.fromfile(
+        os.path.join(quick_artifacts, p["init_files"]["critic2"]), dtype="<f4"
+    )
+    assert c1.shape[0] == c2.shape[0] == p["critic_len"]
+    # Double critics start from different initialisations.
+    assert not np.array_equal(c1, c2)
+
+
+def test_train_entry_io_counts(quick_artifacts):
+    with open(os.path.join(quick_artifacts, "manifest.json")) as f:
+        m = json.load(f)
+    e = m["entries"]["eat_n8l8_train"]
+    assert len(e["inputs"]) == 21  # diffusion variant with chain noises
+    assert len(e["outputs"]) == 16
+    names = [t["name"] for t in e["inputs"]]
+    assert names[:5] == ["actor", "critic1", "critic2", "critic1_target", "critic2_target"]
+    ppo = m["entries"]["ppo_n8l8_train"]
+    assert len(ppo["inputs"]) == 12
+    assert len(ppo["outputs"]) == 11
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

@@ -1,0 +1,226 @@
+"""L2 correctness: network shapes, diffusion chain, SAC/PPO train steps."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+
+
+def small_spec(name="eat", batch=8):
+    return model.make_spec(name, 4, 4, denoise_steps=4, batch_size=batch)
+
+
+def make_batch(spec, key, batch):
+    ks = jax.random.split(key, 8)
+    B, S, A = batch, spec.state_dim, spec.action_dim
+    T1 = spec.denoise_steps + 1
+    return dict(
+        s=jax.random.uniform(ks[0], (B, S)),
+        a=jnp.clip(jax.random.normal(ks[1], (B, A)), -1, 1),
+        r=jax.random.uniform(ks[2], (B,)),
+        s2=jax.random.uniform(ks[3], (B, S)),
+        done=jnp.zeros((B,)),
+        chain_s=jax.random.normal(ks[4], (B, T1, A)),
+        chain_s2=jax.random.normal(ks[5], (B, T1, A)),
+        expl_s=jax.random.normal(ks[6], (B, A)) * 0.1,
+        expl_s2=jax.random.normal(ks[7], (B, A)) * 0.1,
+    )
+
+
+class TestSpecs:
+    def test_dims(self):
+        spec = model.make_spec("eat", 8, 8)
+        assert spec.state_dim == 48
+        assert spec.action_dim == 10
+        assert spec.n_cols == 16
+        assert spec.use_attention and spec.use_diffusion
+
+    def test_variant_flags(self):
+        assert not model.make_spec("eat_a", 4, 4).use_attention
+        assert model.make_spec("eat_a", 4, 4).use_diffusion
+        assert model.make_spec("eat_d", 4, 4).use_attention
+        assert not model.make_spec("eat_d", 4, 4).use_diffusion
+        da = model.make_spec("eat_da", 4, 4)
+        assert not da.use_attention and not da.use_diffusion
+
+    def test_feature_dim(self):
+        assert model.make_spec("eat", 4, 4).feature_dim == 8      # N
+        assert model.make_spec("eat_a", 4, 4).feature_dim == 24   # 3N
+
+
+class TestActor:
+    @pytest.mark.parametrize("name", ["eat", "eat_a", "eat_d", "eat_da"])
+    def test_action_bounded_and_finite(self, name):
+        spec = small_spec(name)
+        built = model.build_sac(spec)
+        A = spec.action_dim
+        T1 = spec.denoise_steps + 1
+        state = jnp.full((spec.state_dim,), 0.3)
+        if spec.use_diffusion:
+            chain = jax.random.normal(jax.random.PRNGKey(0), (T1, A))
+            action, mean, log_sigma = built["act"](built["actor_flat0"], state, chain, jnp.zeros((A,)))
+        else:
+            action, mean, log_sigma = built["act"](built["actor_flat0"], state, jnp.zeros((A,)))
+        assert action.shape == (A,)
+        assert bool(jnp.all(jnp.abs(action) <= 1.0))
+        assert bool(jnp.all(jnp.abs(mean) <= 1.0))  # tanh-bounded
+        assert bool(jnp.all((log_sigma >= model.LOG_SIG_MIN) & (log_sigma <= model.LOG_SIG_MAX)))
+
+    def test_diffusion_chain_noise_changes_action(self):
+        spec = small_spec("eat")
+        built = model.build_sac(spec)
+        A, T1 = spec.action_dim, spec.denoise_steps + 1
+        state = jnp.full((spec.state_dim,), 0.3)
+        a1, _, _ = built["act"](built["actor_flat0"], state, jnp.zeros((T1, A)), jnp.zeros((A,)))
+        chain2 = jax.random.normal(jax.random.PRNGKey(1), (T1, A)) * 2.0
+        a2, _, _ = built["act"](built["actor_flat0"], state, chain2, jnp.zeros((A,)))
+        assert not np.allclose(a1, a2)
+
+    def test_entropy_formula(self):
+        # H = 0.5 * sum(log(2*pi*e*sigma^2)) for diagonal Gaussians.
+        spec = small_spec("eat_da")
+        p = model.init_actor_params(spec, jax.random.PRNGKey(0))
+        s = jnp.zeros((2, spec.state_dim))
+        _, mean, log_sigma, entropy = model.actor_sample(
+            spec, p, s, jnp.zeros((2, 1, spec.action_dim)), jnp.zeros((2, spec.action_dim))
+        )
+        expected = 0.5 * jnp.sum(jnp.log(2 * jnp.pi * jnp.e) + 2 * log_sigma, axis=-1)
+        np.testing.assert_allclose(entropy, expected, rtol=1e-5)
+
+    def test_gaussian_logp_matches_scipy_form(self):
+        mean = jnp.array([[0.0, 1.0]])
+        log_sigma = jnp.array([[0.0, jnp.log(2.0)]])
+        action = jnp.array([[1.0, 1.0]])
+        lp = model.gaussian_logp(mean, log_sigma, action)
+        # N(1; 0,1): -0.5 - 0.5*log(2pi); N(1; 1,2): -log(2) - 0.5*log(2pi)
+        expected = (-0.5 - 0.5 * np.log(2 * np.pi)) + (-np.log(2.0) - 0.5 * np.log(2 * np.pi))
+        np.testing.assert_allclose(lp[0], expected, rtol=1e-5)
+
+
+class TestAdam:
+    def test_first_step_direction_and_magnitude(self):
+        p = jnp.array([1.0, -2.0])
+        g = jnp.array([0.5, -0.5])
+        p1, m, v = model.adam_update(p, g, jnp.zeros(2), jnp.zeros(2), 1.0, 1e-3, 0.0)
+        # First Adam step has magnitude ~lr in the gradient direction.
+        np.testing.assert_allclose(p1, p - 1e-3 * jnp.sign(g), rtol=1e-3)
+        assert m.shape == (2,) and v.shape == (2,)
+
+    def test_weight_decay_shrinks_params(self):
+        p = jnp.array([10.0])
+        g = jnp.array([0.0])
+        p1, _, _ = model.adam_update(p, g, jnp.zeros(1), jnp.zeros(1), 1.0, 1e-2, 0.1)
+        assert float(p1[0]) < 10.0
+
+
+class TestSacTrain:
+    @pytest.mark.parametrize("name", ["eat", "eat_da"])
+    def test_losses_finite_and_critic_improves(self, name):
+        spec = small_spec(name)
+        built = model.build_sac(spec)
+        B = spec.batch_size
+        batch = make_batch(spec, jax.random.PRNGKey(7), B)
+        P = built["actor_flat0"].shape[0]
+        C = built["critic1_flat0"].shape[0]
+        zeros = jnp.zeros
+        state = [
+            built["actor_flat0"], built["critic1_flat0"], built["critic2_flat0"],
+            built["critic1_flat0"], built["critic2_flat0"],
+            zeros((P,)), zeros((P,)), zeros((C,)), zeros((C,)), zeros((C,)), zeros((C,)),
+            jnp.float32(0.0),
+        ]
+        args = list(batch.values())
+        if not spec.use_diffusion:
+            args = [a for k, a in batch.items() if not k.startswith("chain")]
+        train = jax.jit(built["train"])
+        out = train(*state, *args)
+        first_critic = float(out[13])
+        assert np.isfinite(float(out[12])) and np.isfinite(first_critic)
+        for _ in range(15):
+            out = train(*list(out[:12]), *args)
+        assert float(out[13]) < first_critic, "critic loss should drop on a fixed batch"
+
+    def test_target_network_soft_update(self):
+        spec = small_spec("eat_da")
+        built = model.build_sac(spec)
+        B = spec.batch_size
+        batch = make_batch(spec, jax.random.PRNGKey(8), B)
+        args = [a for k, a in batch.items() if not k.startswith("chain")]
+        P = built["actor_flat0"].shape[0]
+        C = built["critic1_flat0"].shape[0]
+        zeros = jnp.zeros
+        out = jax.jit(built["train"])(
+            built["actor_flat0"], built["critic1_flat0"], built["critic2_flat0"],
+            built["critic1_flat0"], built["critic2_flat0"],
+            zeros((P,)), zeros((P,)), zeros((C,)), zeros((C,)), zeros((C,)), zeros((C,)),
+            jnp.float32(0.0), *args,
+        )
+        c1_new, c1t_new = out[1], out[3]
+        # Soft update: c1t' = tau*c1' + (1-tau)*c1t0.
+        expected = spec.soft_tau * c1_new + (1 - spec.soft_tau) * built["critic1_flat0"]
+        np.testing.assert_allclose(c1t_new, expected, rtol=1e-4, atol=1e-6)
+
+
+class TestPpo:
+    def test_act_and_train(self):
+        spec = model.make_spec("ppo", 4, 4, batch_size=8)
+        built = model.build_ppo(spec)
+        A, S = spec.action_dim, spec.state_dim
+        action, logp, value = built["act"](
+            built["actor_flat0"], built["critic_flat0"], jnp.zeros((S,)), jnp.zeros((A,))
+        )
+        assert action.shape == (A,)
+        assert np.isfinite(float(logp)) and np.isfinite(float(value))
+        B = spec.batch_size
+        P = built["actor_flat0"].shape[0]
+        C = built["critic_flat0"].shape[0]
+        zeros = jnp.zeros
+        key = jax.random.PRNGKey(9)
+        out = jax.jit(built["train"])(
+            built["actor_flat0"], built["critic_flat0"],
+            zeros((P,)), zeros((P,)), zeros((C,)), zeros((C,)), jnp.float32(0.0),
+            jax.random.uniform(key, (B, S)),
+            jnp.clip(jax.random.normal(key, (B, A)), -1, 1),
+            zeros((B,)) - 5.0,
+            jax.random.normal(key, (B,)),
+            jax.random.normal(key, (B,)),
+        )
+        assert len(out) == 11
+        for x in out[7:]:
+            assert np.isfinite(float(x))
+
+    def test_value_loss_drops_on_fixed_batch(self):
+        spec = model.make_spec("ppo", 4, 4, batch_size=8)
+        built = model.build_ppo(spec)
+        B, S, A = spec.batch_size, spec.state_dim, spec.action_dim
+        key = jax.random.PRNGKey(10)
+        P = built["actor_flat0"].shape[0]
+        C = built["critic_flat0"].shape[0]
+        zeros = jnp.zeros
+        s = jax.random.uniform(key, (B, S))
+        a = jnp.clip(jax.random.normal(key, (B, A)), -1, 1)
+        old_logp = zeros((B,)) - 5.0
+        adv = jax.random.normal(key, (B,))
+        ret = jnp.ones((B,)) * 3.0
+        train = jax.jit(built["train"])
+        state = [built["actor_flat0"], built["critic_flat0"],
+                 zeros((P,)), zeros((P,)), zeros((C,)), zeros((C,)), jnp.float32(0.0)]
+        out = train(*state, s, a, old_logp, adv, ret)
+        first = float(out[8])
+        for _ in range(20):
+            out = train(*list(out[:7]), s, a, old_logp, adv, ret)
+        assert float(out[8]) < first
+
+
+class TestDiffusionSchedule:
+    def test_abar_monotone_decreasing(self):
+        betas, alphas, abar = model._diffusion_schedule(10)
+        assert betas.shape == (10,)
+        assert bool(jnp.all(betas > 0)) and bool(jnp.all(betas < 1))
+        assert bool(jnp.all(jnp.diff(abar) < 0))
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

@@ -1,0 +1,49 @@
+//! Per-decision latency benches (Table XII's microbenchmark): how long
+//! each scheduling algorithm takes to produce one composite action.
+
+use eat::config::{Algorithm, ExperimentConfig};
+use eat::policy::{GreedyPolicy, Policy, RandomPolicy};
+use eat::rl::SacDriver;
+use eat::runtime::Runtime;
+use eat::sim::env::{Action, EdgeEnv};
+use eat::util::bench::Bencher;
+
+fn main() {
+    let mut b = Bencher::default();
+    let cfg = ExperimentConfig::preset_4node(0.05);
+    // Environment with a populated queue for a realistic decision.
+    let mut env = EdgeEnv::new(cfg.env.clone(), 7);
+    while env.queue().len() < 3 {
+        env.step(&Action::noop(cfg.env.queue_window));
+    }
+
+    let mut random = RandomPolicy::new(cfg.env.clone(), 1);
+    b.bench("decide_random", || random.decide(&env).unwrap());
+
+    let mut greedy = GreedyPolicy::new(cfg.env.clone());
+    b.bench("decide_greedy_enumerate_all", || greedy.decide(&env).unwrap());
+
+    // RL decision latency (needs artifacts; skipped otherwise).
+    match Runtime::new("artifacts") {
+        Ok(rt) => {
+            for alg in [
+                Algorithm::Eat,
+                Algorithm::EatA,
+                Algorithm::EatD,
+                Algorithm::EatDa,
+            ] {
+                let mut c = cfg.clone();
+                c.algorithm = alg;
+                if let Ok(mut driver) = SacDriver::new(&rt, &c) {
+                    let state = env.state();
+                    b.bench(&format!("decide_{}", alg.name().to_lowercase()), || {
+                        driver.act(&state, true).unwrap()
+                    });
+                }
+            }
+        }
+        Err(e) => eprintln!("skipping RL decision benches: {e}"),
+    }
+
+    println!("\n{}", b.summary());
+}

@@ -1,0 +1,63 @@
+//! PJRT runtime benches: HLO execution cost for the act and train
+//! entrypoints plus input-literal conversion overhead — the L3↔XLA
+//! boundary that dominates training throughput (§Perf).
+
+use eat::config::ExperimentConfig;
+use eat::rl::SacDriver;
+use eat::runtime::Runtime;
+use eat::util::bench::Bencher;
+use eat::util::rng::Pcg64;
+
+fn main() {
+    let Ok(rt) = Runtime::new("artifacts") else {
+        eprintln!("no artifacts; run `make artifacts` first");
+        return;
+    };
+    let mut b = Bencher::default();
+    let cfg = ExperimentConfig::preset_8node(0.1);
+
+    // act: single-state forward through attention + 10-step diffusion.
+    let exe = rt.load("eat_n8l8_act").unwrap();
+    let p = rt.manifest.param("eat_n8l8").unwrap().clone();
+    let actor = rt.manifest.load_init("eat_n8l8", "actor").unwrap();
+    let state = vec![0.25f32; p.state_dim];
+    let chain = vec![0.1f32; p.chain_steps * p.action_dim];
+    let expl = vec![0.0f32; p.action_dim];
+    b.bench("pjrt_act_eat_n8l8", || {
+        exe.run(&[&actor, &state, &chain, &expl]).unwrap()
+    });
+
+    // act for the cheapest ablation (plain MLP SAC) as the floor.
+    if rt.has_entry("eat_da_n8l8_act") {
+        let exe_da = rt.load("eat_da_n8l8_act").unwrap();
+        let actor_da = rt.manifest.load_init("eat_da_n8l8", "actor").unwrap();
+        b.bench("pjrt_act_eat_da_n8l8", || {
+            exe_da.run(&[&actor_da, &state, &expl]).unwrap()
+        });
+    }
+
+    // §Perf before/after: full-upload act vs device-resident actor params.
+    let mut driver = SacDriver::new(&rt, &cfg).unwrap();
+    {
+        let state_v = vec![0.25f32; p.state_dim];
+        b.bench("act_before_upload_all_params", || {
+            driver.act_upload_all(&state_v).unwrap()
+        });
+        b.bench("act_after_device_resident_params", || {
+            driver.act(&state_v, true).unwrap()
+        });
+    }
+    let mut rng = Pcg64::seeded(1);
+    let a_dim = cfg.env.action_len();
+    for _ in 0..rt.manifest.batch_size.max(cfg.train.batch_size) {
+        let mut s = vec![0f32; p.state_dim];
+        let mut a = vec![0f32; a_dim];
+        rng.fill_uniform_f32(&mut s);
+        rng.fill_normal_f32(&mut a);
+        driver.replay.push(&s, &a, rng.next_f32(), &s, false);
+    }
+    let batch = rt.manifest.batch_size;
+    b.bench("pjrt_train_step_eat_n8l8", || driver.update(batch).unwrap());
+
+    println!("\n{}", b.summary());
+}

@@ -1,0 +1,62 @@
+//! Simulator hot-path benches: state building, cluster selection, env
+//! stepping, workload generation — the L3 code under every training and
+//! evaluation loop.
+
+use eat::config::ExperimentConfig;
+use eat::sim::cluster::Cluster;
+use eat::sim::env::{Action, EdgeEnv};
+use eat::sim::task::{ModelType, Workload};
+use eat::util::bench::Bencher;
+use eat::util::rng::Pcg64;
+
+fn main() {
+    let mut b = Bencher::default();
+    let cfg = ExperimentConfig::preset_8node(0.1);
+
+    b.bench("workload_generate_32_tasks", || {
+        let mut rng = Pcg64::seeded(1);
+        Workload::generate(&cfg.env, &mut rng)
+    });
+
+    let env = EdgeEnv::new(cfg.env.clone(), 2);
+    b.bench("env_state_build_8node", || env.state());
+
+    let mut cluster = Cluster::new(8);
+    // Populate some gangs for a realistic selection workload.
+    let ids: Vec<usize> = (0..4).collect();
+    cluster.dispatch(&ids, 1.0, ModelType(0), false);
+    cluster.advance(1.0, 1.0);
+    b.bench("cluster_select_reuse_hit", || cluster.select(ModelType(0), 4));
+    b.bench("cluster_select_fresh", || cluster.select(ModelType(2), 2));
+
+    b.bench("env_step_noop", || {
+        let mut env = EdgeEnv::new(cfg.env.clone(), 3);
+        env.step(&Action::noop(cfg.env.queue_window))
+    });
+
+    b.bench("env_full_episode_scheduling", || {
+        let mut env = EdgeEnv::new(cfg.env.clone(), 4);
+        let mut scores = vec![-1.0f32; cfg.env.queue_window];
+        scores[0] = 1.0;
+        let action = Action {
+            exec_gate: -1.0,
+            steps_raw: 1.0,
+            task_scores: scores,
+        };
+        loop {
+            if env.step(&action).done {
+                break;
+            }
+        }
+        env.report().completed_tasks
+    });
+
+    b.bench("rng_fill_normal_1k", || {
+        let mut rng = Pcg64::seeded(5);
+        let mut buf = vec![0f32; 1024];
+        rng.fill_normal_f32(&mut buf);
+        buf[0]
+    });
+
+    println!("\n{}", b.summary());
+}

@@ -1,0 +1,66 @@
+//! End-to-end benches, one per reproduced paper artifact: full episode
+//! runs for the cheap policies, the motivating trace (Tables II–IV), and
+//! the model probes behind Tables I/VI and Figs 6/7.
+
+use eat::config::{ExecModelConfig, ExperimentConfig};
+use eat::coordinator::run_episode;
+use eat::policy::{GreedyPolicy, RandomPolicy};
+use eat::sim::env::EdgeEnv;
+use eat::sim::exec_model::ExecModel;
+use eat::util::bench::Bencher;
+use eat::util::rng::Pcg64;
+use std::time::Duration;
+
+fn main() {
+    let mut b = Bencher::new(
+        Duration::from_millis(200),
+        Duration::from_secs(3),
+        1_000_000,
+    );
+
+    // Table I / VI / Fig 6 / Fig 7 are all exec-model probes.
+    let em = ExecModel::new(ExecModelConfig::default());
+    b.bench("table1_probe_acceleration_row", || {
+        let mut rng = Pcg64::seeded(1);
+        (
+            em.sample_exec(45, 1, &mut rng),
+            em.sample_exec(45, 8, &mut rng),
+        )
+    });
+    b.bench("fig6_probe_init_sample", || {
+        let mut rng = Pcg64::seeded(2);
+        em.sample_init(4, &mut rng)
+    });
+
+    // Tables IX-XI rows: one full evaluation episode per policy.
+    for nodes in [4usize, 8, 12] {
+        let cfg = ExperimentConfig::preset(nodes);
+        b.bench(&format!("episode_greedy_n{nodes}"), || {
+            let mut env = EdgeEnv::new(cfg.env.clone(), 3);
+            let mut p = GreedyPolicy::new(cfg.env.clone());
+            run_episode(&mut env, &mut p, None).completed_tasks
+        });
+    }
+    let cfg = ExperimentConfig::preset_8node(0.1);
+    b.bench("episode_random_n8", || {
+        let mut env = EdgeEnv::new(cfg.env.clone(), 4);
+        let mut p = RandomPolicy::new(cfg.env.clone(), 4);
+        run_episode(&mut env, &mut p, None).completed_tasks
+    });
+
+    // Tables II-IV: the motivating 4-task trace.
+    b.bench("motivation_trace_traditional", || {
+        use eat::coordinator::traditional::run_traditional;
+        use eat::sim::task::Workload;
+        let mut cfg4 = ExperimentConfig::preset_4node(0.05).env;
+        cfg4.num_models = 1;
+        cfg4.tasks_per_episode = 4;
+        cfg4.time_limit = 400.0;
+        cfg4.step_limit = 400;
+        let wl = Workload::fixed(&[(0.0, 2, 0), (10.0, 2, 0), (20.0, 4, 0), (30.0, 2, 0)]);
+        let mut env = EdgeEnv::with_workload(cfg4, wl, Pcg64::seeded(5));
+        run_traditional(&mut env).completed_tasks
+    });
+
+    println!("\n{}", b.summary());
+}

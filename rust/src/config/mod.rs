@@ -1,0 +1,656 @@
+//! Typed configuration for environments, algorithms, training, and
+//! experiments, with JSON (de)serialisation and the paper's presets.
+//!
+//! The paper evaluates 4-node (real testbed), 8-node, and 12-node
+//! (simulated) clusters at arrival rates {0.01..0.09}, {0.06..0.14},
+//! {0.11..0.19} respectively (Tables IX–XI); presets here mirror those.
+
+use crate::util::json::{self, Value};
+
+/// Reward / objective coefficients (Problem 1 + §V.A.4).
+#[derive(Clone, Debug, PartialEq)]
+pub struct RewardConfig {
+    /// Quality weight α_q.
+    pub alpha_q: f64,
+    /// Response-time weight β_t (inside the reciprocal term).
+    pub beta_t: f64,
+    /// Quality-penalty weight λ_q.
+    pub lambda_q: f64,
+    /// Queue-wait weight μ_t (inside the reciprocal term).
+    pub mu_t: f64,
+    /// Minimum acceptable CLIP-proxy quality q_min.
+    pub q_min: f64,
+    /// Penalty p_quality applied when q_k < q_min.
+    pub p_quality: f64,
+}
+
+impl Default for RewardConfig {
+    fn default() -> Self {
+        RewardConfig {
+            alpha_q: 10.0,
+            beta_t: 0.05,
+            lambda_q: 5.0,
+            mu_t: 0.02,
+            q_min: 0.2,
+            p_quality: 1.0,
+        }
+    }
+}
+
+/// Calibrated execution-time model (Tables I & VI, Fig 6, §VII).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ExecModelConfig {
+    /// Model initialisation base time (s) per patch count, for counts
+    /// 1, 2, 4, 8 (paper: 33.5 / 31.9 / 35.0 / extrapolated 36.0).
+    pub init_base: [f64; 4],
+    /// Lognormal jitter sigma on init time; grows mildly with patch count
+    /// (Fig 6 shows wider spread at higher cooperate counts).
+    pub init_jitter_sigma: f64,
+    /// Per-inference-step time (s) per patch count 1/2/4/8
+    /// (paper: 0.53 / 0.29 / 0.20 / 0.14).
+    pub step_time: [f64; 4],
+    /// Relative Gaussian jitter on execution time.
+    pub exec_jitter_rel: f64,
+    /// One-way image transfer latency between servers (s), §VII: 0.175 s
+    /// between physical servers; hidden by the async design but modelled.
+    pub comm_latency: f64,
+    /// Fixed per-task overhead (s): process-group setup, dispatch.
+    pub dispatch_overhead: f64,
+    /// §VII future-work extension — partial model-cache reuse: when a
+    /// server already holds the right model weights but the gang shape
+    /// changed, only the NCCL process group must be rebuilt, costing this
+    /// fraction of a full initialisation. 1.0 (default) = paper's
+    /// DistriFusion behaviour (full unload+reload); the paper suggests
+    /// ~0.2-0.4 is achievable.
+    pub group_rebuild_frac: f64,
+}
+
+impl Default for ExecModelConfig {
+    fn default() -> Self {
+        ExecModelConfig {
+            init_base: [33.5, 31.9, 35.0, 36.0],
+            init_jitter_sigma: 0.08,
+            step_time: [0.53, 0.29, 0.20, 0.14],
+            exec_jitter_rel: 0.03,
+            comm_latency: 0.175,
+            dispatch_overhead: 0.1,
+            group_rebuild_frac: 1.0,
+        }
+    }
+}
+
+impl ExecModelConfig {
+    /// Index into the per-patch tables for c ∈ {1,2,4,8}.
+    pub fn patch_index(c: usize) -> usize {
+        match c {
+            1 => 0,
+            2 => 1,
+            4 => 2,
+            8 => 3,
+            _ => panic!("unsupported patch count {c}"),
+        }
+    }
+}
+
+/// CLIP-score proxy q(s) (Eq. 2), calibrated to the paper's measured points
+/// (17, 0.240), (20, 0.251), (25, 0.270) — these are exactly collinear with
+/// slope 0.00375/step — plus a steep power-law drop below `knee` steps
+/// (CLIP collapses quickly for very few denoising steps; this reproduces
+/// Random's ≈0.19 mean quality over uniform steps in Table IX).
+#[derive(Clone, Debug, PartialEq)]
+pub struct QualityConfig {
+    /// Quality at the knee-matching line: q(s) = line_q17 + slope·(s−17).
+    pub line_q17: f64,
+    pub slope: f64,
+    /// Below `knee` steps quality falls as q(knee)·(s/knee)^drop_pow.
+    pub knee: f64,
+    pub drop_pow: f64,
+    /// Hard cap (never exceeded even with noise).
+    pub q_cap: f64,
+    /// Per-task Gaussian jitter sigma (prompt-dependent variation).
+    pub noise_sigma: f64,
+}
+
+impl Default for QualityConfig {
+    fn default() -> Self {
+        QualityConfig {
+            line_q17: 0.240,
+            slope: 0.00375,
+            knee: 12.0,
+            drop_pow: 0.6,
+            q_cap: 0.272,
+            noise_sigma: 0.004,
+        }
+    }
+}
+
+/// Environment (cluster + workload + episode) configuration.
+#[derive(Clone, Debug, PartialEq)]
+pub struct EnvConfig {
+    /// |E|: number of edge servers (GPU workers).
+    pub num_servers: usize,
+    /// l: number of queue slots visible to the scheduler.
+    pub queue_window: usize,
+    /// Task arrival rate λ; inter-arrival t^g ~ Exp(λ).
+    pub arrival_rate: f64,
+    /// Support of D_c (collaboration requirement), e.g. [1,2,4,8].
+    pub patch_choices: Vec<usize>,
+    /// Weights of D_c (uniform if all equal).
+    pub patch_weights: Vec<f64>,
+    /// Number of distinct AIGC model/service types (model reuse matters
+    /// only when tasks share a type).
+    pub num_models: usize,
+    /// S_min / S_max inference-step bounds (4d).
+    pub s_min: u32,
+    pub s_max: u32,
+    /// Episode termination: wall-clock limit (s), decision-step limit,
+    /// and number of tasks submitted per episode.
+    pub time_limit: f64,
+    pub step_limit: usize,
+    pub tasks_per_episode: usize,
+    /// Simulated decision tick Δt (s).
+    pub decision_dt: f64,
+    pub reward: RewardConfig,
+    pub exec: ExecModelConfig,
+    pub quality: QualityConfig,
+}
+
+impl Default for EnvConfig {
+    fn default() -> Self {
+        EnvConfig {
+            num_servers: 8,
+            queue_window: 8,
+            arrival_rate: 0.1,
+            patch_choices: vec![1, 2, 4, 8],
+            patch_weights: vec![1.0, 1.0, 1.0, 1.0],
+            num_models: 3,
+            s_min: 1,
+            s_max: 25,
+            time_limit: 1024.0,
+            step_limit: 1024,
+            tasks_per_episode: 32,
+            decision_dt: 1.0,
+            reward: RewardConfig::default(),
+            exec: ExecModelConfig::default(),
+            quality: QualityConfig::default(),
+        }
+    }
+}
+
+impl EnvConfig {
+    /// State matrix dimensions (Eq. 6): 3 × (|E| + l).
+    pub fn state_rows(&self) -> usize {
+        3
+    }
+    pub fn state_cols(&self) -> usize {
+        self.num_servers + self.queue_window
+    }
+    pub fn state_len(&self) -> usize {
+        self.state_rows() * self.state_cols()
+    }
+    /// Action vector length (Eq. 8): [a_c, a_s, a_k1..a_kl].
+    pub fn action_len(&self) -> usize {
+        2 + self.queue_window
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.num_servers >= 1, "need at least one server");
+        anyhow::ensure!(self.queue_window >= 1, "queue window must be >= 1");
+        anyhow::ensure!(self.arrival_rate > 0.0, "arrival rate must be > 0");
+        anyhow::ensure!(
+            self.patch_choices.len() == self.patch_weights.len(),
+            "patch choices/weights length mismatch"
+        );
+        anyhow::ensure!(
+            self.patch_choices.iter().all(|&c| matches!(c, 1 | 2 | 4 | 8)),
+            "patch counts must be in {{1,2,4,8}}"
+        );
+        anyhow::ensure!(
+            self.patch_choices.iter().all(|&c| c <= self.num_servers),
+            "a patch count exceeds the cluster size"
+        );
+        anyhow::ensure!(self.s_min >= 1 && self.s_min < self.s_max, "bad step bounds");
+        anyhow::ensure!(self.num_models >= 1, "need at least one model type");
+        Ok(())
+    }
+}
+
+/// Which scheduling algorithm drives decisions.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Algorithm {
+    /// Full EAT: attention + diffusion SAC.
+    Eat,
+    /// EAT-A: diffusion SAC, no attention (≈ D2SAC).
+    EatA,
+    /// EAT-D: attention SAC, no diffusion.
+    EatD,
+    /// EAT-DA: plain SAC (no attention, no diffusion).
+    EatDa,
+    /// PPO baseline.
+    Ppo,
+    /// Harmony Search meta-heuristic.
+    Harmony,
+    /// Genetic Algorithm meta-heuristic.
+    Genetic,
+    Random,
+    Greedy,
+}
+
+impl Algorithm {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Algorithm::Eat => "EAT",
+            Algorithm::EatA => "EAT-A",
+            Algorithm::EatD => "EAT-D",
+            Algorithm::EatDa => "EAT-DA",
+            Algorithm::Ppo => "PPO",
+            Algorithm::Harmony => "Harmony",
+            Algorithm::Genetic => "Genetic",
+            Algorithm::Random => "Random",
+            Algorithm::Greedy => "Greedy",
+        }
+    }
+
+    /// Artifact key used by aot.py / the manifest (RL algorithms only).
+    pub fn artifact_key(&self) -> Option<&'static str> {
+        match self {
+            Algorithm::Eat => Some("eat"),
+            Algorithm::EatA => Some("eat_a"),
+            Algorithm::EatD => Some("eat_d"),
+            Algorithm::EatDa => Some("eat_da"),
+            Algorithm::Ppo => Some("ppo"),
+            _ => None,
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<Algorithm> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "eat" => Algorithm::Eat,
+            "eat-a" | "eat_a" | "eata" | "d2sac" => Algorithm::EatA,
+            "eat-d" | "eat_d" | "eatd" => Algorithm::EatD,
+            "eat-da" | "eat_da" | "eatda" | "sac" => Algorithm::EatDa,
+            "ppo" => Algorithm::Ppo,
+            "harmony" => Algorithm::Harmony,
+            "genetic" => Algorithm::Genetic,
+            "random" => Algorithm::Random,
+            "greedy" => Algorithm::Greedy,
+            other => anyhow::bail!("unknown algorithm '{other}'"),
+        })
+    }
+
+    pub fn all() -> [Algorithm; 9] {
+        [
+            Algorithm::Eat,
+            Algorithm::EatA,
+            Algorithm::EatD,
+            Algorithm::EatDa,
+            Algorithm::Ppo,
+            Algorithm::Genetic,
+            Algorithm::Harmony,
+            Algorithm::Random,
+            Algorithm::Greedy,
+        ]
+    }
+}
+
+/// Training hyperparameters (paper Table VIII).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TrainConfig {
+    /// Actor / critic learning rates η_a, η_c.
+    pub lr_actor: f64,
+    pub lr_critic: f64,
+    /// Entropy temperature α.
+    pub entropy_alpha: f64,
+    /// Target soft-update rate τ.
+    pub soft_tau: f64,
+    /// Batch size b (paper 512; default reduced for CPU PJRT).
+    pub batch_size: usize,
+    /// Discount γ.
+    pub gamma: f64,
+    /// Diffusion denoise steps T.
+    pub denoise_steps: usize,
+    /// Replay capacity D.
+    pub replay_capacity: usize,
+    /// Environment steps collected before updates start.
+    pub warmup_steps: usize,
+    /// Gradient updates per environment step.
+    pub updates_per_step: usize,
+    /// Training episodes E.
+    pub episodes: usize,
+    /// PPO-specific: rollout horizon, epochs, clip, GAE λ, value/entropy coef.
+    pub ppo_horizon: usize,
+    pub ppo_epochs: usize,
+    pub ppo_clip: f64,
+    pub ppo_gae_lambda: f64,
+    pub ppo_value_coef: f64,
+    pub ppo_entropy_coef: f64,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            lr_actor: 3e-4,
+            lr_critic: 3e-4,
+            entropy_alpha: 0.05,
+            soft_tau: 0.005,
+            batch_size: 128,
+            gamma: 0.95,
+            denoise_steps: 10,
+            replay_capacity: 200_000,
+            warmup_steps: 256,
+            updates_per_step: 1,
+            episodes: 50,
+            ppo_horizon: 256,
+            ppo_epochs: 4,
+            ppo_clip: 0.2,
+            ppo_gae_lambda: 0.95,
+            ppo_value_coef: 0.5,
+            ppo_entropy_coef: 0.01,
+        }
+    }
+}
+
+/// Top-level experiment config.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ExperimentConfig {
+    pub env: EnvConfig,
+    pub train: TrainConfig,
+    pub algorithm: Algorithm,
+    pub seed: u64,
+    /// Directory with AOT artifacts + manifest.json.
+    pub artifacts_dir: String,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            env: EnvConfig::default(),
+            train: TrainConfig::default(),
+            algorithm: Algorithm::Eat,
+            seed: 42,
+            artifacts_dir: "artifacts".to_string(),
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Paper's 4-node real testbed: patches limited to {1,2,4}.
+    pub fn preset_4node(arrival_rate: f64) -> Self {
+        let mut cfg = ExperimentConfig::default();
+        cfg.env.num_servers = 4;
+        cfg.env.queue_window = 6;
+        cfg.env.arrival_rate = arrival_rate;
+        cfg.env.patch_choices = vec![1, 2, 4];
+        cfg.env.patch_weights = vec![1.0, 1.0, 1.0];
+        cfg
+    }
+
+    /// Paper's 8-node simulated cluster.
+    pub fn preset_8node(arrival_rate: f64) -> Self {
+        let mut cfg = ExperimentConfig::default();
+        cfg.env.num_servers = 8;
+        cfg.env.queue_window = 8;
+        cfg.env.arrival_rate = arrival_rate;
+        cfg
+    }
+
+    /// Paper's 12-node simulated cluster.
+    pub fn preset_12node(arrival_rate: f64) -> Self {
+        let mut cfg = ExperimentConfig::default();
+        cfg.env.num_servers = 12;
+        cfg.env.queue_window = 8;
+        cfg.env.arrival_rate = arrival_rate;
+        cfg
+    }
+
+    /// Preset by node count with the paper's default (middle) arrival rate.
+    pub fn preset(nodes: usize) -> Self {
+        match nodes {
+            4 => Self::preset_4node(0.05),
+            8 => Self::preset_8node(0.1),
+            12 => Self::preset_12node(0.15),
+            other => {
+                let mut cfg = ExperimentConfig::default();
+                cfg.env.num_servers = other;
+                cfg
+            }
+        }
+    }
+
+    /// Config key used in artifact names: "n{servers}l{window}".
+    pub fn topology_key(&self) -> String {
+        format!("n{}l{}", self.env.num_servers, self.env.queue_window)
+    }
+
+    // --- JSON round trip -------------------------------------------------
+
+    pub fn to_json(&self) -> Value {
+        let mut v = Value::obj();
+        v.set("algorithm", self.algorithm.name().to_ascii_lowercase().replace('-', "_"));
+        v.set("seed", self.seed);
+        v.set("artifacts_dir", self.artifacts_dir.as_str());
+        let e = &self.env;
+        let mut env = Value::obj();
+        env.set("num_servers", e.num_servers)
+            .set("queue_window", e.queue_window)
+            .set("arrival_rate", e.arrival_rate)
+            .set("patch_choices", e.patch_choices.clone())
+            .set("patch_weights", e.patch_weights.clone())
+            .set("num_models", e.num_models)
+            .set("s_min", e.s_min as usize)
+            .set("s_max", e.s_max as usize)
+            .set("time_limit", e.time_limit)
+            .set("step_limit", e.step_limit)
+            .set("tasks_per_episode", e.tasks_per_episode)
+            .set("decision_dt", e.decision_dt);
+        let r = &e.reward;
+        let mut rew = Value::obj();
+        rew.set("alpha_q", r.alpha_q)
+            .set("beta_t", r.beta_t)
+            .set("lambda_q", r.lambda_q)
+            .set("mu_t", r.mu_t)
+            .set("q_min", r.q_min)
+            .set("p_quality", r.p_quality);
+        env.set("reward", rew);
+        let x = &e.exec;
+        let mut exec = Value::obj();
+        exec.set("init_base", x.init_base.to_vec())
+            .set("init_jitter_sigma", x.init_jitter_sigma)
+            .set("step_time", x.step_time.to_vec())
+            .set("exec_jitter_rel", x.exec_jitter_rel)
+            .set("comm_latency", x.comm_latency)
+            .set("dispatch_overhead", x.dispatch_overhead);
+        env.set("exec", exec);
+        let q = &e.quality;
+        let mut qual = Value::obj();
+        qual.set("line_q17", q.line_q17)
+            .set("slope", q.slope)
+            .set("knee", q.knee)
+            .set("drop_pow", q.drop_pow)
+            .set("q_cap", q.q_cap)
+            .set("noise_sigma", q.noise_sigma);
+        env.set("quality", qual);
+        v.set("env", env);
+        let t = &self.train;
+        let mut tr = Value::obj();
+        tr.set("lr_actor", t.lr_actor)
+            .set("lr_critic", t.lr_critic)
+            .set("entropy_alpha", t.entropy_alpha)
+            .set("soft_tau", t.soft_tau)
+            .set("batch_size", t.batch_size)
+            .set("gamma", t.gamma)
+            .set("denoise_steps", t.denoise_steps)
+            .set("replay_capacity", t.replay_capacity)
+            .set("warmup_steps", t.warmup_steps)
+            .set("updates_per_step", t.updates_per_step)
+            .set("episodes", t.episodes)
+            .set("ppo_horizon", t.ppo_horizon)
+            .set("ppo_epochs", t.ppo_epochs)
+            .set("ppo_clip", t.ppo_clip)
+            .set("ppo_gae_lambda", t.ppo_gae_lambda)
+            .set("ppo_value_coef", t.ppo_value_coef)
+            .set("ppo_entropy_coef", t.ppo_entropy_coef);
+        v.set("train", tr);
+        v
+    }
+
+    pub fn from_json(v: &Value) -> anyhow::Result<Self> {
+        let mut cfg = ExperimentConfig::default();
+        if let Some(alg) = v.get("algorithm").and_then(Value::as_str) {
+            cfg.algorithm = Algorithm::parse(alg)?;
+        }
+        if let Some(s) = v.get("seed").and_then(Value::as_f64) {
+            cfg.seed = s as u64;
+        }
+        if let Some(d) = v.get("artifacts_dir").and_then(Value::as_str) {
+            cfg.artifacts_dir = d.to_string();
+        }
+        if let Some(env) = v.get("env") {
+            let e = &mut cfg.env;
+            macro_rules! num {
+                ($key:literal, $field:expr, $ty:ty) => {
+                    if let Some(x) = env.get($key).and_then(Value::as_f64) {
+                        $field = x as $ty;
+                    }
+                };
+            }
+            num!("num_servers", e.num_servers, usize);
+            num!("queue_window", e.queue_window, usize);
+            num!("arrival_rate", e.arrival_rate, f64);
+            num!("num_models", e.num_models, usize);
+            num!("s_min", e.s_min, u32);
+            num!("s_max", e.s_max, u32);
+            num!("time_limit", e.time_limit, f64);
+            num!("step_limit", e.step_limit, usize);
+            num!("tasks_per_episode", e.tasks_per_episode, usize);
+            num!("decision_dt", e.decision_dt, f64);
+            if let Some(pc) = env.get("patch_choices").and_then(Value::as_usize_vec) {
+                e.patch_choices = pc;
+            }
+            if let Some(pw) = env.get("patch_weights").and_then(Value::as_arr) {
+                e.patch_weights = pw.iter().filter_map(Value::as_f64).collect();
+            }
+            if let Some(r) = env.get("reward") {
+                let rc = &mut e.reward;
+                macro_rules! rnum {
+                    ($key:literal, $field:expr) => {
+                        if let Some(x) = r.get($key).and_then(Value::as_f64) {
+                            $field = x;
+                        }
+                    };
+                }
+                rnum!("alpha_q", rc.alpha_q);
+                rnum!("beta_t", rc.beta_t);
+                rnum!("lambda_q", rc.lambda_q);
+                rnum!("mu_t", rc.mu_t);
+                rnum!("q_min", rc.q_min);
+                rnum!("p_quality", rc.p_quality);
+            }
+        }
+        if let Some(t) = v.get("train") {
+            let tc = &mut cfg.train;
+            macro_rules! tnum {
+                ($key:literal, $field:expr, $ty:ty) => {
+                    if let Some(x) = t.get($key).and_then(Value::as_f64) {
+                        $field = x as $ty;
+                    }
+                };
+            }
+            tnum!("lr_actor", tc.lr_actor, f64);
+            tnum!("lr_critic", tc.lr_critic, f64);
+            tnum!("entropy_alpha", tc.entropy_alpha, f64);
+            tnum!("soft_tau", tc.soft_tau, f64);
+            tnum!("batch_size", tc.batch_size, usize);
+            tnum!("gamma", tc.gamma, f64);
+            tnum!("denoise_steps", tc.denoise_steps, usize);
+            tnum!("replay_capacity", tc.replay_capacity, usize);
+            tnum!("warmup_steps", tc.warmup_steps, usize);
+            tnum!("updates_per_step", tc.updates_per_step, usize);
+            tnum!("episodes", tc.episodes, usize);
+            tnum!("ppo_horizon", tc.ppo_horizon, usize);
+            tnum!("ppo_epochs", tc.ppo_epochs, usize);
+            tnum!("ppo_clip", tc.ppo_clip, f64);
+            tnum!("ppo_gae_lambda", tc.ppo_gae_lambda, f64);
+            tnum!("ppo_value_coef", tc.ppo_value_coef, f64);
+            tnum!("ppo_entropy_coef", tc.ppo_entropy_coef, f64);
+        }
+        cfg.env.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn load(path: &str) -> anyhow::Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_json(&json::parse(&text)?)
+    }
+
+    pub fn save(&self, path: &str) -> anyhow::Result<()> {
+        std::fs::write(path, self.to_json().to_json_pretty())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_validate() {
+        ExperimentConfig::default().env.validate().unwrap();
+        ExperimentConfig::preset_4node(0.05).env.validate().unwrap();
+        ExperimentConfig::preset_8node(0.1).env.validate().unwrap();
+        ExperimentConfig::preset_12node(0.15).env.validate().unwrap();
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_fields() {
+        let mut cfg = ExperimentConfig::preset_8node(0.12);
+        cfg.algorithm = Algorithm::Ppo;
+        cfg.seed = 1234;
+        cfg.train.batch_size = 64;
+        let v = cfg.to_json();
+        let back = ExperimentConfig::from_json(&v).unwrap();
+        assert_eq!(back.algorithm, Algorithm::Ppo);
+        assert_eq!(back.seed, 1234);
+        assert_eq!(back.train.batch_size, 64);
+        assert_eq!(back.env.num_servers, 8);
+        assert!((back.env.arrival_rate - 0.12).abs() < 1e-12);
+    }
+
+    #[test]
+    fn four_node_limits_patches() {
+        let cfg = ExperimentConfig::preset_4node(0.05);
+        assert_eq!(cfg.env.patch_choices, vec![1, 2, 4]);
+        assert!(cfg.env.validate().is_ok());
+    }
+
+    #[test]
+    fn invalid_configs_rejected() {
+        let mut cfg = EnvConfig::default();
+        cfg.patch_choices = vec![16];
+        assert!(cfg.validate().is_err());
+        let mut cfg = EnvConfig::default();
+        cfg.num_servers = 4;
+        // 8-patch tasks cannot fit a 4-server cluster.
+        assert!(cfg.validate().is_err());
+        let mut cfg = EnvConfig::default();
+        cfg.s_min = 30;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn algorithm_parse_roundtrip() {
+        for alg in Algorithm::all() {
+            let name = alg.name().to_ascii_lowercase();
+            assert_eq!(Algorithm::parse(&name).unwrap(), alg);
+        }
+    }
+
+    #[test]
+    fn state_and_action_dims() {
+        let cfg = ExperimentConfig::preset_8node(0.1);
+        assert_eq!(cfg.env.state_cols(), 16);
+        assert_eq!(cfg.env.state_len(), 48);
+        assert_eq!(cfg.env.action_len(), 10);
+        assert_eq!(cfg.topology_key(), "n8l8");
+    }
+}

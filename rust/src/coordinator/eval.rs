@@ -1,0 +1,105 @@
+//! Multi-episode evaluation with common random numbers: every algorithm in
+//! a comparison sees exactly the same workload realisations (same seeds),
+//! so Table IX–XI differences reflect policy quality, not workload luck.
+
+use super::{run_episode, DecisionTiming};
+use crate::config::ExperimentConfig;
+use crate::policy::Policy;
+use crate::sim::env::EdgeEnv;
+use crate::sim::task::Workload;
+use crate::util::rng::Pcg64;
+use crate::util::stats::Welford;
+
+/// Aggregated metrics over an evaluation run (means over episodes).
+#[derive(Clone, Debug, Default)]
+pub struct EvalSummary {
+    pub algorithm: String,
+    pub episodes: usize,
+    pub avg_quality: f64,
+    pub avg_response_latency: f64,
+    pub reload_rate: f64,
+    pub avg_reward: f64,
+    pub avg_episode_len: f64,
+    pub avg_steps_chosen: f64,
+    pub efficiency: f64,
+    pub below_quality_min_frac: f64,
+    pub decision_latency_s: f64,
+}
+
+/// Evaluate `policy` over `episodes` seeded episodes of `cfg`'s env.
+pub fn evaluate(
+    cfg: &ExperimentConfig,
+    policy: &mut dyn Policy,
+    episodes: usize,
+) -> EvalSummary {
+    let mut quality = Welford::new();
+    let mut latency = Welford::new();
+    let mut reload = Welford::new();
+    let mut reward = Welford::new();
+    let mut ep_len = Welford::new();
+    let mut steps = Welford::new();
+    let mut eff = Welford::new();
+    let mut below = Welford::new();
+    let mut timing = DecisionTiming::default();
+    for ep in 0..episodes {
+        // Common random numbers: workload seed depends only on (cfg.seed,
+        // ep), never on the algorithm.
+        let mut wl_rng = Pcg64::new(cfg.seed.wrapping_add(ep as u64), 0xC0FFEE);
+        let workload = Workload::generate(&cfg.env, &mut wl_rng);
+        let mut env = EdgeEnv::with_workload(
+            cfg.env.clone(),
+            workload,
+            Pcg64::new(cfg.seed.wrapping_add(ep as u64), 0xE21),
+        );
+        let rep = run_episode(&mut env, policy, Some(&mut timing));
+        quality.push(rep.avg_quality);
+        latency.push(rep.avg_response_latency);
+        reload.push(rep.reload_rate);
+        reward.push(rep.total_reward);
+        ep_len.push(rep.decision_steps as f64);
+        steps.push(rep.avg_steps_chosen);
+        eff.push(rep.efficiency);
+        below.push(rep.below_quality_min as f64 / rep.completed_tasks.max(1) as f64);
+    }
+    EvalSummary {
+        algorithm: policy.name(),
+        episodes,
+        avg_quality: quality.mean(),
+        avg_response_latency: latency.mean(),
+        reload_rate: reload.mean(),
+        avg_reward: reward.mean(),
+        avg_episode_len: ep_len.mean(),
+        avg_steps_chosen: steps.mean(),
+        efficiency: eff.mean(),
+        below_quality_min_frac: below.mean(),
+        decision_latency_s: timing.mean_seconds(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExperimentConfig;
+    use crate::policy::{GreedyPolicy, RandomPolicy};
+
+    #[test]
+    fn greedy_beats_random_on_quality() {
+        let cfg = ExperimentConfig::preset_4node(0.05);
+        let mut greedy = GreedyPolicy::new(cfg.env.clone());
+        let mut random = RandomPolicy::new(cfg.env.clone(), cfg.seed);
+        let g = evaluate(&cfg, &mut greedy, 3);
+        let r = evaluate(&cfg, &mut random, 3);
+        assert!(g.avg_quality > r.avg_quality, "{} vs {}", g.avg_quality, r.avg_quality);
+        // Greedy max-steps => higher response latency (Table X shape).
+        assert!(g.avg_response_latency > r.avg_response_latency * 0.8);
+    }
+
+    #[test]
+    fn evaluation_is_reproducible() {
+        let cfg = ExperimentConfig::preset_4node(0.05);
+        let a = evaluate(&cfg, &mut GreedyPolicy::new(cfg.env.clone()), 2);
+        let b = evaluate(&cfg, &mut GreedyPolicy::new(cfg.env.clone()), 2);
+        assert_eq!(a.avg_quality, b.avg_quality);
+        assert_eq!(a.avg_response_latency, b.avg_response_latency);
+    }
+}

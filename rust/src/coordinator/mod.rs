@@ -1,0 +1,84 @@
+//! The L3 coordinator: drives policies against environments (Algorithm 1's
+//! outer loop), aggregates evaluation grids with common random numbers,
+//! and implements the fixed-step "Traditional" scheduler used by the
+//! paper's motivating example (Tables II–IV).
+
+pub mod eval;
+pub mod traditional;
+
+pub use eval::{evaluate, EvalSummary};
+
+use crate::policy::Policy;
+use crate::sim::env::{EdgeEnv, EpisodeReport};
+use std::time::{Duration, Instant};
+
+/// Decision-latency statistics for one episode (Table XII).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct DecisionTiming {
+    pub decisions: usize,
+    pub total: Duration,
+}
+
+impl DecisionTiming {
+    pub fn mean_seconds(&self) -> f64 {
+        if self.decisions == 0 {
+            0.0
+        } else {
+            self.total.as_secs_f64() / self.decisions as f64
+        }
+    }
+}
+
+/// Run one full episode of `policy` against `env` (Algorithm 1).
+/// `timing` optionally collects per-decision wall-clock latency.
+pub fn run_episode(
+    env: &mut EdgeEnv,
+    policy: &mut dyn Policy,
+    mut timing: Option<&mut DecisionTiming>,
+) -> EpisodeReport {
+    policy.reset(env);
+    loop {
+        let t0 = Instant::now();
+        let action = match policy.decide(env) {
+            Ok(a) => a,
+            Err(e) => panic!("policy '{}' failed to decide: {e}", policy.name()),
+        };
+        if let Some(t) = timing.as_deref_mut() {
+            t.total += t0.elapsed();
+            t.decisions += 1;
+        }
+        let out = env.step(&action);
+        if out.done {
+            break;
+        }
+    }
+    env.report()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExperimentConfig;
+    use crate::policy::{GreedyPolicy, RandomPolicy};
+
+    #[test]
+    fn run_episode_reports_and_times() {
+        let cfg = ExperimentConfig::preset_4node(0.05);
+        let mut env = EdgeEnv::new(cfg.env.clone(), 11);
+        let mut p = GreedyPolicy::new(cfg.env.clone());
+        let mut timing = DecisionTiming::default();
+        let rep = run_episode(&mut env, &mut p, Some(&mut timing));
+        assert!(rep.completed_tasks > 0);
+        assert_eq!(timing.decisions, rep.decision_steps);
+        assert!(timing.mean_seconds() >= 0.0);
+    }
+
+    #[test]
+    fn random_policy_episode_terminates() {
+        let cfg = ExperimentConfig::preset_4node(0.05);
+        let mut env = EdgeEnv::new(cfg.env.clone(), 12);
+        let mut p = RandomPolicy::new(cfg.env.clone(), 12);
+        let rep = run_episode(&mut env, &mut p, None);
+        assert!(rep.decision_steps > 0);
+    }
+}

@@ -1,0 +1,165 @@
+//! Tables IX (quality), X (response latency), XI (reload rate) and Fig 8
+//! (efficiency = quality / latency): the paper's main comparison grid of
+//! nine algorithms across {4, 8, 12}-node clusters and five arrival rates
+//! each.
+//!
+//! Every algorithm sees identical workload realisations per (nodes, rate,
+//! episode) via common random numbers, so the rows differ only by policy.
+//! RL rows load checkpoints from `artifacts/checkpoints/` when present
+//! (produced by `eat train`), else do a short on-the-fly training run.
+
+use crate::config::{Algorithm, ExperimentConfig};
+use crate::coordinator::evaluate;
+use crate::runtime::Runtime;
+use crate::util::cli::Args;
+use crate::util::table::{f, Table};
+
+/// Paper Table IX arrival-rate columns per node count.
+pub fn paper_rates(nodes: usize) -> Vec<f64> {
+    match nodes {
+        4 => vec![0.01, 0.03, 0.05, 0.07, 0.09],
+        8 => vec![0.06, 0.08, 0.1, 0.12, 0.14],
+        12 => vec![0.11, 0.13, 0.15, 0.17, 0.19],
+        _ => vec![0.05, 0.1, 0.15],
+    }
+}
+
+fn parse_algorithms(args: &Args) -> anyhow::Result<Vec<Algorithm>> {
+    match args.get("algs") {
+        None => Ok(Algorithm::all().to_vec()),
+        Some(list) => list
+            .split(',')
+            .map(|s| Algorithm::parse(s.trim()))
+            .collect(),
+    }
+}
+
+pub fn run(args: &Args) -> anyhow::Result<String> {
+    let nodes = args.get_usize("nodes", 4);
+    let episodes = args.get_usize("episodes", 3);
+    let train_episodes = args.get_usize("train-episodes", 2);
+    let seed = args.get_u64("seed", 42);
+    let verbose = args.has_flag("verbose");
+    let rates = match args.get("rates") {
+        Some(r) => r
+            .split(',')
+            .map(|x| x.trim().parse::<f64>())
+            .collect::<Result<Vec<_>, _>>()?,
+        None => paper_rates(nodes),
+    };
+    let algorithms = parse_algorithms(args)?;
+    let needs_rt = algorithms.iter().any(|a| a.artifact_key().is_some());
+    let rt = if needs_rt {
+        Some(Runtime::new(
+            args.get("artifacts").unwrap_or("artifacts"),
+        )?)
+    } else {
+        None
+    };
+
+    let header: Vec<String> = std::iter::once("Algorithm".to_string())
+        .chain(rates.iter().map(|r| format!("{r}")))
+        .collect();
+    let header_refs: Vec<&str> = header.iter().map(String::as_str).collect();
+    let mut t_quality = Table::new(
+        &format!("Table IX: Quality ({nodes} nodes, arrival rates)"),
+        &header_refs,
+    );
+    let mut t_latency = Table::new(
+        &format!("Table X: Response Latency ({nodes} nodes)"),
+        &header_refs,
+    );
+    let mut t_reload = Table::new(
+        &format!("Table XI: Reload Rate ({nodes} nodes)"),
+        &header_refs,
+    );
+    let mut t_eff = Table::new(
+        &format!("Fig 8: Generation Efficiency = quality/latency ({nodes} nodes)"),
+        &header_refs,
+    );
+
+    for alg in &algorithms {
+        // Train once per (alg, nodes) at the middle rate; evaluate across
+        // all rates with the same policy (as the paper does).
+        let mid_rate = rates[rates.len() / 2];
+        let mut cfg = ExperimentConfig::preset(nodes);
+        cfg.env.arrival_rate = mid_rate;
+        cfg.algorithm = *alg;
+        cfg.seed = seed;
+        if verbose {
+            eprintln!("preparing {} ({} nodes)...", alg.name(), nodes);
+        }
+        let mut policy = super::trained_policy(&cfg, rt.as_ref(), train_episodes, verbose)?;
+        let mut q_row = vec![alg.name().to_string()];
+        let mut l_row = vec![alg.name().to_string()];
+        let mut r_row = vec![alg.name().to_string()];
+        let mut e_row = vec![alg.name().to_string()];
+        for &rate in &rates {
+            let mut ecfg = cfg.clone();
+            ecfg.env.arrival_rate = rate;
+            let summary = evaluate(&ecfg, policy.as_mut(), episodes);
+            if verbose {
+                eprintln!(
+                    "  {} rate {rate}: q={:.3} lat={:.1} reload={:.3}",
+                    alg.name(),
+                    summary.avg_quality,
+                    summary.avg_response_latency,
+                    summary.reload_rate
+                );
+            }
+            q_row.push(f(summary.avg_quality, 3));
+            l_row.push(f(summary.avg_response_latency, 1));
+            r_row.push(f(summary.reload_rate, 3));
+            e_row.push(f(summary.efficiency * 1000.0, 2)); // x1e-3 units
+        }
+        t_quality.row(q_row);
+        t_latency.row(l_row);
+        t_reload.row(r_row);
+        t_eff.row(e_row);
+    }
+
+    let mut out = String::new();
+    out.push_str(&t_quality.render());
+    out.push('\n');
+    out.push_str(&t_latency.render());
+    out.push('\n');
+    out.push_str(&t_reload.render());
+    out.push('\n');
+    out.push_str(&t_eff.render());
+    println!("{out}");
+    super::save_csv(&format!("table9_quality_n{nodes}"), &t_quality.to_csv())?;
+    super::save_csv(&format!("table10_latency_n{nodes}"), &t_latency.to_csv())?;
+    super::save_csv(&format!("table11_reload_n{nodes}"), &t_reload.to_csv())?;
+    super::save_csv(&format!("fig8_efficiency_n{nodes}"), &t_eff.to_csv())?;
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rates_match_paper_columns() {
+        assert_eq!(paper_rates(4), vec![0.01, 0.03, 0.05, 0.07, 0.09]);
+        assert_eq!(paper_rates(8)[2], 0.1);
+        assert_eq!(paper_rates(12)[4], 0.19);
+    }
+
+    #[test]
+    fn heuristic_only_grid_runs_without_runtime() {
+        let args = Args::parse(
+            [
+                "--nodes".to_string(),
+                "4".into(),
+                "--episodes".into(),
+                "1".into(),
+                "--algs".into(),
+                "greedy,random".into(),
+            ]
+            .into_iter(),
+        );
+        let out = run(&args).unwrap();
+        assert!(out.contains("Greedy") && out.contains("Random"));
+        assert!(out.contains("Table IX") && out.contains("Table XI"));
+    }
+}

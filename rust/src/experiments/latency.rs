@@ -1,0 +1,69 @@
+//! Table XII: per-decision inference latency of each scheduling algorithm
+//! (wall-clock cost of `decide()` — the policy's own compute, not the
+//! simulated task time).
+
+use crate::config::{Algorithm, ExperimentConfig};
+use crate::coordinator::{run_episode, DecisionTiming};
+use crate::runtime::Runtime;
+use crate::sim::env::EdgeEnv;
+use crate::util::cli::Args;
+use crate::util::table::Table;
+
+pub fn run(args: &Args) -> anyhow::Result<String> {
+    let nodes = args.get_usize("nodes", 4);
+    let seed = args.get_u64("seed", 42);
+    let algorithms = match args.get("algs") {
+        None => Algorithm::all().to_vec(),
+        Some(list) => list
+            .split(',')
+            .map(|s| Algorithm::parse(s.trim()))
+            .collect::<Result<Vec<_>, _>>()?,
+    };
+    let needs_rt = algorithms.iter().any(|a| a.artifact_key().is_some());
+    let rt = if needs_rt {
+        Some(Runtime::new(args.get("artifacts").unwrap_or("artifacts"))?)
+    } else {
+        None
+    };
+    let mut t = Table::new(
+        &format!("Table XII: Inference (decision) Latency ({nodes} nodes)"),
+        &["Algorithm", "Time (s)"],
+    );
+    let mut out_rows: Vec<(String, f64)> = Vec::new();
+    for alg in &algorithms {
+        let mut cfg = ExperimentConfig::preset(nodes);
+        cfg.algorithm = *alg;
+        cfg.seed = seed;
+        // No training needed: Table XII measures compute cost per decision,
+        // which is architecture- not weights-dependent.
+        let mut policy = super::trained_policy(&cfg, rt.as_ref(), 0, false)?;
+        let mut env = EdgeEnv::new(cfg.env.clone(), seed);
+        let mut timing = DecisionTiming::default();
+        run_episode(&mut env, policy.as_mut(), Some(&mut timing));
+        out_rows.push((alg.name().to_string(), timing.mean_seconds()));
+    }
+    // Paper presents slowest first.
+    out_rows.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    for (name, secs) in &out_rows {
+        t.row(vec![name.clone(), format!("{secs:.2e}")]);
+    }
+    let out = t.render();
+    println!("{out}");
+    super::save_csv("table12_decision_latency", &t.to_csv())?;
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latency_table_for_heuristics() {
+        let args = Args::parse(
+            ["--algs".to_string(), "random,greedy".into(), "--nodes".into(), "4".into()]
+                .into_iter(),
+        );
+        let out = run(&args).unwrap();
+        assert!(out.contains("Random") && out.contains("Greedy"));
+    }
+}

@@ -1,0 +1,143 @@
+//! Experiment harness: one module per table/figure of the paper's
+//! evaluation (§VI). Each regenerates the same rows/series the paper
+//! reports, printed as text tables and dumped as CSV under `results/`.
+//!
+//! | paper artifact | module | CLI |
+//! |---|---|---|
+//! | Table I (patch acceleration) | `tables` | `eat experiment table1` |
+//! | Tables II–IV (EAT vs Traditional trace) | `motivation` | `eat experiment table2_4` |
+//! | Table VI (time prediction constants) | `tables` | `eat experiment table6` |
+//! | Fig 4 (serving-system speedups) | `fig4` | `eat experiment fig4` |
+//! | Fig 5 (training curves) | `training` | `eat experiment fig5` |
+//! | Tables IX/X/XI + Fig 8 (grids) | `grid` | `eat experiment table9 ...` |
+//! | Table XII (decision latency) | `latency` | `eat experiment table12` |
+//! | Fig 6 (init-time variability) | `inittime` | `eat experiment fig6` |
+//! | Fig 7 (time prediction scatter) | `timepred` | `eat experiment fig7` |
+
+pub mod fig4;
+pub mod grid;
+pub mod inittime;
+pub mod latency;
+pub mod motivation;
+pub mod tables;
+pub mod timepred;
+pub mod training;
+
+use crate::config::{Algorithm, ExperimentConfig};
+use crate::policy::{self, Policy};
+use crate::rl::{PpoDriver, SacDriver};
+use crate::runtime::Runtime;
+use crate::util::cli::Args;
+
+/// Run an experiment by id; returns the rendered report (also printed).
+pub fn run(name: &str, args: &Args) -> anyhow::Result<String> {
+    let out = match name {
+        "table1" => tables::table1(args)?,
+        "table6" => tables::table6(args)?,
+        "table2_4" | "motivation" => motivation::run(args)?,
+        "fig4" => fig4::run(args)?,
+        "fig5" | "training" => training::run(args)?,
+        "table9" | "table10" | "table11" | "fig8" | "grid" => grid::run(args)?,
+        "table12" | "latency" => latency::run(args)?,
+        "fig6" => inittime::run(args)?,
+        "fig7" => timepred::run(args)?,
+        "all" => {
+            let mut all = String::new();
+            for id in [
+                "table1", "table6", "table2_4", "fig6", "fig7", "fig4", "table12", "grid",
+            ] {
+                all.push_str(&run(id, args)?);
+                all.push('\n');
+            }
+            all
+        }
+        other => anyhow::bail!(
+            "unknown experiment '{other}' (try table1, table2_4, table6, table9, \
+             table10, table11, table12, fig4, fig5, fig6, fig7, fig8, grid, all)"
+        ),
+    };
+    Ok(out)
+}
+
+/// Write an experiment's CSV dump under `results/`.
+pub fn save_csv(name: &str, csv: &str) -> anyhow::Result<()> {
+    std::fs::create_dir_all("results")?;
+    std::fs::write(format!("results/{name}.csv"), csv)?;
+    Ok(())
+}
+
+/// Default checkpoint path for a trained actor.
+pub fn checkpoint_path(cfg: &ExperimentConfig) -> String {
+    format!(
+        "{}/checkpoints/{}_{}.actor.f32",
+        cfg.artifacts_dir,
+        cfg.algorithm.artifact_key().unwrap_or("none"),
+        cfg.topology_key()
+    )
+}
+
+/// Build a policy ready for evaluation: heuristics as-is; RL policies are
+/// loaded from a checkpoint if present, otherwise trained for
+/// `train_episodes` fresh episodes first (and checkpointed).
+pub fn trained_policy(
+    cfg: &ExperimentConfig,
+    rt: Option<&Runtime>,
+    train_episodes: usize,
+    verbose: bool,
+) -> anyhow::Result<Box<dyn Policy>> {
+    match cfg.algorithm {
+        Algorithm::Random | Algorithm::Greedy | Algorithm::Harmony | Algorithm::Genetic => {
+            policy::build_policy(cfg, rt)
+        }
+        Algorithm::Ppo => {
+            let rt = rt.ok_or_else(|| anyhow::anyhow!("PPO needs artifacts runtime"))?;
+            let mut driver = PpoDriver::new(rt, cfg)?;
+            let ckpt = checkpoint_path(cfg);
+            if std::path::Path::new(&ckpt).exists() {
+                driver.load_actor(&ckpt)?;
+                if verbose {
+                    eprintln!("loaded checkpoint {ckpt}");
+                }
+            } else if train_episodes > 0 {
+                driver.train_loop(cfg, train_episodes, |p| {
+                    if verbose {
+                        eprintln!(
+                            "  [PPO ep {}] reward {:.1} len {}",
+                            p.episode, p.reward, p.episode_len
+                        );
+                    }
+                })?;
+                std::fs::create_dir_all(format!("{}/checkpoints", cfg.artifacts_dir)).ok();
+                driver.save_actor(&ckpt).ok();
+            }
+            Ok(Box::new(policy::PpoPolicy::from_driver(driver, false)))
+        }
+        _ => {
+            let rt = rt.ok_or_else(|| anyhow::anyhow!("{} needs artifacts runtime", cfg.algorithm.name()))?;
+            let mut driver = SacDriver::new(rt, cfg)?;
+            let ckpt = checkpoint_path(cfg);
+            if std::path::Path::new(&ckpt).exists() {
+                driver.load_actor(&ckpt)?;
+                if verbose {
+                    eprintln!("loaded checkpoint {ckpt}");
+                }
+            } else if train_episodes > 0 {
+                driver.train_loop(cfg, train_episodes, |p| {
+                    if verbose {
+                        eprintln!(
+                            "  [{} ep {}] reward {:.1} len {} critic {:.3}",
+                            cfg.algorithm.name(),
+                            p.episode,
+                            p.reward,
+                            p.episode_len,
+                            p.critic_loss
+                        );
+                    }
+                })?;
+                std::fs::create_dir_all(format!("{}/checkpoints", cfg.artifacts_dir)).ok();
+                driver.save_actor(&ckpt).ok();
+            }
+            Ok(Box::new(policy::SacPolicy::from_driver(driver, false)))
+        }
+    }
+}

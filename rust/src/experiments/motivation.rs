@@ -1,0 +1,147 @@
+//! Tables II–IV: the motivating example (§II). Four tasks arrive 10 s
+//! apart on a 4-GPU box (patches 2/2/4/2, same AIGC service). The
+//! Traditional scheduler runs FIFO with fixed 20 steps and first-fit
+//! placement; the EAT-style scheduler reuses loaded gangs and adapts step
+//! counts to queue pressure. We report the per-task trace (steps, exec
+//! time, inference latency, quality) and the Table IV summary.
+
+use crate::config::ExperimentConfig;
+use crate::coordinator::traditional::{run_traditional, TRADITIONAL_STEPS};
+use crate::sim::cluster::Selection;
+use crate::sim::env::{Action, EdgeEnv};
+use crate::sim::task::Workload;
+use crate::util::cli::Args;
+use crate::util::rng::Pcg64;
+use crate::util::table::{f, Table};
+
+fn motivation_env(seed: u64) -> EdgeEnv {
+    let mut cfg = ExperimentConfig::preset_4node(0.05).env;
+    cfg.num_models = 1; // one AIGC service in the example
+    cfg.tasks_per_episode = 4;
+    cfg.time_limit = 400.0;
+    cfg.step_limit = 400;
+    // Tasks 1-4: patches 2, 2, 4, 2 arriving 10 s apart (paper trace).
+    let wl = Workload::fixed(&[(0.0, 2, 0), (10.0, 2, 0), (20.0, 4, 0), (30.0, 2, 0)]);
+    EdgeEnv::with_workload(cfg, wl, Pcg64::seeded(seed))
+}
+
+/// EAT-style heuristic used for the motivating trace, mirroring what the
+/// trained EAT does in Table II: when a task must pay a cold start it gets
+/// ~17 steps (the init delay is recovered by cheaper inference); when a
+/// loaded gang can be reused, the task can afford the full 25 steps.
+fn run_eat_style(env: &mut EdgeEnv) {
+    let l = env.cfg.queue_window;
+    loop {
+        if !env.queue().is_empty() {
+            // Prefer a task whose gang can be reused right now.
+            let reuse_idx = (0..env.queue().len().min(l)).find(|&i| {
+                let t = &env.queue()[i];
+                matches!(env.cluster.select(t.model, t.patches), Selection::Reuse(_))
+            });
+            let (idx, steps) = match reuse_idx {
+                Some(i) => (i, 25),
+                None => (0, 17),
+            };
+            env.schedule_task_at(idx, steps);
+        }
+        if env.step(&Action::noop(l)).done {
+            break;
+        }
+    }
+}
+
+fn trace_table(title: &str, env: &EdgeEnv) -> Table {
+    let mut t = Table::new(
+        title,
+        &["Task", "Patch", "GPU", "Step", "Time", "Inference (s)", "Quality"],
+    );
+    for sch in env.trace() {
+        let gpus: Vec<String> = sch.servers.iter().map(|s| (s + 1).to_string()).collect();
+        let init_note = if sch.reused_model { "" } else { " (+init)" };
+        t.row(vec![
+            format!("Task {}", sch.task_id + 1),
+            sch.servers.len().to_string(),
+            gpus.join(" "),
+            format!("{}{}", sch.steps, init_note),
+            f(sch.duration, 1),
+            f(sch.response, 1),
+            f(sch.quality * 10.0, 2), // paper's example scales CLIP x10
+        ]);
+    }
+    t
+}
+
+pub fn run(args: &Args) -> anyhow::Result<String> {
+    let seed = args.get_u64("seed", 42);
+    let mut out = String::new();
+
+    let mut eat_env = motivation_env(seed);
+    run_eat_style(&mut eat_env);
+    let eat_rep = eat_env.report();
+    let t2 = trace_table("Table II: EAT Algorithm Example", &eat_env);
+    out.push_str(&t2.render());
+    out.push('\n');
+
+    let mut trad_env = motivation_env(seed);
+    run_traditional(&mut trad_env);
+    let trad_rep = trad_env.report();
+    let t3 = trace_table(
+        &format!("Table III: Traditional Algorithm Example (fixed {TRADITIONAL_STEPS} steps)"),
+        &trad_env,
+    );
+    out.push_str(&t3.render());
+    out.push('\n');
+
+    let mut t4 = Table::new(
+        "Table IV: Algorithm Performance Comparison",
+        &["Metric", "EAT", "Traditional"],
+    );
+    t4.row(vec![
+        "Quality".into(),
+        f(eat_rep.avg_quality * 10.0, 2),
+        f(trad_rep.avg_quality * 10.0, 2),
+    ]);
+    t4.row(vec![
+        "Inference Latency (s)".into(),
+        f(eat_rep.avg_response_latency, 2),
+        f(trad_rep.avg_response_latency, 2),
+    ]);
+    t4.row(vec![
+        "Reload Rate".into(),
+        f(eat_rep.reload_rate, 2),
+        f(trad_rep.reload_rate, 2),
+    ]);
+    out.push_str(&t4.render());
+    println!("{out}");
+    super::save_csv("table2_eat_trace", &t2.to_csv())?;
+    super::save_csv("table3_traditional_trace", &t3.to_csv())?;
+    super::save_csv("table4_summary", &t4.to_csv())?;
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eat_style_beats_traditional_on_latency() {
+        let mut eat_env = motivation_env(7);
+        run_eat_style(&mut eat_env);
+        let mut trad_env = motivation_env(7);
+        run_traditional(&mut trad_env);
+        let eat = eat_env.report();
+        let trad = trad_env.report();
+        assert_eq!(eat.completed_tasks, 4);
+        assert_eq!(trad.completed_tasks, 4);
+        // Table IV shape: EAT halves latency at a small quality cost.
+        assert!(
+            eat.avg_response_latency < trad.avg_response_latency * 0.8,
+            "eat {} vs trad {}",
+            eat.avg_response_latency,
+            trad.avg_response_latency
+        );
+        assert!(trad.avg_quality >= eat.avg_quality - 1e-9);
+        // EAT reuses the 2-gang at least once; traditional reloads more.
+        assert!(eat.reload_rate < trad.reload_rate + 1e-9);
+    }
+}

@@ -1,0 +1,90 @@
+//! Table I (task acceleration with different patch counts) and Table VI
+//! (time-prediction constants): probes of the calibrated execution model.
+
+use crate::config::ExecModelConfig;
+use crate::sim::exec_model::ExecModel;
+use crate::util::cli::Args;
+use crate::util::rng::Pcg64;
+use crate::util::stats::Welford;
+use crate::util::table::{f, Table};
+
+/// Table I: total time + acceleration for 1/2/4/8 patches at the paper's
+/// measured workload (~45 steps: 23.7 s single-patch / 0.53 s per step).
+pub fn table1(args: &Args) -> anyhow::Result<String> {
+    let steps = args.get_usize("steps", 45) as u32;
+    let samples = args.get_usize("samples", 200);
+    let em = ExecModel::new(ExecModelConfig::default());
+    let mut rng = Pcg64::seeded(args.get_u64("seed", 42));
+    let mut t = Table::new(
+        "Table I: Task Acceleration with Different Number of Patches",
+        &["Number of Patches", "Time (s)", "Acceleration"],
+    );
+    let mut base = 0.0;
+    for &patches in &[1usize, 2, 4, 8] {
+        let mut w = Welford::new();
+        for _ in 0..samples {
+            w.push(em.sample_exec(steps, patches, &mut rng));
+        }
+        if patches == 1 {
+            base = w.mean();
+        }
+        t.row(vec![
+            patches.to_string(),
+            f(w.mean(), 2),
+            format!("x{:.1}", base / w.mean()),
+        ]);
+    }
+    let out = t.render();
+    println!("{out}");
+    super::save_csv("table1", &t.to_csv())?;
+    Ok(out)
+}
+
+/// Table VI: init time and per-inference-step time per patch count, as the
+/// time predictor estimates them (measured over many samples).
+pub fn table6(args: &Args) -> anyhow::Result<String> {
+    let samples = args.get_usize("samples", 500);
+    let em = ExecModel::new(ExecModelConfig::default());
+    let mut rng = Pcg64::seeded(args.get_u64("seed", 42));
+    let mut t = Table::new(
+        "Table VI: Time Prediction",
+        &["Patch Number", "Init Time (s)", "Time per Inference Step (s)"],
+    );
+    for &patches in &[1usize, 2, 4] {
+        let mut init = Welford::new();
+        for _ in 0..samples {
+            init.push(em.sample_init(patches, &mut rng));
+        }
+        // Per-step slope measured from two step counts (linearity checked
+        // in sim::exec_model tests and Fig 7).
+        let slope = (em.predict_exec(30, patches) - em.predict_exec(10, patches)) / 20.0;
+        t.row(vec![patches.to_string(), f(init.mean(), 1), f(slope, 2)]);
+    }
+    let out = t.render();
+    println!("{out}");
+    super::save_csv("table6", &t.to_csv())?;
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_shape_matches_paper() {
+        let args = Args::parse(["--samples".into(), "50".into()].into_iter());
+        let out = table1(&args).unwrap();
+        assert!(out.contains("x1.0"));
+        // Paper: x1.8 at 2 patches, x3.1 at 4 — ours should be in range.
+        assert!(out.contains("Acceleration"));
+        let lines: Vec<&str> = out.lines().collect();
+        assert_eq!(lines.len(), 7); // title + header + rule + 4 rows
+    }
+
+    #[test]
+    fn table6_columns() {
+        let args = Args::parse(["--samples".into(), "50".into()].into_iter());
+        let out = table6(&args).unwrap();
+        assert!(out.contains("0.53") || out.contains("0.29") || out.contains("0.2"));
+    }
+}

@@ -1,0 +1,97 @@
+//! Fig 5: training metrics (episode reward, actor/critic loss, episode
+//! length) for the DRL algorithms in the 8-server environment. Emits one
+//! curve per algorithm as CSV and a summary table comparing the first-k
+//! vs last-k episode averages (the paper's qualitative claims: EAT's
+//! reward trends up and its episode length converges to ~450, while
+//! EAT-DA and PPO often blow through the step limit).
+
+use crate::config::{Algorithm, ExperimentConfig};
+use crate::rl::{EpisodePoint, PpoDriver, SacDriver};
+use crate::runtime::Runtime;
+use crate::util::cli::Args;
+use crate::util::stats::mean;
+use crate::util::table::{f, Table};
+
+fn curve_csv(points: &[EpisodePoint]) -> String {
+    let mut s = String::from("episode,env_steps,reward,episode_len,actor_loss,critic_loss\n");
+    for p in points {
+        s.push_str(&format!(
+            "{},{},{:.3},{},{:.4},{:.4}\n",
+            p.episode, p.env_steps, p.reward, p.episode_len, p.actor_loss, p.critic_loss
+        ));
+    }
+    s
+}
+
+pub fn run(args: &Args) -> anyhow::Result<String> {
+    let nodes = args.get_usize("nodes", 8);
+    let episodes = args.get_usize("episodes", 5);
+    let seed = args.get_u64("seed", 42);
+    let verbose = args.has_flag("verbose");
+    let algorithms = match args.get("algs") {
+        None => vec![
+            Algorithm::Eat,
+            Algorithm::EatA,
+            Algorithm::EatD,
+            Algorithm::EatDa,
+            Algorithm::Ppo,
+        ],
+        Some(list) => list
+            .split(',')
+            .map(|s| Algorithm::parse(s.trim()))
+            .collect::<Result<Vec<_>, _>>()?,
+    };
+    let rt = Runtime::new(args.get("artifacts").unwrap_or("artifacts"))?;
+    let mut t = Table::new(
+        &format!("Fig 5: Training metrics ({nodes} servers, {episodes} episodes)"),
+        &[
+            "Algorithm",
+            "reward first",
+            "reward last",
+            "ep-len first",
+            "ep-len last",
+            "final critic loss",
+        ],
+    );
+    for alg in &algorithms {
+        let mut cfg = ExperimentConfig::preset(nodes);
+        cfg.algorithm = *alg;
+        cfg.seed = seed;
+        let on_ep = |p: &EpisodePoint| {
+            if verbose {
+                eprintln!(
+                    "  [{} ep {}] reward {:.1} len {}",
+                    alg.name(),
+                    p.episode,
+                    p.reward,
+                    p.episode_len
+                );
+            }
+        };
+        let curve = if *alg == Algorithm::Ppo {
+            let mut d = PpoDriver::new(&rt, &cfg)?;
+            d.train_loop(&cfg, episodes, on_ep)?
+        } else {
+            let mut d = SacDriver::new(&rt, &cfg)?;
+            d.train_loop(&cfg, episodes, on_ep)?
+        };
+        let k = (episodes / 3).max(1);
+        let rewards: Vec<f64> = curve.iter().map(|p| p.reward).collect();
+        let lens: Vec<f64> = curve.iter().map(|p| p.episode_len as f64).collect();
+        t.row(vec![
+            alg.name().to_string(),
+            f(mean(&rewards[..k]), 1),
+            f(mean(&rewards[rewards.len() - k..]), 1),
+            f(mean(&lens[..k]), 0),
+            f(mean(&lens[lens.len() - k..]), 0),
+            f(curve.last().map(|p| p.critic_loss).unwrap_or(0.0), 3),
+        ]);
+        super::save_csv(
+            &format!("fig5_curve_{}", alg.artifact_key().unwrap_or("x")),
+            &curve_csv(&curve),
+        )?;
+    }
+    let out = t.render();
+    println!("{out}");
+    Ok(out)
+}

@@ -1,0 +1,45 @@
+//! # EAT — QoS-Aware Edge-Collaborative AIGC Task Scheduling
+//!
+//! A production-quality, three-layer (Rust + JAX + Pallas, AOT via
+//! xla/PJRT) reproduction of *"EAT: QoS-Aware Edge-Collaborative AIGC Task
+//! Scheduling via Attention-Guided Diffusion Reinforcement Learning"*.
+//!
+//! Layer map:
+//! - **L3 (this crate)** — the coordinator: an edge-cluster simulator, a gang
+//!   scheduler with model-reuse-aware server selection, RL training drivers
+//!   (SAC-family + PPO), baseline policies (Random / Greedy / Harmony /
+//!   Genetic), a socket-based serving emulation, and the experiment harness
+//!   that regenerates every table and figure in the paper.
+//! - **L2 (python/compile/model.py)** — JAX networks (attention encoder,
+//!   diffusion policy, double critics) and whole train-steps with in-graph
+//!   Adam, AOT-lowered to HLO text.
+//! - **L1 (python/compile/kernels/)** — Pallas kernels (interpret mode) for
+//!   the attention feature extraction and the diffusion denoiser MLP.
+//!
+//! Python never runs on the request path: `runtime` loads `artifacts/*.hlo.txt`
+//! with the PJRT CPU client and executes them directly.
+//!
+//! Quickstart (after `make artifacts && cargo build --release`):
+//!
+//! ```no_run
+//! use eat::config::ExperimentConfig;
+//! use eat::sim::env::EdgeEnv;
+//! use eat::policy::{Policy, greedy::GreedyPolicy};
+//!
+//! let cfg = ExperimentConfig::preset_4node(0.05);
+//! let mut env = EdgeEnv::new(cfg.env.clone(), 42);
+//! let mut policy = GreedyPolicy::new(cfg.env.clone());
+//! let report = eat::coordinator::run_episode(&mut env, &mut policy, None);
+//! println!("avg latency {:.1}s quality {:.3}", report.avg_response_latency, report.avg_quality);
+//! ```
+
+pub mod config;
+pub mod coordinator;
+pub mod experiments;
+pub mod policy;
+pub mod rl;
+pub mod runtime;
+pub mod serving;
+pub mod sim;
+pub mod testing;
+pub mod util;

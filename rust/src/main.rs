@@ -1,0 +1,207 @@
+//! `eat` — leader entrypoint for the EAT scheduling system.
+//!
+//! Subcommands:
+//!   eat experiment <id> [--nodes N] [--episodes K] [...]   regenerate a
+//!       paper table/figure (table1, table2_4, table6, table9/10/11,
+//!       table12, fig4..fig8, grid, all)
+//!   eat train [--alg eat] [--nodes 8] [--episodes 20]      train a policy
+//!       and write a checkpoint under artifacts/checkpoints/
+//!   eat eval [--alg eat] [--nodes 8] [--episodes 5]        evaluate one
+//!       policy and print the summary
+//!   eat serve [--workers 4] [--tasks 16] [--time-scale 2e-3]
+//!       run the socket-based serving system end to end with the
+//!       reuse-aware scheduler
+//!   eat info                                                print artifact
+//!       manifest summary
+
+use eat::config::{Algorithm, ExperimentConfig};
+use eat::coordinator::evaluate;
+use eat::experiments;
+use eat::rl::{PpoDriver, SacDriver};
+use eat::runtime::Runtime;
+use eat::util::cli::Args;
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: eat <experiment|train|eval|serve|info> [options]\n\
+         \n  eat experiment <id>   ids: table1 table2_4 table6 table9 table10 table11\n\
+         \x20                          table12 fig4 fig5 fig6 fig7 fig8 grid all\n\
+         \x20     options: --nodes 4|8|12 --episodes K --train-episodes K --algs a,b,c\n\
+         \x20              --rates 0.01,0.05 --seed S --verbose\n\
+         \n  eat train   --alg eat|eat-a|eat-d|eat-da|ppo --nodes N --episodes K [--seed S]\n\
+         \n  eat eval    --alg <any> --nodes N --episodes K [--train-episodes K]\n\
+         \n  eat serve   --workers 4 --tasks 16 --time-scale 2e-3 [--seed S]\n\
+         \n  eat info"
+    );
+    std::process::exit(2)
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let Some(cmd) = args.positional.first().map(String::as_str) else {
+        usage()
+    };
+    match cmd {
+        "experiment" => {
+            let Some(id) = args.positional.get(1).map(String::as_str) else {
+                usage()
+            };
+            experiments::run(id, &args)?;
+        }
+        "train" => {
+            let alg = Algorithm::parse(&args.get_or("alg", "eat"))?;
+            let nodes = args.get_usize("nodes", 8);
+            let episodes = args.get_usize("episodes", 10);
+            let mut cfg = ExperimentConfig::preset(nodes);
+            cfg.algorithm = alg;
+            cfg.seed = args.get_u64("seed", 42);
+            let rt = Runtime::new(args.get("artifacts").unwrap_or("artifacts"))?;
+            std::fs::create_dir_all(format!("{}/checkpoints", cfg.artifacts_dir)).ok();
+            let ckpt = experiments::checkpoint_path(&cfg);
+            println!("training {} on {nodes} nodes for {episodes} episodes...", alg.name());
+            let t0 = std::time::Instant::now();
+            if alg == Algorithm::Ppo {
+                let mut d = PpoDriver::new(&rt, &cfg)?;
+                d.train_loop(&cfg, episodes, |p| {
+                    println!(
+                        "  ep {:>3}: reward {:>8.1} len {:>4} pi_loss {:>8.3}",
+                        p.episode, p.reward, p.episode_len, p.actor_loss
+                    );
+                })?;
+                d.save_actor(&ckpt)?;
+            } else {
+                let mut d = SacDriver::new(&rt, &cfg)?;
+                d.train_loop(&cfg, episodes, |p| {
+                    println!(
+                        "  ep {:>3}: reward {:>8.1} len {:>4} critic {:>8.3} actor {:>8.3}",
+                        p.episode, p.reward, p.episode_len, p.critic_loss, p.actor_loss
+                    );
+                })?;
+                d.save_actor(&ckpt)?;
+            }
+            println!("saved {ckpt} ({:.1}s)", t0.elapsed().as_secs_f64());
+        }
+        "eval" => {
+            let alg = Algorithm::parse(&args.get_or("alg", "eat"))?;
+            let nodes = args.get_usize("nodes", 8);
+            let episodes = args.get_usize("episodes", 5);
+            let mut cfg = ExperimentConfig::preset(nodes);
+            cfg.algorithm = alg;
+            cfg.seed = args.get_u64("seed", 42);
+            if let Some(rate) = args.get("rate") {
+                cfg.env.arrival_rate = rate.parse()?;
+            }
+            let rt = if alg.artifact_key().is_some() {
+                Some(Runtime::new(args.get("artifacts").unwrap_or("artifacts"))?)
+            } else {
+                None
+            };
+            let mut policy = experiments::trained_policy(
+                &cfg,
+                rt.as_ref(),
+                args.get_usize("train-episodes", 2),
+                args.has_flag("verbose"),
+            )?;
+            let s = evaluate(&cfg, policy.as_mut(), episodes);
+            println!(
+                "{}: quality {:.3}  latency {:.1}s  reload {:.3}  efficiency {:.2e}  \
+                 reward {:.1}  decision {:.2e}s",
+                s.algorithm,
+                s.avg_quality,
+                s.avg_response_latency,
+                s.reload_rate,
+                s.efficiency,
+                s.avg_reward,
+                s.decision_latency_s
+            );
+        }
+        "serve" => {
+            serve(&args)?;
+        }
+        "info" => {
+            let rt = Runtime::new(args.get("artifacts").unwrap_or("artifacts"))?;
+            println!("platform: {}", rt.platform());
+            println!("batch size: {}", rt.manifest.batch_size);
+            println!("denoise steps: {}", rt.manifest.denoise_steps);
+            println!("entries ({}):", rt.manifest.entries.len());
+            for (k, e) in &rt.manifest.entries {
+                println!("  {k}: {} inputs, {} outputs", e.inputs.len(), e.outputs.len());
+            }
+        }
+        _ => usage(),
+    }
+    Ok(())
+}
+
+/// End-to-end serving: spawn socket workers, generate a task stream, and
+/// schedule it with the reuse-aware gang scheduler, reporting per-task
+/// latency and the throughput/reload summary.
+fn serve(args: &Args) -> anyhow::Result<()> {
+    use eat::serving::{ServingHost, WorkerPool};
+    use eat::sim::cluster::{Cluster, Selection};
+    use eat::sim::task::{ModelType, Workload};
+    use eat::util::rng::Pcg64;
+
+    let workers = args.get_usize("workers", 4);
+    let n_tasks = args.get_usize("tasks", 12);
+    let time_scale = args.get_f64("time-scale", 2e-3);
+    let seed = args.get_u64("seed", 42);
+    let mut cfg = ExperimentConfig::preset(workers.max(4)).env;
+    cfg.num_servers = workers;
+    cfg.tasks_per_episode = n_tasks;
+    cfg.patch_choices.retain(|&c| c <= workers);
+    cfg.patch_weights = vec![1.0; cfg.patch_choices.len()];
+
+    println!("spawning {workers} socket workers (time scale {time_scale})...");
+    let pool = WorkerPool::spawn(workers, cfg.exec.clone(), time_scale, seed)?;
+    let host = ServingHost::new(pool.addrs().to_vec());
+    let mut tracker = Cluster::new(workers); // mirrors worker model state
+    let workload = Workload::generate(&cfg, &mut Pcg64::new(seed, 1));
+
+    let t0 = std::time::Instant::now();
+    let mut total_sim = 0.0;
+    let mut reloads = 0usize;
+    for task in &workload.tasks {
+        // Gang selection with the reuse-aware greedy selector. The tracker
+        // never marks servers busy (dispatch below is synchronous), so
+        // selection is purely about model-reuse placement.
+        let sel = tracker.select(ModelType(task.model.0), task.patches);
+        let (gang, reuse) = match &sel {
+            Selection::Reuse(v) => (v.clone(), true),
+            Selection::Fresh(v) => (v.clone(), false),
+            Selection::Infeasible => continue,
+        };
+        let steps = 20;
+        let out = host.dispatch(
+            task.id,
+            &format!("prompt-{}", task.prompt_id),
+            steps,
+            task.model.0,
+            &gang,
+        )?;
+        let sim_s = out.sim_exec_seconds();
+        total_sim += sim_s;
+        if out.any_reload() {
+            reloads += 1;
+        }
+        tracker.dispatch(&gang, 0.0, ModelType(task.model.0), reuse);
+        println!(
+            "task {:>3}  patches {}  gang {:?}  sim {:>6.1}s  reload {}  wall {:>6.3}s",
+            task.id,
+            task.patches,
+            gang,
+            sim_s,
+            out.any_reload(),
+            out.wall_seconds
+        );
+    }
+    println!(
+        "\nserved {} tasks in {:.2}s wall; total simulated exec {:.1}s; reload rate {:.2}",
+        workload.len(),
+        t0.elapsed().as_secs_f64(),
+        total_sim,
+        reloads as f64 / workload.len() as f64
+    );
+    pool.shutdown();
+    Ok(())
+}

@@ -1,0 +1,133 @@
+//! Greedy baseline: exhaustively evaluates every (visible task, step
+//! count) pair against the predicted immediate reward and picks the best
+//! (paper: "selects actions to maximize immediate rewards by evaluating
+//! all policies"). Because quality grows with steps much faster than the
+//! reciprocal time term shrinks, this policy maxes out inference steps —
+//! winning Table IX quality but losing Table X latency badly.
+
+use super::{steps_to_raw, Policy};
+use crate::config::EnvConfig;
+use crate::sim::cluster::Selection;
+use crate::sim::env::{Action, EdgeEnv};
+
+pub struct GreedyPolicy {
+    cfg: EnvConfig,
+}
+
+impl GreedyPolicy {
+    pub fn new(cfg: EnvConfig) -> Self {
+        GreedyPolicy { cfg }
+    }
+
+    /// Predicted immediate reward of scheduling queue slot `idx` with
+    /// `steps` right now (mirrors EdgeEnv::reward_for but with the
+    /// *predictor*, not realised samples — the policy can't see the
+    /// simulator's dice).
+    fn predicted_reward(&self, env: &EdgeEnv, idx: usize, steps: u32) -> Option<f64> {
+        let task = env.queue().get(idx)?;
+        let sel = env.cluster.select(task.model, task.patches);
+        let (reuse, feasible) = match sel {
+            Selection::Reuse(_) => (true, true),
+            Selection::Fresh(_) => (false, true),
+            Selection::Infeasible => (false, false),
+        };
+        if !feasible {
+            return None;
+        }
+        let em = env.exec_model();
+        let mut duration = em.predict_exec(steps, task.patches);
+        if !reuse {
+            duration += em.predict_init(task.patches);
+        }
+        let waiting = (env.now() - task.arrival).max(0.0);
+        let response = waiting + duration;
+        let q = env.quality_model().mean_quality(steps);
+        let r = &self.cfg.reward;
+        let penalty = if q < r.q_min { r.p_quality } else { 0.0 };
+        let denom = r.beta_t * response + r.mu_t * env.avg_queue_wait() + 1e-3;
+        Some(r.alpha_q * q - r.lambda_q * penalty + 1.0 / denom)
+    }
+}
+
+impl Policy for GreedyPolicy {
+    fn name(&self) -> String {
+        "Greedy".to_string()
+    }
+
+    fn decide(&mut self, env: &EdgeEnv) -> anyhow::Result<Action> {
+        let l = self.cfg.queue_window;
+        let visible = env.queue().len().min(l);
+        let mut best: Option<(usize, u32, f64)> = None;
+        for idx in 0..visible {
+            for steps in self.cfg.s_min..=self.cfg.s_max {
+                if let Some(r) = self.predicted_reward(env, idx, steps) {
+                    if best.map(|(_, _, b)| r > b).unwrap_or(true) {
+                        best = Some((idx, steps, r));
+                    }
+                }
+            }
+        }
+        match best {
+            None => Ok(Action::noop(l)),
+            Some((idx, steps, _)) => {
+                let mut scores = vec![-1.0f32; l];
+                scores[idx] = 1.0;
+                Ok(Action {
+                    exec_gate: -1.0,
+                    steps_raw: steps_to_raw(steps, self.cfg.s_min, self.cfg.s_max),
+                    task_scores: scores,
+                })
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExperimentConfig;
+    use crate::sim::env::EdgeEnv;
+
+    #[test]
+    fn greedy_maxes_steps_on_idle_cluster() {
+        let cfg = ExperimentConfig::preset_8node(0.1);
+        let mut env = EdgeEnv::new(cfg.env.clone(), 3);
+        let mut p = GreedyPolicy::new(cfg.env.clone());
+        // Let at least one task arrive.
+        while env.queue().is_empty() {
+            env.step(&Action::noop(cfg.env.queue_window));
+        }
+        let a = p.decide(&env).unwrap();
+        assert!(a.wants_exec());
+        assert_eq!(a.steps(cfg.env.s_min, cfg.env.s_max), cfg.env.s_max);
+    }
+
+    #[test]
+    fn greedy_noops_on_empty_queue() {
+        let mut cfg = ExperimentConfig::preset_8node(0.0001);
+        cfg.env.tasks_per_episode = 1;
+        let env = EdgeEnv::new(cfg.env.clone(), 4);
+        let mut p = GreedyPolicy::new(cfg.env.clone());
+        if env.queue().is_empty() {
+            let a = p.decide(&env).unwrap();
+            assert!(!a.wants_exec());
+        }
+    }
+
+    #[test]
+    fn greedy_runs_full_episode_with_high_quality() {
+        let cfg = ExperimentConfig::preset_8node(0.1);
+        let mut env = EdgeEnv::new(cfg.env.clone(), 5);
+        let mut p = GreedyPolicy::new(cfg.env.clone());
+        loop {
+            let a = p.decide(&env).unwrap();
+            if env.step(&a).done {
+                break;
+            }
+        }
+        let rep = env.report();
+        assert!(rep.completed_tasks > 10);
+        // Greedy always takes S_max -> quality ~0.270 (Table IX).
+        assert!((rep.avg_quality - 0.27).abs() < 0.01, "q={}", rep.avg_quality);
+    }
+}

@@ -1,0 +1,171 @@
+//! Harmony Search baseline (Geem et al. 2001; paper §VI.A.2): harmony
+//! memory of 64 action sequences, 64 improvisations, memory-consideration
+//! rate 0.8, pitch-adjustment rate 0.2, bandwidth 0.1 (on the [-1, 1]
+//! action scale). The best harmony becomes a fixed plan replayed at
+//! evaluation time.
+
+use super::seq::{self, Genome};
+use super::Policy;
+use crate::config::ExperimentConfig;
+use crate::sim::env::{Action, EdgeEnv};
+use crate::util::rng::Pcg64;
+
+pub struct HarmonyPolicy {
+    cfg: ExperimentConfig,
+    rng: Pcg64,
+    plan: Option<Genome>,
+    step: usize,
+    plan_round: u64,
+    // Hyperparameters (paper values).
+    pub memory_size: usize,
+    pub improvisations: usize,
+    pub hmcr: f64,
+    pub par: f64,
+    pub bandwidth: f32,
+}
+
+impl HarmonyPolicy {
+    pub fn new(cfg: ExperimentConfig) -> Self {
+        let seed = cfg.seed;
+        HarmonyPolicy {
+            cfg,
+            rng: Pcg64::new(seed, 0x4A12),
+            plan: None,
+            step: 0,
+            plan_round: 0,
+            memory_size: 64,
+            improvisations: 64,
+            hmcr: 0.8,
+            par: 0.2,
+            bandwidth: 0.1,
+        }
+    }
+
+    fn optimise(&mut self) -> Genome {
+        let a_dim = self.cfg.env.action_len();
+        let glen = seq::genome_len(a_dim);
+        // Initial memory: random harmonies, scored on planning rollouts.
+        let mut memory: Vec<(Genome, f64)> = (0..self.memory_size)
+            .map(|_| {
+                let g = seq::random_genome(a_dim, &mut self.rng);
+                let f = seq::fitness(seq::planning_env(&self.cfg, self.plan_round), &g, a_dim);
+                (g, f)
+            })
+            .collect();
+        for _ in 0..self.improvisations {
+            let mut g = vec![0.0f32; glen];
+            for i in 0..glen {
+                if self.rng.next_f64() < self.hmcr {
+                    // Memory consideration: copy this gene from a random
+                    // remembered harmony...
+                    let src = self.rng.next_below(memory.len() as u64) as usize;
+                    let mut v = memory[src].0[i];
+                    // ...with optional pitch adjustment.
+                    if self.rng.next_f64() < self.par {
+                        v += self.rng.uniform(-1.0, 1.0) as f32 * self.bandwidth;
+                    }
+                    g[i] = v.clamp(-1.0, 1.0);
+                } else {
+                    g[i] = self.rng.uniform(-1.0, 1.0) as f32;
+                }
+            }
+            let f = seq::fitness(seq::planning_env(&self.cfg, self.plan_round), &g, a_dim);
+            // Replace the worst harmony if improved.
+            let (worst_idx, worst_f) = memory
+                .iter()
+                .enumerate()
+                .map(|(i, (_, f))| (i, *f))
+                .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+                .unwrap();
+            if f > worst_f {
+                memory[worst_idx] = (g, f);
+            }
+        }
+        memory
+            .into_iter()
+            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .unwrap()
+            .0
+    }
+}
+
+impl Policy for HarmonyPolicy {
+    fn name(&self) -> String {
+        "Harmony".to_string()
+    }
+
+    fn reset(&mut self, _env: &EdgeEnv) {
+        // The paper's meta-heuristics precompute ONE fixed action sequence;
+        // plan lazily on first use, then just rewind for later episodes.
+        if self.plan.is_none() {
+            self.plan = Some(self.optimise());
+            self.plan_round += 1;
+        }
+        self.step = 0;
+    }
+
+    fn decide(&mut self, _env: &EdgeEnv) -> anyhow::Result<Action> {
+        if self.plan.is_none() {
+            self.plan = Some(self.optimise());
+        }
+        let a_dim = self.cfg.env.action_len();
+        let action = seq::decode(self.plan.as_ref().unwrap(), self.step, a_dim);
+        self.step += 1;
+        Ok(action)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Algorithm;
+
+    fn small_cfg() -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::preset_4node(0.05);
+        cfg.algorithm = Algorithm::Harmony;
+        cfg.env.tasks_per_episode = 6;
+        cfg.env.step_limit = 200;
+        cfg.env.time_limit = 200.0;
+        cfg
+    }
+
+    #[test]
+    fn optimised_plan_beats_random_on_planning_env() {
+        let cfg = small_cfg();
+        let mut p = HarmonyPolicy::new(cfg.clone());
+        p.memory_size = 8;
+        p.improvisations = 16;
+        let plan = p.optimise();
+        let a_dim = cfg.env.action_len();
+        let plan_fit = seq::fitness(seq::planning_env(&cfg, 0), &plan, a_dim);
+        let mut rng = Pcg64::seeded(99);
+        let rand_fit: f64 = (0..4)
+            .map(|_| {
+                let g = seq::random_genome(a_dim, &mut rng);
+                seq::fitness(seq::planning_env(&cfg, 0), &g, a_dim)
+            })
+            .sum::<f64>()
+            / 4.0;
+        assert!(
+            plan_fit >= rand_fit,
+            "plan {plan_fit} should be >= mean random {rand_fit}"
+        );
+    }
+
+    #[test]
+    fn runs_an_episode() {
+        let cfg = small_cfg();
+        let mut p = HarmonyPolicy::new(cfg.clone());
+        p.memory_size = 4;
+        p.improvisations = 4;
+        let mut env = EdgeEnv::new(cfg.env.clone(), cfg.seed);
+        p.reset(&env);
+        loop {
+            let a = p.decide(&env).unwrap();
+            if env.step(&a).done {
+                break;
+            }
+        }
+        assert!(env.report().decision_steps > 0);
+    }
+}

@@ -1,0 +1,80 @@
+//! Scheduling policies: the EAT RL family plus the paper's seven baselines
+//! (§VI.A.3). Every policy emits the composite action vector of Eq. 8 and
+//! is driven uniformly by `coordinator::run_episode`.
+
+pub mod genetic;
+pub mod greedy;
+pub mod harmony;
+pub mod random;
+pub mod rl;
+pub mod seq;
+
+pub use genetic::GeneticPolicy;
+pub use greedy::GreedyPolicy;
+pub use harmony::HarmonyPolicy;
+pub use random::RandomPolicy;
+pub use rl::{PpoPolicy, SacPolicy};
+
+use crate::config::{Algorithm, ExperimentConfig};
+use crate::runtime::Runtime;
+use crate::sim::env::{Action, EdgeEnv};
+
+/// A scheduling policy: maps observations to composite actions.
+pub trait Policy {
+    fn name(&self) -> String;
+
+    /// Called once at episode start (meta-heuristics re-plan here).
+    fn reset(&mut self, _env: &EdgeEnv) {}
+
+    /// Produce the action for the current decision step.
+    fn decide(&mut self, env: &EdgeEnv) -> anyhow::Result<Action>;
+}
+
+/// Instantiate the policy named by the config. RL policies need a runtime
+/// (`Some(rt)`); heuristics ignore it.
+pub fn build_policy(
+    cfg: &ExperimentConfig,
+    rt: Option<&Runtime>,
+) -> anyhow::Result<Box<dyn Policy>> {
+    Ok(match cfg.algorithm {
+        Algorithm::Random => Box::new(RandomPolicy::new(cfg.env.clone(), cfg.seed)),
+        Algorithm::Greedy => Box::new(GreedyPolicy::new(cfg.env.clone())),
+        Algorithm::Harmony => Box::new(HarmonyPolicy::new(cfg.clone())),
+        Algorithm::Genetic => Box::new(GeneticPolicy::new(cfg.clone())),
+        Algorithm::Ppo => {
+            let rt = rt.ok_or_else(|| anyhow::anyhow!("PPO needs a runtime"))?;
+            Box::new(PpoPolicy::new(rt, cfg)?)
+        }
+        _ => {
+            let rt = rt.ok_or_else(|| anyhow::anyhow!("{} needs a runtime", cfg.algorithm.name()))?;
+            Box::new(SacPolicy::new(rt, cfg)?)
+        }
+    })
+}
+
+/// Map a concrete step count back to the raw a_s knob in [-1, 1]
+/// (inverse of `Action::steps`).
+pub fn steps_to_raw(steps: u32, s_min: u32, s_max: u32) -> f32 {
+    let u = (steps.clamp(s_min, s_max) - s_min) as f32 / (s_max - s_min).max(1) as f32;
+    2.0 * u - 1.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn steps_raw_roundtrip() {
+        let (lo, hi) = (1u32, 25u32);
+        for s in lo..=hi {
+            let raw = steps_to_raw(s, lo, hi);
+            let back = Action {
+                exec_gate: -1.0,
+                steps_raw: raw,
+                task_scores: vec![0.0],
+            }
+            .steps(lo, hi);
+            assert_eq!(back, s, "roundtrip failed for {s}");
+        }
+    }
+}

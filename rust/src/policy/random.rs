@@ -1,0 +1,66 @@
+//! Random baseline: uniform action vector each tick; the env's task/server
+//! selectors then interpret it (paper: "Randomly selects an action and
+//! adopts the Task selector and Server selector to allocate the task").
+
+use super::Policy;
+use crate::config::EnvConfig;
+use crate::sim::env::{Action, EdgeEnv};
+use crate::util::rng::Pcg64;
+
+pub struct RandomPolicy {
+    cfg: EnvConfig,
+    rng: Pcg64,
+}
+
+impl RandomPolicy {
+    pub fn new(cfg: EnvConfig, seed: u64) -> Self {
+        RandomPolicy {
+            cfg,
+            rng: Pcg64::new(seed, 0x2A4D),
+        }
+    }
+}
+
+impl Policy for RandomPolicy {
+    fn name(&self) -> String {
+        "Random".to_string()
+    }
+
+    fn decide(&mut self, _env: &EdgeEnv) -> anyhow::Result<Action> {
+        let l = self.cfg.queue_window;
+        let mut scores = vec![0.0f32; l];
+        for s in scores.iter_mut() {
+            *s = self.rng.uniform(-1.0, 1.0) as f32;
+        }
+        Ok(Action {
+            exec_gate: self.rng.uniform(-1.0, 1.0) as f32,
+            steps_raw: self.rng.uniform(-1.0, 1.0) as f32,
+            task_scores: scores,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExperimentConfig;
+    use crate::sim::env::EdgeEnv;
+
+    #[test]
+    fn emits_valid_actions() {
+        let cfg = ExperimentConfig::preset_8node(0.1);
+        let env = EdgeEnv::new(cfg.env.clone(), 1);
+        let mut p = RandomPolicy::new(cfg.env.clone(), 7);
+        let mut execs = 0;
+        for _ in 0..200 {
+            let a = p.decide(&env).unwrap();
+            assert!(a.exec_gate.abs() <= 1.0 && a.steps_raw.abs() <= 1.0);
+            assert_eq!(a.task_scores.len(), cfg.env.queue_window);
+            if a.wants_exec() {
+                execs += 1;
+            }
+        }
+        // Gate ~Bernoulli(0.5): both branches exercised.
+        assert!(execs > 50 && execs < 150, "execs={execs}");
+    }
+}

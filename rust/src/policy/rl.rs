@@ -1,0 +1,139 @@
+//! RL policies: thin `Policy` adapters over the SAC / PPO drivers, used at
+//! evaluation time (Algorithm 1's decision process with a trained or
+//! training policy network).
+
+use super::Policy;
+use crate::config::ExperimentConfig;
+use crate::rl::{PpoDriver, SacDriver};
+use crate::runtime::Runtime;
+use crate::sim::env::{Action, EdgeEnv};
+
+/// SAC-family policy (EAT / EAT-A / EAT-D / EAT-DA).
+pub struct SacPolicy {
+    driver: SacDriver,
+    deterministic: bool,
+}
+
+impl SacPolicy {
+    /// Defaults to *stochastic* action selection: Algorithm 1 samples
+    /// a ~ N(x_0, σ²) — the diffusion policy is generative by design, and
+    /// deterministic (σ=0) evaluation of a briefly-trained policy can pin
+    /// the execution gate shut.
+    pub fn new(rt: &Runtime, cfg: &ExperimentConfig) -> anyhow::Result<Self> {
+        Ok(SacPolicy {
+            driver: SacDriver::new(rt, cfg)?,
+            deterministic: false,
+        })
+    }
+
+    pub fn from_driver(driver: SacDriver, deterministic: bool) -> Self {
+        SacPolicy {
+            driver,
+            deterministic,
+        }
+    }
+
+    pub fn driver_mut(&mut self) -> &mut SacDriver {
+        &mut self.driver
+    }
+
+    pub fn set_deterministic(&mut self, deterministic: bool) {
+        self.deterministic = deterministic;
+    }
+}
+
+impl Policy for SacPolicy {
+    fn name(&self) -> String {
+        self.driver.alg.name().to_string()
+    }
+
+    fn decide(&mut self, env: &EdgeEnv) -> anyhow::Result<Action> {
+        let state = env.state();
+        let raw = self.driver.act(&state, self.deterministic)?;
+        Ok(Action::from_vec(&raw))
+    }
+}
+
+/// PPO baseline policy.
+pub struct PpoPolicy {
+    driver: PpoDriver,
+    deterministic: bool,
+}
+
+impl PpoPolicy {
+    pub fn new(rt: &Runtime, cfg: &ExperimentConfig) -> anyhow::Result<Self> {
+        Ok(PpoPolicy {
+            driver: PpoDriver::new(rt, cfg)?,
+            deterministic: false,
+        })
+    }
+
+    pub fn from_driver(driver: PpoDriver, deterministic: bool) -> Self {
+        PpoPolicy {
+            driver,
+            deterministic,
+        }
+    }
+
+    pub fn driver_mut(&mut self) -> &mut PpoDriver {
+        &mut self.driver
+    }
+}
+
+impl Policy for PpoPolicy {
+    fn name(&self) -> String {
+        "PPO".to_string()
+    }
+
+    fn decide(&mut self, env: &EdgeEnv) -> anyhow::Result<Action> {
+        let state = env.state();
+        let (raw, _logp, _value) = self.driver.act(&state, self.deterministic)?;
+        Ok(Action::from_vec(&raw))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Algorithm;
+
+    fn runtime() -> Option<Runtime> {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            return None;
+        }
+        Some(Runtime::new(dir.to_str().unwrap()).unwrap())
+    }
+
+    #[test]
+    fn sac_policy_decides_for_all_variants() {
+        let Some(rt) = runtime() else { return };
+        for alg in [
+            Algorithm::Eat,
+            Algorithm::EatA,
+            Algorithm::EatD,
+            Algorithm::EatDa,
+        ] {
+            let mut cfg = ExperimentConfig::preset_8node(0.1);
+            cfg.algorithm = alg;
+            if !rt.has_entry(&format!("{}_{}_act", alg.artifact_key().unwrap(), cfg.topology_key())) {
+                continue;
+            }
+            let env = EdgeEnv::new(cfg.env.clone(), 1);
+            let mut p = SacPolicy::new(&rt, &cfg).unwrap();
+            let a = p.decide(&env).unwrap();
+            assert_eq!(a.task_scores.len(), cfg.env.queue_window);
+        }
+    }
+
+    #[test]
+    fn ppo_policy_decides() {
+        let Some(rt) = runtime() else { return };
+        let mut cfg = ExperimentConfig::preset_8node(0.1);
+        cfg.algorithm = Algorithm::Ppo;
+        let env = EdgeEnv::new(cfg.env.clone(), 2);
+        let mut p = PpoPolicy::new(&rt, &cfg).unwrap();
+        let a = p.decide(&env).unwrap();
+        assert!(a.exec_gate.is_finite());
+    }
+}

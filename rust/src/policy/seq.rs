@@ -1,0 +1,98 @@
+//! Shared machinery for the sequence-optimising meta-heuristics
+//! (Harmony Search and the Genetic Algorithm).
+//!
+//! Both baselines "precompute a fixed action sequence to maximize the
+//! reward" (§VI.B.3): a genome is a horizon x action_dim matrix of raw
+//! action components in [-1, 1], whose fitness is the total episode reward
+//! when replayed on a *planning* environment. The planning environment
+//! uses the same cluster/workload configuration but a different workload
+//! realisation than evaluation — the paper's point is precisely that these
+//! methods lack environmental feedback, so their plan meets a workload it
+//! has never seen.
+
+use crate::config::ExperimentConfig;
+use crate::sim::env::{Action, EdgeEnv};
+use crate::util::rng::Pcg64;
+
+/// Planning horizon in decision steps (paper: "optimize a 2048-steps").
+pub const HORIZON: usize = 2048;
+
+/// Flat genome: HORIZON x action_dim raw components.
+pub type Genome = Vec<f32>;
+
+pub fn genome_len(action_dim: usize) -> usize {
+    HORIZON * action_dim
+}
+
+pub fn random_genome(action_dim: usize, rng: &mut Pcg64) -> Genome {
+    let mut g = vec![0.0f32; genome_len(action_dim)];
+    for x in g.iter_mut() {
+        *x = rng.uniform(-1.0, 1.0) as f32;
+    }
+    g
+}
+
+/// Action at step `t` of a genome.
+pub fn decode(genome: &Genome, t: usize, action_dim: usize) -> Action {
+    let t = t % HORIZON; // wrap if the episode outlives the plan
+    let row = &genome[t * action_dim..(t + 1) * action_dim];
+    Action::from_vec(row)
+}
+
+/// Build a fresh planning environment: same config, *shifted* seed so the
+/// plan never sees the evaluation workload.
+pub fn planning_env(cfg: &ExperimentConfig, plan_round: u64) -> EdgeEnv {
+    EdgeEnv::new(cfg.env.clone(), cfg.seed ^ 0x9E3779B9 ^ plan_round)
+}
+
+/// Fitness: total reward of replaying the genome on `env` (consumed).
+pub fn fitness(mut env: EdgeEnv, genome: &Genome, action_dim: usize) -> f64 {
+    let mut t = 0usize;
+    loop {
+        let action = decode(genome, t, action_dim);
+        let out = env.step(&action);
+        t += 1;
+        if out.done {
+            break;
+        }
+    }
+    env.report().total_reward
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExperimentConfig;
+
+    #[test]
+    fn decode_wraps_horizon() {
+        let a_dim = 4;
+        let mut rng = Pcg64::seeded(1);
+        let g = random_genome(a_dim, &mut rng);
+        let a0 = decode(&g, 0, a_dim);
+        let aw = decode(&g, HORIZON, a_dim);
+        assert_eq!(a0.to_vec(), aw.to_vec());
+    }
+
+    #[test]
+    fn fitness_is_deterministic_for_same_genome() {
+        let cfg = ExperimentConfig::preset_4node(0.05);
+        let mut rng = Pcg64::seeded(2);
+        let a_dim = cfg.env.action_len();
+        let g = random_genome(a_dim, &mut rng);
+        let f1 = fitness(planning_env(&cfg, 0), &g, a_dim);
+        let f2 = fitness(planning_env(&cfg, 0), &g, a_dim);
+        assert_eq!(f1, f2);
+    }
+
+    #[test]
+    fn planning_env_differs_from_eval_env() {
+        let cfg = ExperimentConfig::preset_4node(0.05);
+        let plan = planning_env(&cfg, 0);
+        let eval = EdgeEnv::new(cfg.env.clone(), cfg.seed);
+        // Different workload realisations (almost surely).
+        let pq: Vec<f64> = plan.workload_arrivals();
+        let eq: Vec<f64> = eval.workload_arrivals();
+        assert_ne!(pq, eq);
+    }
+}

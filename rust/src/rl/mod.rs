@@ -1,0 +1,33 @@
+//! Reinforcement-learning drivers (Algorithm 2): the experience replay
+//! buffer, the SAC-family trainer (EAT / EAT-A / EAT-D / EAT-DA) and the
+//! PPO baseline trainer. The network math lives in AOT-compiled HLO
+//! (python/compile/model.py); these drivers own the buffers, the noise
+//! generation, GAE, and the environment interaction loop.
+
+pub mod ppo;
+pub mod replay;
+pub mod sac;
+
+pub use ppo::PpoDriver;
+pub use replay::ReplayBuffer;
+pub use sac::SacDriver;
+
+/// Scalar metrics emitted by one gradient update.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TrainMetrics {
+    pub actor_loss: f64,
+    pub critic_loss: f64,
+    pub mean_q: f64,
+    pub entropy: f64,
+}
+
+/// One point of a training curve (Fig 5).
+#[derive(Clone, Copy, Debug)]
+pub struct EpisodePoint {
+    pub episode: usize,
+    pub env_steps: usize,
+    pub reward: f64,
+    pub episode_len: usize,
+    pub actor_loss: f64,
+    pub critic_loss: f64,
+}

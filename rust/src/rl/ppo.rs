@@ -1,0 +1,321 @@
+//! PPO baseline driver (Table VIII PPO block): on-policy rollouts, GAE(λ)
+//! advantages computed host-side, clipped-objective updates through the
+//! AOT train step.
+
+use super::{EpisodePoint, TrainMetrics};
+use crate::config::{Algorithm, ExperimentConfig};
+use crate::runtime::{Executable, ParamSpec, Runtime};
+use crate::sim::env::{Action, EdgeEnv};
+use crate::sim::task::Workload;
+use crate::util::rng::Pcg64;
+use std::rc::Rc;
+
+/// One on-policy rollout transition.
+#[derive(Clone, Debug)]
+struct Step {
+    state: Vec<f32>,
+    action: Vec<f32>,
+    logp: f32,
+    value: f32,
+    reward: f32,
+    done: bool,
+}
+
+pub struct PpoDriver {
+    pub key: String,
+    spec: ParamSpec,
+    act_exe: Rc<Executable>,
+    train_exe: Rc<Executable>,
+    actor: Vec<f32>,
+    critic: Vec<f32>,
+    m_actor: Vec<f32>,
+    v_actor: Vec<f32>,
+    m_critic: Vec<f32>,
+    v_critic: Vec<f32>,
+    t: f32,
+    rollout: Vec<Step>,
+    rng: Pcg64,
+    gamma: f32,
+    lambda: f32,
+    expl: Vec<f32>,
+}
+
+impl PpoDriver {
+    pub fn new(rt: &Runtime, cfg: &ExperimentConfig) -> anyhow::Result<PpoDriver> {
+        anyhow::ensure!(cfg.algorithm == Algorithm::Ppo, "PpoDriver needs algorithm=ppo");
+        let key = format!("ppo_{}", cfg.topology_key());
+        let spec = rt.manifest.param(&key)?.clone();
+        anyhow::ensure!(
+            spec.state_dim == cfg.env.state_len(),
+            "artifact/env topology mismatch"
+        );
+        let act_exe = rt.load(&format!("{key}_act"))?;
+        let train_exe = rt.load(&format!("{key}_train"))?;
+        let actor = rt.manifest.load_init(&key, "actor")?;
+        let critic = rt.manifest.load_init(&key, "critic")?;
+        Ok(PpoDriver {
+            key,
+            act_exe,
+            train_exe,
+            m_actor: vec![0.0; actor.len()],
+            v_actor: vec![0.0; actor.len()],
+            m_critic: vec![0.0; critic.len()],
+            v_critic: vec![0.0; critic.len()],
+            t: 0.0,
+            rollout: Vec::new(),
+            rng: Pcg64::new(cfg.seed, 0x990),
+            gamma: cfg.train.gamma as f32,
+            lambda: cfg.train.ppo_gae_lambda as f32,
+            expl: vec![0.0; spec.action_dim],
+            actor,
+            critic,
+            spec,
+        })
+    }
+
+    /// Sample action + bookkeeping (logp, value) and stash pending step.
+    pub fn act(&mut self, state: &[f32], deterministic: bool) -> anyhow::Result<(Vec<f32>, f32, f32)> {
+        if deterministic {
+            self.expl.fill(0.0);
+        } else {
+            self.rng.fill_normal_f32(&mut self.expl);
+        }
+        let out = self.act_exe.run(&[&self.actor, &self.critic, state, &self.expl])?;
+        let mut it = out.into_iter();
+        let action = it.next().unwrap();
+        let logp = it.next().unwrap()[0];
+        let value = it.next().unwrap()[0];
+        Ok((action, logp, value))
+    }
+
+    pub fn record(
+        &mut self,
+        state: &[f32],
+        action: &[f32],
+        logp: f32,
+        value: f32,
+        reward: f32,
+        done: bool,
+    ) {
+        self.rollout.push(Step {
+            state: state.to_vec(),
+            action: action.to_vec(),
+            logp,
+            value,
+            reward,
+            done,
+        });
+    }
+
+    pub fn rollout_len(&self) -> usize {
+        self.rollout.len()
+    }
+
+    /// GAE(λ): returns (advantages, returns) for the current rollout.
+    fn gae(&self, last_value: f32) -> (Vec<f32>, Vec<f32>) {
+        let n = self.rollout.len();
+        let mut adv = vec![0.0f32; n];
+        let mut ret = vec![0.0f32; n];
+        let mut next_adv = 0.0f32;
+        let mut next_value = last_value;
+        for i in (0..n).rev() {
+            let s = &self.rollout[i];
+            let nonterminal = if s.done { 0.0 } else { 1.0 };
+            let delta = s.reward + self.gamma * next_value * nonterminal - s.value;
+            next_adv = delta + self.gamma * self.lambda * nonterminal * next_adv;
+            adv[i] = next_adv;
+            ret[i] = adv[i] + s.value;
+            next_value = s.value;
+        }
+        (adv, ret)
+    }
+
+    /// Run `epochs` PPO updates over the rollout in artifact-sized
+    /// minibatches (padding the tail by re-sampling), then clear it.
+    pub fn update(&mut self, epochs: usize, last_value: f32) -> anyhow::Result<TrainMetrics> {
+        let n = self.rollout.len();
+        anyhow::ensure!(n > 0, "ppo update with empty rollout");
+        let (adv, ret) = self.gae(last_value);
+        let b = self.spec.batch_size;
+        let s_dim = self.spec.state_dim;
+        let a_dim = self.spec.action_dim;
+        let mut metrics = TrainMetrics::default();
+        let mut order: Vec<usize> = (0..n).collect();
+        for _ in 0..epochs {
+            self.rng.shuffle(&mut order);
+            let num_batches = n.div_ceil(b);
+            for mb in 0..num_batches {
+                let mut s = Vec::with_capacity(b * s_dim);
+                let mut a = Vec::with_capacity(b * a_dim);
+                let mut lp = Vec::with_capacity(b);
+                let mut ad = Vec::with_capacity(b);
+                let mut rt_ = Vec::with_capacity(b);
+                for j in 0..b {
+                    // Wrap around so every minibatch is exactly b rows.
+                    let idx = order[(mb * b + j) % n];
+                    let st = &self.rollout[idx];
+                    s.extend_from_slice(&st.state);
+                    a.extend_from_slice(&st.action);
+                    lp.push(st.logp);
+                    ad.push(adv[idx]);
+                    rt_.push(ret[idx]);
+                }
+                let t_in = [self.t];
+                let outs = self.train_exe.run(&[
+                    &self.actor,
+                    &self.critic,
+                    &self.m_actor,
+                    &self.v_actor,
+                    &self.m_critic,
+                    &self.v_critic,
+                    &t_in,
+                    &s,
+                    &a,
+                    &lp,
+                    &ad,
+                    &rt_,
+                ])?;
+                let mut it = outs.into_iter();
+                self.actor = it.next().unwrap();
+                self.critic = it.next().unwrap();
+                self.m_actor = it.next().unwrap();
+                self.v_actor = it.next().unwrap();
+                self.m_critic = it.next().unwrap();
+                self.v_critic = it.next().unwrap();
+                self.t = it.next().unwrap()[0];
+                metrics.actor_loss = it.next().unwrap()[0] as f64;
+                metrics.critic_loss = it.next().unwrap()[0] as f64;
+                metrics.entropy = it.next().unwrap()[0] as f64;
+                metrics.mean_q = it.next().unwrap()[0] as f64; // approx_kl slot
+            }
+        }
+        self.rollout.clear();
+        Ok(metrics)
+    }
+
+    /// Save / restore the policy parameters (raw little-endian f32).
+    pub fn save_actor(&self, path: &str) -> anyhow::Result<()> {
+        let bytes: Vec<u8> = self.actor.iter().flat_map(|x| x.to_le_bytes()).collect();
+        std::fs::write(path, bytes)?;
+        Ok(())
+    }
+
+    pub fn load_actor(&mut self, path: &str) -> anyhow::Result<()> {
+        let bytes = std::fs::read(path)?;
+        anyhow::ensure!(bytes.len() == self.actor.len() * 4, "actor size mismatch");
+        for (i, chunk) in bytes.chunks_exact(4).enumerate() {
+            self.actor[i] = f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]);
+        }
+        Ok(())
+    }
+
+    /// Full on-policy training loop.
+    pub fn train_loop(
+        &mut self,
+        cfg: &ExperimentConfig,
+        episodes: usize,
+        mut on_episode: impl FnMut(&EpisodePoint),
+    ) -> anyhow::Result<Vec<EpisodePoint>> {
+        let mut curve = Vec::new();
+        let mut env_steps = 0usize;
+        let mut wl_rng = Pcg64::new(cfg.seed, 0xE9);
+        for ep in 0..episodes {
+            let workload = Workload::generate(&cfg.env, &mut wl_rng);
+            let mut env =
+                EdgeEnv::with_workload(cfg.env.clone(), workload, wl_rng.fork(ep as u64));
+            let mut state = env.state();
+            let mut ep_reward = 0.0;
+            let mut ep_len = 0usize;
+            let mut last = TrainMetrics::default();
+            loop {
+                let (action_vec, logp, value) = self.act(&state, false)?;
+                let action = Action::from_vec(&action_vec);
+                let outcome = env.step(&action);
+                let next_state = env.state();
+                self.record(&state, &action_vec, logp, value, outcome.reward as f32, outcome.done);
+                state = next_state;
+                ep_reward += outcome.reward;
+                ep_len += 1;
+                env_steps += 1;
+                if self.rollout.len() >= cfg.train.ppo_horizon {
+                    let (_, _, last_v) = self.act(&state, true)?;
+                    last = self.update(cfg.train.ppo_epochs, last_v)?;
+                }
+                if outcome.done {
+                    break;
+                }
+            }
+            if !self.rollout.is_empty() {
+                last = self.update(cfg.train.ppo_epochs, 0.0)?;
+            }
+            let point = EpisodePoint {
+                episode: ep,
+                env_steps,
+                reward: ep_reward,
+                episode_len: ep_len,
+                actor_loss: last.actor_loss,
+                critic_loss: last.critic_loss,
+            };
+            on_episode(&point);
+            curve.push(point);
+        }
+        Ok(curve)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn runtime() -> Option<Runtime> {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            return None;
+        }
+        Some(Runtime::new(dir.to_str().unwrap()).unwrap())
+    }
+
+    fn cfg() -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::preset_8node(0.1);
+        cfg.algorithm = Algorithm::Ppo;
+        cfg
+    }
+
+    #[test]
+    fn gae_matches_hand_computation() {
+        let Some(rt) = runtime() else { return };
+        let mut drv = PpoDriver::new(&rt, &cfg()).unwrap();
+        drv.gamma = 0.5;
+        drv.lambda = 1.0;
+        // Two steps: r=1, v=0 each, terminal at the end, last_value=0.
+        let s = vec![0.0f32; drv.spec.state_dim];
+        let a = vec![0.0f32; drv.spec.action_dim];
+        drv.record(&s, &a, 0.0, 0.0, 1.0, false);
+        drv.record(&s, &a, 0.0, 0.0, 1.0, true);
+        let (adv, ret) = drv.gae(0.0);
+        // delta_1 = 1; adv_1 = 1. delta_0 = 1 + 0.5*0 - 0 = 1; adv_0 = 1 + 0.5*1 = 1.5.
+        assert!((adv[1] - 1.0).abs() < 1e-6);
+        assert!((adv[0] - 1.5).abs() < 1e-6);
+        assert!((ret[0] - 1.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn act_and_update_run() {
+        let Some(rt) = runtime() else { return };
+        let c = cfg();
+        let mut drv = PpoDriver::new(&rt, &c).unwrap();
+        let s_dim = c.env.state_len();
+        let state = vec![0.2f32; s_dim];
+        let (a, logp, v) = drv.act(&state, false).unwrap();
+        assert_eq!(a.len(), c.env.action_len());
+        assert!(logp.is_finite() && v.is_finite());
+        for i in 0..8 {
+            drv.record(&state, &a, logp, v, 0.5, i == 7);
+        }
+        let before = drv.actor.clone();
+        let m = drv.update(1, 0.0).unwrap();
+        assert!(m.actor_loss.is_finite());
+        assert_ne!(before, drv.actor);
+        assert_eq!(drv.rollout_len(), 0);
+    }
+}

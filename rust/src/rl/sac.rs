@@ -1,0 +1,367 @@
+//! SAC-family training driver (Algorithm 2) for EAT and its ablations.
+//!
+//! Owns the five flat parameter vectors (actor, double critics, double
+//! targets), the Adam moments, and the replay buffer; each call to
+//! `update` samples a batch, draws the diffusion-chain and exploration
+//! noise tensors, and executes the single-HLO train step (critic update →
+//! actor update → soft target update fused in one module).
+
+use super::replay::ReplayBuffer;
+use super::{EpisodePoint, TrainMetrics};
+use crate::config::{Algorithm, ExperimentConfig};
+use crate::runtime::{Executable, ParamSpec, Runtime};
+use crate::sim::env::{Action, EdgeEnv};
+use crate::sim::task::Workload;
+use crate::util::rng::Pcg64;
+use std::rc::Rc;
+
+/// All mutable training state of one SAC agent.
+pub struct SacDriver {
+    pub alg: Algorithm,
+    pub key: String,
+    spec: ParamSpec,
+    act_exe: Rc<Executable>,
+    train_exe: Rc<Executable>,
+    // Flat parameter + optimiser state (kept host-side between steps).
+    actor: Vec<f32>,
+    critic1: Vec<f32>,
+    critic2: Vec<f32>,
+    critic1_t: Vec<f32>,
+    critic2_t: Vec<f32>,
+    m_actor: Vec<f32>,
+    v_actor: Vec<f32>,
+    m_c1: Vec<f32>,
+    v_c1: Vec<f32>,
+    m_c2: Vec<f32>,
+    v_c2: Vec<f32>,
+    t: f32,
+    pub replay: ReplayBuffer,
+    rng: Pcg64,
+    // Scratch noise buffers reused across steps (no hot-loop allocation).
+    chain_s: Vec<f32>,
+    chain_s2: Vec<f32>,
+    expl_s: Vec<f32>,
+    expl_s2: Vec<f32>,
+    act_chain: Vec<f32>,
+    act_expl: Vec<f32>,
+    /// Device-resident copy of the actor params, refreshed lazily after
+    /// each update (§Perf: one 320 KB upload per gradient step instead of
+    /// one per decision).
+    actor_buf: Option<xla::PjRtBuffer>,
+}
+
+impl SacDriver {
+    /// Load executables + initial parameters for `alg` on the config's
+    /// topology (`{alg}_{topology}` manifest key).
+    pub fn new(rt: &Runtime, cfg: &ExperimentConfig) -> anyhow::Result<SacDriver> {
+        let alg_key = cfg
+            .algorithm
+            .artifact_key()
+            .ok_or_else(|| anyhow::anyhow!("{} is not an RL algorithm", cfg.algorithm.name()))?;
+        anyhow::ensure!(cfg.algorithm != Algorithm::Ppo, "use PpoDriver for PPO");
+        let key = format!("{}_{}", alg_key, cfg.topology_key());
+        let spec = rt.manifest.param(&key)?.clone();
+        anyhow::ensure!(
+            spec.state_dim == cfg.env.state_len(),
+            "artifact state dim {} != env {} (topology mismatch)",
+            spec.state_dim,
+            cfg.env.state_len()
+        );
+        let act_exe = rt.load(&format!("{key}_act"))?;
+        let train_exe = rt.load(&format!("{key}_train"))?;
+        let actor = rt.manifest.load_init(&key, "actor")?;
+        let critic1 = rt.manifest.load_init(&key, "critic1")?;
+        let critic2 = rt.manifest.load_init(&key, "critic2")?;
+        let b = spec.batch_size;
+        let chain_len = b * spec.chain_steps * spec.action_dim;
+        let expl_len = b * spec.action_dim;
+        Ok(SacDriver {
+            alg: cfg.algorithm,
+            key,
+            act_exe,
+            train_exe,
+            critic1_t: critic1.clone(),
+            critic2_t: critic2.clone(),
+            m_actor: vec![0.0; actor.len()],
+            v_actor: vec![0.0; actor.len()],
+            m_c1: vec![0.0; critic1.len()],
+            v_c1: vec![0.0; critic1.len()],
+            m_c2: vec![0.0; critic2.len()],
+            v_c2: vec![0.0; critic2.len()],
+            t: 0.0,
+            replay: ReplayBuffer::new(
+                spec.state_dim,
+                spec.action_dim,
+                cfg.train.replay_capacity,
+            ),
+            rng: Pcg64::new(cfg.seed, 0x5AC),
+            chain_s: vec![0.0; chain_len],
+            chain_s2: vec![0.0; chain_len],
+            expl_s: vec![0.0; expl_len],
+            expl_s2: vec![0.0; expl_len],
+            act_chain: vec![0.0; spec.chain_steps.max(1) * spec.action_dim],
+            act_expl: vec![0.0; spec.action_dim],
+            actor_buf: None,
+            actor,
+            critic1,
+            critic2,
+            spec,
+        })
+    }
+
+    pub fn spec(&self) -> &ParamSpec {
+        &self.spec
+    }
+
+    pub fn grad_steps(&self) -> f32 {
+        self.t
+    }
+
+    /// Sample an action for `state` (Algorithm 1 lines 4-12).
+    /// `deterministic` zeroes the exploration noise (evaluation mode); the
+    /// diffusion chain noise is always drawn — it *is* the policy's
+    /// generative process.
+    pub fn act(&mut self, state: &[f32], deterministic: bool) -> anyhow::Result<Vec<f32>> {
+        self.rng.fill_normal_f32(&mut self.act_chain);
+        if deterministic {
+            self.act_expl.fill(0.0);
+        } else {
+            self.rng.fill_normal_f32(&mut self.act_expl);
+        }
+        // Device-resident actor params: upload only when stale.
+        if self.actor_buf.is_none() {
+            self.actor_buf = Some(self.act_exe.to_device(&self.actor, 0)?);
+        }
+        let actor_buf = self.actor_buf.as_ref().unwrap();
+        // Small per-decision tensors still come from the host each call.
+        let state_idx = 1;
+        let state_buf = self.act_exe.to_device(state, state_idx)?;
+        // Non-diffusion variants (chain_steps == 0) have no chain input.
+        let out = if self.spec.chain_steps > 0 {
+            let chain_buf = self.act_exe.to_device(&self.act_chain, 2)?;
+            let expl_buf = self.act_exe.to_device(&self.act_expl, 3)?;
+            self.act_exe
+                .run_b(&[actor_buf, &state_buf, &chain_buf, &expl_buf])?
+        } else {
+            let expl_buf = self.act_exe.to_device(&self.act_expl, 2)?;
+            self.act_exe.run_b(&[actor_buf, &state_buf, &expl_buf])?
+        };
+        Ok(out.into_iter().next().unwrap())
+    }
+
+    /// Legacy full-upload act path (kept for the §Perf before/after bench).
+    pub fn act_upload_all(&mut self, state: &[f32]) -> anyhow::Result<Vec<f32>> {
+        self.rng.fill_normal_f32(&mut self.act_chain);
+        self.act_expl.fill(0.0);
+        let out = if self.spec.chain_steps > 0 {
+            self.act_exe
+                .run(&[&self.actor, state, &self.act_chain, &self.act_expl])?
+        } else {
+            self.act_exe.run(&[&self.actor, state, &self.act_expl])?
+        };
+        Ok(out.into_iter().next().unwrap())
+    }
+
+    /// One gradient update (Algorithm 2 lines 19-22).
+    pub fn update(&mut self, batch_size: usize) -> anyhow::Result<TrainMetrics> {
+        anyhow::ensure!(
+            batch_size == self.spec.batch_size,
+            "batch {} != artifact batch {} (re-lower with --batch)",
+            batch_size,
+            self.spec.batch_size
+        );
+        let batch = self.replay.sample(batch_size, &mut self.rng);
+        self.rng.fill_normal_f32(&mut self.chain_s);
+        self.rng.fill_normal_f32(&mut self.chain_s2);
+        self.rng.fill_normal_f32(&mut self.expl_s);
+        self.rng.fill_normal_f32(&mut self.expl_s2);
+        let t_in = [self.t];
+        let mut inputs: Vec<&[f32]> = vec![
+            &self.actor,
+            &self.critic1,
+            &self.critic2,
+            &self.critic1_t,
+            &self.critic2_t,
+            &self.m_actor,
+            &self.v_actor,
+            &self.m_c1,
+            &self.v_c1,
+            &self.m_c2,
+            &self.v_c2,
+            &t_in,
+            &batch.s,
+            &batch.a,
+            &batch.r,
+            &batch.s2,
+            &batch.done,
+        ];
+        if self.spec.chain_steps > 0 {
+            inputs.push(&self.chain_s);
+            inputs.push(&self.chain_s2);
+        }
+        inputs.push(&self.expl_s);
+        inputs.push(&self.expl_s2);
+        let outs = self.train_exe.run(&inputs)?;
+        let mut it = outs.into_iter();
+        self.actor = it.next().unwrap();
+        self.critic1 = it.next().unwrap();
+        self.critic2 = it.next().unwrap();
+        self.critic1_t = it.next().unwrap();
+        self.critic2_t = it.next().unwrap();
+        self.m_actor = it.next().unwrap();
+        self.v_actor = it.next().unwrap();
+        self.m_c1 = it.next().unwrap();
+        self.v_c1 = it.next().unwrap();
+        self.m_c2 = it.next().unwrap();
+        self.v_c2 = it.next().unwrap();
+        self.t = it.next().unwrap()[0];
+        // Actor moved: the device-resident copy used by act() is stale.
+        self.actor_buf = None;
+        let metrics = TrainMetrics {
+            actor_loss: it.next().unwrap()[0] as f64,
+            critic_loss: it.next().unwrap()[0] as f64,
+            mean_q: it.next().unwrap()[0] as f64,
+            entropy: it.next().unwrap()[0] as f64,
+        };
+        Ok(metrics)
+    }
+
+    /// Save / restore the policy parameters (raw little-endian f32).
+    pub fn save_actor(&self, path: &str) -> anyhow::Result<()> {
+        let bytes: Vec<u8> = self.actor.iter().flat_map(|x| x.to_le_bytes()).collect();
+        std::fs::write(path, bytes)?;
+        Ok(())
+    }
+
+    pub fn load_actor(&mut self, path: &str) -> anyhow::Result<()> {
+        let bytes = std::fs::read(path)?;
+        anyhow::ensure!(bytes.len() == self.actor.len() * 4, "actor size mismatch");
+        for (i, chunk) in bytes.chunks_exact(4).enumerate() {
+            self.actor[i] = f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]);
+        }
+        self.actor_buf = None;
+        Ok(())
+    }
+
+    /// Full training run (Algorithm 2): interact with fresh episodes,
+    /// store transitions, update after warmup. Returns the training curve.
+    pub fn train_loop(
+        &mut self,
+        cfg: &ExperimentConfig,
+        episodes: usize,
+        mut on_episode: impl FnMut(&EpisodePoint),
+    ) -> anyhow::Result<Vec<EpisodePoint>> {
+        let mut curve = Vec::with_capacity(episodes);
+        let mut env_steps = 0usize;
+        let mut wl_rng = Pcg64::new(cfg.seed, 0xE9);
+        for ep in 0..episodes {
+            let workload = Workload::generate(&cfg.env, &mut wl_rng);
+            let mut env =
+                EdgeEnv::with_workload(cfg.env.clone(), workload, wl_rng.fork(ep as u64));
+            let mut state = env.state();
+            let mut ep_reward = 0.0;
+            let mut ep_len = 0usize;
+            let mut last = TrainMetrics::default();
+            loop {
+                let action_vec = self.act(&state, false)?;
+                let action = Action::from_vec(&action_vec);
+                let outcome = env.step(&action);
+                let next_state = env.state();
+                self.replay
+                    .push(&state, &action_vec, outcome.reward as f32, &next_state, outcome.done);
+                state = next_state;
+                ep_reward += outcome.reward;
+                ep_len += 1;
+                env_steps += 1;
+                if self.replay.len() >= cfg.train.warmup_steps.max(cfg.train.batch_size) {
+                    for _ in 0..cfg.train.updates_per_step {
+                        last = self.update(cfg.train.batch_size)?;
+                    }
+                }
+                if outcome.done {
+                    break;
+                }
+            }
+            let point = EpisodePoint {
+                episode: ep,
+                env_steps,
+                reward: ep_reward,
+                episode_len: ep_len,
+                actor_loss: last.actor_loss,
+                critic_loss: last.critic_loss,
+            };
+            on_episode(&point);
+            curve.push(point);
+        }
+        Ok(curve)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExperimentConfig;
+
+    fn runtime() -> Option<Runtime> {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: no artifacts");
+            return None;
+        }
+        Some(Runtime::new(dir.to_str().unwrap()).unwrap())
+    }
+
+    #[test]
+    fn act_produces_bounded_actions() {
+        let Some(rt) = runtime() else { return };
+        let cfg = ExperimentConfig::preset_8node(0.1);
+        let mut drv = SacDriver::new(&rt, &cfg).unwrap();
+        let state = vec![0.3f32; cfg.env.state_len()];
+        let a = drv.act(&state, true).unwrap();
+        assert_eq!(a.len(), cfg.env.action_len());
+        assert!(a.iter().all(|x| x.abs() <= 1.0 && x.is_finite()));
+        // Deterministic act is repeatable only if chain noise repeats;
+        // different calls draw fresh chains, so just check both valid.
+        let b = drv.act(&state, true).unwrap();
+        assert!(b.iter().all(|x| x.abs() <= 1.0));
+    }
+
+    #[test]
+    fn update_changes_parameters_and_reports_finite_losses() {
+        let Some(rt) = runtime() else { return };
+        let mut cfg = ExperimentConfig::preset_8node(0.1);
+        cfg.train.batch_size = rt.manifest.batch_size;
+        let mut drv = SacDriver::new(&rt, &cfg).unwrap();
+        let s_dim = cfg.env.state_len();
+        let a_dim = cfg.env.action_len();
+        let mut rng = Pcg64::seeded(3);
+        for _ in 0..cfg.train.batch_size {
+            let mut s = vec![0.0f32; s_dim];
+            let mut a = vec![0.0f32; a_dim];
+            rng.fill_uniform_f32(&mut s);
+            rng.fill_normal_f32(&mut a);
+            drv.replay.push(&s, &a, rng.next_f32(), &s, false);
+        }
+        let before = drv.actor.clone();
+        let m = drv.update(cfg.train.batch_size).unwrap();
+        assert!(m.actor_loss.is_finite() && m.critic_loss.is_finite());
+        assert!(m.critic_loss >= 0.0);
+        assert_ne!(before, drv.actor, "actor params should move");
+        assert_eq!(drv.grad_steps(), 1.0);
+    }
+
+    #[test]
+    fn save_load_actor_roundtrip() {
+        let Some(rt) = runtime() else { return };
+        let cfg = ExperimentConfig::preset_8node(0.1);
+        let mut drv = SacDriver::new(&rt, &cfg).unwrap();
+        let path = std::env::temp_dir().join(format!("eat_actor_{}.f32", std::process::id()));
+        let path = path.to_str().unwrap().to_string();
+        drv.save_actor(&path).unwrap();
+        let orig = drv.actor.clone();
+        drv.actor.iter_mut().for_each(|x| *x = 0.0);
+        drv.load_actor(&path).unwrap();
+        assert_eq!(drv.actor, orig);
+        std::fs::remove_file(&path).ok();
+    }
+}

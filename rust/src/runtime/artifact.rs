@@ -1,0 +1,258 @@
+//! Artifact manifest: the contract between `aot.py` and the rust runtime.
+//!
+//! `artifacts/manifest.json` describes every lowered HLO module (input /
+//! output tensor names and shapes, all f32) plus, per algorithm x topology,
+//! the flat parameter-vector lengths and the files holding the freshly
+//! initialised parameters.
+
+use crate::util::json::{self, Value};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Shape + name of one tensor crossing the AOT boundary (dtype is f32 by
+/// construction; scalars have an empty shape).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One lowered HLO module.
+#[derive(Clone, Debug)]
+pub struct EntrySpec {
+    pub key: String,
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+impl EntrySpec {
+    pub fn input_index(&self, name: &str) -> Option<usize> {
+        self.inputs.iter().position(|t| t.name == name)
+    }
+
+    pub fn output_index(&self, name: &str) -> Option<usize> {
+        self.outputs.iter().position(|t| t.name == name)
+    }
+}
+
+/// Parameter metadata for one algorithm x topology.
+#[derive(Clone, Debug)]
+pub struct ParamSpec {
+    pub key: String,
+    pub actor_len: usize,
+    pub critic_len: usize,
+    pub action_dim: usize,
+    pub state_dim: usize,
+    /// T+1 for diffusion algorithms, 0 for PPO.
+    pub chain_steps: usize,
+    pub batch_size: usize,
+    /// net name -> init file (relative to the artifacts dir).
+    pub init_files: BTreeMap<String, String>,
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug)]
+pub struct ArtifactManifest {
+    pub dir: PathBuf,
+    pub batch_size: usize,
+    pub denoise_steps: usize,
+    pub entries: BTreeMap<String, EntrySpec>,
+    pub params: BTreeMap<String, ParamSpec>,
+}
+
+fn tensor_specs(v: &Value) -> anyhow::Result<Vec<TensorSpec>> {
+    v.as_arr()
+        .ok_or_else(|| anyhow::anyhow!("tensor spec list not an array"))?
+        .iter()
+        .map(|t| {
+            Ok(TensorSpec {
+                name: t
+                    .req("name")?
+                    .as_str()
+                    .ok_or_else(|| anyhow::anyhow!("tensor name not a string"))?
+                    .to_string(),
+                shape: t
+                    .req("shape")?
+                    .as_usize_vec()
+                    .ok_or_else(|| anyhow::anyhow!("tensor shape not usize array"))?,
+            })
+        })
+        .collect()
+}
+
+impl ArtifactManifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> anyhow::Result<ArtifactManifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("cannot read {}: {e} (run `make artifacts`)", path.display()))?;
+        let v = json::parse(&text)?;
+        let mut entries = BTreeMap::new();
+        if let Some(Value::Obj(map)) = v.get("entries") {
+            for (key, ev) in map {
+                entries.insert(
+                    key.clone(),
+                    EntrySpec {
+                        key: key.clone(),
+                        file: ev
+                            .req("file")?
+                            .as_str()
+                            .ok_or_else(|| anyhow::anyhow!("entry file not a string"))?
+                            .to_string(),
+                        inputs: tensor_specs(ev.req("inputs")?)?,
+                        outputs: tensor_specs(ev.req("outputs")?)?,
+                    },
+                );
+            }
+        }
+        let mut params = BTreeMap::new();
+        if let Some(Value::Obj(map)) = v.get("params") {
+            for (key, pv) in map {
+                let mut init_files = BTreeMap::new();
+                if let Some(Value::Obj(files)) = pv.get("init_files") {
+                    for (net, f) in files {
+                        init_files.insert(
+                            net.clone(),
+                            f.as_str()
+                                .ok_or_else(|| anyhow::anyhow!("init file not a string"))?
+                                .to_string(),
+                        );
+                    }
+                }
+                let get = |k: &str| -> anyhow::Result<usize> {
+                    pv.req(k)?
+                        .as_usize()
+                        .ok_or_else(|| anyhow::anyhow!("param field {k} not a number"))
+                };
+                params.insert(
+                    key.clone(),
+                    ParamSpec {
+                        key: key.clone(),
+                        actor_len: get("actor_len")?,
+                        critic_len: get("critic_len")?,
+                        action_dim: get("action_dim")?,
+                        state_dim: get("state_dim")?,
+                        chain_steps: get("chain_steps")?,
+                        batch_size: get("batch_size")?,
+                        init_files,
+                    },
+                );
+            }
+        }
+        Ok(ArtifactManifest {
+            dir,
+            batch_size: v
+                .get("batch_size")
+                .and_then(Value::as_usize)
+                .unwrap_or(128),
+            denoise_steps: v
+                .get("denoise_steps")
+                .and_then(Value::as_usize)
+                .unwrap_or(10),
+            entries,
+            params,
+        })
+    }
+
+    pub fn entry(&self, key: &str) -> anyhow::Result<&EntrySpec> {
+        self.entries
+            .get(key)
+            .ok_or_else(|| anyhow::anyhow!("artifact entry '{key}' not in manifest (regenerate with `make artifacts`)"))
+    }
+
+    pub fn param(&self, key: &str) -> anyhow::Result<&ParamSpec> {
+        self.params
+            .get(key)
+            .ok_or_else(|| anyhow::anyhow!("param spec '{key}' not in manifest"))
+    }
+
+    pub fn hlo_path(&self, entry: &EntrySpec) -> PathBuf {
+        self.dir.join(&entry.file)
+    }
+
+    /// Read an initial parameter vector (raw little-endian f32 file).
+    pub fn load_init(&self, param_key: &str, net: &str) -> anyhow::Result<Vec<f32>> {
+        let spec = self.param(param_key)?;
+        let file = spec
+            .init_files
+            .get(net)
+            .ok_or_else(|| anyhow::anyhow!("no init file for net '{net}' of '{param_key}'"))?;
+        let bytes = std::fs::read(self.dir.join(file))?;
+        anyhow::ensure!(bytes.len() % 4 == 0, "init file size not a multiple of 4");
+        let mut out = Vec::with_capacity(bytes.len() / 4);
+        for chunk in bytes.chunks_exact(4) {
+            out.push(f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]));
+        }
+        let expected = if net == "actor" { spec.actor_len } else { spec.critic_len };
+        anyhow::ensure!(
+            out.len() == expected,
+            "init vector '{net}' length {} != manifest {}",
+            out.len(),
+            expected
+        );
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_fixture(dir: &Path) {
+        let manifest = r#"{
+          "version": 1, "batch_size": 8, "denoise_steps": 10,
+          "entries": {
+            "demo_act": {
+              "file": "demo_act.hlo.txt",
+              "inputs": [{"name": "actor", "shape": [12]}, {"name": "state", "shape": [3, 4]}],
+              "outputs": [{"name": "action", "shape": [5]}]
+            }
+          },
+          "params": {
+            "demo": {
+              "actor_len": 3, "critic_len": 2, "action_dim": 5, "state_dim": 12,
+              "chain_steps": 11, "batch_size": 8,
+              "init_files": {"actor": "demo_init_actor.f32"}
+            }
+          }
+        }"#;
+        std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+        let floats: Vec<u8> = [1.0f32, -2.5, 3.25]
+            .iter()
+            .flat_map(|x| x.to_le_bytes())
+            .collect();
+        std::fs::write(dir.join("demo_init_actor.f32"), floats).unwrap();
+    }
+
+    #[test]
+    fn loads_manifest_and_init() {
+        let dir = std::env::temp_dir().join(format!("eat_manifest_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        write_fixture(&dir);
+        let m = ArtifactManifest::load(&dir).unwrap();
+        assert_eq!(m.batch_size, 8);
+        let e = m.entry("demo_act").unwrap();
+        assert_eq!(e.inputs.len(), 2);
+        assert_eq!(e.inputs[1].shape, vec![3, 4]);
+        assert_eq!(e.inputs[1].element_count(), 12);
+        assert_eq!(e.input_index("state"), Some(1));
+        let init = m.load_init("demo", "actor").unwrap();
+        assert_eq!(init, vec![1.0, -2.5, 3.25]);
+        assert!(m.load_init("demo", "critic").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_manifest_is_helpful() {
+        let err = ArtifactManifest::load("/nonexistent_dir_xyz").unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+}

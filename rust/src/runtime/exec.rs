@@ -1,0 +1,252 @@
+//! PJRT executable cache + typed f32 execution helpers.
+//!
+//! `Runtime` owns one CPU PJRT client and a lazily populated cache of
+//! compiled executables keyed by manifest entry. `Executable::run` takes
+//! flat f32 slices in manifest input order, shapes them into literals, and
+//! returns flat f32 vectors in manifest output order (everything crossing
+//! the boundary is f32 by construction; aot.py lowers with
+//! return_tuple=True so outputs always arrive as one tuple literal).
+
+use super::artifact::{ArtifactManifest, EntrySpec};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+/// A compiled HLO module plus its I/O spec.
+pub struct Executable {
+    pub spec: EntrySpec,
+    exe: xla::PjRtLoadedExecutable,
+    client: xla::PjRtClient,
+}
+
+impl Executable {
+    /// Upload a tensor to the device once; the returned buffer can be
+    /// passed to `run_b` across many calls. This is the §Perf hot-path
+    /// optimisation: the actor's ~80k-float parameter vector is uploaded
+    /// once per *gradient update* instead of once per *decision*.
+    pub fn to_device(&self, data: &[f32], input_index: usize) -> anyhow::Result<xla::PjRtBuffer> {
+        let ts = self
+            .spec
+            .inputs
+            .get(input_index)
+            .ok_or_else(|| anyhow::anyhow!("input index {input_index} out of range"))?;
+        anyhow::ensure!(
+            data.len() == ts.element_count(),
+            "to_device '{}': expected {} elements, got {}",
+            ts.name,
+            ts.element_count(),
+            data.len()
+        );
+        let dims: Vec<usize> = if ts.shape.is_empty() { vec![1] } else { ts.shape.clone() };
+        self.client
+            .buffer_from_host_buffer::<f32>(data, &dims, None)
+            .map_err(|e| anyhow::anyhow!("to_device '{}': {e:?}", ts.name))
+    }
+
+    /// Execute with device-resident inputs (see `to_device`). Outputs are
+    /// returned as flat host vectors like `run`.
+    pub fn run_b(&self, inputs: &[&xla::PjRtBuffer]) -> anyhow::Result<Vec<Vec<f32>>> {
+        anyhow::ensure!(
+            inputs.len() == self.spec.inputs.len(),
+            "'{}' expects {} inputs, got {}",
+            self.spec.key,
+            self.spec.inputs.len(),
+            inputs.len()
+        );
+        let result = self
+            .exe
+            .execute_b::<&xla::PjRtBuffer>(inputs)
+            .map_err(|e| anyhow::anyhow!("execute_b '{}': {e:?}", self.spec.key))?;
+        self.collect_outputs(result)
+    }
+    /// Execute with flat f32 inputs in manifest order. Each slice's length
+    /// must match the spec'd element count. Returns one flat Vec per
+    /// declared output.
+    pub fn run(&self, inputs: &[&[f32]]) -> anyhow::Result<Vec<Vec<f32>>> {
+        anyhow::ensure!(
+            inputs.len() == self.spec.inputs.len(),
+            "'{}' expects {} inputs, got {}",
+            self.spec.key,
+            self.spec.inputs.len(),
+            inputs.len()
+        );
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (ts, data) in self.spec.inputs.iter().zip(inputs) {
+            anyhow::ensure!(
+                data.len() == ts.element_count(),
+                "input '{}' of '{}': expected {} elements, got {}",
+                ts.name,
+                self.spec.key,
+                ts.element_count(),
+                data.len()
+            );
+            let lit = xla::Literal::vec1(data);
+            let lit = if ts.shape.len() == 1 {
+                lit
+            } else {
+                let dims: Vec<i64> = ts.shape.iter().map(|&d| d as i64).collect();
+                lit.reshape(&dims)
+                    .map_err(|e| anyhow::anyhow!("reshape {}: {e:?}", ts.name))?
+            };
+            literals.push(lit);
+        }
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow::anyhow!("execute '{}': {e:?}", self.spec.key))?;
+        self.collect_outputs(result)
+    }
+
+    fn collect_outputs(
+        &self,
+        result: Vec<Vec<xla::PjRtBuffer>>,
+    ) -> anyhow::Result<Vec<Vec<f32>>> {
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("to_literal '{}': {e:?}", self.spec.key))?;
+        let parts = tuple
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("to_tuple '{}': {e:?}", self.spec.key))?;
+        anyhow::ensure!(
+            parts.len() == self.spec.outputs.len(),
+            "'{}' returned {} outputs, manifest says {}",
+            self.spec.key,
+            parts.len(),
+            self.spec.outputs.len()
+        );
+        let mut outs = Vec::with_capacity(parts.len());
+        for (ts, lit) in self.spec.outputs.iter().zip(parts) {
+            let v = lit
+                .to_vec::<f32>()
+                .map_err(|e| anyhow::anyhow!("output '{}' of '{}': {e:?}", ts.name, self.spec.key))?;
+            anyhow::ensure!(
+                v.len() == ts.element_count(),
+                "output '{}' of '{}': expected {} elements, got {}",
+                ts.name,
+                self.spec.key,
+                ts.element_count(),
+                v.len()
+            );
+            outs.push(v);
+        }
+        Ok(outs)
+    }
+}
+
+/// CPU PJRT client + compiled-executable cache.
+pub struct Runtime {
+    pub manifest: ArtifactManifest,
+    client: xla::PjRtClient,
+    cache: RefCell<HashMap<String, Rc<Executable>>>,
+}
+
+impl Runtime {
+    /// Create a runtime over an artifacts directory (reads manifest.json).
+    pub fn new(artifacts_dir: &str) -> anyhow::Result<Runtime> {
+        let manifest = ArtifactManifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("pjrt cpu: {e:?}"))?;
+        Ok(Runtime {
+            manifest,
+            client,
+            cache: RefCell::new(HashMap::new()),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile (or fetch from cache) the executable for a manifest
+    /// entry key such as `eat_n8l8_train`.
+    pub fn load(&self, key: &str) -> anyhow::Result<Rc<Executable>> {
+        if let Some(e) = self.cache.borrow().get(key) {
+            return Ok(e.clone());
+        }
+        let spec = self.manifest.entry(key)?.clone();
+        let path = self.manifest.hlo_path(&spec);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| anyhow::anyhow!("non-utf8 artifact path"))?,
+        )
+        .map_err(|e| anyhow::anyhow!("parse HLO '{}': {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compile '{key}': {e:?}"))?;
+        let executable = Rc::new(Executable {
+            spec,
+            exe,
+            client: self.client.clone(),
+        });
+        self.cache.borrow_mut().insert(key.to_string(), executable.clone());
+        Ok(executable)
+    }
+
+    /// True if the manifest has an entry for `key`.
+    pub fn has_entry(&self, key: &str) -> bool {
+        self.manifest.entries.contains_key(key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    //! Integration tests (need `make artifacts` first; skipped otherwise).
+    use super::*;
+
+    fn runtime() -> Option<Runtime> {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping runtime test: no artifacts (run `make artifacts`)");
+            return None;
+        }
+        Some(Runtime::new(dir.to_str().unwrap()).unwrap())
+    }
+
+    #[test]
+    fn act_executes_and_is_deterministic() {
+        let Some(rt) = runtime() else { return };
+        if !rt.has_entry("eat_n8l8_act") {
+            return;
+        }
+        let exe = rt.load("eat_n8l8_act").unwrap();
+        let p = rt.manifest.param("eat_n8l8").unwrap().clone();
+        let actor = rt.manifest.load_init("eat_n8l8", "actor").unwrap();
+        let state = vec![0.25f32; p.state_dim];
+        let chain = vec![0.1f32; p.chain_steps * p.action_dim];
+        let expl = vec![0.0f32; p.action_dim];
+        let out1 = exe.run(&[&actor, &state, &chain, &expl]).unwrap();
+        let out2 = exe.run(&[&actor, &state, &chain, &expl]).unwrap();
+        assert_eq!(out1.len(), 3);
+        assert_eq!(out1[0].len(), p.action_dim);
+        assert_eq!(out1[0], out2[0], "same inputs must give same action");
+        assert!(out1[0].iter().all(|x| x.is_finite() && x.abs() <= 1.0));
+    }
+
+    #[test]
+    fn run_rejects_wrong_arity_and_shape() {
+        let Some(rt) = runtime() else { return };
+        if !rt.has_entry("eat_n8l8_act") {
+            return;
+        }
+        let exe = rt.load("eat_n8l8_act").unwrap();
+        assert!(exe.run(&[&[0.0f32]]).is_err());
+        let p = rt.manifest.param("eat_n8l8").unwrap().clone();
+        let actor = rt.manifest.load_init("eat_n8l8", "actor").unwrap();
+        let bad_state = vec![0.0f32; p.state_dim + 1];
+        let chain = vec![0.0f32; p.chain_steps * p.action_dim];
+        let expl = vec![0.0f32; p.action_dim];
+        assert!(exe.run(&[&actor, &bad_state, &chain, &expl]).is_err());
+    }
+
+    #[test]
+    fn executable_cache_hits() {
+        let Some(rt) = runtime() else { return };
+        if !rt.has_entry("eat_n8l8_act") {
+            return;
+        }
+        let a = rt.load("eat_n8l8_act").unwrap();
+        let b = rt.load("eat_n8l8_act").unwrap();
+        assert!(Rc::ptr_eq(&a, &b));
+    }
+}

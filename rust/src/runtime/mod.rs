@@ -1,0 +1,10 @@
+//! PJRT runtime: loads the AOT artifacts produced by `python/compile/aot.py`
+//! and executes them from the rust hot path. Python is never involved at
+//! runtime — the HLO text is parsed, compiled once per executable, and
+//! cached for the life of the process.
+
+pub mod artifact;
+pub mod exec;
+
+pub use artifact::{ArtifactManifest, EntrySpec, ParamSpec, TensorSpec};
+pub use exec::{Executable, Runtime};

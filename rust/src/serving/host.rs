@@ -1,0 +1,133 @@
+//! Host side of the serving system: gang dispatch over sockets and
+//! asynchronous result collection, mirroring the paper's host process that
+//! "packages the task details into a JSON string and sends it via the
+//! socket to the server responsible for execution ... then asynchronously
+//! monitors the server's result port".
+
+use super::protocol::{TaskRequest, TaskResult};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::mpsc;
+use std::time::Instant;
+
+/// Outcome of one gang-scheduled task: per-worker results plus wall time.
+#[derive(Clone, Debug)]
+pub struct GangOutcome {
+    pub task_id: u64,
+    pub results: Vec<TaskResult>,
+    /// Host-observed wall-clock seconds for the whole gang (max worker).
+    pub wall_seconds: f64,
+}
+
+impl GangOutcome {
+    /// Simulated execution seconds (max over the gang — patches run in
+    /// parallel and the task completes when the slowest patch does).
+    pub fn sim_exec_seconds(&self) -> f64 {
+        self.results
+            .iter()
+            .map(|r| r.exec_time + r.load_time)
+            .fold(0.0, f64::max)
+    }
+
+    pub fn any_reload(&self) -> bool {
+        self.results.iter().any(|r| !r.reused)
+    }
+}
+
+/// The host: knows every worker's address and dispatches gangs.
+pub struct ServingHost {
+    workers: Vec<SocketAddr>,
+}
+
+impl ServingHost {
+    pub fn new(workers: Vec<SocketAddr>) -> Self {
+        ServingHost { workers }
+    }
+
+    pub fn worker_count(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Dispatch one task to `gang` (worker indices), concurrently, and
+    /// wait for every patch result (gang semantics: the task is complete
+    /// only when all patches are).
+    pub fn dispatch(
+        &self,
+        task_id: u64,
+        prompt: &str,
+        steps: u32,
+        model: u32,
+        gang: &[usize],
+    ) -> anyhow::Result<GangOutcome> {
+        anyhow::ensure!(!gang.is_empty(), "empty gang");
+        anyhow::ensure!(
+            gang.iter().all(|&w| w < self.workers.len()),
+            "gang references unknown worker"
+        );
+        let started = Instant::now();
+        let (tx, rx) = mpsc::channel::<anyhow::Result<TaskResult>>();
+        for (rank, &w) in gang.iter().enumerate() {
+            let addr = self.workers[w];
+            let req = TaskRequest {
+                task_id,
+                prompt: prompt.to_string(),
+                steps,
+                patches: gang.len(),
+                model,
+                rank,
+            };
+            let tx = tx.clone();
+            std::thread::spawn(move || {
+                let send = || -> anyhow::Result<TaskResult> {
+                    let mut stream = TcpStream::connect(addr)?;
+                    stream.write_all(req.to_json().as_bytes())?;
+                    stream.write_all(b"\n")?;
+                    let mut line = String::new();
+                    BufReader::new(stream).read_line(&mut line)?;
+                    TaskResult::from_json(line.trim())
+                };
+                tx.send(send()).ok();
+            });
+        }
+        drop(tx);
+        let mut results = Vec::with_capacity(gang.len());
+        for r in rx {
+            results.push(r?);
+        }
+        results.sort_by_key(|r| r.worker_id);
+        Ok(GangOutcome {
+            task_id,
+            results,
+            wall_seconds: started.elapsed().as_secs_f64(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExecModelConfig;
+    use crate::serving::worker::WorkerPool;
+
+    #[test]
+    fn gang_dispatch_collects_all_patches() {
+        let pool = WorkerPool::spawn(4, ExecModelConfig::default(), 1e-4, 2).unwrap();
+        let host = ServingHost::new(pool.addrs().to_vec());
+        let out = host.dispatch(9, "gang test", 20, 0, &[0, 1, 2, 3]).unwrap();
+        assert_eq!(out.results.len(), 4);
+        assert!(out.any_reload());
+        assert!(out.sim_exec_seconds() > 0.0);
+        // Reuse on the second dispatch with same model + gang size.
+        let out2 = host.dispatch(10, "again", 20, 0, &[0, 1, 2, 3]).unwrap();
+        assert!(!out2.any_reload());
+        assert!(out2.sim_exec_seconds() < out.sim_exec_seconds());
+        pool.shutdown();
+    }
+
+    #[test]
+    fn dispatch_validates_gang() {
+        let host = ServingHost::new(vec![]);
+        assert!(host.dispatch(0, "x", 10, 0, &[]).is_err());
+        assert!(host.dispatch(0, "x", 10, 0, &[3]).is_err());
+    }
+}

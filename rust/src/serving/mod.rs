@@ -1,0 +1,20 @@
+//! Serving system emulation: the paper's real deployment runs one Docker
+//! container per GPU, each listening on a socket; the host packages task
+//! details as a JSON string, sends it to every server of the gang, and
+//! asynchronously collects result JSONs carrying the actual execution and
+//! model-loading times (§VI.A.1).
+//!
+//! This module reproduces that wire architecture faithfully — TCP sockets,
+//! newline-delimited JSON, one worker per simulated GPU, concurrent gang
+//! dispatch, asynchronous result collection — with the GPU replaced by the
+//! calibrated execution model (a worker "executes" by sleeping the
+//! predicted duration scaled by `time_scale`). See DESIGN.md
+//! §Substitutions.
+
+pub mod host;
+pub mod protocol;
+pub mod worker;
+
+pub use host::ServingHost;
+pub use protocol::{TaskRequest, TaskResult};
+pub use worker::WorkerPool;

@@ -1,0 +1,119 @@
+//! Wire protocol: newline-delimited JSON task requests and results,
+//! mirroring the paper's host→container JSON strings (prompt p_k and draw
+//! steps s_k in; result image + measured timings back).
+
+use crate::util::json::{self, Value};
+
+/// A task command sent from the host to one worker of a gang.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TaskRequest {
+    pub task_id: u64,
+    /// Prompt text g_k (stand-in string; drives per-prompt quality jitter).
+    pub prompt: String,
+    /// Inference steps s_k chosen by the scheduler.
+    pub steps: u32,
+    /// Gang size c_k (number of patch workers for this task).
+    pub patches: usize,
+    /// Model/service type to load.
+    pub model: u32,
+    /// Rank of this worker within the gang (0-based).
+    pub rank: usize,
+}
+
+impl TaskRequest {
+    pub fn to_json(&self) -> String {
+        let mut v = Value::obj();
+        v.set("task_id", self.task_id)
+            .set("prompt", self.prompt.as_str())
+            .set("steps", self.steps as usize)
+            .set("patches", self.patches)
+            .set("model", self.model as usize)
+            .set("rank", self.rank);
+        v.to_json()
+    }
+
+    pub fn from_json(text: &str) -> anyhow::Result<TaskRequest> {
+        let v = json::parse(text)?;
+        Ok(TaskRequest {
+            task_id: v.req("task_id")?.as_f64().unwrap_or(0.0) as u64,
+            prompt: v.req("prompt")?.as_str().unwrap_or("").to_string(),
+            steps: v.req("steps")?.as_f64().unwrap_or(0.0) as u32,
+            patches: v.req("patches")?.as_usize().unwrap_or(1),
+            model: v.req("model")?.as_f64().unwrap_or(0.0) as u32,
+            rank: v.req("rank")?.as_usize().unwrap_or(0),
+        })
+    }
+}
+
+/// Result returned by a worker after executing its patch.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TaskResult {
+    pub task_id: u64,
+    pub worker_id: usize,
+    /// Actual (simulated) execution seconds, pre-scaling.
+    pub exec_time: f64,
+    /// Actual (simulated) model-loading seconds (0 when reused).
+    pub load_time: f64,
+    /// Whether the worker reused an already-loaded model instance.
+    pub reused: bool,
+    /// Stand-in for the generated image patch (base64 in the real system).
+    pub image: String,
+}
+
+impl TaskResult {
+    pub fn to_json(&self) -> String {
+        let mut v = Value::obj();
+        v.set("task_id", self.task_id)
+            .set("worker_id", self.worker_id)
+            .set("exec_time", self.exec_time)
+            .set("load_time", self.load_time)
+            .set("reused", self.reused)
+            .set("image", self.image.as_str());
+        v.to_json()
+    }
+
+    pub fn from_json(text: &str) -> anyhow::Result<TaskResult> {
+        let v = json::parse(text)?;
+        Ok(TaskResult {
+            task_id: v.req("task_id")?.as_f64().unwrap_or(0.0) as u64,
+            worker_id: v.req("worker_id")?.as_usize().unwrap_or(0),
+            exec_time: v.req("exec_time")?.as_f64().unwrap_or(0.0),
+            load_time: v.req("load_time")?.as_f64().unwrap_or(0.0),
+            reused: v.req("reused")?.as_bool().unwrap_or(false),
+            image: v.req("image")?.as_str().unwrap_or("").to_string(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_roundtrip() {
+        let req = TaskRequest {
+            task_id: 42,
+            prompt: "a lighthouse at dawn".into(),
+            steps: 20,
+            patches: 4,
+            model: 2,
+            rank: 3,
+        };
+        let back = TaskRequest::from_json(&req.to_json()).unwrap();
+        assert_eq!(back, req);
+    }
+
+    #[test]
+    fn result_roundtrip() {
+        let res = TaskResult {
+            task_id: 7,
+            worker_id: 1,
+            exec_time: 5.8,
+            load_time: 28.0,
+            reused: false,
+            image: "patch-7-1".into(),
+        };
+        let back = TaskResult::from_json(&res.to_json()).unwrap();
+        assert_eq!(back, res);
+    }
+}

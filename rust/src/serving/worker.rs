@@ -1,0 +1,194 @@
+//! Worker processes: one TCP listener per simulated GPU container. Each
+//! accepted connection carries one newline-terminated JSON task request;
+//! the worker "executes" it (sleeping the calibrated duration x
+//! `time_scale`), tracks which model instance it has loaded (charging
+//! initialisation time on change, like DistriFusion's model load), and
+//! replies with a result JSON.
+
+use super::protocol::{TaskRequest, TaskResult};
+use crate::config::ExecModelConfig;
+use crate::sim::exec_model::ExecModel;
+use crate::util::rng::Pcg64;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+/// Per-worker loaded-model state.
+#[derive(Clone, Copy, Debug, PartialEq)]
+struct Loaded {
+    model: u32,
+    patches: usize,
+}
+
+fn handle(
+    stream: TcpStream,
+    worker_id: usize,
+    exec: &ExecModel,
+    loaded: &mut Option<Loaded>,
+    rng: &mut Pcg64,
+    time_scale: f64,
+) -> anyhow::Result<()> {
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    if line.trim().is_empty() {
+        return Ok(());
+    }
+    let req = TaskRequest::from_json(line.trim())?;
+    let want = Loaded {
+        model: req.model,
+        patches: req.patches,
+    };
+    // Model reuse: a loaded instance matches only if both the model type
+    // and the gang size agree (DistriFusion loads per process group).
+    let reused = *loaded == Some(want);
+    let load_time = if reused {
+        0.0
+    } else {
+        exec.sample_init(req.patches, rng)
+    };
+    *loaded = Some(want);
+    let exec_time = exec.sample_exec(req.steps, req.patches, rng);
+    let simulated = (load_time + exec_time) * time_scale;
+    std::thread::sleep(std::time::Duration::from_secs_f64(simulated));
+    let result = TaskResult {
+        task_id: req.task_id,
+        worker_id,
+        exec_time,
+        load_time,
+        reused,
+        image: format!("image:{}:{}:{}", req.task_id, req.rank, req.prompt.len()),
+    };
+    let mut out = stream;
+    out.write_all(result.to_json().as_bytes())?;
+    out.write_all(b"\n")?;
+    Ok(())
+}
+
+/// A pool of worker listeners bound to ephemeral localhost ports.
+pub struct WorkerPool {
+    addrs: Vec<SocketAddr>,
+    stop: Arc<AtomicBool>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn `n` workers. `time_scale` compresses simulated seconds into
+    /// real sleeping time (e.g. 0.01 → a 33 s model load sleeps 330 ms).
+    pub fn spawn(n: usize, exec_cfg: ExecModelConfig, time_scale: f64, seed: u64) -> anyhow::Result<WorkerPool> {
+        let stop = Arc::new(AtomicBool::new(false));
+        let mut addrs = Vec::with_capacity(n);
+        let mut handles = Vec::with_capacity(n);
+        for worker_id in 0..n {
+            let listener = TcpListener::bind("127.0.0.1:0")?;
+            listener.set_nonblocking(true)?;
+            addrs.push(listener.local_addr()?);
+            let stop_flag = stop.clone();
+            let cfg = exec_cfg.clone();
+            handles.push(std::thread::spawn(move || {
+                let exec = ExecModel::new(cfg);
+                let mut rng = Pcg64::new(seed, worker_id as u64 + 0xB0);
+                let mut loaded: Option<Loaded> = None;
+                while !stop_flag.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            stream.set_nonblocking(false).ok();
+                            if let Err(e) = handle(
+                                stream,
+                                worker_id,
+                                &exec,
+                                &mut loaded,
+                                &mut rng,
+                                time_scale,
+                            ) {
+                                eprintln!("worker {worker_id}: {e}");
+                            }
+                        }
+                        Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(std::time::Duration::from_millis(2));
+                        }
+                        Err(e) => {
+                            eprintln!("worker {worker_id} accept: {e}");
+                            break;
+                        }
+                    }
+                }
+            }));
+        }
+        Ok(WorkerPool {
+            addrs,
+            stop,
+            handles,
+        })
+    }
+
+    pub fn addrs(&self) -> &[SocketAddr] {
+        &self.addrs
+    }
+
+    pub fn len(&self) -> usize {
+        self.addrs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.addrs.is_empty()
+    }
+
+    /// Signal workers to stop and join their threads.
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        for h in self.handles.drain(..) {
+            h.join().ok();
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        for h in self.handles.drain(..) {
+            h.join().ok();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{BufRead, BufReader, Write};
+
+    #[test]
+    fn worker_executes_and_reports_reuse() {
+        let pool = WorkerPool::spawn(1, ExecModelConfig::default(), 1e-4, 1).unwrap();
+        let addr = pool.addrs()[0];
+        let send = |req: &TaskRequest| -> TaskResult {
+            let mut stream = TcpStream::connect(addr).unwrap();
+            stream.write_all(req.to_json().as_bytes()).unwrap();
+            stream.write_all(b"\n").unwrap();
+            let mut line = String::new();
+            BufReader::new(stream).read_line(&mut line).unwrap();
+            TaskResult::from_json(line.trim()).unwrap()
+        };
+        let req = TaskRequest {
+            task_id: 1,
+            prompt: "p".into(),
+            steps: 20,
+            patches: 2,
+            model: 0,
+            rank: 0,
+        };
+        let r1 = send(&req);
+        assert!(!r1.reused);
+        assert!(r1.load_time > 20.0, "load={}", r1.load_time);
+        // Same model + gang size again: reused, zero load.
+        let r2 = send(&TaskRequest { task_id: 2, ..req.clone() });
+        assert!(r2.reused);
+        assert_eq!(r2.load_time, 0.0);
+        // Different model: reload.
+        let r3 = send(&TaskRequest { task_id: 3, model: 1, ..req });
+        assert!(!r3.reused);
+        pool.shutdown();
+    }
+}

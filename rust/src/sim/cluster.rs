@@ -1,0 +1,288 @@
+//! The server cluster E: gang lookup (Eq. 1's G_m groups), idle counting,
+//! and the greedy, fragmentation-minimising server selection strategy from
+//! §V.B.4 ("Server Selector").
+
+use super::server::{GangId, Server};
+use super::task::ModelType;
+
+/// Outcome of a server-selection query.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Selection {
+    /// An idle gang with the right model and exact size exists: reuse it
+    /// (no initialisation cost).
+    Reuse(Vec<usize>),
+    /// Enough idle servers exist but the model must be (re)initialised on
+    /// them (cold start).
+    Fresh(Vec<usize>),
+    /// Not enough idle servers: the gang constraint (4b/4c) cannot be met.
+    Infeasible,
+}
+
+impl Selection {
+    pub fn servers(&self) -> Option<&[usize]> {
+        match self {
+            Selection::Reuse(v) | Selection::Fresh(v) => Some(v),
+            Selection::Infeasible => None,
+        }
+    }
+
+    pub fn is_reuse(&self) -> bool {
+        matches!(self, Selection::Reuse(_))
+    }
+}
+
+/// Cluster of edge servers.
+#[derive(Clone, Debug)]
+pub struct Cluster {
+    pub servers: Vec<Server>,
+    next_gang: u64,
+}
+
+impl Cluster {
+    pub fn new(n: usize) -> Self {
+        Cluster {
+            servers: (0..n).map(Server::new).collect(),
+            next_gang: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.servers.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.servers.is_empty()
+    }
+
+    pub fn idle_count(&self) -> usize {
+        self.servers.iter().filter(|s| s.is_idle()).count()
+    }
+
+    pub fn fresh_gang_id(&mut self) -> GangId {
+        self.next_gang += 1;
+        GangId(self.next_gang)
+    }
+
+    /// G^t_m restricted to complete idle gangs: groups of idle servers that
+    /// share a gang id, model `m`, and whose full gang (gang_size members)
+    /// is idle. Returns (gang id, member server ids) pairs.
+    pub fn idle_gangs(&self, model: ModelType) -> Vec<(GangId, Vec<usize>)> {
+        use std::collections::BTreeMap;
+        let mut groups: BTreeMap<u64, Vec<usize>> = BTreeMap::new();
+        let mut sizes: BTreeMap<u64, usize> = BTreeMap::new();
+        for s in &self.servers {
+            if s.is_idle() && s.model == Some(model) {
+                if let Some(g) = s.gang {
+                    groups.entry(g.0).or_default().push(s.id);
+                    sizes.insert(g.0, s.gang_size);
+                }
+            }
+        }
+        groups
+            .into_iter()
+            .filter(|(gid, members)| sizes.get(gid) == Some(&members.len()))
+            .map(|(gid, members)| (GangId(gid), members))
+            .collect()
+    }
+
+    /// §V.B.4 greedy server selection for a task needing `count` servers of
+    /// model `model`:
+    /// 1. If an idle gang of exactly `count` servers already holds the
+    ///    model, reuse it (zero initialisation).
+    /// 2. Otherwise pick `count` idle servers minimising "idle group
+    ///    fragmentation": prefer empty servers, then members of already
+    ///    broken (partially busy) gangs, then break the least-recently-used
+    ///    complete idle gang.
+    pub fn select(&self, model: ModelType, count: usize) -> Selection {
+        // 1. Exact reuse.
+        for (_gid, members) in self.idle_gangs(model) {
+            if members.len() == count {
+                return Selection::Reuse(members);
+            }
+        }
+        // 2. Fresh placement.
+        let idle: Vec<&Server> = self.servers.iter().filter(|s| s.is_idle()).collect();
+        if idle.len() < count {
+            return Selection::Infeasible;
+        }
+        // Completeness of each gang among idle servers: a gang is "intact"
+        // if all its members are idle (breaking it destroys a reusable
+        // group; avoid if possible).
+        use std::collections::BTreeMap;
+        let mut idle_by_gang: BTreeMap<u64, usize> = BTreeMap::new();
+        for s in &idle {
+            if let Some(g) = s.gang {
+                *idle_by_gang.entry(g.0).or_default() += 1;
+            }
+        }
+        let mut scored: Vec<(u64, f64, usize)> = idle
+            .iter()
+            .map(|s| {
+                // Lower score = pick first.
+                let score: u64 = match (s.model, s.gang) {
+                    (None, _) => 0, // empty server: free real estate
+                    (Some(_), Some(g)) => {
+                        let intact = idle_by_gang.get(&g.0) == Some(&s.gang_size);
+                        if intact {
+                            2 // breaking an intact gang loses reuse potential
+                        } else {
+                            1 // gang already broken: cheap to take
+                        }
+                    }
+                    (Some(_), None) => 1,
+                };
+                (score, s.idle_since, s.id)
+            })
+            .collect();
+        // Tie-break: LRU (oldest idle first), then id for determinism.
+        scored.sort_by(|a, b| {
+            a.0.cmp(&b.0)
+                .then(a.1.partial_cmp(&b.1).unwrap())
+                .then(a.2.cmp(&b.2))
+        });
+        let chosen = scored.iter().take(count).map(|x| x.2).collect();
+        Selection::Fresh(chosen)
+    }
+
+    /// Dispatch: mark servers busy for `duration`, loading `model` as a new
+    /// gang (fresh) or keeping the existing gang (reuse).
+    pub fn dispatch(
+        &mut self,
+        server_ids: &[usize],
+        duration: f64,
+        model: ModelType,
+        reuse: bool,
+    ) -> GangId {
+        let gang = if reuse {
+            self.servers[server_ids[0]].gang.expect("reuse without gang")
+        } else {
+            let g = self.fresh_gang_id();
+            for &id in server_ids {
+                self.servers[id].unload();
+            }
+            g
+        };
+        let size = server_ids.len();
+        for &id in server_ids {
+            self.servers[id].assign(duration, model, gang, size);
+        }
+        gang
+    }
+
+    /// Advance all servers by dt; returns ids that completed this tick.
+    pub fn advance(&mut self, dt: f64, now: f64) -> Vec<usize> {
+        let mut done = Vec::new();
+        for s in &mut self.servers {
+            if s.advance(dt, now) {
+                done.push(s.id);
+            }
+        }
+        done
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn busy_all(c: &mut Cluster, dur: f64) {
+        let n = c.len();
+        let ids: Vec<usize> = (0..n).collect();
+        c.dispatch(&ids, dur, ModelType(0), false);
+    }
+
+    #[test]
+    fn reuse_found_for_exact_idle_gang() {
+        let mut c = Cluster::new(4);
+        // Run a 2-patch task on servers; after completion the gang is idle.
+        let sel = c.select(ModelType(1), 2);
+        let servers = sel.servers().unwrap().to_vec();
+        assert!(!sel.is_reuse());
+        c.dispatch(&servers, 5.0, ModelType(1), false);
+        c.advance(5.0, 5.0);
+        let sel2 = c.select(ModelType(1), 2);
+        assert!(sel2.is_reuse());
+        assert_eq!(sel2.servers().unwrap(), &servers[..]);
+    }
+
+    #[test]
+    fn no_reuse_for_wrong_size() {
+        let mut c = Cluster::new(4);
+        let sel = c.select(ModelType(1), 2);
+        let servers = sel.servers().unwrap().to_vec();
+        c.dispatch(&servers, 5.0, ModelType(1), false);
+        c.advance(5.0, 5.0);
+        // Same model but needs 4 servers: the 2-gang can't be reused as-is.
+        let sel2 = c.select(ModelType(1), 4);
+        assert!(!sel2.is_reuse());
+    }
+
+    #[test]
+    fn no_reuse_for_wrong_model() {
+        let mut c = Cluster::new(4);
+        let servers = c.select(ModelType(1), 2).servers().unwrap().to_vec();
+        c.dispatch(&servers, 5.0, ModelType(1), false);
+        c.advance(5.0, 5.0);
+        let sel2 = c.select(ModelType(2), 2);
+        assert!(!sel2.is_reuse());
+    }
+
+    #[test]
+    fn infeasible_when_busy() {
+        let mut c = Cluster::new(4);
+        busy_all(&mut c, 10.0);
+        assert_eq!(c.select(ModelType(0), 1), Selection::Infeasible);
+        c.advance(10.0, 10.0);
+        assert!(c.select(ModelType(0), 4).servers().is_some());
+    }
+
+    #[test]
+    fn selection_prefers_empty_then_broken_then_intact() {
+        let mut c = Cluster::new(6);
+        // Gang A: servers for a 2-patch model-1 task (intact after done).
+        let a = c.select(ModelType(1), 2).servers().unwrap().to_vec();
+        c.dispatch(&a, 1.0, ModelType(1), false);
+        c.advance(1.0, 1.0);
+        // Gang B: 2-patch model-2, then one member re-occupied → broken.
+        let b: Vec<usize> = c
+            .servers
+            .iter()
+            .filter(|s| s.is_idle() && s.model.is_none())
+            .take(2)
+            .map(|s| s.id)
+            .collect();
+        c.dispatch(&b, 1.0, ModelType(2), false);
+        c.advance(1.0, 2.0);
+        // Occupy one member of gang B with a fresh 1-patch model-0 task.
+        c.dispatch(&[b[0]], 100.0, ModelType(0), false);
+        // Now: 2 empty servers, 1 broken-gang server (b[1]), 2 intact gang-A
+        // servers. A fresh 3-server model-0 task should take the 2 empty +
+        // the broken one, leaving gang A intact.
+        let sel = c.select(ModelType(0), 3);
+        let chosen = sel.servers().unwrap();
+        assert!(!chosen.contains(&a[0]) && !chosen.contains(&a[1]), "{chosen:?} broke intact gang {a:?}");
+        assert!(chosen.contains(&b[1]));
+    }
+
+    #[test]
+    fn dispatch_reuse_keeps_gang_id() {
+        let mut c = Cluster::new(2);
+        let servers = c.select(ModelType(1), 2).servers().unwrap().to_vec();
+        let g1 = c.dispatch(&servers, 1.0, ModelType(1), false);
+        c.advance(1.0, 1.0);
+        let sel = c.select(ModelType(1), 2);
+        assert!(sel.is_reuse());
+        let g2 = c.dispatch(sel.servers().unwrap(), 1.0, ModelType(1), true);
+        assert_eq!(g1, g2);
+    }
+
+    #[test]
+    fn advance_reports_completions_once() {
+        let mut c = Cluster::new(3);
+        c.dispatch(&[0, 1], 2.0, ModelType(0), false);
+        assert!(c.advance(1.0, 1.0).is_empty());
+        let done = c.advance(1.0, 2.0);
+        assert_eq!(done, vec![0, 1]);
+        assert!(c.advance(1.0, 3.0).is_empty());
+    }
+}

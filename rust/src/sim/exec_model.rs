@@ -1,0 +1,132 @@
+//! Calibrated execution-time and initialisation-time models, plus the
+//! *predictor* the scheduler uses (paper §V.A.3: "The remaining time t^r_e
+//! is predicted based on the characteristics of AIGC tasks").
+//!
+//! Ground truth (what the simulator charges) is the prediction plus
+//! measured randomness: multiplicative lognormal jitter on initialisation
+//! (Fig 6 shows heavy, cooperate-count-dependent spread) and small Gaussian
+//! jitter on execution (Fig 7 shows near-deterministic linear scaling).
+
+use crate::config::ExecModelConfig;
+use crate::util::rng::Pcg64;
+
+/// Deterministic predictions + stochastic realisations of task timing.
+#[derive(Clone, Debug)]
+pub struct ExecModel {
+    cfg: ExecModelConfig,
+}
+
+impl ExecModel {
+    pub fn new(cfg: ExecModelConfig) -> Self {
+        ExecModel { cfg }
+    }
+
+    pub fn cfg(&self) -> &ExecModelConfig {
+        &self.cfg
+    }
+
+    /// Predicted execution time f(s, c): linear in inference steps, with
+    /// per-patch-count slope (Table VI) plus fixed dispatch overhead.
+    pub fn predict_exec(&self, steps: u32, patches: usize) -> f64 {
+        let idx = ExecModelConfig::patch_index(patches);
+        steps as f64 * self.cfg.step_time[idx] + self.cfg.dispatch_overhead + self.cfg.comm_latency
+    }
+
+    /// Predicted initialisation time g(c, m): ≈ constant per patch count
+    /// (Table VI: 33.5 / 31.9 / 35.0 s).
+    pub fn predict_init(&self, patches: usize) -> f64 {
+        self.cfg.init_base[ExecModelConfig::patch_index(patches)]
+    }
+
+    /// Realised execution time: prediction × (1 + N(0, jitter)).
+    pub fn sample_exec(&self, steps: u32, patches: usize, rng: &mut Pcg64) -> f64 {
+        let base = self.predict_exec(steps, patches);
+        let jitter = 1.0 + rng.normal_ms(0.0, self.cfg.exec_jitter_rel);
+        (base * jitter.max(0.5)).max(0.01)
+    }
+
+    /// Realised initialisation time: lognormal-jittered, spread growing
+    /// with patch count (more process-group members to synchronise).
+    pub fn sample_init(&self, patches: usize, rng: &mut Pcg64) -> f64 {
+        let base = self.predict_init(patches);
+        let sigma = self.cfg.init_jitter_sigma * (1.0 + 0.25 * (patches as f64).log2());
+        base * rng.lognormal(0.0, sigma)
+    }
+
+    /// Speedup of running `steps` at `patches` vs single-patch (Table I).
+    pub fn speedup(&self, steps: u32, patches: usize) -> f64 {
+        self.predict_exec(steps, 1) / self.predict_exec(steps, patches)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExecModelConfig;
+
+    fn model() -> ExecModel {
+        ExecModel::new(ExecModelConfig::default())
+    }
+
+    #[test]
+    fn exec_linear_in_steps() {
+        let m = model();
+        let t10 = m.predict_exec(10, 2);
+        let t20 = m.predict_exec(20, 2);
+        let slope = (t20 - t10) / 10.0;
+        assert!((slope - 0.29).abs() < 1e-9, "slope={slope}");
+    }
+
+    #[test]
+    fn table1_acceleration_shape() {
+        // Table I: 1/2/4/8 patches → ×1 / ×1.8 / ×3.1 / ×4.9 at ~45 steps
+        // (23.7 s / 0.53 ≈ 45 steps for the measured single-patch task).
+        let m = model();
+        let s = 45;
+        assert!((m.speedup(s, 1) - 1.0).abs() < 1e-9);
+        let a2 = m.speedup(s, 2);
+        let a4 = m.speedup(s, 4);
+        let a8 = m.speedup(s, 8);
+        assert!((1.6..2.0).contains(&a2), "a2={a2}");
+        assert!((2.4..3.3).contains(&a4), "a4={a4}");
+        assert!((3.2..4.9).contains(&a8), "a8={a8}");
+        assert!(a2 < a4 && a4 < a8);
+    }
+
+    #[test]
+    fn init_near_constant_across_patches() {
+        let m = model();
+        for &c in &[1usize, 2, 4, 8] {
+            let t = m.predict_init(c);
+            assert!((30.0..38.0).contains(&t), "init({c})={t}");
+        }
+    }
+
+    #[test]
+    fn sampled_times_positive_and_centered() {
+        let m = model();
+        let mut rng = Pcg64::seeded(11);
+        let mut sum = 0.0;
+        let n = 5_000;
+        for _ in 0..n {
+            let t = m.sample_exec(20, 4, &mut rng);
+            assert!(t > 0.0);
+            sum += t;
+        }
+        let mean = sum / n as f64;
+        let pred = m.predict_exec(20, 4);
+        assert!((mean - pred).abs() / pred < 0.02, "mean={mean} pred={pred}");
+    }
+
+    #[test]
+    fn init_jitter_grows_with_patches() {
+        let m = model();
+        let spread = |patches: usize| {
+            let mut rng = Pcg64::seeded(12);
+            let xs: Vec<f64> = (0..4000).map(|_| m.sample_init(patches, &mut rng)).collect();
+            let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+            (xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / xs.len() as f64).sqrt() / mean
+        };
+        assert!(spread(8) > spread(1));
+    }
+}

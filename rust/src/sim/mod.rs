@@ -1,0 +1,15 @@
+//! Edge-cluster simulator: the substrate the paper evaluates on.
+//!
+//! The paper's testbed is 4–12 GPU workers running Stable Diffusion v1.4
+//! under DistriFusion; the scheduler observes only (availability, remaining
+//! time, loaded model) per server plus the waiting queue, and pays
+//! measured initialisation/execution latencies. This module reproduces
+//! those observables with models calibrated to the paper's measurements
+//! (Tables I & VI, Fig 6) — see DESIGN.md §Substitutions.
+
+pub mod cluster;
+pub mod env;
+pub mod exec_model;
+pub mod quality;
+pub mod server;
+pub mod task;

@@ -1,0 +1,113 @@
+//! A single edge server (GPU worker) and its observable state
+//! {a_e(t), t^r_e(t), d_e(t)} per §IV.A.2, extended with gang metadata:
+//! DistriFusion loads one model instance *per process group*, so reuse
+//! requires the exact previous gang (same model, same size, same members)
+//! to be idle — matching the paper's |G_m| = c_k reuse condition and the
+//! Table II trace where Task 4 reuses Init 1 on GPUs {1,2}.
+
+use super::task::ModelType;
+
+/// Identifier of a gang (process group) instance.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct GangId(pub u64);
+
+/// Mutable server state.
+#[derive(Clone, Debug)]
+pub struct Server {
+    pub id: usize,
+    /// Remaining busy time t^r_e (0 when idle).
+    pub remaining: f64,
+    /// Loaded model type d_e, if any.
+    pub model: Option<ModelType>,
+    /// Gang this server's loaded model instance belongs to.
+    pub gang: Option<GangId>,
+    /// Size of that gang (= patch count of the task that loaded it).
+    pub gang_size: usize,
+    /// Simulation time when the server last became idle (for LRU eviction).
+    pub idle_since: f64,
+}
+
+impl Server {
+    pub fn new(id: usize) -> Self {
+        Server {
+            id,
+            remaining: 0.0,
+            model: None,
+            gang: None,
+            gang_size: 0,
+            idle_since: 0.0,
+        }
+    }
+
+    /// Availability a_e(t): idle iff no remaining work.
+    pub fn is_idle(&self) -> bool {
+        self.remaining <= 0.0
+    }
+
+    /// Advance simulated time by dt; returns true if the server finished
+    /// its current work during this tick.
+    pub fn advance(&mut self, dt: f64, now: f64) -> bool {
+        if self.remaining > 0.0 {
+            self.remaining = (self.remaining - dt).max(0.0);
+            if self.remaining == 0.0 {
+                self.idle_since = now;
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Assign work: busy for `duration`, loaded with `model` in `gang`.
+    pub fn assign(&mut self, duration: f64, model: ModelType, gang: GangId, gang_size: usize) {
+        debug_assert!(self.is_idle(), "assigning to busy server {}", self.id);
+        self.remaining = duration;
+        self.model = Some(model);
+        self.gang = Some(gang);
+        self.gang_size = gang_size;
+    }
+
+    /// Drop the loaded model (eviction before loading a different one).
+    pub fn unload(&mut self) {
+        self.model = None;
+        self.gang = None;
+        self.gang_size = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn advance_counts_down_and_signals_completion() {
+        let mut s = Server::new(0);
+        s.assign(2.5, ModelType(1), GangId(7), 2);
+        assert!(!s.is_idle());
+        assert!(!s.advance(1.0, 1.0));
+        assert!(!s.advance(1.0, 2.0));
+        assert!(s.advance(1.0, 3.0)); // finishes here
+        assert!(s.is_idle());
+        assert_eq!(s.idle_since, 3.0);
+        // Model stays loaded after completion (that's the whole point).
+        assert_eq!(s.model, Some(ModelType(1)));
+        assert_eq!(s.gang, Some(GangId(7)));
+    }
+
+    #[test]
+    fn advance_on_idle_is_noop() {
+        let mut s = Server::new(0);
+        assert!(!s.advance(1.0, 1.0));
+        assert!(s.is_idle());
+    }
+
+    #[test]
+    fn unload_clears_model() {
+        let mut s = Server::new(0);
+        s.assign(1.0, ModelType(0), GangId(1), 1);
+        s.advance(1.0, 1.0);
+        s.unload();
+        assert_eq!(s.model, None);
+        assert_eq!(s.gang, None);
+        assert_eq!(s.gang_size, 0);
+    }
+}

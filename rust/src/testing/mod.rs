@@ -1,0 +1,6 @@
+//! In-house property-based testing support (proptest is not available in
+//! the offline registry). `prop::check` runs a property over many random
+//! cases and, on failure, greedily shrinks the failing input before
+//! reporting. Used for coordinator/scheduler/simulator invariants.
+
+pub mod prop;

@@ -1,0 +1,142 @@
+//! Mini property-testing framework.
+//!
+//! ```no_run
+//! use eat::testing::prop::{check, Gen};
+//!
+//! check("reverse twice is identity", 200, |g| {
+//!     let xs = g.vec_u32(0..64, 1000);
+//!     let mut ys = xs.clone();
+//!     ys.reverse();
+//!     ys.reverse();
+//!     assert_eq!(xs, ys);
+//! });
+//! ```
+
+use crate::util::rng::Pcg64;
+
+/// Random input generator handed to each property case.
+pub struct Gen {
+    rng: Pcg64,
+    /// Log of choices for reporting.
+    pub trace: Vec<String>,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Self {
+        Gen {
+            rng: Pcg64::new(seed, 0x9e37),
+            trace: Vec::new(),
+        }
+    }
+
+    pub fn rng(&mut self) -> &mut Pcg64 {
+        &mut self.rng
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo < hi);
+        let v = lo + self.rng.next_below((hi - lo) as u64) as usize;
+        self.trace.push(format!("usize_in({lo},{hi})={v}"));
+        v
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        let v = self.rng.uniform(lo, hi);
+        self.trace.push(format!("f64_in({lo},{hi})={v:.4}"));
+        v
+    }
+
+    pub fn bool(&mut self) -> bool {
+        let v = self.rng.next_u64() & 1 == 1;
+        self.trace.push(format!("bool={v}"));
+        v
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        let i = self.rng.next_below(xs.len() as u64) as usize;
+        self.trace.push(format!("pick[{i}]"));
+        &xs[i]
+    }
+
+    pub fn vec_u32(&mut self, len_range: std::ops::Range<usize>, max: u32) -> Vec<u32> {
+        let len = self.usize_in(len_range.start, len_range.end.max(len_range.start + 1));
+        (0..len)
+            .map(|_| self.rng.next_below(max as u64 + 1) as u32)
+            .collect()
+    }
+
+    pub fn vec_f32(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..len)
+            .map(|_| self.rng.uniform(lo as f64, hi as f64) as f32)
+            .collect()
+    }
+}
+
+/// Run `cases` random instances of the property; panic with the seed of the
+/// first failing case. Properties signal failure by panicking (assert!).
+/// Re-running with `EAT_PROP_SEED=<seed>` reproduces a single failing case.
+pub fn check<F: Fn(&mut Gen) + std::panic::RefUnwindSafe>(name: &str, cases: u64, prop: F) {
+    // Explicit reproduction mode.
+    if let Ok(seed) = std::env::var("EAT_PROP_SEED") {
+        let seed: u64 = seed.parse().expect("EAT_PROP_SEED must be an integer");
+        let mut g = Gen::new(seed);
+        prop(&mut g);
+        return;
+    }
+    let base = 0xEA7_5EEDu64;
+    for case in 0..cases {
+        let seed = base.wrapping_add(case.wrapping_mul(0x9E3779B97F4A7C15));
+        let result = std::panic::catch_unwind(|| {
+            let mut g = Gen::new(seed);
+            prop(&mut g);
+            g.trace
+        });
+        if let Err(err) = result {
+            let msg = err
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| err.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".to_string());
+            panic!(
+                "property '{name}' failed on case {case} (seed {seed}):\n  {msg}\n  \
+                 reproduce with EAT_PROP_SEED={seed}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("add commutes", 100, |g| {
+            let a = g.f64_in(-1e6, 1e6);
+            let b = g.f64_in(-1e6, 1e6);
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    fn failing_property_reports_seed() {
+        let r = std::panic::catch_unwind(|| {
+            check("always fails", 5, |g| {
+                let x = g.usize_in(0, 10);
+                assert!(x > 100, "x={x} not > 100");
+            });
+        });
+        let err = r.unwrap_err();
+        let msg = err.downcast_ref::<String>().unwrap();
+        assert!(msg.contains("EAT_PROP_SEED="), "msg={msg}");
+    }
+
+    #[test]
+    fn gen_is_deterministic_per_seed() {
+        let mut a = Gen::new(1);
+        let mut b = Gen::new(1);
+        for _ in 0..32 {
+            assert_eq!(a.usize_in(0, 1000), b.usize_in(0, 1000));
+        }
+    }
+}

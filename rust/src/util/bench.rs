@@ -1,0 +1,174 @@
+//! Micro-benchmark harness (criterion is not available offline).
+//!
+//! Each `[[bench]]` target sets `harness = false` and drives this runner:
+//! warmup, then timed batches until a wall-clock budget or iteration cap is
+//! hit; reports mean/p50/p99 per iteration. Deterministic ordering, plain
+//! text output that `cargo bench` streams through.
+
+use std::time::{Duration, Instant};
+
+use super::stats::{percentile, Welford};
+
+/// Result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+    pub std_ns: f64,
+}
+
+impl BenchResult {
+    pub fn throughput_per_sec(&self) -> f64 {
+        1e9 / self.mean_ns
+    }
+}
+
+/// Benchmark runner with a per-case time budget.
+pub struct Bencher {
+    warmup: Duration,
+    budget: Duration,
+    max_iters: u64,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self::new(Duration::from_millis(200), Duration::from_secs(2), 1_000_000)
+    }
+}
+
+impl Bencher {
+    pub fn new(warmup: Duration, budget: Duration, max_iters: u64) -> Self {
+        Bencher {
+            warmup,
+            budget,
+            max_iters,
+            results: Vec::new(),
+        }
+    }
+
+    /// Quick settings for CI-ish runs.
+    pub fn quick() -> Self {
+        Self::new(Duration::from_millis(50), Duration::from_millis(500), 100_000)
+    }
+
+    /// Time `f` repeatedly; `f` should perform one logical operation and
+    /// return a value that is black-boxed to stop the optimizer.
+    pub fn bench<T, F: FnMut() -> T>(&mut self, name: &str, mut f: F) -> &BenchResult {
+        // Warmup.
+        let start = Instant::now();
+        while start.elapsed() < self.warmup {
+            black_box(f());
+        }
+        // Timed samples: batches sized so each batch is ≥ ~100µs to keep
+        // timer overhead negligible, collecting per-iter estimates.
+        let batch = {
+            let t0 = Instant::now();
+            black_box(f());
+            let one = t0.elapsed().as_nanos().max(1) as u64;
+            (100_000 / one).clamp(1, 10_000)
+        };
+        let mut samples: Vec<f64> = Vec::new();
+        let mut w = Welford::new();
+        let mut iters = 0u64;
+        let run_start = Instant::now();
+        while run_start.elapsed() < self.budget && iters < self.max_iters {
+            let t0 = Instant::now();
+            for _ in 0..batch {
+                black_box(f());
+            }
+            let per_iter = t0.elapsed().as_nanos() as f64 / batch as f64;
+            samples.push(per_iter);
+            w.push(per_iter);
+            iters += batch;
+        }
+        let res = BenchResult {
+            name: name.to_string(),
+            iters,
+            mean_ns: w.mean(),
+            p50_ns: percentile(&samples, 0.5),
+            p99_ns: percentile(&samples, 0.99),
+            std_ns: w.std(),
+        };
+        println!(
+            "bench {:<44} {:>12.1} ns/iter  p50 {:>12.1}  p99 {:>12.1}  ({} iters)",
+            res.name, res.mean_ns, res.p50_ns, res.p99_ns, res.iters
+        );
+        self.results.push(res);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    /// Render all results as a summary table (printed at the end of each
+    /// bench binary, captured into bench_output.txt).
+    pub fn summary(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "{:<44} {:>14} {:>14} {:>14} {:>12}\n",
+            "benchmark", "mean", "p50", "p99", "ops/sec"
+        ));
+        for r in &self.results {
+            out.push_str(&format!(
+                "{:<44} {:>14} {:>14} {:>14} {:>12.0}\n",
+                r.name,
+                fmt_ns(r.mean_ns),
+                fmt_ns(r.p50_ns),
+                fmt_ns(r.p99_ns),
+                r.throughput_per_sec()
+            ));
+        }
+        out
+    }
+}
+
+/// Human-readable nanoseconds.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Prevent the optimizer from discarding a value (stable-Rust black box).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports() {
+        let mut b = Bencher::new(
+            Duration::from_millis(1),
+            Duration::from_millis(20),
+            100_000,
+        );
+        let r = b.bench("add", || 2u64.wrapping_add(3)).clone();
+        assert!(r.iters > 0);
+        assert!(r.mean_ns > 0.0);
+        assert!(r.p99_ns >= r.p50_ns * 0.5);
+        assert!(!b.summary().is_empty());
+    }
+
+    #[test]
+    fn fmt_ns_ranges() {
+        assert!(fmt_ns(12.0).ends_with("ns"));
+        assert!(fmt_ns(12_000.0).ends_with("µs"));
+        assert!(fmt_ns(12_000_000.0).ends_with("ms"));
+        assert!(fmt_ns(2e9).ends_with(" s"));
+    }
+}

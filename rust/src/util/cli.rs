@@ -1,0 +1,121 @@
+//! Tiny argument parser for the `eat` binary and examples: positional
+//! subcommands plus `--key value` / `--flag` options.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: positionals in order, options by name.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (exclusive of argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        let mut args = Args::default();
+        let mut iter = raw.into_iter().peekable();
+        while let Some(a) = iter.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else {
+                    // `--key value` if next token isn't another option,
+                    // else a bare flag.
+                    match iter.peek() {
+                        Some(next) if !next.starts_with("--") => {
+                            let v = iter.next().unwrap();
+                            args.options.insert(name.to_string(), v);
+                        }
+                        _ => args.flags.push(name.to_string()),
+                    }
+                }
+            } else {
+                args.positional.push(a);
+            }
+        }
+        args
+    }
+
+    pub fn from_env() -> Args {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .map(|s| s.parse().unwrap_or_else(|_| panic!("--{key} expects an integer, got {s:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key)
+            .map(|s| s.parse().unwrap_or_else(|_| panic!("--{key} expects an integer, got {s:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key)
+            .map(|s| s.parse().unwrap_or_else(|_| panic!("--{key} expects a number, got {s:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("experiment table9 --nodes 8 --rate 0.1 --verbose");
+        assert_eq!(a.positional, vec!["experiment", "table9"]);
+        assert_eq!(a.get_usize("nodes", 4), 8);
+        assert!((a.get_f64("rate", 0.0) - 0.1).abs() < 1e-12);
+        assert!(a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = parse("train --alg=eat --steps=100");
+        assert_eq!(a.get("alg"), Some("eat"));
+        assert_eq!(a.get_usize("steps", 0), 100);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("eval");
+        assert_eq!(a.get_or("alg", "eat"), "eat");
+        assert_eq!(a.get_usize("episodes", 5), 5);
+        assert!(!a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn flag_before_option() {
+        let a = parse("--quiet --out file.json run");
+        assert!(a.has_flag("quiet"));
+        assert_eq!(a.get("out"), Some("file.json"));
+        assert_eq!(a.positional, vec!["run"]);
+    }
+
+    #[test]
+    fn negative_number_value() {
+        let a = parse("--bias=-1.5");
+        assert!((a.get_f64("bias", 0.0) + 1.5).abs() < 1e-12);
+    }
+}

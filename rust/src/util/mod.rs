@@ -1,0 +1,13 @@
+//! Self-contained substrates: RNG, JSON, statistics, CLI parsing, timing.
+//!
+//! The offline crate registry in this environment carries only the `xla`
+//! closure, so the usual ecosystem crates (rand, serde, clap, criterion)
+//! are re-implemented here at the scale this project needs. Each module is
+//! fully unit-tested; see DESIGN.md §Substitutions.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod table;
