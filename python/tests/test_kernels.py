@@ -10,6 +10,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+# Optional dependency: without it the whole module skips (instead of a
+# collection error that aborts the entire test run).
+pytest.importorskip("hypothesis", reason="hypothesis not installed; property sweeps skipped")
 from hypothesis import given, settings, strategies as st
 
 from compile.kernels.attention import attention_feature, attention_feature_batched

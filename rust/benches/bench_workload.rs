@@ -1,0 +1,67 @@
+//! Workload-subsystem benches: 1M-task stream generation per arrival
+//! process (scenario generation must stay off the hot-path budget — a
+//! sweep regenerates workloads for every scenario × policy × episode),
+//! plus histogram observation/percentile costs.
+//!
+//! Uses the in-repo bench harness (`util::bench`); criterion is not
+//! available in the offline registry.
+
+use std::time::Duration;
+
+use eat::config::ExperimentConfig;
+use eat::util::bench::{black_box, Bencher};
+use eat::util::rng::Pcg64;
+use eat::workload::{self, LatencyHistogram, TaskStream, WorkloadConfig};
+
+const STREAM_TASKS: usize = 1_000_000;
+
+fn main() {
+    // Whole-stream iterations are ~10-100 ms each; trim warmup/budget so
+    // the full suite stays under a minute.
+    let mut b = Bencher::new(Duration::from_millis(50), Duration::from_millis(800), 1_000_000);
+    let cfg = ExperimentConfig::preset_8node(0.1).env;
+
+    for name in WorkloadConfig::scenario_names() {
+        let wcfg = WorkloadConfig::preset(name, 0.1).unwrap();
+        let res = b
+            .bench(&format!("generate_1M_tasks_{name}"), || {
+                let (mut ap, mix) = wcfg.build(&cfg);
+                let mut rng = Pcg64::seeded(1);
+                let w = workload::generate(ap.as_mut(), &mix, STREAM_TASKS, &mut rng);
+                black_box(w.len())
+            })
+            .clone();
+        println!(
+            "       -> {:.1}M tasks/s",
+            STREAM_TASKS as f64 * res.throughput_per_sec() / 1e6
+        );
+    }
+
+    // Lazy stream pop (the path EdgeEnv drives every decision tick).
+    let wcfg = WorkloadConfig::preset("bursty", 0.1).unwrap();
+    b.bench("stream_pop_100k_bursty", || {
+        let (ap, mix) = wcfg.build(&cfg);
+        let mut stream = TaskStream::new(ap, mix, 100_000, Pcg64::seeded(2));
+        let mut n = 0usize;
+        while stream.pop_if_arrived(f64::INFINITY).is_some() {
+            n += 1;
+        }
+        black_box(n)
+    });
+
+    // Histogram hot path: observe + percentile queries.
+    b.bench("histogram_observe_100k", || {
+        let mut h = LatencyHistogram::default_latency();
+        for i in 0..100_000u32 {
+            h.observe((i % 2000) as f64 * 0.37);
+        }
+        black_box(h.count())
+    });
+    let mut filled = LatencyHistogram::default_latency();
+    for i in 0..100_000u32 {
+        filled.observe((i % 2000) as f64 * 0.37);
+    }
+    b.bench("histogram_p99_query", || black_box(filled.p99()));
+
+    println!("\n{}", b.summary());
+}

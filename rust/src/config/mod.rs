@@ -6,6 +6,7 @@
 //! {0.11..0.19} respectively (Tables IX–XI); presets here mirror those.
 
 use crate::util::json::{self, Value};
+use crate::workload::WorkloadConfig;
 
 /// Reward / objective coefficients (Problem 1 + §V.A.4).
 #[derive(Clone, Debug, PartialEq)]
@@ -150,6 +151,10 @@ pub struct EnvConfig {
     pub tasks_per_episode: usize,
     /// Simulated decision tick Δt (s).
     pub decision_dt: f64,
+    /// Workload scenario (arrival process + task mix). `None` keeps the
+    /// paper's stationary Poisson at `arrival_rate` with a uniform mix,
+    /// bit-identical to the seed generator.
+    pub workload: Option<WorkloadConfig>,
     pub reward: RewardConfig,
     pub exec: ExecModelConfig,
     pub quality: QualityConfig,
@@ -170,6 +175,7 @@ impl Default for EnvConfig {
             step_limit: 1024,
             tasks_per_episode: 32,
             decision_dt: 1.0,
+            workload: None,
             reward: RewardConfig::default(),
             exec: ExecModelConfig::default(),
             quality: QualityConfig::default(),
@@ -211,6 +217,9 @@ impl EnvConfig {
         );
         anyhow::ensure!(self.s_min >= 1 && self.s_min < self.s_max, "bad step bounds");
         anyhow::ensure!(self.num_models >= 1, "need at least one model type");
+        if let Some(w) = &self.workload {
+            w.validate()?;
+        }
         Ok(())
     }
 }
@@ -443,6 +452,9 @@ impl ExperimentConfig {
             .set("step_limit", e.step_limit)
             .set("tasks_per_episode", e.tasks_per_episode)
             .set("decision_dt", e.decision_dt);
+        if let Some(w) = &e.workload {
+            env.set("workload", w.to_json());
+        }
         let r = &e.reward;
         let mut rew = Value::obj();
         rew.set("alpha_q", r.alpha_q)
@@ -530,6 +542,9 @@ impl ExperimentConfig {
             if let Some(pw) = env.get("patch_weights").and_then(Value::as_arr) {
                 e.patch_weights = pw.iter().filter_map(Value::as_f64).collect();
             }
+            if let Some(w) = env.get("workload") {
+                e.workload = Some(WorkloadConfig::from_json(w)?);
+            }
             if let Some(r) = env.get("reward") {
                 let rc = &mut e.reward;
                 macro_rules! rnum {
@@ -614,6 +629,22 @@ mod tests {
         assert_eq!(back.train.batch_size, 64);
         assert_eq!(back.env.num_servers, 8);
         assert!((back.env.arrival_rate - 0.12).abs() < 1e-12);
+        assert_eq!(back.env.workload, None);
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_workload_scenario() {
+        let mut cfg = ExperimentConfig::preset_8node(0.1);
+        cfg.env.workload = Some(WorkloadConfig::preset("rotating", 0.1).unwrap());
+        let back = ExperimentConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.env.workload, cfg.env.workload);
+        // A bad scenario must fail validation at parse time.
+        let mut bad = cfg.env.workload.clone().unwrap();
+        if let crate::workload::ArrivalConfig::Diurnal { amplitude, .. } = &mut bad.arrival {
+            *amplitude = 7.0;
+        }
+        cfg.env.workload = Some(bad);
+        assert!(ExperimentConfig::from_json(&cfg.to_json()).is_err());
     }
 
     #[test]

@@ -9,14 +9,21 @@ use crate::sim::env::EdgeEnv;
 use crate::sim::task::Workload;
 use crate::util::rng::Pcg64;
 use crate::util::stats::Welford;
+use crate::workload::MetricsCollector;
 
-/// Aggregated metrics over an evaluation run (means over episodes).
+/// Aggregated metrics over an evaluation run: means over episodes, plus
+/// latency percentiles over the *pooled* per-task latency histogram of
+/// all episodes (a mean of per-episode percentiles is not a percentile).
 #[derive(Clone, Debug, Default)]
 pub struct EvalSummary {
     pub algorithm: String,
     pub episodes: usize,
     pub avg_quality: f64,
     pub avg_response_latency: f64,
+    pub p50_latency: f64,
+    pub p90_latency: f64,
+    pub p99_latency: f64,
+    pub avg_utilization: f64,
     pub reload_rate: f64,
     pub avg_reward: f64,
     pub avg_episode_len: f64,
@@ -40,10 +47,12 @@ pub fn evaluate(
     let mut steps = Welford::new();
     let mut eff = Welford::new();
     let mut below = Welford::new();
+    let mut pooled = MetricsCollector::new(cfg.env.num_servers);
     let mut timing = DecisionTiming::default();
     for ep in 0..episodes {
         // Common random numbers: workload seed depends only on (cfg.seed,
-        // ep), never on the algorithm.
+        // ep), never on the algorithm. Scenario configs flow through
+        // Workload::generate, so the whole grid works per scenario too.
         let mut wl_rng = Pcg64::new(cfg.seed.wrapping_add(ep as u64), 0xC0FFEE);
         let workload = Workload::generate(&cfg.env, &mut wl_rng);
         let mut env = EdgeEnv::with_workload(
@@ -60,12 +69,27 @@ pub fn evaluate(
         steps.push(rep.avg_steps_chosen);
         eff.push(rep.efficiency);
         below.push(rep.below_quality_min as f64 / rep.completed_tasks.max(1) as f64);
+        pooled.merge(env.metrics());
+        if rep.completed_tasks == 0 {
+            // Mirror EpisodeReport's censoring inside the pooled histogram
+            // too: a do-nothing episode contributes one sample censored at
+            // its simulated time, so it degrades the percentile columns
+            // instead of silently vanishing from them.
+            pooled.latency.observe(rep.sim_time);
+        }
     }
+    // Pooled over all episodes: percentiles from the merged histogram
+    // (a mean of per-episode percentiles is not a percentile).
+    let pct = |q: f64| pooled.latency.percentile(q).unwrap_or(f64::NAN);
     EvalSummary {
         algorithm: policy.name(),
         episodes,
         avg_quality: quality.mean(),
         avg_response_latency: latency.mean(),
+        p50_latency: pct(0.5),
+        p90_latency: pct(0.9),
+        p99_latency: pct(0.99),
+        avg_utilization: pooled.avg_utilization(),
         reload_rate: reload.mean(),
         avg_reward: reward.mean(),
         avg_episode_len: ep_len.mean(),
@@ -101,5 +125,26 @@ mod tests {
         let b = evaluate(&cfg, &mut GreedyPolicy::new(cfg.env.clone()), 2);
         assert_eq!(a.avg_quality, b.avg_quality);
         assert_eq!(a.avg_response_latency, b.avg_response_latency);
+        assert_eq!(a.p99_latency, b.p99_latency);
+    }
+
+    #[test]
+    fn summary_percentiles_are_ordered() {
+        let cfg = ExperimentConfig::preset_4node(0.05);
+        let s = evaluate(&cfg, &mut GreedyPolicy::new(cfg.env.clone()), 2);
+        assert!(s.p50_latency <= s.p90_latency && s.p90_latency <= s.p99_latency);
+        assert!(s.p50_latency > 0.0);
+        assert!(s.avg_utilization > 0.0 && s.avg_utilization <= 1.0);
+    }
+
+    #[test]
+    fn scenario_config_flows_through_evaluate() {
+        use crate::workload::WorkloadConfig;
+        let mut cfg = ExperimentConfig::preset_4node(0.05);
+        let base = evaluate(&cfg, &mut GreedyPolicy::new(cfg.env.clone()), 2);
+        cfg.env.workload = Some(WorkloadConfig::preset("flash", 0.05).unwrap());
+        let flash = evaluate(&cfg, &mut GreedyPolicy::new(cfg.env.clone()), 2);
+        // Different arrival regime → different realised numbers.
+        assert_ne!(base.avg_response_latency, flash.avg_response_latency);
     }
 }

@@ -13,12 +13,14 @@
 //! | Table XII (decision latency) | `latency` | `eat experiment table12` |
 //! | Fig 6 (init-time variability) | `inittime` | `eat experiment fig6` |
 //! | Fig 7 (time prediction scatter) | `timepred` | `eat experiment fig7` |
+//! | Scenario sweep (beyond the paper) | `scenarios` | `eat scenarios` |
 
 pub mod fig4;
 pub mod grid;
 pub mod inittime;
 pub mod latency;
 pub mod motivation;
+pub mod scenarios;
 pub mod tables;
 pub mod timepred;
 pub mod training;
@@ -41,6 +43,7 @@ pub fn run(name: &str, args: &Args) -> anyhow::Result<String> {
         "table12" | "latency" => latency::run(args)?,
         "fig6" => inittime::run(args)?,
         "fig7" => timepred::run(args)?,
+        "scenarios" => scenarios::run(args)?,
         "all" => {
             let mut all = String::new();
             for id in [
@@ -53,7 +56,7 @@ pub fn run(name: &str, args: &Args) -> anyhow::Result<String> {
         }
         other => anyhow::bail!(
             "unknown experiment '{other}' (try table1, table2_4, table6, table9, \
-             table10, table11, table12, fig4, fig5, fig6, fig7, fig8, grid, all)"
+             table10, table11, table12, fig4, fig5, fig6, fig7, fig8, grid, scenarios, all)"
         ),
     };
     Ok(out)

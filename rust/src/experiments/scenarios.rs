@@ -1,0 +1,256 @@
+//! Scenario sweep: every workload scenario family × every requested policy,
+//! reported with percentile-grade latency (p50/p90/p99), utilization, and
+//! reload counts — the evaluation axis the paper's stationary-Poisson grid
+//! cannot reach.
+//!
+//! Common random numbers hold *per scenario*: every policy sees the same
+//! workload realisations for a given (scenario, episode), so rows differ
+//! only by policy. `--record <dir>` writes each realisation as a JSONL
+//! trace; `--replay <file>` re-runs policies on a recorded trace and — with
+//! the same `--seed`/`--ep` (plus `--scenario`/`--rate` for policies that
+//! plan or train on the env config) as the recording run — reproduces the
+//! original episode numbers bit-exactly.
+
+use crate::config::{Algorithm, ExperimentConfig};
+use crate::coordinator::{evaluate, run_episode};
+use crate::runtime::Runtime;
+use crate::sim::env::EdgeEnv;
+use crate::sim::task::Workload;
+use crate::util::cli::Args;
+use crate::util::rng::Pcg64;
+use crate::util::table::{f, Table};
+use crate::workload::{trace, WorkloadConfig};
+
+/// Paper-aligned default rate for a cluster size (the middle rate column).
+fn default_rate(nodes: usize) -> f64 {
+    match nodes {
+        4 => 0.05,
+        12 => 0.15,
+        _ => 0.1,
+    }
+}
+
+fn parse_algorithms(args: &Args) -> anyhow::Result<Vec<Algorithm>> {
+    args.get_or("algs", "greedy,random,harmony")
+        .split(',')
+        .map(|s| Algorithm::parse(s.trim()))
+        .collect()
+}
+
+fn parse_scenarios(args: &Args) -> Vec<String> {
+    match args.get("scenarios") {
+        Some(list) => list.split(',').map(|s| s.trim().to_string()).collect(),
+        None => WorkloadConfig::scenario_names()
+            .iter()
+            .map(|s| s.to_string())
+            .collect(),
+    }
+}
+
+pub fn run(args: &Args) -> anyhow::Result<String> {
+    if let Some(path) = args.get("replay") {
+        return replay(args, path);
+    }
+    let nodes = args.get_usize("nodes", 8);
+    let episodes = args.get_usize("episodes", 2);
+    let seed = args.get_u64("seed", 42);
+    let rate = args.get_f64("rate", default_rate(nodes));
+    let train_episodes = args.get_usize("train-episodes", 2);
+    let verbose = args.has_flag("verbose");
+    let algorithms = parse_algorithms(args)?;
+    let scenarios = parse_scenarios(args);
+    let needs_rt = algorithms.iter().any(|a| a.artifact_key().is_some());
+    let rt = if needs_rt {
+        Some(Runtime::new(args.get("artifacts").unwrap_or("artifacts"))?)
+    } else {
+        None
+    };
+
+    let mut table = Table::new(
+        &format!("Scenario sweep ({nodes} nodes, base rate {rate}, {episodes} episodes)"),
+        &[
+            "Scenario", "Algorithm", "p50", "p90", "p99", "mean", "util", "reload", "quality",
+        ],
+    );
+
+    for scenario in &scenarios {
+        let wcfg = WorkloadConfig::preset(scenario, rate)?;
+        let mut cfg = ExperimentConfig::preset(nodes);
+        cfg.seed = seed;
+        cfg.env.arrival_rate = rate;
+        cfg.env.workload = Some(wcfg);
+
+        if let Some(dir) = args.get("record") {
+            std::fs::create_dir_all(dir)?;
+            for ep in 0..episodes {
+                // Must mirror `evaluate`'s common-random-number seeding so
+                // the recorded trace is exactly what the policies saw.
+                let mut wl_rng = Pcg64::new(seed.wrapping_add(ep as u64), 0xC0FFEE);
+                let w = Workload::generate(&cfg.env, &mut wl_rng);
+                let path = format!("{dir}/{scenario}_ep{ep}.jsonl");
+                trace::write_file(&w, &path)?;
+                if verbose {
+                    eprintln!("recorded {path} ({} tasks)", w.len());
+                }
+            }
+        }
+
+        for alg in &algorithms {
+            cfg.algorithm = *alg;
+            if verbose {
+                eprintln!("scenario {scenario}: running {}...", alg.name());
+            }
+            let mut policy = super::trained_policy(&cfg, rt.as_ref(), train_episodes, verbose)?;
+            let s = evaluate(&cfg, policy.as_mut(), episodes);
+            table.row(vec![
+                scenario.clone(),
+                alg.name().to_string(),
+                f(s.p50_latency, 1),
+                f(s.p90_latency, 1),
+                f(s.p99_latency, 1),
+                f(s.avg_response_latency, 1),
+                f(s.avg_utilization, 3),
+                f(s.reload_rate, 3),
+                f(s.avg_quality, 3),
+            ]);
+        }
+    }
+
+    let out = table.render();
+    println!("{out}");
+    super::save_csv(&format!("scenarios_n{nodes}"), &table.to_csv())?;
+    Ok(out)
+}
+
+/// Replay a recorded JSONL trace through every requested policy. With the
+/// `--seed`/`--ep` of the recording run, a memoryless policy's
+/// `EpisodeReport` matches the original episode number-for-number. For
+/// policies whose decisions also depend on the env *config* — the
+/// meta-heuristics plan and RL policies train on workloads generated from
+/// it — pass the recording run's `--scenario` and `--rate` too, so the
+/// reconstructed config (and hence planning/training) matches as well.
+fn replay(args: &Args, path: &str) -> anyhow::Result<String> {
+    let nodes = args.get_usize("nodes", 8);
+    let seed = args.get_u64("seed", 42);
+    let ep = args.get_u64("ep", 0);
+    let rate = args.get_f64("rate", default_rate(nodes));
+    let train_episodes = args.get_usize("train-episodes", 2);
+    let verbose = args.has_flag("verbose");
+    let algorithms = parse_algorithms(args)?;
+    let workload = trace::read_file(path)?;
+    let scenario = match args.get("scenario") {
+        Some(name) => Some(WorkloadConfig::preset(name, rate)?),
+        None => None,
+    };
+    let needs_rt = algorithms.iter().any(|a| a.artifact_key().is_some());
+    let rt = if needs_rt {
+        Some(Runtime::new(args.get("artifacts").unwrap_or("artifacts"))?)
+    } else {
+        None
+    };
+
+    let mut table = Table::new(
+        &format!("Trace replay: {path} ({} tasks, {nodes} nodes)", workload.len()),
+        &[
+            "Algorithm", "p50", "p90", "p99", "mean", "util", "reloads", "quality", "reward",
+        ],
+    );
+    for alg in &algorithms {
+        let mut cfg = ExperimentConfig::preset(nodes);
+        cfg.seed = seed;
+        cfg.algorithm = *alg;
+        cfg.env.arrival_rate = rate;
+        cfg.env.workload = scenario.clone();
+        let mut policy = super::trained_policy(&cfg, rt.as_ref(), train_episodes, verbose)?;
+        // Same env-rng stream as `evaluate` episode `ep` of the recording
+        // run: identical jitter draws → identical EpisodeReport.
+        let mut env = EdgeEnv::with_workload(
+            cfg.env.clone(),
+            workload.clone(),
+            Pcg64::new(seed.wrapping_add(ep), 0xE21),
+        );
+        let rep = run_episode(&mut env, policy.as_mut(), None);
+        table.row(vec![
+            alg.name().to_string(),
+            f(rep.p50_latency, 1),
+            f(rep.p90_latency, 1),
+            f(rep.p99_latency, 1),
+            f(rep.avg_response_latency, 1),
+            f(rep.avg_utilization, 3),
+            format!("{}", rep.reloads),
+            f(rep.avg_quality, 3),
+            f(rep.total_reward, 1),
+        ]);
+    }
+    let out = table.render();
+    println!("{out}");
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::policy::GreedyPolicy;
+
+    #[test]
+    fn sweep_covers_scenarios_and_policies() {
+        let args = Args::parse(
+            [
+                "--nodes",
+                "4",
+                "--episodes",
+                "1",
+                "--algs",
+                "greedy,random",
+                "--scenarios",
+                "poisson,bursty,flash",
+            ]
+            .map(String::from),
+        );
+        let out = run(&args).unwrap();
+        for needle in ["poisson", "bursty", "flash", "Greedy", "Random", "p99"] {
+            assert!(out.contains(needle), "missing {needle} in:\n{out}");
+        }
+    }
+
+    #[test]
+    fn recorded_trace_replays_bit_exactly() {
+        // The acceptance check: record a scenario realisation, replay it
+        // through EdgeEnv with the recording run's seeds, and require an
+        // identical EpisodeReport.
+        let seed = 42u64;
+        let ep = 0u64;
+        let mut cfg = ExperimentConfig::preset_4node(0.05);
+        cfg.seed = seed;
+        cfg.env.workload = Some(WorkloadConfig::preset("bursty", 0.05).unwrap());
+
+        // What `evaluate` episode 0 runs:
+        let mut wl_rng = Pcg64::new(seed.wrapping_add(ep), 0xC0FFEE);
+        let workload = Workload::generate(&cfg.env, &mut wl_rng);
+        let run_one = |w: Workload| {
+            let mut env = EdgeEnv::with_workload(
+                cfg.env.clone(),
+                w,
+                Pcg64::new(seed.wrapping_add(ep), 0xE21),
+            );
+            let mut p = GreedyPolicy::new(cfg.env.clone());
+            run_episode(&mut env, &mut p, None)
+        };
+        let original = run_one(workload.clone());
+
+        // Round-trip through the JSONL trace format.
+        let replayed = run_one(trace::from_jsonl(&trace::to_jsonl(&workload)).unwrap());
+
+        assert_eq!(original.completed_tasks, replayed.completed_tasks);
+        assert_eq!(original.total_reward.to_bits(), replayed.total_reward.to_bits());
+        assert_eq!(
+            original.avg_response_latency.to_bits(),
+            replayed.avg_response_latency.to_bits()
+        );
+        assert_eq!(original.avg_quality.to_bits(), replayed.avg_quality.to_bits());
+        assert_eq!(original.p50_latency.to_bits(), replayed.p50_latency.to_bits());
+        assert_eq!(original.p99_latency.to_bits(), replayed.p99_latency.to_bits());
+        assert_eq!(original.reloads, replayed.reloads);
+        assert_eq!(original.avg_utilization.to_bits(), replayed.avg_utilization.to_bits());
+    }
+}

@@ -43,3 +43,4 @@ pub mod serving;
 pub mod sim;
 pub mod testing;
 pub mod util;
+pub mod workload;

@@ -9,8 +9,15 @@
 //!   eat eval [--alg eat] [--nodes 8] [--episodes 5]        evaluate one
 //!       policy and print the summary
 //!   eat serve [--workers 4] [--tasks 16] [--time-scale 2e-3]
+//!            [--scenario <family>]
 //!       run the socket-based serving system end to end with the
-//!       reuse-aware scheduler
+//!       reuse-aware scheduler; --scenario drives it with any workload
+//!       scenario family instead of stationary Poisson
+//!   eat scenarios [--nodes 8] [--episodes 2] [--algs greedy,random,...]
+//!       sweep every workload scenario family (poisson, constant, bursty,
+//!       diurnal, flash, zipf-hot, rotating) across policies with
+//!       p50/p90/p99 latency, utilization and reload counts; supports
+//!       JSONL trace --record <dir> and bit-exact --replay <file>
 //!   eat info                                                print artifact
 //!       manifest summary
 
@@ -23,14 +30,18 @@ use eat::util::cli::Args;
 
 fn usage() -> ! {
     eprintln!(
-        "usage: eat <experiment|train|eval|serve|info> [options]\n\
+        "usage: eat <experiment|train|eval|serve|scenarios|info> [options]\n\
          \n  eat experiment <id>   ids: table1 table2_4 table6 table9 table10 table11\n\
-         \x20                          table12 fig4 fig5 fig6 fig7 fig8 grid all\n\
+         \x20                          table12 fig4 fig5 fig6 fig7 fig8 grid scenarios all\n\
          \x20     options: --nodes 4|8|12 --episodes K --train-episodes K --algs a,b,c\n\
          \x20              --rates 0.01,0.05 --seed S --verbose\n\
          \n  eat train   --alg eat|eat-a|eat-d|eat-da|ppo --nodes N --episodes K [--seed S]\n\
          \n  eat eval    --alg <any> --nodes N --episodes K [--train-episodes K]\n\
          \n  eat serve   --workers 4 --tasks 16 --time-scale 2e-3 [--seed S]\n\
+         \x20           [--scenario poisson|constant|bursty|diurnal|flash|zipf-hot|rotating]\n\
+         \n  eat scenarios [--nodes N] [--episodes K] [--rate R] [--algs a,b,c]\n\
+         \x20             [--scenarios poisson,bursty,...] [--record dir]\n\
+         \x20             [--replay file [--scenario name] [--ep K]]\n\
          \n  eat info"
     );
     std::process::exit(2)
@@ -118,6 +129,9 @@ fn main() -> anyhow::Result<()> {
         "serve" => {
             serve(&args)?;
         }
+        "scenarios" => {
+            experiments::scenarios::run(&args)?;
+        }
         "info" => {
             let rt = Runtime::new(args.get("artifacts").unwrap_or("artifacts"))?;
             println!("platform: {}", rt.platform());
@@ -141,6 +155,7 @@ fn serve(args: &Args) -> anyhow::Result<()> {
     use eat::sim::cluster::{Cluster, Selection};
     use eat::sim::task::{ModelType, Workload};
     use eat::util::rng::Pcg64;
+    use eat::workload::{MetricsCollector, WorkloadConfig};
 
     let workers = args.get_usize("workers", 4);
     let n_tasks = args.get_usize("tasks", 12);
@@ -151,16 +166,25 @@ fn serve(args: &Args) -> anyhow::Result<()> {
     cfg.tasks_per_episode = n_tasks;
     cfg.patch_choices.retain(|&c| c <= workers);
     cfg.patch_weights = vec![1.0; cfg.patch_choices.len()];
+    // Any scenario family can drive the serving emulation too.
+    if let Some(name) = args.get("scenario") {
+        cfg.workload = Some(WorkloadConfig::preset(name, cfg.arrival_rate)?);
+    }
 
     println!("spawning {workers} socket workers (time scale {time_scale})...");
     let pool = WorkerPool::spawn(workers, cfg.exec.clone(), time_scale, seed)?;
     let host = ServingHost::new(pool.addrs().to_vec());
     let mut tracker = Cluster::new(workers); // mirrors worker model state
     let workload = Workload::generate(&cfg, &mut Pcg64::new(seed, 1));
+    let mut metrics = MetricsCollector::new(workers);
 
     let t0 = std::time::Instant::now();
-    let mut total_sim = 0.0;
-    let mut reloads = 0usize;
+    // Dispatch is synchronous, so model a sequential simulated timeline:
+    // a task starts once it has arrived AND the previous dispatch
+    // finished. This makes the arrival process matter — bursty/flash
+    // scenarios build genuine backlog (waiting > 0) while sparse ones
+    // leave idle gaps.
+    let mut sim_clock = 0.0f64;
     for task in &workload.tasks {
         // Gang selection with the reuse-aware greedy selector. The tracker
         // never marks servers busy (dispatch below is synchronous), so
@@ -171,37 +195,44 @@ fn serve(args: &Args) -> anyhow::Result<()> {
             Selection::Fresh(v) => (v.clone(), false),
             Selection::Infeasible => continue,
         };
+        let waiting = (sim_clock - task.arrival).max(0.0);
+        if task.arrival > sim_clock {
+            // Idle until the task arrives.
+            metrics.advance_time(task.arrival - sim_clock);
+            sim_clock = task.arrival;
+        }
         let steps = 20;
-        let out = host.dispatch(
+        let out = host.dispatch_collect(
             task.id,
             &format!("prompt-{}", task.prompt_id),
             steps,
             task.model.0,
             &gang,
+            waiting,
+            &mut metrics,
         )?;
         let sim_s = out.sim_exec_seconds();
-        total_sim += sim_s;
-        if out.any_reload() {
-            reloads += 1;
-        }
+        metrics.advance_time(sim_s);
+        sim_clock += sim_s;
         tracker.dispatch(&gang, 0.0, ModelType(task.model.0), reuse);
         println!(
-            "task {:>3}  patches {}  gang {:?}  sim {:>6.1}s  reload {}  wall {:>6.3}s",
+            "task {:>3}  patches {}  gang {:?}  wait {:>6.1}s  sim {:>6.1}s  reload {}  wall {:>6.3}s",
             task.id,
             task.patches,
             gang,
+            waiting,
             sim_s,
             out.any_reload(),
             out.wall_seconds
         );
     }
     println!(
-        "\nserved {} tasks in {:.2}s wall; total simulated exec {:.1}s; reload rate {:.2}",
+        "\nserved {} tasks in {:.2}s wall; total simulated exec {:.1}s",
         workload.len(),
         t0.elapsed().as_secs_f64(),
-        total_sim,
-        reloads as f64 / workload.len() as f64
+        metrics.sim_time(),
     );
+    println!("{}", metrics.summary_line());
     pool.shutdown();
     Ok(())
 }

@@ -5,6 +5,7 @@
 //! monitors the server's result port".
 
 use super::protocol::{TaskRequest, TaskResult};
+use crate::workload::MetricsCollector;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpStream};
 use std::sync::mpsc;
@@ -101,6 +102,31 @@ impl ServingHost {
             wall_seconds: started.elapsed().as_secs_f64(),
         })
     }
+
+    /// `dispatch`, additionally feeding the streaming metrics collector:
+    /// response latency (`waiting` + simulated gang execution), reload
+    /// flag, and per-worker busy time. The caller advances the collector's
+    /// clock (`advance_time`) according to its own notion of elapsed time.
+    pub fn dispatch_collect(
+        &self,
+        task_id: u64,
+        prompt: &str,
+        steps: u32,
+        model: u32,
+        gang: &[usize],
+        waiting: f64,
+        metrics: &mut MetricsCollector,
+    ) -> anyhow::Result<GangOutcome> {
+        let out = self.dispatch(task_id, prompt, steps, model, gang)?;
+        metrics.observe_task(waiting + out.sim_exec_seconds(), waiting, out.any_reload());
+        // Busy time is per worker: patches run in parallel and each worker
+        // is free again after its own exec+load, not after the slowest
+        // peer's (gang-max would inflate fast workers' utilization).
+        for r in &out.results {
+            metrics.observe_busy(r.worker_id, r.exec_time + r.load_time);
+        }
+        Ok(out)
+    }
 }
 
 #[cfg(test)]
@@ -129,5 +155,21 @@ mod tests {
         let host = ServingHost::new(vec![]);
         assert!(host.dispatch(0, "x", 10, 0, &[]).is_err());
         assert!(host.dispatch(0, "x", 10, 0, &[3]).is_err());
+    }
+
+    #[test]
+    fn dispatch_collect_feeds_metrics() {
+        let pool = WorkerPool::spawn(2, ExecModelConfig::default(), 1e-4, 3).unwrap();
+        let host = ServingHost::new(pool.addrs().to_vec());
+        let mut m = MetricsCollector::new(2);
+        let out = host
+            .dispatch_collect(1, "p", 20, 0, &[0, 1], 2.5, &mut m)
+            .unwrap();
+        m.advance_time(out.sim_exec_seconds());
+        assert_eq!(m.completed(), 1);
+        assert_eq!(m.reloads(), 1); // first dispatch always loads
+        assert!(m.latency.p50() >= 2.5);
+        assert!(m.avg_utilization() > 0.0);
+        pool.shutdown();
     }
 }

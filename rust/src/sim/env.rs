@@ -13,6 +13,7 @@ use crate::sim::exec_model::ExecModel;
 use crate::sim::quality::QualityModel;
 use crate::sim::task::{Task, Workload};
 use crate::util::rng::Pcg64;
+use crate::workload::{MetricsCollector, TaskSource, TaskStream};
 use std::collections::VecDeque;
 
 /// Decoded composite action (Eq. 8): `[a_c, a_s, a_k1..a_kl]`, every
@@ -81,6 +82,9 @@ pub struct Scheduled {
     /// Response time t^r = waiting + duration.
     pub response: f64,
     pub quality: f64,
+    /// Quality floor in force for this task (its own demand, or the
+    /// episode-wide `RewardConfig::q_min`).
+    pub q_min: f64,
 }
 
 /// Result of one environment step.
@@ -94,7 +98,10 @@ pub struct StepOutcome {
     pub infeasible: bool,
 }
 
-/// Aggregated per-episode metrics (feeds Tables IX–XI and Fig 5/8).
+/// Aggregated per-episode metrics (feeds Tables IX–XI, Fig 5/8, and the
+/// scenario sweep). Percentiles and utilization come from the streaming
+/// `MetricsCollector`; when no task was ever scheduled they are censored
+/// at the episode's simulated time, like the average.
 #[derive(Clone, Debug, Default)]
 pub struct EpisodeReport {
     pub completed_tasks: usize,
@@ -104,8 +111,16 @@ pub struct EpisodeReport {
     pub total_reward: f64,
     pub avg_quality: f64,
     pub avg_response_latency: f64,
+    /// Response-latency percentiles over completed tasks.
+    pub p50_latency: f64,
+    pub p90_latency: f64,
+    pub p99_latency: f64,
+    /// Mean per-server busy-time fraction over the episode.
+    pub avg_utilization: f64,
     /// Fraction of scheduled tasks that required a model (re)load.
     pub reload_rate: f64,
+    /// Absolute number of model (re)loads.
+    pub reloads: usize,
     pub below_quality_min: usize,
     pub infeasible_actions: usize,
     pub avg_steps_chosen: f64,
@@ -122,12 +137,12 @@ pub struct EdgeEnv {
     pub cluster: Cluster,
     exec_model: ExecModel,
     quality_model: QualityModel,
-    workload: Workload,
-    next_arrival: usize,
+    source: TaskSource,
     queue: VecDeque<Task>,
     now: f64,
     steps_taken: usize,
     rng: Pcg64,
+    metrics: MetricsCollector,
     // accumulators
     scheduled_count: usize,
     reload_count: usize,
@@ -142,29 +157,46 @@ pub struct EdgeEnv {
 }
 
 impl EdgeEnv {
+    /// Build from a seed. With `cfg.workload = None` this pre-materialises
+    /// the legacy Poisson workload (bit-identical to the seed); with a
+    /// scenario configured it consumes the arrival process as a lazy
+    /// stream — same tasks, generated on demand.
     pub fn new(cfg: EnvConfig, seed: u64) -> Self {
         let mut rng = Pcg64::new(seed, 0xED6E);
-        let workload = Workload::generate(&cfg, &mut rng.fork(1));
-        Self::with_workload(cfg, workload, rng)
+        if cfg.workload.is_some() {
+            let (arrival, mix) = crate::workload::build_for_env(&cfg);
+            let stream = TaskStream::new(arrival, mix, cfg.tasks_per_episode, rng.fork(1));
+            Self::with_source(cfg, TaskSource::stream(stream), rng)
+        } else {
+            let workload = Workload::generate(&cfg, &mut rng.fork(1));
+            Self::with_workload(cfg, workload, rng)
+        }
     }
 
-    /// Build with an explicit workload (common-random-number comparisons
-    /// and the fixed motivation traces).
+    /// Build with an explicit workload (common-random-number comparisons,
+    /// trace replay, and the fixed motivation traces).
     pub fn with_workload(cfg: EnvConfig, workload: Workload, rng: Pcg64) -> Self {
+        Self::with_source(cfg, TaskSource::fixed(workload), rng)
+    }
+
+    /// Build over any task source — a materialised workload or a live
+    /// arrival-process stream.
+    pub fn with_source(cfg: EnvConfig, source: TaskSource, rng: Pcg64) -> Self {
         let cluster = Cluster::new(cfg.num_servers);
         let exec_model = ExecModel::new(cfg.exec.clone());
         let quality_model = QualityModel::new(cfg.quality.clone());
+        let metrics = MetricsCollector::new(cfg.num_servers);
         let mut env = EdgeEnv {
             cfg,
             cluster,
             exec_model,
             quality_model,
-            workload,
-            next_arrival: 0,
+            source,
             queue: VecDeque::new(),
             now: 0.0,
             steps_taken: 0,
             rng,
+            metrics,
             scheduled_count: 0,
             reload_count: 0,
             sum_quality: 0.0,
@@ -200,18 +232,20 @@ impl EdgeEnv {
         &self.trace
     }
 
+    /// Streaming episode metrics (latency histogram, utilization, reloads).
+    pub fn metrics(&self) -> &MetricsCollector {
+        &self.metrics
+    }
+
     /// Remaining (not yet arrived) + queued + in-flight tasks exist?
     pub fn all_done(&self) -> bool {
-        self.scheduled_count == self.workload.len()
+        self.scheduled_count == self.source.total()
             && self.cluster.servers.iter().all(|s| s.is_idle())
     }
 
     fn absorb_arrivals(&mut self) {
-        while self.next_arrival < self.workload.len()
-            && self.workload.tasks[self.next_arrival].arrival <= self.now
-        {
-            self.queue.push_back(self.workload.tasks[self.next_arrival].clone());
-            self.next_arrival += 1;
+        while let Some(task) = self.source.pop_if_arrived(self.now) {
+            self.queue.push_back(task);
         }
     }
 
@@ -288,8 +322,14 @@ impl EdgeEnv {
             outcome.reward = -0.1;
         }
         self.total_reward += outcome.reward;
-        // Advance simulated time.
+        // Advance simulated time, crediting busy time before the tick.
         let dt = self.cfg.decision_dt;
+        for s in &self.cluster.servers {
+            if !s.is_idle() {
+                self.metrics.observe_busy(s.id, s.remaining.min(dt));
+            }
+        }
+        self.metrics.advance_time(dt);
         self.now += dt;
         self.cluster.advance(dt, self.now);
         self.absorb_arrivals();
@@ -411,6 +451,7 @@ impl EdgeEnv {
         let waiting = (self.now - task.arrival).max(0.0);
         let response = waiting + duration;
         let quality = self.quality_model.sample_quality(steps, task.prompt_id);
+        let q_floor = task.q_min.unwrap_or(self.cfg.reward.q_min);
         let sch = Scheduled {
             task_id: task.id,
             steps,
@@ -420,6 +461,7 @@ impl EdgeEnv {
             waiting,
             response,
             quality,
+            q_min: q_floor,
         };
         // Metrics.
         self.scheduled_count += 1;
@@ -430,18 +472,21 @@ impl EdgeEnv {
         self.sum_response += response;
         self.sum_steps_chosen += steps as f64;
         self.sum_efficiency += quality / response.max(1e-9);
-        if quality < self.cfg.reward.q_min {
+        if quality < q_floor {
             self.below_min += 1;
         }
+        self.metrics.observe_task(response, waiting, !reuse);
         self.trace.push(sch.clone());
         Some(sch)
     }
 
     /// Immediate reward (§V.A.4):
     /// R = α_q·q − λ_q·I + 1 / (β_t·t^r + μ_t·t^avg_Q).
+    /// The quality indicator I uses the task's own demand when it has one
+    /// (scenario mixes with per-task QoS tiers), else the global q_min.
     fn reward_for(&self, sch: &Scheduled) -> f64 {
         let r = &self.cfg.reward;
-        let penalty = if sch.quality < r.q_min { r.p_quality } else { 0.0 };
+        let penalty = if sch.quality < sch.q_min { r.p_quality } else { 0.0 };
         let denom = r.beta_t * sch.response + r.mu_t * self.avg_queue_wait() + 1e-3;
         r.alpha_q * sch.quality - r.lambda_q * penalty + 1.0 / denom
     }
@@ -455,24 +500,32 @@ impl EdgeEnv {
     }
 
     /// Arrival times of the underlying workload (testing / diagnostics).
+    /// Empty for a streamed source — a stream retains no history and
+    /// cannot report future arrivals without consuming randomness.
     pub fn workload_arrivals(&self) -> Vec<f64> {
-        self.workload.tasks.iter().map(|t| t.arrival).collect()
+        self.source.known_arrivals()
     }
 
     /// Final episode report. If the policy never scheduled anything the
-    /// latency is censored at the episode's simulated time (otherwise a
-    /// do-nothing policy would report a perfect 0-second latency).
+    /// latency (and its percentiles) is censored at the episode's
+    /// simulated time (otherwise a do-nothing policy would report a
+    /// perfect 0-second latency).
     pub fn report(&self) -> EpisodeReport {
         if self.scheduled_count == 0 {
             return EpisodeReport {
                 completed_tasks: 0,
-                total_tasks: self.workload.len(),
+                total_tasks: self.source.total(),
                 decision_steps: self.steps_taken,
                 sim_time: self.now,
                 total_reward: self.total_reward,
                 avg_quality: 0.0,
                 avg_response_latency: self.now,
+                p50_latency: self.now,
+                p90_latency: self.now,
+                p99_latency: self.now,
+                avg_utilization: self.metrics.avg_utilization(),
                 reload_rate: 0.0,
+                reloads: 0,
                 below_quality_min: 0,
                 infeasible_actions: self.infeasible,
                 avg_steps_chosen: 0.0,
@@ -482,13 +535,18 @@ impl EdgeEnv {
         let n = self.scheduled_count as f64;
         EpisodeReport {
             completed_tasks: self.scheduled_count,
-            total_tasks: self.workload.len(),
+            total_tasks: self.source.total(),
             decision_steps: self.steps_taken,
             sim_time: self.now,
             total_reward: self.total_reward,
             avg_quality: self.sum_quality / n,
             avg_response_latency: self.sum_response / n,
+            p50_latency: self.metrics.latency.p50(),
+            p90_latency: self.metrics.latency.p90(),
+            p99_latency: self.metrics.latency.p99(),
+            avg_utilization: self.metrics.avg_utilization(),
             reload_rate: self.reload_count as f64 / n,
+            reloads: self.reload_count,
             below_quality_min: self.below_min,
             infeasible_actions: self.infeasible,
             avg_steps_chosen: self.sum_steps_chosen / n,
@@ -680,5 +738,77 @@ mod tests {
         let rep = e.report();
         assert!(rep.efficiency > 0.0);
         assert!(rep.avg_steps_chosen > 0.0);
+    }
+
+    #[test]
+    fn report_percentiles_bracket_the_mean() {
+        let mut e = env(10);
+        let l = e.cfg.queue_window;
+        loop {
+            if e.step(&schedule_action(l, 0, 0.5)).done {
+                break;
+            }
+        }
+        let rep = e.report();
+        assert!(rep.completed_tasks > 1);
+        assert!(rep.p50_latency <= rep.p90_latency && rep.p90_latency <= rep.p99_latency);
+        assert!(rep.p50_latency > 0.0 && rep.p99_latency.is_finite());
+        assert!(rep.avg_utilization > 0.0 && rep.avg_utilization <= 1.0);
+        assert_eq!(rep.reloads, (rep.reload_rate * rep.completed_tasks as f64).round() as usize);
+    }
+
+    #[test]
+    fn streamed_scenario_matches_materialised_replay() {
+        use crate::sim::task::Workload;
+        use crate::util::rng::Pcg64;
+        use crate::workload::WorkloadConfig;
+        // The same seed must yield the same episode whether the scenario
+        // is consumed as a stream (EdgeEnv::new) or pre-materialised and
+        // replayed (EdgeEnv::with_workload) — the trace-replay guarantee.
+        let mut cfg = ExperimentConfig::preset_8node(0.1).env;
+        cfg.workload = Some(WorkloadConfig::preset("flash", 0.1).unwrap());
+        let seed = 21;
+        let run = |mut e: EdgeEnv| {
+            let l = e.cfg.queue_window;
+            loop {
+                if e.step(&schedule_action(l, 0, 0.7)).done {
+                    break;
+                }
+            }
+            e.report()
+        };
+        let streamed = run(EdgeEnv::new(cfg.clone(), seed));
+        let mut rng = Pcg64::new(seed, 0xED6E);
+        let workload = Workload::generate(&cfg, &mut rng.fork(1));
+        let materialised = run(EdgeEnv::with_workload(cfg, workload, rng));
+        assert_eq!(streamed.completed_tasks, materialised.completed_tasks);
+        assert_eq!(streamed.total_reward, materialised.total_reward);
+        assert_eq!(streamed.avg_response_latency, materialised.avg_response_latency);
+        assert_eq!(streamed.p99_latency, materialised.p99_latency);
+        assert_eq!(streamed.avg_quality, materialised.avg_quality);
+    }
+
+    #[test]
+    fn per_task_quality_demand_drives_below_min_accounting() {
+        use crate::workload::{ModelMix, QualityDemand, WorkloadConfig};
+        // An impossibly strict demand on every task: everything scheduled
+        // must count as below its quality floor.
+        let mut cfg = ExperimentConfig::preset_8node(0.1).env;
+        cfg.workload = Some(WorkloadConfig {
+            arrival: crate::workload::ArrivalConfig::Poisson { rate: 0.1 },
+            model_mix: ModelMix::Uniform,
+            quality_demand: QualityDemand::Uniform { lo: 0.9, hi: 0.95 },
+        });
+        cfg.tasks_per_episode = 8;
+        let mut e = EdgeEnv::new(cfg, 22);
+        let l = e.cfg.queue_window;
+        loop {
+            if e.step(&schedule_action(l, 0, 1.0)).done {
+                break;
+            }
+        }
+        let rep = e.report();
+        assert!(rep.completed_tasks > 0);
+        assert_eq!(rep.below_quality_min, rep.completed_tasks);
     }
 }

@@ -1,9 +1,12 @@
-//! AIGC tasks and the stochastic workload generator.
+//! AIGC tasks and the episode workload container.
 //!
 //! Each task k = (g_k, c_k, t^a_k): a prompt, a collaboration requirement
 //! (number of parallel patch workers, c_k ~ D_c over {1,2,4,8}) and an
-//! arrival time (inter-arrival t^g ~ D_g = Exp(rate)). Tasks also carry the
-//! AIGC service (model) type they need, which drives model-reuse decisions.
+//! arrival time. Tasks also carry the AIGC service (model) type they need,
+//! which drives model-reuse decisions, and an optional per-task quality
+//! demand. Generation itself lives in `crate::workload` — arrival
+//! processes and task mixes are pluggable there; `Workload::generate`
+//! keeps the seed's bit-exact behaviour when no scenario is configured.
 
 use crate::config::EnvConfig;
 use crate::util::rng::Pcg64;
@@ -27,6 +30,9 @@ pub struct Task {
     pub model: ModelType,
     /// Arrival timestamp t^a_k (s).
     pub arrival: f64,
+    /// Per-task minimum quality demand; `None` falls back to the
+    /// episode-wide `RewardConfig::q_min`.
+    pub q_min: Option<f64>,
 }
 
 /// Stream of tasks for one episode, pre-generated from the arrival process
@@ -38,29 +44,24 @@ pub struct Workload {
 }
 
 impl Workload {
-    /// Sample `cfg.tasks_per_episode` tasks with Exp(arrival_rate)
-    /// inter-arrivals and D_c patch counts.
+    /// Sample `cfg.tasks_per_episode` tasks. With `cfg.workload = None`
+    /// this is the paper's generator — Exp(arrival_rate) inter-arrivals,
+    /// uniform D_c and model mix — drawing the exact same RNG sequence as
+    /// the seed implementation. With a scenario configured, that
+    /// scenario's arrival process and task mix drive generation instead.
     pub fn generate(cfg: &EnvConfig, rng: &mut Pcg64) -> Workload {
-        let mut tasks = Vec::with_capacity(cfg.tasks_per_episode);
-        let mut t = 0.0;
-        for id in 0..cfg.tasks_per_episode as u64 {
-            t += rng.exponential(cfg.arrival_rate);
-            let patches = cfg.patch_choices[rng.categorical(&cfg.patch_weights)];
-            let model = ModelType(rng.next_below(cfg.num_models as u64) as u32);
-            tasks.push(Task {
-                id,
-                prompt_id: rng.next_u64(),
-                patches,
-                model,
-                arrival: t,
-            });
-        }
-        Workload { tasks }
+        let (mut arrival, mix) = crate::workload::build_for_env(cfg);
+        crate::workload::generate(arrival.as_mut(), &mix, cfg.tasks_per_episode, rng)
     }
 
     /// A deterministic workload with fixed arrivals (used by the
     /// motivation-example experiments, Tables II–IV: 4 tasks, 10 s apart).
+    /// Arrivals are sorted if given out of order: `absorb_arrivals` walks
+    /// a monotone cursor, so an out-of-order task behind the cursor would
+    /// silently never arrive.
     pub fn fixed(arrivals: &[(f64, usize, u32)]) -> Workload {
+        let mut arrivals = arrivals.to_vec();
+        arrivals.sort_by(|a, b| a.0.partial_cmp(&b.0).expect("NaN arrival"));
         let tasks = arrivals
             .iter()
             .enumerate()
@@ -70,9 +71,26 @@ impl Workload {
                 patches,
                 model: ModelType(model),
                 arrival: t,
+                q_min: None,
             })
             .collect();
         Workload { tasks }
+    }
+
+    /// Wrap explicit tasks (trace replay), normalising arrival order with
+    /// a stable sort when needed.
+    pub fn from_tasks(mut tasks: Vec<Task>) -> Workload {
+        let sorted = tasks.windows(2).all(|w| w[0].arrival <= w[1].arrival);
+        if !sorted {
+            tasks.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).expect("NaN arrival"));
+        }
+        Workload { tasks }
+    }
+
+    /// True when arrivals are non-decreasing (the invariant the
+    /// environment's arrival cursor relies on).
+    pub fn is_sorted(&self) -> bool {
+        self.tasks.windows(2).all(|w| w[0].arrival <= w[1].arrival)
     }
 
     pub fn len(&self) -> usize {
@@ -88,6 +106,7 @@ impl Workload {
 mod tests {
     use super::*;
     use crate::config::EnvConfig;
+    use crate::workload::WorkloadConfig;
 
     #[test]
     fn arrivals_increase_and_patches_valid() {
@@ -101,6 +120,7 @@ mod tests {
             prev = t.arrival;
             assert!(cfg.patch_choices.contains(&t.patches));
             assert!((t.model.0 as usize) < cfg.num_models);
+            assert!(t.q_min.is_none());
         }
     }
 
@@ -134,5 +154,45 @@ mod tests {
         assert_eq!(w.len(), 4);
         assert_eq!(w.tasks[2].patches, 4);
         assert_eq!(w.tasks[3].arrival, 30.0);
+    }
+
+    #[test]
+    fn fixed_workload_sorts_out_of_order_arrivals() {
+        // Out-of-order input used to strand tasks behind the arrival
+        // cursor in `absorb_arrivals`; now it is normalised up front.
+        let w = Workload::fixed(&[(20.0, 4, 1), (0.0, 2, 0), (10.0, 2, 0)]);
+        assert!(w.is_sorted());
+        assert_eq!(w.tasks[0].arrival, 0.0);
+        assert_eq!(w.tasks[2].arrival, 20.0);
+        assert_eq!(w.tasks[2].patches, 4);
+        // Ids follow sorted order so they stay unique and stable.
+        assert_eq!(w.tasks.iter().map(|t| t.id).collect::<Vec<_>>(), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn from_tasks_sorts_only_when_needed() {
+        let sorted = Workload::fixed(&[(0.0, 1, 0), (5.0, 1, 0)]);
+        let again = Workload::from_tasks(sorted.tasks.clone());
+        assert_eq!(again.tasks[0].id, 0);
+        let mut rev = sorted.tasks.clone();
+        rev.reverse();
+        let fixed = Workload::from_tasks(rev);
+        assert!(fixed.is_sorted());
+    }
+
+    #[test]
+    fn scenario_config_changes_generation() {
+        let mut cfg = EnvConfig::default();
+        cfg.tasks_per_episode = 256;
+        let legacy = Workload::generate(&cfg, &mut Pcg64::seeded(3));
+        cfg.workload = Some(WorkloadConfig::preset("bursty", cfg.arrival_rate).unwrap());
+        let bursty = Workload::generate(&cfg, &mut Pcg64::seeded(3));
+        assert_eq!(bursty.len(), 256);
+        assert!(bursty.is_sorted());
+        // Same seed, different process → different realisation.
+        assert_ne!(
+            legacy.tasks.last().unwrap().arrival,
+            bursty.tasks.last().unwrap().arrival
+        );
     }
 }

@@ -105,6 +105,113 @@ pub fn check<F: Fn(&mut Gen) + std::panic::RefUnwindSafe>(name: &str, cases: u64
     }
 }
 
+/// Workload-subsystem properties: the invariants every arrival process,
+/// mix, and trace must hold regardless of parameters.
+#[cfg(test)]
+mod workload_props {
+    use super::check;
+    use crate::config::EnvConfig;
+    use crate::sim::task::Workload;
+    use crate::util::rng::Pcg64;
+    use crate::workload::{self, WorkloadConfig};
+
+    #[test]
+    fn interarrivals_nonnegative_and_sorted_for_every_scenario() {
+        check("arrival sortedness", 30, |g| {
+            let name = *g.pick(WorkloadConfig::scenario_names());
+            let rate = g.f64_in(0.01, 0.5);
+            let mut cfg = EnvConfig::default();
+            cfg.workload = Some(WorkloadConfig::preset(name, rate).unwrap());
+            let (mut ap, mix) = workload::build_for_env(&cfg);
+            let w = workload::generate(ap.as_mut(), &mix, 400, g.rng());
+            assert_eq!(w.len(), 400);
+            let mut prev = 0.0;
+            for t in &w.tasks {
+                assert!(t.arrival.is_finite(), "{name}: non-finite arrival");
+                assert!(
+                    t.arrival >= prev,
+                    "{name}: arrival {} before {prev}",
+                    t.arrival
+                );
+                prev = t.arrival;
+                assert!(cfg.patch_choices.contains(&t.patches));
+                assert!((t.model.0 as usize) < cfg.num_models);
+                if let Some(q) = t.q_min {
+                    assert!(q.is_finite() && q > 0.0);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn empirical_rate_converges_to_mean_rate() {
+        // Processes with a well-defined long-run rate must converge to it.
+        // (FlashCrowd's spike is a transient, so its horizon-average keeps
+        // a bias; it is covered by the sortedness property above.)
+        for (name, tol) in [
+            ("poisson", 0.05),
+            ("constant", 0.01),
+            ("bursty", 0.15),
+            ("diurnal", 0.05),
+        ] {
+            let mut cfg = EnvConfig::default();
+            cfg.workload = Some(WorkloadConfig::preset(name, 0.1).unwrap());
+            let (mut ap, mix) = workload::build_for_env(&cfg);
+            let expect = ap.mean_rate();
+            let n = 40_000;
+            let w = workload::generate(ap.as_mut(), &mix, n, &mut Pcg64::seeded(77));
+            let empirical = n as f64 / w.tasks.last().unwrap().arrival;
+            assert!(
+                (empirical - expect).abs() / expect < tol,
+                "{name}: empirical rate {empirical} vs mean_rate {expect}"
+            );
+        }
+    }
+
+    #[test]
+    fn trace_roundtrip_is_bit_exact() {
+        check("trace roundtrip", 25, |g| {
+            let name = *g.pick(WorkloadConfig::scenario_names());
+            let mut cfg = EnvConfig::default();
+            cfg.tasks_per_episode = g.usize_in(1, 80);
+            cfg.workload = Some(WorkloadConfig::preset(name, g.f64_in(0.02, 0.3)).unwrap());
+            let w = Workload::generate(&cfg, g.rng());
+            let back = workload::trace::from_jsonl(&workload::trace::to_jsonl(&w)).unwrap();
+            assert_eq!(w.len(), back.len());
+            for (a, b) in w.tasks.iter().zip(&back.tasks) {
+                assert_eq!(a.id, b.id);
+                assert_eq!(a.prompt_id, b.prompt_id, "{name}: prompt id drift");
+                assert_eq!(a.patches, b.patches);
+                assert_eq!(a.model, b.model);
+                assert_eq!(a.arrival.to_bits(), b.arrival.to_bits(), "{name}: arrival drift");
+                assert_eq!(a.q_min.map(f64::to_bits), b.q_min.map(f64::to_bits));
+            }
+        });
+    }
+
+    #[test]
+    fn histogram_percentiles_bounded_by_observations() {
+        use crate::workload::LatencyHistogram;
+        check("histogram bounds", 50, |g| {
+            let mut h = LatencyHistogram::new(g.f64_in(0.1, 2.0), g.usize_in(4, 256));
+            let n = g.usize_in(1, 400);
+            let mut lo = f64::INFINITY;
+            let mut hi = f64::NEG_INFINITY;
+            for _ in 0..n {
+                let x = g.f64_in(0.0, 500.0);
+                lo = lo.min(x);
+                hi = hi.max(x);
+                h.observe(x);
+            }
+            for q in [0.0, 0.25, 0.5, 0.9, 0.99, 1.0] {
+                let p = h.percentile(q).unwrap();
+                assert!(p >= lo && p <= hi, "p{q} = {p} outside [{lo}, {hi}]");
+            }
+            assert!(h.p50() <= h.p90() && h.p90() <= h.p99());
+        });
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -1,0 +1,363 @@
+//! Streaming per-episode metrics: a fixed-bucket latency histogram with
+//! percentile queries, per-server busy-time utilization, and reload
+//! counters.
+//!
+//! The seed reported only per-episode *means*, which hide exactly the tail
+//! behaviour that QoS scheduling is about — a policy can improve the mean
+//! while its p99 explodes under a flash crowd. Everything here is O(1) per
+//! observation and mergeable across episodes, so `evaluate` can aggregate
+//! percentile-grade numbers without storing every sample.
+
+/// Fixed-width-bucket histogram over non-negative values.
+///
+/// `observe` clamps negatives to 0 and drops non-finite values; samples
+/// beyond the last bucket land in an overflow bucket whose percentile
+/// estimate is censored at the observed maximum. Percentiles interpolate
+/// linearly inside a bucket and are clamped to the observed [min, max],
+/// which makes the single-sample case exact.
+#[derive(Clone, Debug)]
+pub struct LatencyHistogram {
+    bucket_width: f64,
+    counts: Vec<u64>,
+    overflow: u64,
+    total: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl LatencyHistogram {
+    pub fn new(bucket_width: f64, num_buckets: usize) -> Self {
+        assert!(bucket_width > 0.0, "bucket width must be > 0");
+        assert!(num_buckets >= 1, "need at least one bucket");
+        LatencyHistogram {
+            bucket_width,
+            counts: vec![0; num_buckets],
+            overflow: 0,
+            total: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    /// Default for response latencies in seconds: 0.5 s resolution out to
+    /// 2048 s, past the longest episode the presets can produce.
+    pub fn default_latency() -> Self {
+        Self::new(0.5, 4096)
+    }
+
+    pub fn observe(&mut self, x: f64) {
+        if !x.is_finite() {
+            return;
+        }
+        let x = x.max(0.0);
+        self.total += 1;
+        self.sum += x;
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+        let idx = (x / self.bucket_width) as usize;
+        if idx < self.counts.len() {
+            self.counts[idx] += 1;
+        } else {
+            self.overflow += 1;
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.total == 0
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            f64::NAN
+        } else {
+            self.sum / self.total as f64
+        }
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Quantile estimate for q ∈ [0, 1]; `None` when no samples recorded.
+    pub fn percentile(&self, q: f64) -> Option<f64> {
+        assert!((0.0..=1.0).contains(&q), "quantile {q} outside [0,1]");
+        if self.total == 0 {
+            return None;
+        }
+        // Rank of the q-th sample, 1-based; q = 0 maps to the first.
+        let target = ((q * self.total as f64).ceil() as u64).clamp(1, self.total);
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            let prev = cum;
+            cum += c;
+            if cum >= target {
+                let lo = i as f64 * self.bucket_width;
+                let frac = (target - prev) as f64 / c as f64;
+                let est = lo + frac * self.bucket_width;
+                return Some(est.clamp(self.min, self.max));
+            }
+        }
+        // Rank fell into the overflow bucket: censor at the observed max.
+        Some(self.max)
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.percentile(0.5).unwrap_or(f64::NAN)
+    }
+
+    pub fn p90(&self) -> f64 {
+        self.percentile(0.9).unwrap_or(f64::NAN)
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.percentile(0.99).unwrap_or(f64::NAN)
+    }
+
+    /// Merge another histogram with identical bucket configuration.
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        assert_eq!(self.bucket_width, other.bucket_width, "bucket width mismatch");
+        assert_eq!(self.counts.len(), other.counts.len(), "bucket count mismatch");
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.overflow += other.overflow;
+        self.total += other.total;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+}
+
+/// Streaming collector fed by the simulator (`EdgeEnv`) and the serving
+/// host: response/waiting latency histograms, per-server busy time, and
+/// model-reload counters.
+#[derive(Clone, Debug)]
+pub struct MetricsCollector {
+    pub latency: LatencyHistogram,
+    pub waiting: LatencyHistogram,
+    busy: Vec<f64>,
+    sim_time: f64,
+    reloads: u64,
+    completed: u64,
+}
+
+impl MetricsCollector {
+    pub fn new(num_servers: usize) -> Self {
+        MetricsCollector {
+            latency: LatencyHistogram::default_latency(),
+            waiting: LatencyHistogram::default_latency(),
+            busy: vec![0.0; num_servers],
+            sim_time: 0.0,
+            reloads: 0,
+            completed: 0,
+        }
+    }
+
+    /// Record one completed (scheduled) task.
+    pub fn observe_task(&mut self, response: f64, waiting: f64, reloaded: bool) {
+        self.latency.observe(response);
+        self.waiting.observe(waiting);
+        self.completed += 1;
+        if reloaded {
+            self.reloads += 1;
+        }
+    }
+
+    /// Credit `dt` seconds of busy time to one server.
+    pub fn observe_busy(&mut self, server: usize, dt: f64) {
+        if let Some(b) = self.busy.get_mut(server) {
+            *b += dt;
+        }
+    }
+
+    /// Advance the utilization denominator.
+    pub fn advance_time(&mut self, dt: f64) {
+        self.sim_time += dt;
+    }
+
+    pub fn sim_time(&self) -> f64 {
+        self.sim_time
+    }
+
+    pub fn completed(&self) -> u64 {
+        self.completed
+    }
+
+    pub fn reloads(&self) -> u64 {
+        self.reloads
+    }
+
+    /// Per-server utilization in [0, 1] (0 before any time has passed).
+    pub fn utilization(&self) -> Vec<f64> {
+        if self.sim_time <= 0.0 {
+            return vec![0.0; self.busy.len()];
+        }
+        self.busy
+            .iter()
+            .map(|b| (b / self.sim_time).clamp(0.0, 1.0))
+            .collect()
+    }
+
+    pub fn avg_utilization(&self) -> f64 {
+        let u = self.utilization();
+        if u.is_empty() {
+            0.0
+        } else {
+            u.iter().sum::<f64>() / u.len() as f64
+        }
+    }
+
+    /// Merge a same-shape collector (cross-episode aggregation).
+    pub fn merge(&mut self, other: &MetricsCollector) {
+        assert_eq!(self.busy.len(), other.busy.len(), "server count mismatch");
+        self.latency.merge(&other.latency);
+        self.waiting.merge(&other.waiting);
+        for (a, b) in self.busy.iter_mut().zip(&other.busy) {
+            *a += b;
+        }
+        self.sim_time += other.sim_time;
+        self.reloads += other.reloads;
+        self.completed += other.completed;
+    }
+
+    /// One-line human summary (serving CLI and scenario sweep footer).
+    pub fn summary_line(&self) -> String {
+        format!(
+            "completed {}  p50 {:.1}s  p90 {:.1}s  p99 {:.1}s  util {:.3}  reloads {}",
+            self.completed,
+            self.latency.p50(),
+            self.latency.p90(),
+            self.latency.p99(),
+            self.avg_utilization(),
+            self.reloads
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_histogram_has_no_percentiles() {
+        let h = LatencyHistogram::new(1.0, 16);
+        assert!(h.percentile(0.5).is_none());
+        assert!(h.p50().is_nan());
+        assert!(h.mean().is_nan());
+        assert_eq!(h.count(), 0);
+    }
+
+    #[test]
+    fn single_sample_is_exact() {
+        let mut h = LatencyHistogram::new(0.5, 64);
+        h.observe(3.2);
+        for q in [0.0, 0.5, 0.9, 0.99, 1.0] {
+            assert_eq!(h.percentile(q), Some(3.2));
+        }
+        assert_eq!(h.mean(), 3.2);
+    }
+
+    #[test]
+    fn overflow_censors_at_max() {
+        let mut h = LatencyHistogram::new(1.0, 4); // covers [0, 4)
+        h.observe(1.5);
+        h.observe(100.0);
+        h.observe(250.0);
+        assert_eq!(h.percentile(1.0), Some(250.0));
+        assert_eq!(h.percentile(0.99), Some(250.0));
+        // p0 must still resolve inside the real buckets.
+        let p0 = h.percentile(0.0).unwrap();
+        assert!((1.0..=2.0).contains(&p0), "p0 {p0}");
+    }
+
+    #[test]
+    fn percentiles_are_monotone_and_bracketed() {
+        let mut h = LatencyHistogram::new(0.25, 1024);
+        // Two full sweeps over [0, 180): near-uniform coverage.
+        for i in 0..5_000 {
+            h.observe((i as f64 * 0.072) % 180.0);
+        }
+        let (p50, p90, p99) = (h.p50(), h.p90(), h.p99());
+        assert!(p50 <= p90 && p90 <= p99, "{p50} {p90} {p99}");
+        assert!(p50 >= h.min() && p99 <= h.max());
+        // Near-uniform over [0, 180): p50 ≈ 90, p90 ≈ 162.
+        assert!((p50 - 90.0).abs() < 2.0, "p50 {p50}");
+        assert!((p90 - 162.0).abs() < 2.0, "p90 {p90}");
+    }
+
+    #[test]
+    fn negative_and_nonfinite_inputs_are_sanitised() {
+        let mut h = LatencyHistogram::new(1.0, 8);
+        h.observe(-3.0); // clamped to 0
+        h.observe(f64::NAN); // dropped
+        h.observe(f64::INFINITY); // dropped
+        assert_eq!(h.count(), 1);
+        assert_eq!(h.percentile(0.5), Some(0.0));
+    }
+
+    #[test]
+    fn merge_matches_sequential_observation() {
+        let xs: Vec<f64> = (0..1000).map(|i| (i as f64 * 7.31) % 50.0).collect();
+        let mut all = LatencyHistogram::new(0.5, 128);
+        let mut a = LatencyHistogram::new(0.5, 128);
+        let mut b = LatencyHistogram::new(0.5, 128);
+        for (i, &x) in xs.iter().enumerate() {
+            all.observe(x);
+            if i % 2 == 0 {
+                a.observe(x);
+            } else {
+                b.observe(x);
+            }
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), all.count());
+        for q in [0.1, 0.5, 0.9, 0.99] {
+            assert_eq!(a.percentile(q), all.percentile(q));
+        }
+    }
+
+    #[test]
+    fn collector_utilization_and_reloads() {
+        let mut m = MetricsCollector::new(2);
+        m.advance_time(10.0);
+        m.observe_busy(0, 5.0);
+        m.observe_busy(1, 10.0);
+        m.observe_busy(7, 99.0); // out of range: ignored
+        let u = m.utilization();
+        assert_eq!(u, vec![0.5, 1.0]);
+        assert!((m.avg_utilization() - 0.75).abs() < 1e-12);
+        m.observe_task(12.0, 2.0, true);
+        m.observe_task(8.0, 0.0, false);
+        assert_eq!(m.completed(), 2);
+        assert_eq!(m.reloads(), 1);
+        assert!(m.summary_line().contains("completed 2"));
+    }
+
+    #[test]
+    fn collector_merge_adds_busy_time() {
+        let mut a = MetricsCollector::new(2);
+        a.advance_time(10.0);
+        a.observe_busy(0, 4.0);
+        let mut b = MetricsCollector::new(2);
+        b.advance_time(10.0);
+        b.observe_busy(0, 6.0);
+        b.observe_task(3.0, 1.0, true);
+        a.merge(&b);
+        assert_eq!(a.utilization()[0], 0.5);
+        assert_eq!(a.reloads(), 1);
+        assert_eq!(a.latency.count(), 1);
+    }
+}

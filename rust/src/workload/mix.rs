@@ -1,0 +1,242 @@
+//! Task-mix distributions: *what* arrives, as opposed to *when*.
+//!
+//! A [`TaskMix`] bundles the three per-task draws — collaboration
+//! requirement (patch count), AIGC model/service type, and optional
+//! per-task quality demand — behind one `sample` call whose draw order is
+//! fixed (patches, model, quality). The uniform mix reproduces the seed
+//! generator's draw sequence bit-exactly; skewed (Zipf) and time-varying
+//! (rotating hot model) mixes model real service popularity, where model
+//! reuse either pays off massively or keeps thrashing.
+
+use crate::config::EnvConfig;
+use crate::sim::task::ModelType;
+use crate::util::rng::Pcg64;
+
+/// Distribution over model/service types.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ModelMix {
+    /// Every model type equally likely (the paper's setting).
+    Uniform,
+    /// Zipf popularity: weight of model i ∝ 1/(i+1)^exponent. Realistic
+    /// for AIGC services, where a handful of checkpoints dominate.
+    Zipf { exponent: f64 },
+    /// A rotating "hot" model holds `hot_weight` of the traffic and hands
+    /// over to the next model every `period` seconds — stresses the
+    /// scheduler's reload behaviour under popularity drift.
+    Rotating { hot_weight: f64, period: f64 },
+}
+
+/// Distribution over per-task minimum-quality demands (q_min). Tasks with
+/// no demand fall back to the episode-wide `RewardConfig::q_min`.
+#[derive(Clone, Debug, PartialEq)]
+pub enum QualityDemand {
+    /// No per-task demand (seed behaviour).
+    Default,
+    /// q_min ~ U[lo, hi).
+    Uniform { lo: f64, hi: f64 },
+    /// A `strict_frac` fraction of tasks demands `strict_q`; the rest are
+    /// satisfied with `lax_q` (premium vs best-effort tenants).
+    TwoTier {
+        strict_frac: f64,
+        strict_q: f64,
+        lax_q: f64,
+    },
+}
+
+/// One sampled task profile.
+#[derive(Clone, Copy, Debug)]
+pub struct MixSample {
+    pub patches: usize,
+    pub model: ModelType,
+    pub q_min: Option<f64>,
+}
+
+/// Joint per-task distribution (patches × model × quality demand).
+#[derive(Clone, Debug)]
+pub struct TaskMix {
+    pub patch_choices: Vec<usize>,
+    pub patch_weights: Vec<f64>,
+    pub num_models: usize,
+    pub model_mix: ModelMix,
+    pub quality_demand: QualityDemand,
+    /// Precomputed unnormalised Zipf weights (empty unless `Zipf`).
+    zipf_weights: Vec<f64>,
+}
+
+impl TaskMix {
+    pub fn new(cfg: &EnvConfig, model_mix: ModelMix, quality_demand: QualityDemand) -> TaskMix {
+        let zipf_weights = match &model_mix {
+            ModelMix::Zipf { exponent } => (0..cfg.num_models)
+                .map(|i| 1.0 / ((i + 1) as f64).powf(*exponent))
+                .collect(),
+            _ => Vec::new(),
+        };
+        TaskMix {
+            patch_choices: cfg.patch_choices.clone(),
+            patch_weights: cfg.patch_weights.clone(),
+            num_models: cfg.num_models,
+            model_mix,
+            quality_demand,
+            zipf_weights,
+        }
+    }
+
+    /// The seed generator's mix: uniform models, no per-task demand.
+    pub fn uniform(cfg: &EnvConfig) -> TaskMix {
+        Self::new(cfg, ModelMix::Uniform, QualityDemand::Default)
+    }
+
+    /// Draw one task profile. Draw order is part of the replay contract:
+    /// patches, then model, then quality demand.
+    pub fn sample(&self, now: f64, rng: &mut Pcg64) -> MixSample {
+        let patches = self.patch_choices[rng.categorical(&self.patch_weights)];
+        let model = match &self.model_mix {
+            ModelMix::Uniform => ModelType(rng.next_below(self.num_models as u64) as u32),
+            ModelMix::Zipf { .. } => ModelType(rng.categorical(&self.zipf_weights) as u32),
+            ModelMix::Rotating { hot_weight, period } => {
+                if self.num_models <= 1 {
+                    ModelType(0)
+                } else {
+                    // Allocation-free single draw (this sits on the 1M-task
+                    // generation hot path): the first `hot_weight` of the
+                    // unit interval selects the hot model, the rest maps
+                    // uniformly onto the n-1 cold models.
+                    let n = self.num_models;
+                    let hot = ((now / period).floor() as u64 % n as u64) as usize;
+                    let u = rng.next_f64();
+                    let idx = if u < *hot_weight {
+                        hot
+                    } else {
+                        let v = (u - hot_weight) / (1.0 - hot_weight);
+                        let cold = ((v * (n - 1) as f64) as usize).min(n - 2);
+                        if cold >= hot {
+                            cold + 1
+                        } else {
+                            cold
+                        }
+                    };
+                    ModelType(idx as u32)
+                }
+            }
+        };
+        let q_min = match &self.quality_demand {
+            QualityDemand::Default => None,
+            QualityDemand::Uniform { lo, hi } => Some(rng.uniform(*lo, *hi)),
+            QualityDemand::TwoTier {
+                strict_frac,
+                strict_q,
+                lax_q,
+            } => Some(if rng.next_f64() < *strict_frac {
+                *strict_q
+            } else {
+                *lax_q
+            }),
+        };
+        MixSample {
+            patches,
+            model,
+            q_min,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> EnvConfig {
+        EnvConfig::default()
+    }
+
+    #[test]
+    fn uniform_mix_covers_support() {
+        let mix = TaskMix::uniform(&cfg());
+        let mut rng = Pcg64::seeded(1);
+        let mut seen_models = vec![false; mix.num_models];
+        for _ in 0..1000 {
+            let s = mix.sample(0.0, &mut rng);
+            assert!(mix.patch_choices.contains(&s.patches));
+            assert!((s.model.0 as usize) < mix.num_models);
+            assert!(s.q_min.is_none());
+            seen_models[s.model.0 as usize] = true;
+        }
+        assert!(seen_models.iter().all(|&b| b));
+    }
+
+    #[test]
+    fn zipf_mix_skews_to_model_zero() {
+        let mix = TaskMix::new(&cfg(), ModelMix::Zipf { exponent: 1.5 }, QualityDemand::Default);
+        let mut rng = Pcg64::seeded(2);
+        let mut counts = vec![0usize; mix.num_models];
+        for _ in 0..10_000 {
+            counts[mix.sample(0.0, &mut rng).model.0 as usize] += 1;
+        }
+        assert!(counts[0] > counts[1] && counts[1] > counts[2], "{counts:?}");
+        // Model 0 weight 1 vs 1/2^1.5 vs 1/3^1.5 → >50% of traffic.
+        assert!(counts[0] > 5_000, "{counts:?}");
+    }
+
+    #[test]
+    fn rotating_mix_moves_the_hot_model() {
+        let mix = TaskMix::new(
+            &cfg(),
+            ModelMix::Rotating {
+                hot_weight: 0.9,
+                period: 100.0,
+            },
+            QualityDemand::Default,
+        );
+        let mut rng = Pcg64::seeded(3);
+        let hot_at = |t: f64, rng: &mut Pcg64| {
+            let mut counts = vec![0usize; mix.num_models];
+            for _ in 0..2_000 {
+                counts[mix.sample(t, rng).model.0 as usize] += 1;
+            }
+            counts
+                .iter()
+                .enumerate()
+                .max_by_key(|&(_, &c)| c)
+                .map(|(i, _)| i)
+                .unwrap()
+        };
+        assert_eq!(hot_at(10.0, &mut rng), 0);
+        assert_eq!(hot_at(110.0, &mut rng), 1);
+        assert_eq!(hot_at(210.0, &mut rng), 2);
+        // Wraps around num_models (default 3).
+        assert_eq!(hot_at(310.0, &mut rng), 0);
+    }
+
+    #[test]
+    fn two_tier_demand_hits_fraction() {
+        let mix = TaskMix::new(
+            &cfg(),
+            ModelMix::Uniform,
+            QualityDemand::TwoTier {
+                strict_frac: 0.25,
+                strict_q: 0.26,
+                lax_q: 0.18,
+            },
+        );
+        let mut rng = Pcg64::seeded(4);
+        let n = 20_000;
+        let strict = (0..n)
+            .filter(|_| mix.sample(0.0, &mut rng).q_min == Some(0.26))
+            .count();
+        let frac = strict as f64 / n as f64;
+        assert!((frac - 0.25).abs() < 0.02, "strict frac {frac}");
+    }
+
+    #[test]
+    fn uniform_demand_stays_in_range() {
+        let mix = TaskMix::new(
+            &cfg(),
+            ModelMix::Uniform,
+            QualityDemand::Uniform { lo: 0.2, hi: 0.26 },
+        );
+        let mut rng = Pcg64::seeded(5);
+        for _ in 0..1_000 {
+            let q = mix.sample(0.0, &mut rng).q_min.unwrap();
+            assert!((0.2..0.26).contains(&q));
+        }
+    }
+}

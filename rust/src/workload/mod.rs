@@ -1,0 +1,637 @@
+//! Workload & scenario subsystem: the single source of task streams for
+//! the simulator and the serving emulation.
+//!
+//! The paper evaluates EAT under stationary Poisson arrivals with a
+//! uniform model mix — one point in a large space of operating regimes.
+//! This module opens the rest of that space:
+//!
+//! - [`arrival`] — an [`ArrivalProcess`] trait with five implementations:
+//!   stationary Poisson (the backwards-compatible default), constant-rate,
+//!   bursty on-off MMPP, sinusoidal diurnal, and flash-crowd spike.
+//! - [`mix`] — [`TaskMix`]: patch-count, model-popularity (uniform /
+//!   Zipf / rotating-hot), and per-task quality-demand distributions.
+//! - [`stream`] — [`TaskStream`] / [`TaskSource`]: lazy generation so
+//!   `EdgeEnv` can consume an arrival process directly.
+//! - [`trace`] — JSONL record/replay: any generated scenario can be saved
+//!   and re-run bit-exactly for common-random-number policy comparisons.
+//! - [`metrics`] — [`MetricsCollector`]: streaming latency histograms
+//!   (p50/p90/p99), per-server utilization, and reload counters.
+//!
+//! [`WorkloadConfig`] ties it together: a serialisable description of a
+//! scenario, with named presets (`WorkloadConfig::preset`) used by the
+//! `eat scenarios` sweep. `EnvConfig::workload = None` reproduces the
+//! seed generator draw-for-draw.
+
+pub mod arrival;
+pub mod metrics;
+pub mod mix;
+pub mod stream;
+pub mod trace;
+
+pub use arrival::ArrivalProcess;
+pub use metrics::{LatencyHistogram, MetricsCollector};
+pub use mix::{MixSample, ModelMix, QualityDemand, TaskMix};
+pub use stream::{TaskSource, TaskStream};
+
+use crate::config::EnvConfig;
+use crate::sim::task::{Task, Workload};
+use crate::util::json::Value;
+use crate::util::rng::Pcg64;
+
+/// Generate `n` tasks by driving an arrival process and a task mix.
+///
+/// Draw order per task — arrival draw(s), mix draws, prompt id — is the
+/// replay contract shared with [`TaskStream`]; with a Poisson process and
+/// uniform mix it is bit-identical to the seed's `Workload::generate`.
+pub fn generate(
+    arrival: &mut dyn ArrivalProcess,
+    mix: &TaskMix,
+    n: usize,
+    rng: &mut Pcg64,
+) -> Workload {
+    let mut tasks = Vec::with_capacity(n);
+    let mut t = 0.0;
+    for id in 0..n as u64 {
+        t = arrival.next_after(t, rng);
+        let s = mix.sample(t, rng);
+        tasks.push(Task {
+            id,
+            prompt_id: rng.next_u64(),
+            patches: s.patches,
+            model: s.model,
+            arrival: t,
+            q_min: s.q_min,
+        });
+    }
+    Workload { tasks }
+}
+
+/// Build the arrival process + mix for an env config: its scenario when
+/// one is set, else the legacy stationary Poisson + uniform mix.
+pub fn build_for_env(cfg: &EnvConfig) -> (Box<dyn ArrivalProcess>, TaskMix) {
+    match &cfg.workload {
+        Some(w) => w.build(cfg),
+        None => (
+            Box::new(arrival::Poisson {
+                rate: cfg.arrival_rate,
+            }),
+            TaskMix::uniform(cfg),
+        ),
+    }
+}
+
+/// Serialisable description of an arrival process.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ArrivalConfig {
+    Poisson {
+        rate: f64,
+    },
+    Constant {
+        rate: f64,
+    },
+    Mmpp {
+        rate_on: f64,
+        rate_off: f64,
+        mean_on: f64,
+        mean_off: f64,
+    },
+    Diurnal {
+        base_rate: f64,
+        amplitude: f64,
+        period: f64,
+    },
+    FlashCrowd {
+        base_rate: f64,
+        spike_rate: f64,
+        spike_start: f64,
+        spike_len: f64,
+    },
+}
+
+impl ArrivalConfig {
+    pub fn build(&self) -> Box<dyn ArrivalProcess> {
+        match *self {
+            ArrivalConfig::Poisson { rate } => Box::new(arrival::Poisson { rate }),
+            ArrivalConfig::Constant { rate } => Box::new(arrival::ConstantRate { rate }),
+            ArrivalConfig::Mmpp {
+                rate_on,
+                rate_off,
+                mean_on,
+                mean_off,
+            } => Box::new(arrival::MmppOnOff::new(rate_on, rate_off, mean_on, mean_off)),
+            ArrivalConfig::Diurnal {
+                base_rate,
+                amplitude,
+                period,
+            } => Box::new(arrival::Diurnal {
+                base_rate,
+                amplitude,
+                period,
+            }),
+            ArrivalConfig::FlashCrowd {
+                base_rate,
+                spike_rate,
+                spike_start,
+                spike_len,
+            } => Box::new(arrival::FlashCrowd {
+                base_rate,
+                spike_rate,
+                spike_start,
+                spike_len,
+            }),
+        }
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        let pos = |name: &str, x: f64| -> anyhow::Result<()> {
+            anyhow::ensure!(x > 0.0 && x.is_finite(), "{name} must be > 0, got {x}");
+            Ok(())
+        };
+        match *self {
+            ArrivalConfig::Poisson { rate } | ArrivalConfig::Constant { rate } => {
+                pos("rate", rate)
+            }
+            ArrivalConfig::Mmpp {
+                rate_on,
+                rate_off,
+                mean_on,
+                mean_off,
+            } => {
+                pos("rate_on", rate_on)?;
+                pos("rate_off", rate_off)?;
+                pos("mean_on", mean_on)?;
+                pos("mean_off", mean_off)
+            }
+            ArrivalConfig::Diurnal {
+                base_rate,
+                amplitude,
+                period,
+            } => {
+                pos("base_rate", base_rate)?;
+                pos("period", period)?;
+                anyhow::ensure!(
+                    (0.0..=1.0).contains(&amplitude),
+                    "amplitude must be in [0,1], got {amplitude}"
+                );
+                Ok(())
+            }
+            ArrivalConfig::FlashCrowd {
+                base_rate,
+                spike_rate,
+                spike_start,
+                spike_len,
+            } => {
+                pos("base_rate", base_rate)?;
+                pos("spike_rate", spike_rate)?;
+                pos("spike_len", spike_len)?;
+                anyhow::ensure!(
+                    spike_start >= 0.0 && spike_start.is_finite(),
+                    "spike_start must be >= 0"
+                );
+                Ok(())
+            }
+        }
+    }
+
+    pub fn to_json(&self) -> Value {
+        let mut v = Value::obj();
+        match *self {
+            ArrivalConfig::Poisson { rate } => {
+                v.set("kind", "poisson").set("rate", rate);
+            }
+            ArrivalConfig::Constant { rate } => {
+                v.set("kind", "constant").set("rate", rate);
+            }
+            ArrivalConfig::Mmpp {
+                rate_on,
+                rate_off,
+                mean_on,
+                mean_off,
+            } => {
+                v.set("kind", "mmpp")
+                    .set("rate_on", rate_on)
+                    .set("rate_off", rate_off)
+                    .set("mean_on", mean_on)
+                    .set("mean_off", mean_off);
+            }
+            ArrivalConfig::Diurnal {
+                base_rate,
+                amplitude,
+                period,
+            } => {
+                v.set("kind", "diurnal")
+                    .set("base_rate", base_rate)
+                    .set("amplitude", amplitude)
+                    .set("period", period);
+            }
+            ArrivalConfig::FlashCrowd {
+                base_rate,
+                spike_rate,
+                spike_start,
+                spike_len,
+            } => {
+                v.set("kind", "flash_crowd")
+                    .set("base_rate", base_rate)
+                    .set("spike_rate", spike_rate)
+                    .set("spike_start", spike_start)
+                    .set("spike_len", spike_len);
+            }
+        }
+        v
+    }
+
+    pub fn from_json(v: &Value) -> anyhow::Result<ArrivalConfig> {
+        let num = |key: &str| -> anyhow::Result<f64> {
+            v.req(key)?
+                .as_f64()
+                .ok_or_else(|| anyhow::anyhow!("arrival field '{key}' is not a number"))
+        };
+        let kind = v
+            .req("kind")?
+            .as_str()
+            .ok_or_else(|| anyhow::anyhow!("arrival 'kind' must be a string"))?;
+        let cfg = match kind {
+            "poisson" => ArrivalConfig::Poisson { rate: num("rate")? },
+            "constant" => ArrivalConfig::Constant { rate: num("rate")? },
+            "mmpp" => ArrivalConfig::Mmpp {
+                rate_on: num("rate_on")?,
+                rate_off: num("rate_off")?,
+                mean_on: num("mean_on")?,
+                mean_off: num("mean_off")?,
+            },
+            "diurnal" => ArrivalConfig::Diurnal {
+                base_rate: num("base_rate")?,
+                amplitude: num("amplitude")?,
+                period: num("period")?,
+            },
+            "flash_crowd" => ArrivalConfig::FlashCrowd {
+                base_rate: num("base_rate")?,
+                spike_rate: num("spike_rate")?,
+                spike_start: num("spike_start")?,
+                spike_len: num("spike_len")?,
+            },
+            other => anyhow::bail!("unknown arrival kind '{other}'"),
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+fn model_mix_to_json(m: &ModelMix) -> Value {
+    let mut v = Value::obj();
+    match m {
+        ModelMix::Uniform => {
+            v.set("kind", "uniform");
+        }
+        ModelMix::Zipf { exponent } => {
+            v.set("kind", "zipf").set("exponent", *exponent);
+        }
+        ModelMix::Rotating { hot_weight, period } => {
+            v.set("kind", "rotating")
+                .set("hot_weight", *hot_weight)
+                .set("period", *period);
+        }
+    }
+    v
+}
+
+fn model_mix_from_json(v: &Value) -> anyhow::Result<ModelMix> {
+    let kind = v
+        .req("kind")?
+        .as_str()
+        .ok_or_else(|| anyhow::anyhow!("model_mix 'kind' must be a string"))?;
+    Ok(match kind {
+        "uniform" => ModelMix::Uniform,
+        "zipf" => ModelMix::Zipf {
+            exponent: v
+                .req("exponent")?
+                .as_f64()
+                .ok_or_else(|| anyhow::anyhow!("zipf exponent must be a number"))?,
+        },
+        "rotating" => ModelMix::Rotating {
+            hot_weight: v
+                .req("hot_weight")?
+                .as_f64()
+                .ok_or_else(|| anyhow::anyhow!("hot_weight must be a number"))?,
+            period: v
+                .req("period")?
+                .as_f64()
+                .ok_or_else(|| anyhow::anyhow!("period must be a number"))?,
+        },
+        other => anyhow::bail!("unknown model mix '{other}'"),
+    })
+}
+
+fn quality_demand_to_json(q: &QualityDemand) -> Value {
+    let mut v = Value::obj();
+    match q {
+        QualityDemand::Default => {
+            v.set("kind", "default");
+        }
+        QualityDemand::Uniform { lo, hi } => {
+            v.set("kind", "uniform").set("lo", *lo).set("hi", *hi);
+        }
+        QualityDemand::TwoTier {
+            strict_frac,
+            strict_q,
+            lax_q,
+        } => {
+            v.set("kind", "two_tier")
+                .set("strict_frac", *strict_frac)
+                .set("strict_q", *strict_q)
+                .set("lax_q", *lax_q);
+        }
+    }
+    v
+}
+
+fn quality_demand_from_json(v: &Value) -> anyhow::Result<QualityDemand> {
+    let num = |key: &str| -> anyhow::Result<f64> {
+        v.req(key)?
+            .as_f64()
+            .ok_or_else(|| anyhow::anyhow!("quality_demand field '{key}' is not a number"))
+    };
+    let kind = v
+        .req("kind")?
+        .as_str()
+        .ok_or_else(|| anyhow::anyhow!("quality_demand 'kind' must be a string"))?;
+    Ok(match kind {
+        "default" => QualityDemand::Default,
+        "uniform" => QualityDemand::Uniform {
+            lo: num("lo")?,
+            hi: num("hi")?,
+        },
+        "two_tier" => QualityDemand::TwoTier {
+            strict_frac: num("strict_frac")?,
+            strict_q: num("strict_q")?,
+            lax_q: num("lax_q")?,
+        },
+        other => anyhow::bail!("unknown quality demand '{other}'"),
+    })
+}
+
+/// A complete scenario description: when tasks arrive and what they are.
+/// Lives in `EnvConfig::workload`; `None` there means the legacy
+/// stationary Poisson + uniform mix at `EnvConfig::arrival_rate`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WorkloadConfig {
+    pub arrival: ArrivalConfig,
+    pub model_mix: ModelMix,
+    pub quality_demand: QualityDemand,
+}
+
+/// Scenario-family preset names accepted by [`WorkloadConfig::preset`].
+pub const SCENARIO_NAMES: [&str; 7] = [
+    "poisson",
+    "constant",
+    "bursty",
+    "diurnal",
+    "flash",
+    "zipf-hot",
+    "rotating",
+];
+
+impl WorkloadConfig {
+    /// Stationary Poisson with a uniform mix — the paper's regime as an
+    /// explicit scenario.
+    pub fn poisson(rate: f64) -> WorkloadConfig {
+        WorkloadConfig {
+            arrival: ArrivalConfig::Poisson { rate },
+            model_mix: ModelMix::Uniform,
+            quality_demand: QualityDemand::Default,
+        }
+    }
+
+    pub fn scenario_names() -> &'static [&'static str] {
+        &SCENARIO_NAMES
+    }
+
+    /// Named scenario family, parameterised by the base arrival rate λ so
+    /// presets line up with the paper's per-cluster rate columns.
+    pub fn preset(name: &str, base_rate: f64) -> anyhow::Result<WorkloadConfig> {
+        let uniform = (ModelMix::Uniform, QualityDemand::Default);
+        let (arrival, (model_mix, quality_demand)) = match name {
+            "poisson" => (ArrivalConfig::Poisson { rate: base_rate }, uniform),
+            "constant" => (ArrivalConfig::Constant { rate: base_rate }, uniform),
+            // ~20% duty cycle bursts at 4λ with quiet λ/4 valleys; the
+            // time-averaged rate stays near λ.
+            "bursty" => (
+                ArrivalConfig::Mmpp {
+                    rate_on: base_rate * 4.0,
+                    rate_off: base_rate * 0.25,
+                    mean_on: 60.0,
+                    mean_off: 180.0,
+                },
+                uniform,
+            ),
+            // One full day compressed into 600 s of simulated time.
+            "diurnal" => (
+                ArrivalConfig::Diurnal {
+                    base_rate,
+                    amplitude: 0.8,
+                    period: 600.0,
+                },
+                uniform,
+            ),
+            // 6x overload spike in the middle of the episode.
+            "flash" => (
+                ArrivalConfig::FlashCrowd {
+                    base_rate,
+                    spike_rate: base_rate * 6.0,
+                    spike_start: 200.0,
+                    spike_len: 120.0,
+                },
+                uniform,
+            ),
+            // Stationary arrivals, heavily skewed model popularity:
+            // maximises the payoff of reuse-aware placement.
+            "zipf-hot" => (
+                ArrivalConfig::Poisson { rate: base_rate },
+                (
+                    ModelMix::Zipf { exponent: 1.1 },
+                    QualityDemand::Default,
+                ),
+            ),
+            // Popularity drift + premium/best-effort quality tiers.
+            "rotating" => (
+                ArrivalConfig::Diurnal {
+                    base_rate,
+                    amplitude: 0.5,
+                    period: 600.0,
+                },
+                (
+                    ModelMix::Rotating {
+                        hot_weight: 0.7,
+                        period: 300.0,
+                    },
+                    QualityDemand::TwoTier {
+                        strict_frac: 0.3,
+                        strict_q: 0.26,
+                        lax_q: 0.2,
+                    },
+                ),
+            ),
+            other => anyhow::bail!(
+                "unknown scenario '{other}' (known: {})",
+                SCENARIO_NAMES.join(", ")
+            ),
+        };
+        let cfg = WorkloadConfig {
+            arrival,
+            model_mix,
+            quality_demand,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Instantiate the arrival process and task mix for an env config.
+    pub fn build(&self, cfg: &EnvConfig) -> (Box<dyn ArrivalProcess>, TaskMix) {
+        (
+            self.arrival.build(),
+            TaskMix::new(cfg, self.model_mix.clone(), self.quality_demand.clone()),
+        )
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        self.arrival.validate()?;
+        if let ModelMix::Zipf { exponent } = self.model_mix {
+            anyhow::ensure!(exponent > 0.0, "zipf exponent must be > 0");
+        }
+        if let ModelMix::Rotating { hot_weight, period } = self.model_mix {
+            anyhow::ensure!(
+                (0.0..=1.0).contains(&hot_weight),
+                "hot_weight must be in [0,1]"
+            );
+            anyhow::ensure!(period > 0.0, "rotation period must be > 0");
+        }
+        // Quality floors must be positive and finite: sampled quality is
+        // clamped to [0, q_cap], so a non-positive floor can never trip
+        // and would silently disable QoS accounting.
+        if let QualityDemand::Uniform { lo, hi } = self.quality_demand {
+            anyhow::ensure!(
+                lo > 0.0 && hi.is_finite() && lo < hi,
+                "quality demand must satisfy 0 < lo < hi (finite), got [{lo}, {hi})"
+            );
+        }
+        if let QualityDemand::TwoTier {
+            strict_frac,
+            strict_q,
+            lax_q,
+        } = self.quality_demand
+        {
+            anyhow::ensure!(
+                (0.0..=1.0).contains(&strict_frac),
+                "strict_frac must be in [0,1]"
+            );
+            anyhow::ensure!(
+                strict_q > 0.0 && strict_q.is_finite() && lax_q > 0.0 && lax_q.is_finite(),
+                "quality tiers must be positive and finite, got strict {strict_q} lax {lax_q}"
+            );
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Value {
+        let mut v = Value::obj();
+        v.set("arrival", self.arrival.to_json())
+            .set("model_mix", model_mix_to_json(&self.model_mix))
+            .set("quality_demand", quality_demand_to_json(&self.quality_demand));
+        v
+    }
+
+    pub fn from_json(v: &Value) -> anyhow::Result<WorkloadConfig> {
+        let cfg = WorkloadConfig {
+            arrival: ArrivalConfig::from_json(v.req("arrival")?)?,
+            model_mix: match v.get("model_mix") {
+                Some(m) => model_mix_from_json(m)?,
+                None => ModelMix::Uniform,
+            },
+            quality_demand: match v.get("quality_demand") {
+                Some(q) => quality_demand_from_json(q)?,
+                None => QualityDemand::Default,
+            },
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_preset_builds_and_validates() {
+        for name in WorkloadConfig::scenario_names() {
+            let w = WorkloadConfig::preset(name, 0.1).unwrap();
+            w.validate().unwrap();
+            let cfg = EnvConfig::default();
+            let (mut ap, mix) = w.build(&cfg);
+            let wl = generate(ap.as_mut(), &mix, 100, &mut Pcg64::seeded(1));
+            assert_eq!(wl.len(), 100);
+            assert!(wl.is_sorted(), "{name} produced unsorted arrivals");
+        }
+        assert!(WorkloadConfig::preset("no-such-scenario", 0.1).is_err());
+    }
+
+    #[test]
+    fn legacy_generate_path_is_unchanged() {
+        // build_for_env with workload=None must replay the seed generator's
+        // exact draw sequence (Poisson + uniform mix).
+        let cfg = EnvConfig::default();
+        let (mut ap, mix) = build_for_env(&cfg);
+        let a = generate(ap.as_mut(), &mix, cfg.tasks_per_episode, &mut Pcg64::seeded(5));
+        let b = Workload::generate(&cfg, &mut Pcg64::seeded(5));
+        for (x, y) in a.tasks.iter().zip(&b.tasks) {
+            assert_eq!(x.arrival.to_bits(), y.arrival.to_bits());
+            assert_eq!(x.prompt_id, y.prompt_id);
+            assert_eq!(x.patches, y.patches);
+            assert_eq!(x.model, y.model);
+        }
+    }
+
+    #[test]
+    fn workload_config_json_roundtrip() {
+        for name in WorkloadConfig::scenario_names() {
+            let w = WorkloadConfig::preset(name, 0.07).unwrap();
+            let back = WorkloadConfig::from_json(&w.to_json()).unwrap();
+            assert_eq!(back, w, "roundtrip failed for {name}");
+        }
+    }
+
+    #[test]
+    fn json_rejects_bad_configs() {
+        let mut v = Value::obj();
+        let mut a = Value::obj();
+        a.set("kind", "poisson").set("rate", -1.0);
+        v.set("arrival", a);
+        assert!(WorkloadConfig::from_json(&v).is_err());
+        let mut v = Value::obj();
+        let mut a = Value::obj();
+        a.set("kind", "martian");
+        v.set("arrival", a);
+        assert!(WorkloadConfig::from_json(&v).is_err());
+        // Non-positive quality floors can never trip (quality >= 0) and
+        // must be rejected rather than silently disabling QoS accounting.
+        let mut w = WorkloadConfig::poisson(0.1);
+        w.quality_demand = QualityDemand::Uniform { lo: -1.0, hi: -0.5 };
+        assert!(w.validate().is_err());
+        w.quality_demand = QualityDemand::TwoTier {
+            strict_frac: 0.5,
+            strict_q: 0.0,
+            lax_q: 0.2,
+        };
+        assert!(w.validate().is_err());
+    }
+
+    #[test]
+    fn missing_mix_fields_default() {
+        let w = WorkloadConfig::poisson(0.1);
+        let mut v = Value::obj();
+        v.set("arrival", w.arrival.to_json());
+        let back = WorkloadConfig::from_json(&v).unwrap();
+        assert_eq!(back.model_mix, ModelMix::Uniform);
+        assert_eq!(back.quality_demand, QualityDemand::Default);
+    }
+}

@@ -1,0 +1,227 @@
+//! Lazy task streams: `EdgeEnv` can consume an [`ArrivalProcess`] directly
+//! instead of a pre-materialised `Workload`, generating each task on
+//! demand as simulated time reaches it. The draw order per task (arrival,
+//! mix, prompt id) matches `workload::generate`, so a streamed episode and
+//! a materialised one built from the same seeded RNG are identical.
+
+use super::arrival::ArrivalProcess;
+use super::mix::TaskMix;
+use crate::sim::task::{Task, Workload};
+use crate::util::rng::Pcg64;
+
+/// On-demand task generator with a one-task lookahead.
+#[derive(Clone)]
+pub struct TaskStream {
+    arrival: Box<dyn ArrivalProcess>,
+    mix: TaskMix,
+    rng: Pcg64,
+    limit: usize,
+    produced: usize,
+    clock: f64,
+    lookahead: Option<Task>,
+}
+
+impl TaskStream {
+    pub fn new(
+        arrival: Box<dyn ArrivalProcess>,
+        mix: TaskMix,
+        limit: usize,
+        rng: Pcg64,
+    ) -> TaskStream {
+        TaskStream {
+            arrival,
+            mix,
+            rng,
+            limit,
+            produced: 0,
+            clock: 0.0,
+            lookahead: None,
+        }
+    }
+
+    /// Total number of tasks this stream will ever emit.
+    pub fn limit(&self) -> usize {
+        self.limit
+    }
+
+    /// Tasks generated so far (including a pending lookahead).
+    pub fn produced(&self) -> usize {
+        self.produced
+    }
+
+    fn refill(&mut self) {
+        if self.lookahead.is_some() || self.produced >= self.limit {
+            return;
+        }
+        let t = self.arrival.next_after(self.clock, &mut self.rng);
+        self.clock = t;
+        let s = self.mix.sample(t, &mut self.rng);
+        let task = Task {
+            id: self.produced as u64,
+            prompt_id: self.rng.next_u64(),
+            patches: s.patches,
+            model: s.model,
+            arrival: t,
+            q_min: s.q_min,
+        };
+        self.produced += 1;
+        self.lookahead = Some(task);
+    }
+
+    /// Arrival time of the next task, generating it if necessary.
+    pub fn next_arrival(&mut self) -> Option<f64> {
+        self.refill();
+        self.lookahead.as_ref().map(|t| t.arrival)
+    }
+
+    /// Pop the next task iff it has arrived by `now`.
+    pub fn pop_if_arrived(&mut self, now: f64) -> Option<Task> {
+        self.refill();
+        if self.lookahead.as_ref().map_or(false, |t| t.arrival <= now) {
+            self.lookahead.take()
+        } else {
+            None
+        }
+    }
+}
+
+/// Where an environment's tasks come from: a pre-materialised workload
+/// (common-random-number evaluation, trace replay) or a lazy stream.
+#[derive(Clone)]
+pub enum TaskSource {
+    Fixed { workload: Workload, cursor: usize },
+    Stream(TaskStream),
+}
+
+impl TaskSource {
+    pub fn fixed(workload: Workload) -> TaskSource {
+        TaskSource::Fixed {
+            workload,
+            cursor: 0,
+        }
+    }
+
+    pub fn stream(stream: TaskStream) -> TaskSource {
+        TaskSource::Stream(stream)
+    }
+
+    /// Total tasks this source will deliver over the episode.
+    pub fn total(&self) -> usize {
+        match self {
+            TaskSource::Fixed { workload, .. } => workload.len(),
+            TaskSource::Stream(s) => s.limit(),
+        }
+    }
+
+    /// Pop the next task iff it has arrived by `now`. Tasks come out in
+    /// arrival order; callers loop until `None`.
+    pub fn pop_if_arrived(&mut self, now: f64) -> Option<Task> {
+        match self {
+            TaskSource::Fixed { workload, cursor } => {
+                let task = workload.tasks.get(*cursor)?;
+                if task.arrival <= now {
+                    *cursor += 1;
+                    Some(task.clone())
+                } else {
+                    None
+                }
+            }
+            TaskSource::Stream(s) => s.pop_if_arrived(now),
+        }
+    }
+
+    /// Arrival times of the whole workload for a fixed source. A stream
+    /// retains no history (laziness is its point) and cannot report
+    /// future arrivals without consuming randomness, so it yields an
+    /// empty list.
+    pub fn known_arrivals(&self) -> Vec<f64> {
+        match self {
+            TaskSource::Fixed { workload, .. } => {
+                workload.tasks.iter().map(|t| t.arrival).collect()
+            }
+            TaskSource::Stream(_) => Vec::new(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::EnvConfig;
+    use crate::workload::{self, build_for_env};
+
+    fn cfg() -> EnvConfig {
+        let mut c = EnvConfig::default();
+        c.tasks_per_episode = 24;
+        c
+    }
+
+    #[test]
+    fn stream_matches_materialised_generation() {
+        let cfg = cfg();
+        let (mut ap, mix) = build_for_env(&cfg);
+        let w = workload::generate(ap.as_mut(), &mix, cfg.tasks_per_episode, &mut Pcg64::seeded(5));
+        let (ap2, mix2) = build_for_env(&cfg);
+        let mut stream = TaskStream::new(ap2, mix2, cfg.tasks_per_episode, Pcg64::seeded(5));
+        let mut streamed = Vec::new();
+        while let Some(t) = stream.pop_if_arrived(f64::INFINITY) {
+            streamed.push(t);
+        }
+        assert_eq!(streamed.len(), w.len());
+        for (a, b) in streamed.iter().zip(&w.tasks) {
+            assert_eq!(a.arrival.to_bits(), b.arrival.to_bits());
+            assert_eq!(a.prompt_id, b.prompt_id);
+            assert_eq!(a.patches, b.patches);
+            assert_eq!(a.model, b.model);
+        }
+    }
+
+    #[test]
+    fn stream_respects_arrival_gating() {
+        let cfg = cfg();
+        let (ap, mix) = build_for_env(&cfg);
+        let mut stream = TaskStream::new(ap, mix, cfg.tasks_per_episode, Pcg64::seeded(6));
+        let first = stream.next_arrival().unwrap();
+        assert!(stream.pop_if_arrived(first - 1e-9).is_none());
+        assert!(stream.pop_if_arrived(first).is_some());
+    }
+
+    #[test]
+    fn stream_stops_at_limit() {
+        let cfg = cfg();
+        let (ap, mix) = build_for_env(&cfg);
+        let mut stream = TaskStream::new(ap, mix, 5, Pcg64::seeded(7));
+        let mut n = 0;
+        while stream.pop_if_arrived(f64::INFINITY).is_some() {
+            n += 1;
+        }
+        assert_eq!(n, 5);
+        assert!(stream.next_arrival().is_none());
+        assert_eq!(stream.produced(), 5);
+    }
+
+    #[test]
+    fn fixed_source_walks_cursor() {
+        let w = Workload::fixed(&[(0.0, 2, 0), (10.0, 2, 0), (20.0, 4, 1)]);
+        let mut src = TaskSource::fixed(w);
+        assert_eq!(src.total(), 3);
+        assert_eq!(src.pop_if_arrived(0.0).unwrap().id, 0);
+        assert!(src.pop_if_arrived(5.0).is_none());
+        assert_eq!(src.pop_if_arrived(25.0).unwrap().id, 1);
+        assert_eq!(src.pop_if_arrived(25.0).unwrap().id, 2);
+        assert!(src.pop_if_arrived(1e9).is_none());
+        assert_eq!(src.known_arrivals(), vec![0.0, 10.0, 20.0]);
+    }
+
+    #[test]
+    fn cloned_stream_diverges_independently() {
+        let cfg = cfg();
+        let (ap, mix) = build_for_env(&cfg);
+        let mut a = TaskStream::new(ap, mix, cfg.tasks_per_episode, Pcg64::seeded(8));
+        let mut b = a.clone();
+        let ta = a.pop_if_arrived(f64::INFINITY).unwrap();
+        let tb = b.pop_if_arrived(f64::INFINITY).unwrap();
+        assert_eq!(ta.arrival.to_bits(), tb.arrival.to_bits());
+        assert_eq!(ta.prompt_id, tb.prompt_id);
+    }
+}

@@ -1,0 +1,233 @@
+//! JSONL workload traces: record any generated scenario to disk and replay
+//! it bit-exactly later.
+//!
+//! Format: one JSON object per line. The first line is a header
+//! (`{"format":"eat-trace","version":1,"tasks":N}`); each following line
+//! is one task. `prompt_id` is a full 64-bit value and JSON numbers are
+//! f64, so it is serialised as a decimal *string* — everything else
+//! round-trips exactly through the shortest-roundtrip float writer in
+//! `util::json`. Replaying a recorded trace through `EdgeEnv` with the
+//! same policy and env seed reproduces the episode's numbers bit-for-bit
+//! (common-random-number policy comparisons across machines and PRs).
+
+use crate::sim::task::{ModelType, Task, Workload};
+use crate::util::json::{self, Value};
+
+pub const FORMAT: &str = "eat-trace";
+pub const VERSION: u64 = 1;
+
+fn task_to_json(t: &Task) -> Value {
+    let mut v = Value::obj();
+    v.set("id", t.id)
+        .set("prompt_id", format!("{}", t.prompt_id))
+        .set("patches", t.patches)
+        .set("model", t.model.0)
+        .set("arrival", t.arrival);
+    if let Some(q) = t.q_min {
+        v.set("q_min", q);
+    }
+    v
+}
+
+fn task_from_json(v: &Value) -> anyhow::Result<Task> {
+    let num = |key: &str| -> anyhow::Result<f64> {
+        v.req(key)?
+            .as_f64()
+            .ok_or_else(|| anyhow::anyhow!("trace field '{key}' is not a number"))
+    };
+    let prompt_id: u64 = v
+        .req("prompt_id")?
+        .as_str()
+        .ok_or_else(|| anyhow::anyhow!("trace field 'prompt_id' must be a string"))?
+        .parse()
+        .map_err(|e| anyhow::anyhow!("bad prompt_id: {e}"))?;
+    let arrival = num("arrival")?;
+    anyhow::ensure!(
+        arrival.is_finite() && arrival >= 0.0,
+        "trace arrival {arrival} must be finite and non-negative"
+    );
+    // q_min is optional, but when present it must be a positive finite
+    // number — silently dropping or accepting a floor that can never trip
+    // (quality is clamped to [0, q_cap]) would replay with different QoS
+    // accounting than the recording run.
+    let q_min = match v.get("q_min") {
+        None => None,
+        Some(q) => {
+            let q = q
+                .as_f64()
+                .ok_or_else(|| anyhow::anyhow!("trace field 'q_min' is not a number"))?;
+            anyhow::ensure!(
+                q.is_finite() && q > 0.0,
+                "trace q_min {q} must be positive and finite"
+            );
+            Some(q)
+        }
+    };
+    Ok(Task {
+        id: num("id")? as u64,
+        prompt_id,
+        patches: num("patches")? as usize,
+        model: ModelType(num("model")? as u32),
+        arrival,
+        q_min,
+    })
+}
+
+/// Serialise a workload as a JSONL trace string.
+pub fn to_jsonl(w: &Workload) -> String {
+    let mut out = String::new();
+    let mut header = Value::obj();
+    header
+        .set("format", FORMAT)
+        .set("version", VERSION)
+        .set("tasks", w.len());
+    out.push_str(&header.to_json());
+    out.push('\n');
+    for t in &w.tasks {
+        out.push_str(&task_to_json(t).to_json());
+        out.push('\n');
+    }
+    out
+}
+
+/// Parse a JSONL trace. The header line is validated when present; task
+/// lines are recognised by their `arrival` field. Out-of-order arrivals
+/// are normalised by a stable sort (see `Workload::from_tasks`).
+pub fn from_jsonl(text: &str) -> anyhow::Result<Workload> {
+    let mut tasks = Vec::new();
+    let mut declared: Option<usize> = None;
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let v = json::parse(line)
+            .map_err(|e| anyhow::anyhow!("trace line {}: {e}", lineno + 1))?;
+        if let Some(fmt) = v.get("format").and_then(Value::as_str) {
+            anyhow::ensure!(fmt == FORMAT, "unknown trace format '{fmt}'");
+            if let Some(ver) = v.get("version").and_then(Value::as_f64) {
+                // Float compare: truncating would accept e.g. v1.5 as v1.
+                anyhow::ensure!(
+                    ver <= VERSION as f64,
+                    "trace version {ver} is newer than supported version {VERSION}"
+                );
+            }
+            if let Some(n) = v.get("tasks").and_then(Value::as_usize) {
+                declared = Some(n);
+            }
+            continue;
+        }
+        tasks.push(
+            task_from_json(&v).map_err(|e| anyhow::anyhow!("trace line {}: {e}", lineno + 1))?,
+        );
+    }
+    if let Some(n) = declared {
+        anyhow::ensure!(
+            n == tasks.len(),
+            "trace header declares {n} tasks, found {}",
+            tasks.len()
+        );
+    }
+    Ok(Workload::from_tasks(tasks))
+}
+
+/// Write a workload trace to a file.
+pub fn write_file(w: &Workload, path: &str) -> anyhow::Result<()> {
+    std::fs::write(path, to_jsonl(w))?;
+    Ok(())
+}
+
+/// Read a workload trace from a file.
+pub fn read_file(path: &str) -> anyhow::Result<Workload> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("read trace '{path}': {e}"))?;
+    from_jsonl(&text)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::EnvConfig;
+    use crate::util::rng::Pcg64;
+    use crate::workload::WorkloadConfig;
+
+    fn assert_bit_exact(a: &Workload, b: &Workload) {
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.tasks.iter().zip(&b.tasks) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.prompt_id, y.prompt_id);
+            assert_eq!(x.patches, y.patches);
+            assert_eq!(x.model, y.model);
+            assert_eq!(x.arrival.to_bits(), y.arrival.to_bits());
+            assert_eq!(x.q_min.map(f64::to_bits), y.q_min.map(f64::to_bits));
+        }
+    }
+
+    #[test]
+    fn roundtrip_is_bit_exact_for_every_scenario() {
+        let mut cfg = EnvConfig::default();
+        cfg.tasks_per_episode = 64;
+        for (i, name) in WorkloadConfig::scenario_names().iter().enumerate() {
+            cfg.workload = Some(WorkloadConfig::preset(name, 0.1).unwrap());
+            let w = Workload::generate(&cfg, &mut Pcg64::seeded(100 + i as u64));
+            let back = from_jsonl(&to_jsonl(&w)).unwrap();
+            assert_bit_exact(&w, &back);
+        }
+    }
+
+    #[test]
+    fn header_mismatch_is_rejected() {
+        let w = Workload::fixed(&[(0.0, 2, 0), (5.0, 4, 1)]);
+        let text = to_jsonl(&w);
+        let truncated: String = text.lines().take(2).map(|l| format!("{l}\n")).collect();
+        assert!(from_jsonl(&truncated).is_err(), "declared 2 tasks, found 1");
+        assert!(from_jsonl("{\"format\":\"something-else\"}\n").is_err());
+        // Future trace versions must be rejected, not silently misread.
+        assert!(from_jsonl("{\"format\":\"eat-trace\",\"version\":2,\"tasks\":0}\n").is_err());
+    }
+
+    #[test]
+    fn bad_lines_carry_line_numbers() {
+        let err = from_jsonl("{\"arrival\": 1.0}\n").unwrap_err().to_string();
+        assert!(err.contains("line 1"), "{err}");
+        let err = from_jsonl("not json\n").unwrap_err().to_string();
+        assert!(err.contains("line 1"), "{err}");
+    }
+
+    #[test]
+    fn malformed_q_min_is_an_error_not_a_silent_drop() {
+        let line = "{\"id\":0,\"prompt_id\":\"1\",\"patches\":2,\"model\":0,\
+                    \"arrival\":1.5,\"q_min\":\"0.25\"}\n";
+        let err = from_jsonl(line).unwrap_err().to_string();
+        assert!(err.contains("q_min"), "{err}");
+    }
+
+    #[test]
+    fn unsorted_trace_is_normalised() {
+        let w = Workload::fixed(&[(0.0, 2, 0), (5.0, 2, 0), (9.0, 2, 1)]);
+        let mut text = to_jsonl(&w);
+        // Swap the two task lines after the header.
+        let mut lines: Vec<&str> = text.lines().collect();
+        lines.swap(1, 3);
+        text = lines.join("\n");
+        let back = from_jsonl(&text).unwrap();
+        assert!(back.is_sorted());
+        assert_eq!(back.tasks[0].arrival, 0.0);
+        assert_eq!(back.tasks[2].arrival, 9.0);
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join("eat_trace_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.jsonl");
+        let path = path.to_str().unwrap();
+        let mut cfg = EnvConfig::default();
+        cfg.tasks_per_episode = 16;
+        let w = Workload::generate(&cfg, &mut Pcg64::seeded(9));
+        write_file(&w, path).unwrap();
+        let back = read_file(path).unwrap();
+        assert_bit_exact(&w, &back);
+        std::fs::remove_file(path).ok();
+    }
+}

@@ -226,3 +226,69 @@ fn selection_prefers_reuse_over_fresh_when_available() {
         other => panic!("expected reuse, got {other:?}"),
     }
 }
+
+#[test]
+fn every_scenario_family_runs_end_to_end() {
+    // The whole stack — scenario config → arrival process + mix →
+    // evaluate with CRN seeding → percentile-grade summary — for every
+    // preset family and two heuristic policies.
+    use eat::workload::WorkloadConfig;
+    for name in WorkloadConfig::scenario_names() {
+        let mut cfg = ExperimentConfig::preset_4node(0.05);
+        cfg.env.tasks_per_episode = 12;
+        cfg.env.workload = Some(WorkloadConfig::preset(name, 0.05).unwrap());
+        for alg in [Algorithm::Greedy, Algorithm::Random] {
+            let mut c = cfg.clone();
+            c.algorithm = alg;
+            let mut p = build_policy(&c, None).unwrap();
+            let s = evaluate(&c, p.as_mut(), 1);
+            assert!(
+                s.p50_latency <= s.p90_latency && s.p90_latency <= s.p99_latency,
+                "{name}/{:?}: unordered percentiles",
+                alg
+            );
+            assert!(s.p99_latency.is_finite(), "{name}: non-finite p99");
+            assert!(
+                (0.0..=1.0).contains(&s.avg_utilization),
+                "{name}: utilization {}",
+                s.avg_utilization
+            );
+        }
+    }
+}
+
+#[test]
+fn trace_file_replay_reproduces_episode_bit_exactly() {
+    // Acceptance criterion: a recorded trace replayed through EdgeEnv
+    // under the same policy and seed reproduces identical EpisodeReport
+    // numbers — across a real file round-trip.
+    use eat::workload::{trace, WorkloadConfig};
+    let mut cfg = ExperimentConfig::preset_4node(0.05);
+    cfg.env.workload = Some(WorkloadConfig::preset("flash", 0.05).unwrap());
+    let mut wl_rng = Pcg64::new(cfg.seed, 0xC0FFEE);
+    let workload = eat::sim::task::Workload::generate(&cfg.env, &mut wl_rng);
+
+    let dir = std::env::temp_dir().join("eat_integration_trace");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("flash_ep0.jsonl");
+    let path = path.to_str().unwrap();
+    trace::write_file(&workload, path).unwrap();
+    let replayed = trace::read_file(path).unwrap();
+    std::fs::remove_file(path).ok();
+
+    let run = |w: eat::sim::task::Workload| {
+        let mut env = EdgeEnv::with_workload(cfg.env.clone(), w, Pcg64::new(cfg.seed, 0xE21));
+        let mut p = GreedyPolicy::new(cfg.env.clone());
+        run_episode(&mut env, &mut p, None)
+    };
+    let a = run(workload);
+    let b = run(replayed);
+    assert_eq!(a.completed_tasks, b.completed_tasks);
+    assert_eq!(a.total_reward.to_bits(), b.total_reward.to_bits());
+    assert_eq!(a.avg_response_latency.to_bits(), b.avg_response_latency.to_bits());
+    assert_eq!(a.p50_latency.to_bits(), b.p50_latency.to_bits());
+    assert_eq!(a.p90_latency.to_bits(), b.p90_latency.to_bits());
+    assert_eq!(a.p99_latency.to_bits(), b.p99_latency.to_bits());
+    assert_eq!(a.avg_quality.to_bits(), b.avg_quality.to_bits());
+    assert_eq!(a.reloads, b.reloads);
+}

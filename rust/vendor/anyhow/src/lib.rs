@@ -1,0 +1,126 @@
+//! Offline subset of the `anyhow` crate.
+//!
+//! This environment builds with no registry access, so the crate vendors
+//! the slice of anyhow's API the codebase actually uses: an opaque
+//! [`Error`] holding a message, the [`Result`] alias, a blanket
+//! `From<E: std::error::Error>` conversion so `?` works on std errors, and
+//! the `anyhow!` / `bail!` / `ensure!` macros. Like upstream, `Error`
+//! deliberately does NOT implement `std::error::Error` (that is what makes
+//! the blanket `From` impl coherent).
+
+use std::fmt;
+
+/// An error message chain. Only the rendered message is retained.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Construct from anything displayable (mirrors `anyhow::Error::msg`).
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { msg: m.to_string() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        Error::msg(e.to_string())
+    }
+}
+
+/// `anyhow::Result<T>` — `Result` with a defaulted error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string or displayable expression.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an error built like `anyhow!`.
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return Err($crate::anyhow!($($t)*))
+    };
+}
+
+/// Return early with an error unless a condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!(concat!("condition failed: `", stringify!($cond), "`"));
+        }
+    };
+    ($cond:expr, $($t:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($t)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::Other, "disk on fire")
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert!(format!("{e}").contains("disk on fire"));
+    }
+
+    #[test]
+    fn macros_build_messages() {
+        let x = 3;
+        let e: Error = anyhow!("bad value {x}");
+        assert_eq!(format!("{e:?}"), "bad value 3");
+        let e: Error = anyhow!("bad {} of {}", "kind", 7);
+        assert_eq!(e.to_string(), "bad kind of 7");
+    }
+
+    #[test]
+    fn bail_and_ensure() {
+        fn f(ok: bool) -> Result<u32> {
+            ensure!(ok, "wanted ok, got {ok}");
+            Ok(1)
+        }
+        assert_eq!(f(true).unwrap(), 1);
+        assert!(f(false).unwrap_err().to_string().contains("wanted ok"));
+        fn g() -> Result<()> {
+            bail!("always")
+        }
+        assert!(g().is_err());
+    }
+}
