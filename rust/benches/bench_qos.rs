@@ -1,0 +1,87 @@
+//! QoS-subsystem benches: deadline-aware priority-queue push/pop
+//! throughput at a 1M-task backlog (the overload regime admission control
+//! exists for), steady-state churn at a bounded depth, and the env-facing
+//! `PendingQueue` rebuild cost at decision-cadence depths.
+//!
+//! Uses the in-repo bench harness (`util::bench`); criterion is not
+//! available in the offline registry.
+
+use std::time::Duration;
+
+use eat::qos::{EdfWfqQueue, PendingQueue, TenantRegistry, TenantsConfig};
+use eat::sim::task::{ModelType, Task};
+use eat::util::bench::{black_box, Bencher};
+use eat::util::rng::Pcg64;
+
+fn task(id: u64, tenant: Option<u32>, deadline: f64) -> Task {
+    Task {
+        id,
+        prompt_id: id,
+        patches: 2,
+        model: ModelType(0),
+        arrival: 0.0,
+        q_min: None,
+        tenant,
+        deadline: Some(deadline),
+    }
+}
+
+const BULK: usize = 1_000_000;
+
+fn main() {
+    let mut b = Bencher::new(Duration::from_millis(10), Duration::from_millis(600), 1_000_000);
+
+    // Bulk: push 1M tasks across three weighted tiers, then drain them in
+    // SWRR + EDF order. One iteration is the whole 2M-op cycle.
+    let res = b
+        .bench("qos_queue_push_pop_1M_tasks", || {
+            let mut q = EdfWfqQueue::new(vec![6.0, 3.0, 1.0]);
+            let mut rng = Pcg64::seeded(7);
+            for id in 0..BULK as u64 {
+                let tier = (id % 3) as usize;
+                q.push(tier, task(id, Some(tier as u32), rng.uniform(0.0, 1e6)));
+            }
+            let mut n = 0usize;
+            while q.pop().is_some() {
+                n += 1;
+            }
+            black_box(n)
+        })
+        .clone();
+    println!(
+        "       -> {:.2}M push+pop pairs/s",
+        BULK as f64 * res.throughput_per_sec() / 1e6
+    );
+
+    // Steady state: one push + one pop per iteration at a 4096-deep
+    // backlog (the per-decision cost an overloaded env would pay).
+    let mut steady = EdfWfqQueue::new(vec![6.0, 3.0, 1.0]);
+    let mut rng = Pcg64::seeded(8);
+    for id in 0..4096u64 {
+        steady.push((id % 3) as usize, task(id, Some((id % 3) as u32), rng.uniform(0.0, 1e6)));
+    }
+    let mut next_id = 4096u64;
+    b.bench("qos_queue_push_pop_at_depth_4096", || {
+        let tier = (next_id % 3) as usize;
+        steady.push(tier, task(next_id, Some(tier as u32), rng.uniform(0.0, 1e6)));
+        next_id += 1;
+        black_box(steady.pop().is_some())
+    });
+
+    // Env-facing adapter: push + remove with the materialised view rebuilt
+    // each mutation, at a decision-cadence depth.
+    let registry = TenantRegistry::new(&TenantsConfig::three_tier(0.3));
+    let mut pending = PendingQueue::qos(registry);
+    let mut rng2 = Pcg64::seeded(9);
+    for id in 0..64u64 {
+        pending.push(task(id, Some((id % 3) as u32), rng2.uniform(0.0, 1e4)));
+    }
+    let mut pid = 64u64;
+    b.bench("pending_queue_churn_at_depth_64", || {
+        pending.push(task(pid, Some((pid % 3) as u32), rng2.uniform(0.0, 1e4)));
+        pid += 1;
+        black_box(pending.remove(0).is_some())
+    });
+
+    println!("\n{}", b.summary());
+}

@@ -5,6 +5,7 @@
 //! (simulated) clusters at arrival rates {0.01..0.09}, {0.06..0.14},
 //! {0.11..0.19} respectively (Tables IX–XI); presets here mirror those.
 
+use crate::qos::TenantsConfig;
 use crate::util::json::{self, Value};
 use crate::workload::WorkloadConfig;
 
@@ -23,6 +24,10 @@ pub struct RewardConfig {
     pub q_min: f64,
     /// Penalty p_quality applied when q_k < q_min.
     pub p_quality: f64,
+    /// Penalty per missed deadline, scaled by the tenant's weight. Only
+    /// tasks carrying a deadline (multi-tenant workloads) can trip it, so
+    /// legacy episodes are bit-identical regardless of its value.
+    pub p_deadline: f64,
 }
 
 impl Default for RewardConfig {
@@ -34,6 +39,7 @@ impl Default for RewardConfig {
             mu_t: 0.02,
             q_min: 0.2,
             p_quality: 1.0,
+            p_deadline: 1.0,
         }
     }
 }
@@ -155,6 +161,11 @@ pub struct EnvConfig {
     /// paper's stationary Poisson at `arrival_rate` with a uniform mix,
     /// bit-identical to the seed generator.
     pub workload: Option<WorkloadConfig>,
+    /// Multi-tenant QoS section: per-tenant SLO classes with their own
+    /// arrival processes, plus the admission policy and queue discipline.
+    /// When set it supersedes `workload`/`arrival_rate` as the task
+    /// source; `None` keeps the single-tenant behaviour exactly.
+    pub tenants: Option<TenantsConfig>,
     pub reward: RewardConfig,
     pub exec: ExecModelConfig,
     pub quality: QualityConfig,
@@ -176,6 +187,7 @@ impl Default for EnvConfig {
             tasks_per_episode: 32,
             decision_dt: 1.0,
             workload: None,
+            tenants: None,
             reward: RewardConfig::default(),
             exec: ExecModelConfig::default(),
             quality: QualityConfig::default(),
@@ -219,6 +231,9 @@ impl EnvConfig {
         anyhow::ensure!(self.num_models >= 1, "need at least one model type");
         if let Some(w) = &self.workload {
             w.validate()?;
+        }
+        if let Some(t) = &self.tenants {
+            t.validate()?;
         }
         Ok(())
     }
@@ -455,6 +470,9 @@ impl ExperimentConfig {
         if let Some(w) = &e.workload {
             env.set("workload", w.to_json());
         }
+        if let Some(t) = &e.tenants {
+            env.set("tenants", t.to_json());
+        }
         let r = &e.reward;
         let mut rew = Value::obj();
         rew.set("alpha_q", r.alpha_q)
@@ -462,7 +480,8 @@ impl ExperimentConfig {
             .set("lambda_q", r.lambda_q)
             .set("mu_t", r.mu_t)
             .set("q_min", r.q_min)
-            .set("p_quality", r.p_quality);
+            .set("p_quality", r.p_quality)
+            .set("p_deadline", r.p_deadline);
         env.set("reward", rew);
         let x = &e.exec;
         let mut exec = Value::obj();
@@ -545,6 +564,9 @@ impl ExperimentConfig {
             if let Some(w) = env.get("workload") {
                 e.workload = Some(WorkloadConfig::from_json(w)?);
             }
+            if let Some(t) = env.get("tenants") {
+                e.tenants = Some(TenantsConfig::from_json(t)?);
+            }
             if let Some(r) = env.get("reward") {
                 let rc = &mut e.reward;
                 macro_rules! rnum {
@@ -560,6 +582,7 @@ impl ExperimentConfig {
                 rnum!("mu_t", rc.mu_t);
                 rnum!("q_min", rc.q_min);
                 rnum!("p_quality", rc.p_quality);
+                rnum!("p_deadline", rc.p_deadline);
             }
         }
         if let Some(t) = v.get("train") {
@@ -644,6 +667,25 @@ mod tests {
             *amplitude = 7.0;
         }
         cfg.env.workload = Some(bad);
+        assert!(ExperimentConfig::from_json(&cfg.to_json()).is_err());
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_tenants_section() {
+        use crate::qos::{AdmissionConfig, QueueDiscipline, TenantsConfig};
+        let mut cfg = ExperimentConfig::preset_8node(0.1);
+        let mut tenants = TenantsConfig::three_tier(0.3);
+        tenants.admission = AdmissionConfig::DropTail { max_queue: 24 };
+        tenants.queue = QueueDiscipline::EdfWfq;
+        cfg.env.tenants = Some(tenants);
+        cfg.env.reward.p_deadline = 2.5;
+        let back = ExperimentConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.env.tenants, cfg.env.tenants);
+        assert!((back.env.reward.p_deadline - 2.5).abs() < 1e-12);
+        // An invalid tenant must fail validation at parse time.
+        let mut bad = cfg.env.tenants.clone().unwrap();
+        bad.tenants[0].weight = -1.0;
+        cfg.env.tenants = Some(bad);
         assert!(ExperimentConfig::from_json(&cfg.to_json()).is_err());
     }
 

@@ -5,11 +5,12 @@
 use super::{run_episode, DecisionTiming};
 use crate::config::ExperimentConfig;
 use crate::policy::Policy;
+use crate::qos::TenantRegistry;
 use crate::sim::env::EdgeEnv;
 use crate::sim::task::Workload;
 use crate::util::rng::Pcg64;
 use crate::util::stats::Welford;
-use crate::workload::MetricsCollector;
+use crate::workload::{MetricsCollector, TenantReport};
 
 /// Aggregated metrics over an evaluation run: means over episodes, plus
 /// latency percentiles over the *pooled* per-task latency histogram of
@@ -31,6 +32,10 @@ pub struct EvalSummary {
     pub efficiency: f64,
     pub below_quality_min_frac: f64,
     pub decision_latency_s: f64,
+    /// Fraction of offered tasks shed by admission control.
+    pub dropped_frac: f64,
+    /// Pooled per-tenant QoS reports (empty without a tenants config).
+    pub tenants: Vec<TenantReport>,
 }
 
 /// Evaluate `policy` over `episodes` seeded episodes of `cfg`'s env.
@@ -47,7 +52,13 @@ pub fn evaluate(
     let mut steps = Welford::new();
     let mut eff = Welford::new();
     let mut below = Welford::new();
-    let mut pooled = MetricsCollector::new(cfg.env.num_servers);
+    // Pooled collector shape must match the per-episode collectors, which
+    // enable per-tenant stats when a tenants section is configured.
+    let registry = cfg.env.tenants.as_ref().map(TenantRegistry::new);
+    let mut pooled = match &registry {
+        Some(reg) => MetricsCollector::with_tenants(cfg.env.num_servers, reg),
+        None => MetricsCollector::new(cfg.env.num_servers),
+    };
     let mut timing = DecisionTiming::default();
     for ep in 0..episodes {
         // Common random numbers: workload seed depends only on (cfg.seed,
@@ -97,6 +108,8 @@ pub fn evaluate(
         efficiency: eff.mean(),
         below_quality_min_frac: below.mean(),
         decision_latency_s: timing.mean_seconds(),
+        dropped_frac: pooled.admission_dropped() as f64 / pooled.offered().max(1) as f64,
+        tenants: pooled.tenant_reports(),
     }
 }
 
@@ -135,6 +148,23 @@ mod tests {
         assert!(s.p50_latency <= s.p90_latency && s.p90_latency <= s.p99_latency);
         assert!(s.p50_latency > 0.0);
         assert!(s.avg_utilization > 0.0 && s.avg_utilization <= 1.0);
+    }
+
+    #[test]
+    fn tenant_config_flows_through_evaluate() {
+        use crate::qos::TenantsConfig;
+        let mut cfg = ExperimentConfig::preset_8node(0.1);
+        cfg.env.tenants = Some(TenantsConfig::three_tier(0.3));
+        cfg.env.tasks_per_episode = 24;
+        let s = evaluate(&cfg, &mut GreedyPolicy::new(cfg.env.clone()), 2);
+        assert_eq!(s.tenants.len(), 3);
+        let offered: u64 = s.tenants.iter().map(|t| t.offered).sum();
+        assert!(offered > 0, "pooled tenant stats must accumulate");
+        assert!((0.0..=1.0).contains(&s.dropped_frac));
+        // CRN reproducibility holds for tenant workloads too.
+        let s2 = evaluate(&cfg, &mut GreedyPolicy::new(cfg.env.clone()), 2);
+        assert_eq!(s.avg_response_latency, s2.avg_response_latency);
+        assert_eq!(s.tenants[0].slo_met, s2.tenants[0].slo_met);
     }
 
     #[test]

@@ -14,12 +14,14 @@
 //! | Fig 6 (init-time variability) | `inittime` | `eat experiment fig6` |
 //! | Fig 7 (time prediction scatter) | `timepred` | `eat experiment fig7` |
 //! | Scenario sweep (beyond the paper) | `scenarios` | `eat scenarios` |
+//! | Multi-tenant QoS sweep (beyond the paper) | `qos` | `eat qos` |
 
 pub mod fig4;
 pub mod grid;
 pub mod inittime;
 pub mod latency;
 pub mod motivation;
+pub mod qos;
 pub mod scenarios;
 pub mod tables;
 pub mod timepred;
@@ -44,6 +46,7 @@ pub fn run(name: &str, args: &Args) -> anyhow::Result<String> {
         "fig6" => inittime::run(args)?,
         "fig7" => timepred::run(args)?,
         "scenarios" => scenarios::run(args)?,
+        "qos" => qos::run(args)?,
         "all" => {
             let mut all = String::new();
             for id in [
@@ -56,7 +59,7 @@ pub fn run(name: &str, args: &Args) -> anyhow::Result<String> {
         }
         other => anyhow::bail!(
             "unknown experiment '{other}' (try table1, table2_4, table6, table9, \
-             table10, table11, table12, fig4, fig5, fig6, fig7, fig8, grid, scenarios, all)"
+             table10, table11, table12, fig4, fig5, fig6, fig7, fig8, grid, scenarios, qos, all)"
         ),
     };
     Ok(out)

@@ -18,6 +18,13 @@
 //!       diurnal, flash, zipf-hot, rotating) across policies with
 //!       p50/p90/p99 latency, utilization and reload counts; supports
 //!       JSONL trace --record <dir> and bit-exact --replay <file>
+//!   eat qos [--nodes 8] [--tasks 120] [--overloads 1.0,3.0] [...]
+//!       multi-tenant QoS sweep: overload factor × admission policy ×
+//!       queue discipline, with per-tenant p50/p90/p99, SLO attainment,
+//!       and drop rates
+//!   eat trace import <csv> <out.jsonl>                      map a CSV
+//!       request log onto a JSONL workload trace (replayable via
+//!       `eat scenarios --replay`)
 //!   eat info                                                print artifact
 //!       manifest summary
 
@@ -42,6 +49,10 @@ fn usage() -> ! {
          \n  eat scenarios [--nodes N] [--episodes K] [--rate R] [--algs a,b,c]\n\
          \x20             [--scenarios poisson,bursty,...] [--record dir]\n\
          \x20             [--replay file [--scenario name] [--ep K]]\n\
+         \n  eat qos     [--nodes N] [--tasks K] [--episodes E] [--rate R] [--seed S]\n\
+         \x20           [--overloads 1.0,3.0] [--admissions admit-all,drop-tail,token-bucket]\n\
+         \x20           [--queues fifo,edf] [--max-queue Q] [--bucket-rate R] [--bucket-burst B]\n\
+         \n  eat trace import <csv> <out.jsonl>\n\
          \n  eat info"
     );
     std::process::exit(2)
@@ -132,6 +143,20 @@ fn main() -> anyhow::Result<()> {
         "scenarios" => {
             experiments::scenarios::run(&args)?;
         }
+        "qos" => {
+            experiments::qos::run(&args)?;
+        }
+        "trace" => match args.positional.get(1).map(String::as_str) {
+            Some("import") => {
+                let (Some(csv), Some(out)) = (args.positional.get(2), args.positional.get(3))
+                else {
+                    usage()
+                };
+                let n = eat::workload::import::import_file(csv, out)?;
+                println!("imported {n} tasks: {csv} -> {out}");
+            }
+            _ => usage(),
+        },
         "info" => {
             let rt = Runtime::new(args.get("artifacts").unwrap_or("artifacts"))?;
             println!("platform: {}", rt.platform());
@@ -193,7 +218,17 @@ fn serve(args: &Args) -> anyhow::Result<()> {
         let (gang, reuse) = match &sel {
             Selection::Reuse(v) => (v.clone(), true),
             Selection::Fresh(v) => (v.clone(), false),
-            Selection::Infeasible => continue,
+            Selection::Infeasible => {
+                // A task that cannot fit this cluster (e.g. more patches
+                // than workers) used to vanish silently; count it so the
+                // summary reflects deferred work instead of hiding it.
+                metrics.observe_deferred();
+                eprintln!(
+                    "task {:>3}  patches {}  deferred: no feasible gang on {} workers",
+                    task.id, task.patches, workers
+                );
+                continue;
+            }
         };
         let waiting = (sim_clock - task.arrival).max(0.0);
         if task.arrival > sim_clock {
@@ -207,6 +242,7 @@ fn serve(args: &Args) -> anyhow::Result<()> {
             &format!("prompt-{}", task.prompt_id),
             steps,
             task.model.0,
+            task.tenant.unwrap_or(0),
             &gang,
             waiting,
             &mut metrics,

@@ -1,0 +1,295 @@
+//! Admission control: what happens when demand outruns capacity.
+//!
+//! The seed queued every arrival forever — under sustained overload the
+//! pending queue (and every latency percentile) grows without bound, which
+//! is exactly the regime where real serving systems shed load instead.
+//! Three pluggable controllers:
+//!
+//! - [`AdmissionConfig::AdmitAll`] — the seed behaviour (and the default).
+//! - [`AdmissionConfig::DropTail`] — bounded pending queue: arrivals past
+//!   `max_queue` waiting tasks are rejected at the door.
+//! - [`AdmissionConfig::TokenBucket`] — per-tenant rate limiting: each
+//!   tenant owns a bucket refilling at its weighted share of the
+//!   configured rate, so overload is shed proportionally to entitlement
+//!   rather than first-come-first-served.
+//!
+//! Decisions are a pure function of (config, arrival time, queue length,
+//! bucket state), so admission replays bit-identically with the episode.
+
+use super::TenantRegistry;
+use crate::util::json::Value;
+
+/// Serialisable admission-controller description.
+#[derive(Clone, Debug, PartialEq)]
+pub enum AdmissionConfig {
+    /// Admit every arrival (unbounded queue; the seed behaviour).
+    AdmitAll,
+    /// Reject arrivals while `max_queue` tasks are already waiting.
+    DropTail { max_queue: usize },
+    /// Per-tenant token buckets: tokens refill at `rate` × the tenant's
+    /// weight share (tokens/s) up to `burst` × share; one token per task.
+    /// Without a tenant registry a single global bucket applies.
+    TokenBucket { rate: f64, burst: f64 },
+}
+
+impl AdmissionConfig {
+    pub fn name(&self) -> &'static str {
+        match self {
+            AdmissionConfig::AdmitAll => "admit-all",
+            AdmissionConfig::DropTail { .. } => "drop-tail",
+            AdmissionConfig::TokenBucket { .. } => "token-bucket",
+        }
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        match *self {
+            AdmissionConfig::AdmitAll => Ok(()),
+            AdmissionConfig::DropTail { max_queue } => {
+                anyhow::ensure!(max_queue >= 1, "drop-tail max_queue must be >= 1");
+                Ok(())
+            }
+            AdmissionConfig::TokenBucket { rate, burst } => {
+                anyhow::ensure!(
+                    rate > 0.0 && rate.is_finite(),
+                    "token-bucket rate must be > 0, got {rate}"
+                );
+                anyhow::ensure!(
+                    burst >= 1.0 && burst.is_finite(),
+                    "token-bucket burst must be >= 1, got {burst}"
+                );
+                Ok(())
+            }
+        }
+    }
+
+    pub fn to_json(&self) -> Value {
+        let mut v = Value::obj();
+        match *self {
+            AdmissionConfig::AdmitAll => {
+                v.set("kind", "admit_all");
+            }
+            AdmissionConfig::DropTail { max_queue } => {
+                v.set("kind", "drop_tail").set("max_queue", max_queue);
+            }
+            AdmissionConfig::TokenBucket { rate, burst } => {
+                v.set("kind", "token_bucket").set("rate", rate).set("burst", burst);
+            }
+        }
+        v
+    }
+
+    pub fn from_json(v: &Value) -> anyhow::Result<AdmissionConfig> {
+        let kind = v
+            .req("kind")?
+            .as_str()
+            .ok_or_else(|| anyhow::anyhow!("admission 'kind' must be a string"))?;
+        let cfg = match kind {
+            "admit_all" => AdmissionConfig::AdmitAll,
+            "drop_tail" => AdmissionConfig::DropTail {
+                max_queue: v
+                    .req("max_queue")?
+                    .as_usize()
+                    .ok_or_else(|| anyhow::anyhow!("drop_tail max_queue must be a number"))?,
+            },
+            "token_bucket" => AdmissionConfig::TokenBucket {
+                rate: v
+                    .req("rate")?
+                    .as_f64()
+                    .ok_or_else(|| anyhow::anyhow!("token_bucket rate must be a number"))?,
+                burst: v
+                    .req("burst")?
+                    .as_f64()
+                    .ok_or_else(|| anyhow::anyhow!("token_bucket burst must be a number"))?,
+            },
+            other => anyhow::bail!("unknown admission kind '{other}'"),
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+#[derive(Clone, Debug)]
+struct Bucket {
+    tokens: f64,
+    rate: f64,
+    burst: f64,
+    last: f64,
+}
+
+impl Bucket {
+    fn take(&mut self, now: f64) -> bool {
+        self.tokens = (self.tokens + (now - self.last).max(0.0) * self.rate).min(self.burst);
+        self.last = now;
+        if self.tokens >= 1.0 {
+            self.tokens -= 1.0;
+            true
+        } else {
+            false
+        }
+    }
+}
+
+/// Runtime admission state: the config plus per-tenant token buckets.
+/// `Clone` keeps planning rollouts (Harmony/Genetic clone the env) exact.
+#[derive(Clone, Debug)]
+pub struct AdmissionState {
+    cfg: AdmissionConfig,
+    buckets: Vec<Bucket>,
+    /// True when buckets are indexed by tenant id (registry mode); false
+    /// when a single global bucket rate-limits every arrival.
+    per_tenant: bool,
+}
+
+impl AdmissionState {
+    pub fn new(cfg: AdmissionConfig, registry: Option<&TenantRegistry>) -> AdmissionState {
+        let (buckets, per_tenant) = match (&cfg, registry) {
+            (AdmissionConfig::TokenBucket { rate, burst }, Some(reg)) => {
+                let total: f64 = (0..reg.num_tenants()).map(|i| reg.tenant(i).weight).sum();
+                let buckets = (0..reg.num_tenants())
+                    .map(|i| {
+                        let share = reg.tenant(i).weight / total.max(1e-12);
+                        let cap = (burst * share).max(1.0);
+                        Bucket {
+                            tokens: cap,
+                            rate: rate * share,
+                            burst: cap,
+                            last: 0.0,
+                        }
+                    })
+                    .collect();
+                (buckets, true)
+            }
+            (AdmissionConfig::TokenBucket { rate, burst }, None) => (
+                vec![Bucket {
+                    tokens: *burst,
+                    rate: *rate,
+                    burst: *burst,
+                    last: 0.0,
+                }],
+                false,
+            ),
+            _ => (Vec::new(), false),
+        };
+        AdmissionState {
+            cfg,
+            buckets,
+            per_tenant,
+        }
+    }
+
+    pub fn config(&self) -> &AdmissionConfig {
+        &self.cfg
+    }
+
+    /// Decide one arrival: `true` admits the task into the pending queue.
+    /// `now` must be non-decreasing across calls (the env guarantees it).
+    pub fn admit(&mut self, tenant: Option<u32>, now: f64, queue_len: usize) -> bool {
+        match &self.cfg {
+            AdmissionConfig::AdmitAll => true,
+            AdmissionConfig::DropTail { max_queue } => queue_len < *max_queue,
+            AdmissionConfig::TokenBucket { .. } => {
+                if self.per_tenant {
+                    // Tasks outside the registry (untenanted or foreign
+                    // ids) own no bucket; admitting them — rather than
+                    // draining some real tenant's tokens — mirrors how the
+                    // queue and metrics route them to a fallback.
+                    match tenant.and_then(|t| self.buckets.get_mut(t as usize)) {
+                        Some(bucket) => bucket.take(now),
+                        None => true,
+                    }
+                } else {
+                    match self.buckets.first_mut() {
+                        Some(bucket) => bucket.take(now),
+                        None => true,
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn admit_all_admits() {
+        let mut s = AdmissionState::new(AdmissionConfig::AdmitAll, None);
+        for i in 0..100 {
+            assert!(s.admit(None, i as f64, i));
+        }
+    }
+
+    #[test]
+    fn drop_tail_bounds_queue() {
+        let mut s = AdmissionState::new(AdmissionConfig::DropTail { max_queue: 4 }, None);
+        assert!(s.admit(None, 0.0, 3));
+        assert!(!s.admit(None, 0.0, 4));
+        assert!(!s.admit(None, 0.0, 9));
+    }
+
+    #[test]
+    fn token_bucket_spends_burst_then_rate_limits() {
+        let mut s = AdmissionState::new(
+            AdmissionConfig::TokenBucket { rate: 1.0, burst: 3.0 },
+            None,
+        );
+        // Burst: three back-to-back admits, then empty.
+        assert!(s.admit(None, 0.0, 0));
+        assert!(s.admit(None, 0.0, 0));
+        assert!(s.admit(None, 0.0, 0));
+        assert!(!s.admit(None, 0.0, 0));
+        // One second refills one token.
+        assert!(s.admit(None, 1.0, 0));
+        assert!(!s.admit(None, 1.0, 0));
+    }
+
+    #[test]
+    fn per_tenant_buckets_ignore_untracked_tasks() {
+        use crate::qos::{TenantRegistry, TenantsConfig};
+        let reg = TenantRegistry::new(&TenantsConfig::three_tier(0.3));
+        let mut s = AdmissionState::new(
+            AdmissionConfig::TokenBucket { rate: 0.1, burst: 3.0 },
+            Some(&reg),
+        );
+        // Untenanted and foreign-id tasks own no bucket: always admitted,
+        // and they must not drain any real tenant's tokens.
+        for _ in 0..50 {
+            assert!(s.admit(None, 0.0, 0));
+            assert!(s.admit(Some(99), 0.0, 0));
+        }
+        // Premium's full burst is still available afterwards.
+        let mut admitted = 0;
+        while s.admit(Some(0), 0.0, 0) {
+            admitted += 1;
+        }
+        assert!(admitted >= 1, "premium bucket drained by untracked tasks");
+    }
+
+    #[test]
+    fn bad_configs_rejected() {
+        assert!(AdmissionConfig::DropTail { max_queue: 0 }.validate().is_err());
+        assert!(AdmissionConfig::TokenBucket { rate: 0.0, burst: 4.0 }
+            .validate()
+            .is_err());
+        assert!(AdmissionConfig::TokenBucket { rate: 1.0, burst: 0.5 }
+            .validate()
+            .is_err());
+        assert!(AdmissionConfig::AdmitAll.validate().is_ok());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        for cfg in [
+            AdmissionConfig::AdmitAll,
+            AdmissionConfig::DropTail { max_queue: 32 },
+            AdmissionConfig::TokenBucket { rate: 0.25, burst: 8.0 },
+        ] {
+            let back = AdmissionConfig::from_json(&cfg.to_json()).unwrap();
+            assert_eq!(back, cfg);
+        }
+        let mut v = Value::obj();
+        v.set("kind", "martian");
+        assert!(AdmissionConfig::from_json(&v).is_err());
+    }
+}

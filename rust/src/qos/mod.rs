@@ -1,0 +1,498 @@
+//! Multi-tenant QoS subsystem: SLO classes, deadline-aware queueing, and
+//! admission control under overload.
+//!
+//! The paper (and the seed) treats all tasks as one undifferentiated
+//! stream. Real AIGC serving is multi-tenant: a premium tenant buys a
+//! tight latency SLO and a high quality floor, a batch tenant tolerates
+//! hours, and under overload the scheduler must decide *whose* tasks wait
+//! or get shed. This module adds that axis:
+//!
+//! - [`TenantConfig`] / [`TenantsConfig`] — per-tenant SLO classes
+//!   (latency deadline budget, quality floor `q_min`, weight, priority
+//!   tier) with their own arrival processes, serialised inside
+//!   `EnvConfig` (JSON round-trip).
+//! - [`TenantRegistry`] — the resolved runtime registry: tier slots,
+//!   per-tier weights, tenant lookups.
+//! - [`queue`] — [`queue::EdfWfqQueue`] / [`queue::PendingQueue`]:
+//!   earliest-deadline-first within a tier, smooth weighted round robin
+//!   across tiers, replacing the env's FIFO pending queue.
+//! - [`admission`] — [`AdmissionConfig`] / [`AdmissionState`]: admit-all,
+//!   bounded-queue drop-tail, and per-tenant token buckets that shed load
+//!   under sustained overload instead of queueing forever.
+//! - [`generate_workload`] — per-tenant arrival processes composed from
+//!   `workload::ArrivalProcess` / `TaskMix`, merged into one deterministic
+//!   task stream (tasks carry `tenant` + absolute `deadline`).
+//!
+//! `eat qos` (`experiments::qos`) sweeps overload factors × admission
+//! policies × queue disciplines and reports per-tenant p50/p90/p99, SLO
+//! attainment, and drop rates.
+
+pub mod admission;
+pub mod queue;
+
+pub use admission::{AdmissionConfig, AdmissionState};
+pub use queue::{EdfWfqQueue, PendingQueue};
+
+use crate::config::EnvConfig;
+use crate::sim::task::{Task, Workload};
+use crate::util::json::Value;
+use crate::util::rng::Pcg64;
+use crate::workload::{
+    model_mix_from_json, model_mix_to_json, ArrivalConfig, ModelMix, QualityDemand, TaskMix,
+};
+
+/// Which discipline orders the pending queue.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum QueueDiscipline {
+    /// Arrival order (the seed behaviour).
+    Fifo,
+    /// Earliest-deadline-first within a tier, weighted-fair across tiers.
+    EdfWfq,
+}
+
+impl QueueDiscipline {
+    pub fn name(&self) -> &'static str {
+        match self {
+            QueueDiscipline::Fifo => "fifo",
+            QueueDiscipline::EdfWfq => "edf",
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<QueueDiscipline> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "fifo" => QueueDiscipline::Fifo,
+            "edf" | "edf-wfq" | "edfwfq" | "qos" => QueueDiscipline::EdfWfq,
+            other => anyhow::bail!("unknown queue discipline '{other}' (fifo, edf)"),
+        })
+    }
+}
+
+/// One tenant's SLO class and traffic description.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TenantConfig {
+    pub name: String,
+    /// Priority tier; lower tiers are ordered first in the queue's
+    /// round-robin (tiers compete by weight, they do not strictly preempt).
+    pub tier: u8,
+    /// Service weight: a backlogged tier's share of dequeues is its
+    /// tenants' total weight over the backlogged total.
+    pub weight: f64,
+    /// Latency SLO budget (s): a task meets its SLO iff response time
+    /// (waiting + execution) stays within this budget of its arrival.
+    pub latency_slo: f64,
+    /// Per-task quality floor; becomes each task's `q_min`.
+    pub q_min: f64,
+    /// This tenant's own arrival process.
+    pub arrival: ArrivalConfig,
+    /// Model popularity within this tenant's traffic.
+    pub model_mix: ModelMix,
+}
+
+impl TenantConfig {
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(!self.name.is_empty(), "tenant name must be non-empty");
+        anyhow::ensure!(
+            self.weight > 0.0 && self.weight.is_finite(),
+            "tenant '{}' weight must be > 0",
+            self.name
+        );
+        anyhow::ensure!(
+            self.latency_slo > 0.0 && self.latency_slo.is_finite(),
+            "tenant '{}' latency_slo must be > 0",
+            self.name
+        );
+        anyhow::ensure!(
+            self.q_min > 0.0 && self.q_min.is_finite(),
+            "tenant '{}' q_min must be > 0",
+            self.name
+        );
+        self.arrival.validate()
+    }
+
+    pub fn to_json(&self) -> Value {
+        let mut v = Value::obj();
+        v.set("name", self.name.as_str())
+            .set("tier", self.tier as usize)
+            .set("weight", self.weight)
+            .set("latency_slo", self.latency_slo)
+            .set("q_min", self.q_min)
+            .set("arrival", self.arrival.to_json());
+        if self.model_mix != ModelMix::Uniform {
+            v.set("model_mix", model_mix_to_json(&self.model_mix));
+        }
+        v
+    }
+
+    pub fn from_json(v: &Value) -> anyhow::Result<TenantConfig> {
+        let num = |key: &str| -> anyhow::Result<f64> {
+            v.req(key)?
+                .as_f64()
+                .ok_or_else(|| anyhow::anyhow!("tenant field '{key}' is not a number"))
+        };
+        let cfg = TenantConfig {
+            name: v
+                .req("name")?
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("tenant 'name' must be a string"))?
+                .to_string(),
+            tier: num("tier")? as u8,
+            weight: num("weight")?,
+            latency_slo: num("latency_slo")?,
+            q_min: num("q_min")?,
+            arrival: ArrivalConfig::from_json(v.req("arrival")?)?,
+            model_mix: match v.get("model_mix") {
+                Some(m) => model_mix_from_json(m)?,
+                None => ModelMix::Uniform,
+            },
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+/// The complete multi-tenant section of an env config.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TenantsConfig {
+    pub tenants: Vec<TenantConfig>,
+    pub admission: AdmissionConfig,
+    pub queue: QueueDiscipline,
+}
+
+impl TenantsConfig {
+    /// Three-class preset — premium / standard / batch sharing `total_rate`
+    /// equally as demand but weighted 6:3:1 for service. Equal SLO budgets
+    /// make SLO attainment a pure function of service share, so under
+    /// overload the attainment ordering must follow the weights.
+    pub fn three_tier(total_rate: f64) -> TenantsConfig {
+        let lane = total_rate / 3.0;
+        let tenant = |name: &str, tier: u8, weight: f64, q_min: f64| TenantConfig {
+            name: name.to_string(),
+            tier,
+            weight,
+            latency_slo: 120.0,
+            q_min,
+            arrival: ArrivalConfig::Poisson { rate: lane },
+            model_mix: ModelMix::Uniform,
+        };
+        TenantsConfig {
+            tenants: vec![
+                tenant("premium", 0, 6.0, 0.24),
+                tenant("standard", 1, 3.0, 0.22),
+                tenant("batch", 2, 1.0, 0.20),
+            ],
+            admission: AdmissionConfig::AdmitAll,
+            queue: QueueDiscipline::EdfWfq,
+        }
+    }
+
+    /// Scale every tenant's arrival rate by `factor` (overload sweeps).
+    pub fn scaled(&self, factor: f64) -> TenantsConfig {
+        let mut out = self.clone();
+        for t in &mut out.tenants {
+            t.arrival = t.arrival.scaled(factor);
+        }
+        out
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(!self.tenants.is_empty(), "tenants section must list at least one tenant");
+        for t in &self.tenants {
+            t.validate()?;
+        }
+        for (i, a) in self.tenants.iter().enumerate() {
+            for b in &self.tenants[i + 1..] {
+                anyhow::ensure!(a.name != b.name, "duplicate tenant name '{}'", a.name);
+            }
+        }
+        self.admission.validate()
+    }
+
+    pub fn to_json(&self) -> Value {
+        let mut v = Value::obj();
+        v.set(
+            "tenants",
+            Value::Arr(self.tenants.iter().map(TenantConfig::to_json).collect()),
+        );
+        v.set("admission", self.admission.to_json());
+        v.set("queue", self.queue.name());
+        v
+    }
+
+    pub fn from_json(v: &Value) -> anyhow::Result<TenantsConfig> {
+        let tenants = v
+            .req("tenants")?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("'tenants' must be an array"))?
+            .iter()
+            .map(TenantConfig::from_json)
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        let cfg = TenantsConfig {
+            tenants,
+            admission: match v.get("admission") {
+                Some(a) => AdmissionConfig::from_json(a)?,
+                None => AdmissionConfig::AdmitAll,
+            },
+            queue: match v.get("queue").and_then(Value::as_str) {
+                Some(s) => QueueDiscipline::parse(s)?,
+                None => QueueDiscipline::EdfWfq,
+            },
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+/// Resolved runtime registry: tier slots in priority order plus a trailing
+/// fallback slot for untenanted tasks.
+#[derive(Clone, Debug)]
+pub struct TenantRegistry {
+    cfg: TenantsConfig,
+    tiers: Vec<u8>,
+    /// Per-slot service weights: one slot per distinct tier (ascending)
+    /// plus a final weight-1 fallback slot for untenanted tasks.
+    queue_weights: Vec<f64>,
+    tenant_slot: Vec<usize>,
+}
+
+impl TenantRegistry {
+    pub fn new(cfg: &TenantsConfig) -> TenantRegistry {
+        let mut tiers: Vec<u8> = cfg.tenants.iter().map(|t| t.tier).collect();
+        tiers.sort_unstable();
+        tiers.dedup();
+        let mut queue_weights = vec![0.0; tiers.len() + 1];
+        let mut tenant_slot = Vec::with_capacity(cfg.tenants.len());
+        for t in &cfg.tenants {
+            let slot = tiers.binary_search(&t.tier).expect("tier present");
+            queue_weights[slot] += t.weight;
+            tenant_slot.push(slot);
+        }
+        let last = queue_weights.len() - 1;
+        queue_weights[last] = 1.0;
+        TenantRegistry {
+            cfg: cfg.clone(),
+            tiers,
+            queue_weights,
+            tenant_slot,
+        }
+    }
+
+    pub fn config(&self) -> &TenantsConfig {
+        &self.cfg
+    }
+
+    pub fn num_tenants(&self) -> usize {
+        self.cfg.tenants.len()
+    }
+
+    pub fn tenant(&self, i: usize) -> &TenantConfig {
+        &self.cfg.tenants[i]
+    }
+
+    /// Tenant name, or "untenanted" for ids outside the registry.
+    pub fn name(&self, tenant: Option<u32>) -> &str {
+        tenant
+            .and_then(|t| self.cfg.tenants.get(t as usize))
+            .map_or("untenanted", |t| t.name.as_str())
+    }
+
+    /// Service weight of a task's tenant (1.0 when untenanted/unknown).
+    pub fn weight(&self, tenant: Option<u32>) -> f64 {
+        tenant
+            .and_then(|t| self.cfg.tenants.get(t as usize))
+            .map_or(1.0, |t| t.weight)
+    }
+
+    /// Queue slot for a task: its tenant's tier slot, or the fallback.
+    pub fn tier_slot(&self, tenant: Option<u32>) -> usize {
+        let fallback = self.queue_weights.len() - 1;
+        tenant
+            .and_then(|t| self.tenant_slot.get(t as usize).copied())
+            .unwrap_or(fallback)
+    }
+
+    /// Per-slot weights for [`queue::EdfWfqQueue`] (fallback slot last).
+    pub fn queue_weights(&self) -> &[f64] {
+        &self.queue_weights
+    }
+
+    pub fn num_tiers(&self) -> usize {
+        self.tiers.len()
+    }
+}
+
+/// Generate a multi-tenant workload: one arrival process + mix per tenant
+/// (each on a forked RNG stream, so lanes are independent yet the whole
+/// workload is a deterministic function of the seed), merged globally by
+/// arrival time. Each task carries its tenant id, the tenant's quality
+/// floor, and an absolute deadline `arrival + latency_slo`.
+pub fn generate_workload(
+    env: &EnvConfig,
+    reg: &TenantRegistry,
+    n: usize,
+    rng: &mut Pcg64,
+) -> Workload {
+    struct Lane {
+        arrival: Box<dyn crate::workload::ArrivalProcess>,
+        mix: TaskMix,
+        rng: Pcg64,
+        clock: f64,
+        pending: Option<(f64, crate::workload::MixSample, u64)>,
+    }
+    let mut lanes: Vec<Lane> = (0..reg.num_tenants())
+        .map(|i| {
+            let t = reg.tenant(i);
+            Lane {
+                arrival: t.arrival.build(),
+                mix: TaskMix::new(env, t.model_mix.clone(), QualityDemand::Default),
+                rng: rng.fork(100 + i as u64),
+                clock: 0.0,
+                pending: None,
+            }
+        })
+        .collect();
+    if lanes.is_empty() {
+        return Workload { tasks: Vec::new() };
+    }
+    let mut tasks = Vec::with_capacity(n);
+    for id in 0..n as u64 {
+        for lane in lanes.iter_mut() {
+            if lane.pending.is_none() {
+                let t = lane.arrival.next_after(lane.clock, &mut lane.rng);
+                lane.clock = t;
+                let s = lane.mix.sample(t, &mut lane.rng);
+                let prompt = lane.rng.next_u64();
+                lane.pending = Some((t, s, prompt));
+            }
+        }
+        let mut best = 0usize;
+        let mut best_t = lanes[0].pending.as_ref().expect("refilled").0;
+        for (i, lane) in lanes.iter().enumerate().skip(1) {
+            let t = lane.pending.as_ref().expect("refilled").0;
+            if t < best_t {
+                best = i;
+                best_t = t;
+            }
+        }
+        let (arrival, sample, prompt_id) = lanes[best].pending.take().expect("refilled");
+        let tc = reg.tenant(best);
+        tasks.push(Task {
+            id,
+            prompt_id,
+            patches: sample.patches,
+            model: sample.model,
+            arrival,
+            q_min: Some(tc.q_min),
+            tenant: Some(best as u32),
+            deadline: Some(arrival + tc.latency_slo),
+        });
+    }
+    Workload { tasks }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::EnvConfig;
+
+    #[test]
+    fn three_tier_preset_validates_and_scales() {
+        let cfg = TenantsConfig::three_tier(0.3);
+        cfg.validate().unwrap();
+        assert_eq!(cfg.tenants.len(), 3);
+        let scaled = cfg.scaled(2.0);
+        for (a, b) in cfg.tenants.iter().zip(&scaled.tenants) {
+            let (ArrivalConfig::Poisson { rate: ra }, ArrivalConfig::Poisson { rate: rb }) =
+                (&a.arrival, &b.arrival)
+            else {
+                panic!("preset lanes are Poisson");
+            };
+            assert!((rb - ra * 2.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn registry_maps_tiers_weights_and_fallback() {
+        let reg = TenantRegistry::new(&TenantsConfig::three_tier(0.3));
+        assert_eq!(reg.num_tenants(), 3);
+        assert_eq!(reg.num_tiers(), 3);
+        // Slots 0..2 for tiers 0..2, slot 3 is the fallback.
+        assert_eq!(reg.queue_weights(), &[6.0, 3.0, 1.0, 1.0]);
+        assert_eq!(reg.tier_slot(Some(0)), 0);
+        assert_eq!(reg.tier_slot(Some(2)), 2);
+        assert_eq!(reg.tier_slot(None), 3);
+        assert_eq!(reg.tier_slot(Some(99)), 3);
+        assert_eq!(reg.weight(Some(0)), 6.0);
+        assert_eq!(reg.weight(None), 1.0);
+        assert_eq!(reg.name(Some(1)), "standard");
+        assert_eq!(reg.name(None), "untenanted");
+    }
+
+    #[test]
+    fn shared_tier_weights_accumulate() {
+        let mut cfg = TenantsConfig::three_tier(0.3);
+        cfg.tenants[1].tier = 0; // standard joins premium's tier
+        let reg = TenantRegistry::new(&cfg);
+        assert_eq!(reg.num_tiers(), 2);
+        assert_eq!(reg.queue_weights(), &[9.0, 1.0, 1.0]);
+        assert_eq!(reg.tier_slot(Some(1)), 0);
+        assert_eq!(reg.tier_slot(Some(2)), 1);
+    }
+
+    #[test]
+    fn tenant_workload_is_sorted_tagged_and_deterministic() {
+        let env = EnvConfig::default();
+        let cfg = TenantsConfig::three_tier(0.3);
+        let reg = TenantRegistry::new(&cfg);
+        let a = generate_workload(&env, &reg, 200, &mut Pcg64::seeded(11));
+        let b = generate_workload(&env, &reg, 200, &mut Pcg64::seeded(11));
+        assert_eq!(a.len(), 200);
+        assert!(a.is_sorted());
+        let mut seen = vec![0usize; 3];
+        for (x, y) in a.tasks.iter().zip(&b.tasks) {
+            assert_eq!(x.arrival.to_bits(), y.arrival.to_bits());
+            assert_eq!(x.tenant, y.tenant);
+            assert_eq!(x.prompt_id, y.prompt_id);
+            let tenant = x.tenant.expect("tagged") as usize;
+            seen[tenant] += 1;
+            let tc = reg.tenant(tenant);
+            assert_eq!(x.q_min, Some(tc.q_min));
+            let d = x.deadline.expect("deadline set");
+            assert!((d - (x.arrival + tc.latency_slo)).abs() < 1e-9);
+        }
+        // Equal lane rates: every tenant contributes a healthy share.
+        for (i, &n) in seen.iter().enumerate() {
+            assert!(n > 30, "tenant {i} produced only {n}/200 tasks");
+        }
+    }
+
+    #[test]
+    fn tenants_config_json_roundtrip_with_all_admissions() {
+        for admission in [
+            AdmissionConfig::AdmitAll,
+            AdmissionConfig::DropTail { max_queue: 24 },
+            AdmissionConfig::TokenBucket { rate: 0.2, burst: 6.0 },
+        ] {
+            let mut cfg = TenantsConfig::three_tier(0.21);
+            cfg.admission = admission;
+            cfg.queue = QueueDiscipline::Fifo;
+            let back = TenantsConfig::from_json(&cfg.to_json()).unwrap();
+            assert_eq!(back, cfg);
+        }
+    }
+
+    #[test]
+    fn invalid_tenants_rejected() {
+        let mut cfg = TenantsConfig::three_tier(0.3);
+        cfg.tenants[0].weight = 0.0;
+        assert!(cfg.validate().is_err());
+        let mut cfg = TenantsConfig::three_tier(0.3);
+        cfg.tenants[1].name = "premium".into();
+        assert!(cfg.validate().is_err());
+        let mut cfg = TenantsConfig::three_tier(0.3);
+        cfg.tenants.clear();
+        assert!(cfg.validate().is_err());
+        let mut cfg = TenantsConfig::three_tier(0.3);
+        cfg.tenants[2].latency_slo = -1.0;
+        assert!(cfg.validate().is_err());
+    }
+}

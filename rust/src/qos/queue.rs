@@ -1,0 +1,448 @@
+//! Deadline-aware pending queue: EDF within a tier, smooth weighted round
+//! robin (SWRR) across tiers.
+//!
+//! [`EdfWfqQueue`] is the raw structure — one ordered set per priority
+//! tier, keyed by (deadline, insertion seq), with SWRR credits deciding
+//! which tier serves next. Push/pop are O(log n) plus O(#tiers), so a
+//! million-task backlog stays cheap (see `benches/bench_qos.rs`).
+//!
+//! [`PendingQueue`] adapts it to `EdgeEnv`, which exposes the queue to
+//! policies as an indexable `VecDeque<Task>` (the top-l slots of the state
+//! matrix). In FIFO mode it *is* the seed's `VecDeque` — bit-identical
+//! behaviour when no tenants are configured. In QoS mode it keeps a
+//! materialised view in dequeue order, rebuilt after each mutation (queue
+//! depths at the env's decision cadence are small; the raw structure is
+//! what the overload benchmarks exercise).
+
+use super::TenantRegistry;
+use crate::sim::task::Task;
+use std::collections::{BTreeMap, VecDeque};
+
+/// Sort key inside a tier: (deadline bits, insertion sequence). Deadlines
+/// are finite and non-negative, so `f64::to_bits` is order-preserving;
+/// deadline-less tasks sort last (FIFO among themselves via the seq).
+fn deadline_key(task: &Task) -> u64 {
+    task.deadline.map_or(u64::MAX, |d| d.max(0.0).to_bits())
+}
+
+/// Per-tier EDF sets with smooth-weighted-round-robin service order across
+/// tiers. Service share of a continuously backlogged tier converges to its
+/// weight fraction; within a tier, earlier deadlines always serve first.
+#[derive(Clone, Debug)]
+pub struct EdfWfqQueue {
+    tiers: Vec<BTreeMap<(u64, u64), Task>>,
+    weights: Vec<f64>,
+    credits: Vec<f64>,
+    seq: u64,
+    len: usize,
+}
+
+impl EdfWfqQueue {
+    /// One entry per tier; `weights[i]` is tier i's service weight.
+    pub fn new(weights: Vec<f64>) -> EdfWfqQueue {
+        assert!(!weights.is_empty(), "need at least one tier");
+        assert!(
+            weights.iter().all(|&w| w > 0.0 && w.is_finite()),
+            "tier weights must be positive and finite"
+        );
+        EdfWfqQueue {
+            tiers: weights.iter().map(|_| BTreeMap::new()).collect(),
+            credits: vec![0.0; weights.len()],
+            weights,
+            seq: 0,
+            len: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn num_tiers(&self) -> usize {
+        self.tiers.len()
+    }
+
+    /// Insert a task into `tier` (clamped to the last tier).
+    pub fn push(&mut self, tier: usize, task: Task) {
+        let tier = tier.min(self.tiers.len() - 1);
+        self.seq += 1;
+        self.tiers[tier].insert((deadline_key(&task), self.seq), task);
+        self.len += 1;
+    }
+
+    /// One SWRR step over the currently non-empty tiers: add each tier's
+    /// weight to its credit, serve the highest credit (ties to the lower,
+    /// i.e. higher-priority, tier), and charge it the round's total.
+    fn swrr_step(credits: &mut [f64], weights: &[f64], remaining: &[usize]) -> Option<usize> {
+        let mut total = 0.0;
+        let mut best: Option<usize> = None;
+        for i in 0..weights.len() {
+            if remaining[i] == 0 {
+                continue;
+            }
+            total += weights[i];
+            credits[i] += weights[i];
+            if best.map_or(true, |b| credits[i] > credits[b]) {
+                best = Some(i);
+            }
+        }
+        let b = best?;
+        credits[b] -= total;
+        Some(b)
+    }
+
+    /// Replay the SWRR step the `order` walk would have taken, but forced
+    /// onto `chosen` (the policy may schedule any visible slot, not just
+    /// the head; the chosen tier still pays for the service it received).
+    fn swrr_charge(&mut self, chosen: usize) {
+        let mut total = 0.0;
+        for i in 0..self.weights.len() {
+            if self.tiers[i].is_empty() && i != chosen {
+                continue;
+            }
+            total += self.weights[i];
+            self.credits[i] += self.weights[i];
+        }
+        self.credits[chosen] -= total;
+    }
+
+    /// The first `k` (tier, key) pairs in dequeue order, without mutating
+    /// the queue. Within each tier the keys come out EDF-sorted.
+    pub fn order(&self, k: usize) -> Vec<(usize, (u64, u64))> {
+        let k = k.min(self.len);
+        let mut out = Vec::with_capacity(k);
+        if k == 0 {
+            return out;
+        }
+        let mut credits = self.credits.clone();
+        // Only the first k keys of a tier can appear in a k-step walk, so
+        // the collection cost is O(min(n, k) · tiers), not O(n).
+        let keys: Vec<Vec<(u64, u64)>> = self
+            .tiers
+            .iter()
+            .map(|m| m.keys().take(k).copied().collect())
+            .collect();
+        let mut cursor = vec![0usize; self.tiers.len()];
+        let mut remaining: Vec<usize> = self.tiers.iter().map(BTreeMap::len).collect();
+        while out.len() < k {
+            let Some(t) = Self::swrr_step(&mut credits, &self.weights, &remaining) else {
+                break;
+            };
+            out.push((t, keys[t][cursor[t]]));
+            cursor[t] += 1;
+            remaining[t] -= 1;
+        }
+        out
+    }
+
+    pub fn get(&self, tier: usize, key: &(u64, u64)) -> Option<&Task> {
+        self.tiers.get(tier)?.get(key)
+    }
+
+    /// Remove the `n`-th task in dequeue order, charging its tier one SWRR
+    /// service round.
+    pub fn remove_nth(&mut self, n: usize) -> Option<Task> {
+        if n >= self.len {
+            return None;
+        }
+        let (tier, key) = *self.order(n + 1).last()?;
+        self.swrr_charge(tier);
+        let task = self.tiers[tier].remove(&key)?;
+        self.len -= 1;
+        Some(task)
+    }
+
+    /// Dequeue the head task (the next one SWRR + EDF would serve).
+    /// O(#tiers + log n) — the hot path under a large backlog; credit
+    /// accounting is identical to `remove_nth(0)`.
+    pub fn pop(&mut self) -> Option<Task> {
+        let remaining: Vec<usize> = self.tiers.iter().map(BTreeMap::len).collect();
+        let t = Self::swrr_step(&mut self.credits, &self.weights, &remaining)?;
+        let key = *self.tiers[t].keys().next()?;
+        let task = self.tiers[t].remove(&key)?;
+        self.len -= 1;
+        Some(task)
+    }
+
+    /// Iterate every queued task (arbitrary order; aggregate statistics).
+    pub fn iter_all(&self) -> impl Iterator<Item = &Task> {
+        self.tiers.iter().flat_map(|m| m.values())
+    }
+}
+
+/// The env-facing pending queue: the seed's FIFO `VecDeque` when no
+/// tenants are configured (bit-identical behaviour), or an [`EdfWfqQueue`]
+/// with a materialised dequeue-order view under a QoS discipline.
+#[derive(Clone, Debug)]
+pub struct PendingQueue {
+    mode: Mode,
+}
+
+#[derive(Clone, Debug)]
+enum Mode {
+    Fifo(VecDeque<Task>),
+    Qos {
+        inner: EdfWfqQueue,
+        registry: TenantRegistry,
+        view: VecDeque<Task>,
+    },
+}
+
+impl PendingQueue {
+    pub fn fifo() -> PendingQueue {
+        PendingQueue {
+            mode: Mode::Fifo(VecDeque::new()),
+        }
+    }
+
+    pub fn qos(registry: TenantRegistry) -> PendingQueue {
+        let inner = EdfWfqQueue::new(registry.queue_weights().to_vec());
+        PendingQueue {
+            mode: Mode::Qos {
+                inner,
+                registry,
+                view: VecDeque::new(),
+            },
+        }
+    }
+
+    fn rebuild(inner: &EdfWfqQueue, view: &mut VecDeque<Task>) {
+        view.clear();
+        for (tier, key) in inner.order(inner.len()) {
+            if let Some(t) = inner.get(tier, &key) {
+                view.push_back(t.clone());
+            }
+        }
+    }
+
+    pub fn push(&mut self, task: Task) {
+        self.push_lazy(task);
+        self.commit();
+    }
+
+    /// Insert without refreshing the materialised view — for absorbing
+    /// arrival batches without an O(n) rebuild per task. `len()` and
+    /// `is_empty()` stay exact; call [`commit`](Self::commit) before the
+    /// view is next read.
+    pub fn push_lazy(&mut self, task: Task) {
+        match &mut self.mode {
+            Mode::Fifo(q) => q.push_back(task),
+            Mode::Qos {
+                inner, registry, ..
+            } => {
+                let tier = registry.tier_slot(task.tenant);
+                inner.push(tier, task);
+            }
+        }
+    }
+
+    /// Refresh the materialised view after a `push_lazy` batch (no-op in
+    /// FIFO mode, where the deque is always current).
+    pub fn commit(&mut self) {
+        if let Mode::Qos { inner, view, .. } = &mut self.mode {
+            Self::rebuild(inner, view);
+        }
+    }
+
+    /// Remove the task at visible position `index` (dequeue order).
+    pub fn remove(&mut self, index: usize) -> Option<Task> {
+        match &mut self.mode {
+            Mode::Fifo(q) => q.remove(index),
+            Mode::Qos { inner, view, .. } => {
+                let task = inner.remove_nth(index)?;
+                Self::rebuild(inner, view);
+                Some(task)
+            }
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match &self.mode {
+            Mode::Fifo(q) => q.len(),
+            Mode::Qos { inner, .. } => inner.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The queue in dequeue order, as the env exposes it to policies.
+    pub fn items(&self) -> &VecDeque<Task> {
+        match &self.mode {
+            Mode::Fifo(q) => q,
+            Mode::Qos { view, .. } => view,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::qos::TenantsConfig;
+    use crate::sim::task::ModelType;
+
+    fn task(id: u64, tenant: Option<u32>, deadline: Option<f64>) -> Task {
+        Task {
+            id,
+            prompt_id: id,
+            patches: 2,
+            model: ModelType(0),
+            arrival: 0.0,
+            q_min: None,
+            tenant,
+            deadline,
+        }
+    }
+
+    #[test]
+    fn single_tier_is_pure_edf() {
+        let mut q = EdfWfqQueue::new(vec![1.0]);
+        q.push(0, task(0, None, Some(30.0)));
+        q.push(0, task(1, None, Some(10.0)));
+        q.push(0, task(2, None, Some(20.0)));
+        q.push(0, task(3, None, None)); // deadline-less tasks go last
+        let ids: Vec<u64> = std::iter::from_fn(|| q.pop()).map(|t| t.id).collect();
+        assert_eq!(ids, vec![1, 2, 0, 3]);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn equal_deadlines_fall_back_to_fifo() {
+        let mut q = EdfWfqQueue::new(vec![1.0]);
+        for id in 0..5 {
+            q.push(0, task(id, None, Some(50.0)));
+        }
+        let ids: Vec<u64> = std::iter::from_fn(|| q.pop()).map(|t| t.id).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn swrr_serves_tiers_proportionally() {
+        // Weights 3:1 with both tiers continuously backlogged: the serve
+        // pattern repeats with exactly 3 tier-0 serves per tier-1 serve.
+        let mut q = EdfWfqQueue::new(vec![3.0, 1.0]);
+        for id in 0..400u64 {
+            q.push((id % 2) as usize, task(id, None, Some(id as f64)));
+        }
+        let (mut t0, mut t1) = (0usize, 0usize);
+        for _ in 0..200 {
+            let t = q.pop().unwrap();
+            if t.id % 2 == 0 {
+                t0 += 1;
+            } else {
+                t1 += 1;
+            }
+        }
+        assert!((148..=152).contains(&t0), "tier0 served {t0}/200");
+        assert!((48..=52).contains(&t1), "tier1 served {t1}/200");
+    }
+
+    #[test]
+    fn empty_tiers_cede_their_share() {
+        let mut q = EdfWfqQueue::new(vec![3.0, 1.0]);
+        for id in 0..10u64 {
+            q.push(1, task(id, None, Some(id as f64)));
+        }
+        // Tier 0 is empty: tier 1 gets every slot, in EDF order.
+        let ids: Vec<u64> = std::iter::from_fn(|| q.pop()).map(|t| t.id).collect();
+        assert_eq!(ids, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn remove_nth_matches_order() {
+        let mut q = EdfWfqQueue::new(vec![2.0, 1.0]);
+        for id in 0..12u64 {
+            q.push((id % 2) as usize, task(id, None, Some((100 - id) as f64)));
+        }
+        let ord = q.order(q.len());
+        assert_eq!(ord.len(), 12);
+        // Removing position 3 yields exactly the task order() promised.
+        let expect_id = q.get(ord[3].0, &ord[3].1).unwrap().id;
+        let got = q.remove_nth(3).unwrap();
+        assert_eq!(got.id, expect_id);
+        assert_eq!(q.len(), 11);
+    }
+
+    #[test]
+    fn order_is_edf_within_each_tier() {
+        let mut q = EdfWfqQueue::new(vec![5.0, 2.0, 1.0]);
+        let deadlines = [40.0, 10.0, 90.0, 20.0, 70.0, 30.0, 60.0, 50.0, 80.0];
+        for (i, &d) in deadlines.iter().enumerate() {
+            q.push(i % 3, task(i as u64, None, Some(d)));
+        }
+        let mut last = vec![(0u64, 0u64); 3];
+        for (tier, key) in q.order(q.len()) {
+            assert!(key >= last[tier], "tier {tier} order inverted");
+            last[tier] = key;
+        }
+    }
+
+    fn three_tier_registry() -> TenantRegistry {
+        let cfg = TenantsConfig::three_tier(0.3);
+        TenantRegistry::new(&cfg)
+    }
+
+    #[test]
+    fn pending_queue_fifo_matches_vecdeque() {
+        let mut q = PendingQueue::fifo();
+        for id in 0..4 {
+            q.push(task(id, None, None));
+        }
+        assert_eq!(q.len(), 4);
+        assert_eq!(q.items()[0].id, 0);
+        let removed = q.remove(2).unwrap();
+        assert_eq!(removed.id, 2);
+        assert_eq!(q.items().iter().map(|t| t.id).collect::<Vec<_>>(), vec![0, 1, 3]);
+    }
+
+    #[test]
+    fn pending_queue_qos_orders_view_by_discipline() {
+        let reg = three_tier_registry();
+        let mut q = PendingQueue::qos(reg);
+        // Batch (tenant 2) arrives first, premium (tenant 0) second with a
+        // later wall-clock deadline — premium's tier still serves first.
+        q.push(task(0, Some(2), Some(50.0)));
+        q.push(task(1, Some(0), Some(120.0)));
+        assert_eq!(q.items()[0].id, 1, "premium tier must head the queue");
+        let got = q.remove(0).unwrap();
+        assert_eq!(got.id, 1);
+        assert_eq!(q.items()[0].id, 0);
+        assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    fn push_lazy_defers_view_until_commit() {
+        let reg = three_tier_registry();
+        let mut q = PendingQueue::qos(reg);
+        q.push_lazy(task(0, Some(1), Some(40.0)));
+        q.push_lazy(task(1, Some(0), Some(90.0)));
+        // Length is exact immediately; the view refreshes on commit.
+        assert_eq!(q.len(), 2);
+        assert!(q.items().is_empty());
+        q.commit();
+        assert_eq!(q.items().len(), 2);
+        assert_eq!(q.items()[0].id, 1, "premium heads the committed view");
+        // FIFO mode needs no commit.
+        let mut f = PendingQueue::fifo();
+        f.push_lazy(task(7, None, None));
+        assert_eq!(f.items().len(), 1);
+        f.commit();
+        assert_eq!(f.items().len(), 1);
+    }
+
+    #[test]
+    fn pending_queue_untenanted_tasks_use_fallback_tier() {
+        let reg = three_tier_registry();
+        let mut q = PendingQueue::qos(reg);
+        q.push(task(0, None, None));
+        q.push(task(1, Some(0), Some(60.0)));
+        assert_eq!(q.len(), 2);
+        // Premium outranks the untenanted fallback tier.
+        assert_eq!(q.items()[0].id, 1);
+    }
+}

@@ -51,13 +51,28 @@ impl ServingHost {
 
     /// Dispatch one task to `gang` (worker indices), concurrently, and
     /// wait for every patch result (gang semantics: the task is complete
-    /// only when all patches are).
+    /// only when all patches are). Single-tenant convenience wrapper.
     pub fn dispatch(
         &self,
         task_id: u64,
         prompt: &str,
         steps: u32,
         model: u32,
+        gang: &[usize],
+    ) -> anyhow::Result<GangOutcome> {
+        self.dispatch_tagged(task_id, prompt, steps, model, 0, gang)
+    }
+
+    /// `dispatch` with an explicit tenant class: every worker request on
+    /// the wire carries the tenant tag, so container-side logs and billing
+    /// can attribute GPU time per tenant.
+    pub fn dispatch_tagged(
+        &self,
+        task_id: u64,
+        prompt: &str,
+        steps: u32,
+        model: u32,
+        tenant: u32,
         gang: &[usize],
     ) -> anyhow::Result<GangOutcome> {
         anyhow::ensure!(!gang.is_empty(), "empty gang");
@@ -76,6 +91,7 @@ impl ServingHost {
                 patches: gang.len(),
                 model,
                 rank,
+                tenant,
             };
             let tx = tx.clone();
             std::thread::spawn(move || {
@@ -113,11 +129,12 @@ impl ServingHost {
         prompt: &str,
         steps: u32,
         model: u32,
+        tenant: u32,
         gang: &[usize],
         waiting: f64,
         metrics: &mut MetricsCollector,
     ) -> anyhow::Result<GangOutcome> {
-        let out = self.dispatch(task_id, prompt, steps, model, gang)?;
+        let out = self.dispatch_tagged(task_id, prompt, steps, model, tenant, gang)?;
         metrics.observe_task(waiting + out.sim_exec_seconds(), waiting, out.any_reload());
         // Busy time is per worker: patches run in parallel and each worker
         // is free again after its own exec+load, not after the slowest
@@ -163,7 +180,7 @@ mod tests {
         let host = ServingHost::new(pool.addrs().to_vec());
         let mut m = MetricsCollector::new(2);
         let out = host
-            .dispatch_collect(1, "p", 20, 0, &[0, 1], 2.5, &mut m)
+            .dispatch_collect(1, "p", 20, 0, 0, &[0, 1], 2.5, &mut m)
             .unwrap();
         m.advance_time(out.sim_exec_seconds());
         assert_eq!(m.completed(), 1);

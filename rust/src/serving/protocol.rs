@@ -18,6 +18,9 @@ pub struct TaskRequest {
     pub model: u32,
     /// Rank of this worker within the gang (0-based).
     pub rank: usize,
+    /// Tenant class of the task (0 for single-tenant workloads); carried
+    /// on the wire so workers/containers can tag logs and billing.
+    pub tenant: u32,
 }
 
 impl TaskRequest {
@@ -28,7 +31,8 @@ impl TaskRequest {
             .set("steps", self.steps as usize)
             .set("patches", self.patches)
             .set("model", self.model as usize)
-            .set("rank", self.rank);
+            .set("rank", self.rank)
+            .set("tenant", self.tenant as usize);
         v.to_json()
     }
 
@@ -41,6 +45,8 @@ impl TaskRequest {
             patches: v.req("patches")?.as_usize().unwrap_or(1),
             model: v.req("model")?.as_f64().unwrap_or(0.0) as u32,
             rank: v.req("rank")?.as_usize().unwrap_or(0),
+            // Optional for wire compatibility with pre-tenant requests.
+            tenant: v.get("tenant").and_then(Value::as_f64).unwrap_or(0.0) as u32,
         })
     }
 }
@@ -98,9 +104,19 @@ mod tests {
             patches: 4,
             model: 2,
             rank: 3,
+            tenant: 1,
         };
         let back = TaskRequest::from_json(&req.to_json()).unwrap();
         assert_eq!(back, req);
+    }
+
+    #[test]
+    fn request_without_tenant_defaults_to_zero() {
+        let req = TaskRequest::from_json(
+            "{\"task_id\":1,\"prompt\":\"p\",\"steps\":20,\"patches\":2,\"model\":0,\"rank\":0}",
+        )
+        .unwrap();
+        assert_eq!(req.tenant, 0);
     }
 
     #[test]

@@ -178,6 +178,7 @@ mod tests {
             patches: 2,
             model: 0,
             rank: 0,
+            tenant: 0,
         };
         let r1 = send(&req);
         assert!(!r1.reused);

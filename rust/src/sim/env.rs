@@ -8,12 +8,13 @@
 //! servers via the greedy selector) or does nothing.
 
 use crate::config::EnvConfig;
+use crate::qos::{AdmissionConfig, AdmissionState, PendingQueue, QueueDiscipline, TenantRegistry};
 use crate::sim::cluster::{Cluster, Selection};
 use crate::sim::exec_model::ExecModel;
 use crate::sim::quality::QualityModel;
 use crate::sim::task::{Task, Workload};
 use crate::util::rng::Pcg64;
-use crate::workload::{MetricsCollector, TaskSource, TaskStream};
+use crate::workload::{MetricsCollector, TaskSource, TaskStream, TenantReport};
 use std::collections::VecDeque;
 
 /// Decoded composite action (Eq. 8): `[a_c, a_s, a_k1..a_kl]`, every
@@ -85,6 +86,11 @@ pub struct Scheduled {
     /// Quality floor in force for this task (its own demand, or the
     /// episode-wide `RewardConfig::q_min`).
     pub q_min: f64,
+    /// Tenant index of the scheduled task (multi-tenant workloads).
+    pub tenant: Option<u32>,
+    /// Whether the response met the task's deadline; `None` when the task
+    /// carried no deadline.
+    pub deadline_met: Option<bool>,
 }
 
 /// Result of one environment step.
@@ -126,6 +132,11 @@ pub struct EpisodeReport {
     pub avg_steps_chosen: f64,
     /// Average over completed tasks of quality / response (Fig 8).
     pub efficiency: f64,
+    /// Arrivals rejected by admission control (shed load).
+    pub dropped_tasks: usize,
+    /// Per-tenant SLO attainment / drop-rate / latency percentiles (empty
+    /// unless `EnvConfig::tenants` is configured).
+    pub tenant_reports: Vec<TenantReport>,
 }
 
 /// The EAT MDP environment. `Clone` supports the meta-heuristic baselines
@@ -138,13 +149,16 @@ pub struct EdgeEnv {
     exec_model: ExecModel,
     quality_model: QualityModel,
     source: TaskSource,
-    queue: VecDeque<Task>,
+    queue: PendingQueue,
+    registry: Option<TenantRegistry>,
+    admission: AdmissionState,
     now: f64,
     steps_taken: usize,
     rng: Pcg64,
     metrics: MetricsCollector,
     // accumulators
     scheduled_count: usize,
+    dropped_count: usize,
     reload_count: usize,
     sum_quality: f64,
     sum_response: f64,
@@ -160,10 +174,13 @@ impl EdgeEnv {
     /// Build from a seed. With `cfg.workload = None` this pre-materialises
     /// the legacy Poisson workload (bit-identical to the seed); with a
     /// scenario configured it consumes the arrival process as a lazy
-    /// stream — same tasks, generated on demand.
+    /// stream — same tasks, generated on demand. Multi-tenant workloads
+    /// (`cfg.tenants`) are merged from per-tenant arrival processes and
+    /// pre-materialised (`Workload::generate` routes through the
+    /// qos generator).
     pub fn new(cfg: EnvConfig, seed: u64) -> Self {
         let mut rng = Pcg64::new(seed, 0xED6E);
-        if cfg.workload.is_some() {
+        if cfg.workload.is_some() && cfg.tenants.is_none() {
             let (arrival, mix) = crate::workload::build_for_env(&cfg);
             let stream = TaskStream::new(arrival, mix, cfg.tasks_per_episode, rng.fork(1));
             Self::with_source(cfg, TaskSource::stream(stream), rng)
@@ -185,19 +202,41 @@ impl EdgeEnv {
         let cluster = Cluster::new(cfg.num_servers);
         let exec_model = ExecModel::new(cfg.exec.clone());
         let quality_model = QualityModel::new(cfg.quality.clone());
-        let metrics = MetricsCollector::new(cfg.num_servers);
+        let registry = cfg.tenants.as_ref().map(TenantRegistry::new);
+        // Queue discipline: the seed's FIFO unless a tenants section asks
+        // for deadline-aware ordering.
+        let queue = match (&registry, cfg.tenants.as_ref().map(|t| t.queue)) {
+            (Some(reg), Some(QueueDiscipline::EdfWfq)) => PendingQueue::qos(reg.clone()),
+            _ => PendingQueue::fifo(),
+        };
+        // Admission: tenants section first, then the scenario's policy,
+        // else admit-all (the seed behaviour).
+        let admission_cfg = cfg
+            .tenants
+            .as_ref()
+            .map(|t| t.admission.clone())
+            .or_else(|| cfg.workload.as_ref().map(|w| w.admission.clone()))
+            .unwrap_or(AdmissionConfig::AdmitAll);
+        let admission = AdmissionState::new(admission_cfg, registry.as_ref());
+        let metrics = match &registry {
+            Some(reg) => MetricsCollector::with_tenants(cfg.num_servers, reg),
+            None => MetricsCollector::new(cfg.num_servers),
+        };
         let mut env = EdgeEnv {
             cfg,
             cluster,
             exec_model,
             quality_model,
             source,
-            queue: VecDeque::new(),
+            queue,
+            registry,
+            admission,
             now: 0.0,
             steps_taken: 0,
             rng,
             metrics,
             scheduled_count: 0,
+            dropped_count: 0,
             reload_count: 0,
             sum_quality: 0.0,
             sum_response: 0.0,
@@ -216,8 +255,11 @@ impl EdgeEnv {
         self.now
     }
 
+    /// The pending queue in scheduling order (dequeue order under a QoS
+    /// discipline, arrival order otherwise); the top `queue_window` slots
+    /// are what the policy observes.
     pub fn queue(&self) -> &VecDeque<Task> {
-        &self.queue
+        self.queue.items()
     }
 
     pub fn exec_model(&self) -> &ExecModel {
@@ -238,14 +280,28 @@ impl EdgeEnv {
     }
 
     /// Remaining (not yet arrived) + queued + in-flight tasks exist?
+    /// Tasks shed by admission control count as resolved.
     pub fn all_done(&self) -> bool {
-        self.scheduled_count == self.source.total()
+        self.scheduled_count + self.dropped_count == self.source.total()
             && self.cluster.servers.iter().all(|s| s.is_idle())
     }
 
     fn absorb_arrivals(&mut self) {
+        let mut admitted = false;
         while let Some(task) = self.source.pop_if_arrived(self.now) {
-            self.queue.push_back(task);
+            self.metrics.observe_offered(task.tenant);
+            if self.admission.admit(task.tenant, self.now, self.queue.len()) {
+                // Lazy push: the QoS view is rebuilt once per batch below,
+                // not O(queue) per arrival.
+                self.queue.push_lazy(task);
+                admitted = true;
+            } else {
+                self.dropped_count += 1;
+                self.metrics.observe_drop(task.tenant);
+            }
+        }
+        if admitted {
+            self.queue.commit();
         }
     }
 
@@ -254,7 +310,8 @@ impl EdgeEnv {
         if self.queue.is_empty() {
             return 0.0;
         }
-        self.queue.iter().map(|t| self.now - t.arrival).sum::<f64>() / self.queue.len() as f64
+        self.queue.items().iter().map(|t| self.now - t.arrival).sum::<f64>()
+            / self.queue.len() as f64
     }
 
     /// Build the normalised state vector: the 3×(|E|+l) matrix of Eq. 6 in
@@ -277,7 +334,7 @@ impl EdgeEnv {
                 None => 0.0,
             };
         }
-        for (j, task) in self.queue.iter().take(l).enumerate() {
+        for (j, task) in self.queue.items().iter().take(l).enumerate() {
             let c = e + j;
             s[c] = ((self.now - task.arrival) as f32 * T_SCALE).min(4.0);
             s[cols + c] = task.patches as f32 / 8.0;
@@ -361,13 +418,9 @@ impl EdgeEnv {
             }
         }
         let steps = action.steps(self.cfg.s_min, self.cfg.s_max);
-        let task = self.queue[best].clone();
         match self.schedule_task_at(best, steps) {
             Some(sch) => Ok(Some(sch)),
-            None => {
-                let _ = task;
-                Err(())
-            }
+            None => Err(()),
         }
     }
 
@@ -375,7 +428,7 @@ impl EdgeEnv {
     /// if the gang constraint allows. Used by the action path and directly
     /// by heuristic policies.
     pub fn schedule_task_at(&mut self, index: usize, steps: u32) -> Option<Scheduled> {
-        let task = self.queue.get(index)?.clone();
+        let task = self.queue.items().get(index)?.clone();
         let selection = self.cluster.select(task.model, task.patches);
         let (servers, reuse) = match &selection {
             Selection::Reuse(v) => (v.clone(), true),
@@ -395,7 +448,7 @@ impl EdgeEnv {
         steps: u32,
         server_ids: &[usize],
     ) -> Option<Scheduled> {
-        let task = self.queue.get(index)?.clone();
+        let task = self.queue.items().get(index)?.clone();
         if server_ids.len() != task.patches
             || server_ids.iter().any(|&id| !self.cluster.servers[id].is_idle())
         {
@@ -452,6 +505,9 @@ impl EdgeEnv {
         let response = waiting + duration;
         let quality = self.quality_model.sample_quality(steps, task.prompt_id);
         let q_floor = task.q_min.unwrap_or(self.cfg.reward.q_min);
+        // A task completes at now + duration; its (absolute) deadline is
+        // met iff that instant lands within the SLO budget.
+        let deadline_met = task.deadline.map(|d| self.now + duration <= d);
         let sch = Scheduled {
             task_id: task.id,
             steps,
@@ -462,6 +518,8 @@ impl EdgeEnv {
             response,
             quality,
             q_min: q_floor,
+            tenant: task.tenant,
+            deadline_met,
         };
         // Metrics.
         self.scheduled_count += 1;
@@ -476,24 +534,37 @@ impl EdgeEnv {
             self.below_min += 1;
         }
         self.metrics.observe_task(response, waiting, !reuse);
+        self.metrics.observe_tenant_task(task.tenant, response, deadline_met);
         self.trace.push(sch.clone());
         Some(sch)
     }
 
     /// Immediate reward (§V.A.4):
-    /// R = α_q·q − λ_q·I + 1 / (β_t·t^r + μ_t·t^avg_Q).
+    /// R = α_q·q − λ_q·I + 1 / (β_t·t^r + μ_t·t^avg_Q) − p_d·w·miss.
     /// The quality indicator I uses the task's own demand when it has one
     /// (scenario mixes with per-task QoS tiers), else the global q_min.
+    /// The deadline term charges a missed SLO in proportion to the
+    /// tenant's weight; deadline-less tasks (the paper's regime) never
+    /// trip it, keeping legacy rewards bit-identical.
     fn reward_for(&self, sch: &Scheduled) -> f64 {
         let r = &self.cfg.reward;
         let penalty = if sch.quality < sch.q_min { r.p_quality } else { 0.0 };
         let denom = r.beta_t * sch.response + r.mu_t * self.avg_queue_wait() + 1e-3;
-        r.alpha_q * sch.quality - r.lambda_q * penalty + 1.0 / denom
+        let mut reward = r.alpha_q * sch.quality - r.lambda_q * penalty + 1.0 / denom;
+        if sch.deadline_met == Some(false) {
+            let weight = self
+                .registry
+                .as_ref()
+                .map_or(1.0, |reg| reg.weight(sch.tenant));
+            reward -= r.p_deadline * weight;
+        }
+        reward
     }
 
     /// Can any queued task currently be gang-scheduled?
     pub fn any_feasible(&self) -> bool {
         self.queue
+            .items()
             .iter()
             .take(self.cfg.queue_window)
             .any(|t| !matches!(self.cluster.select(t.model, t.patches), Selection::Infeasible))
@@ -530,6 +601,8 @@ impl EdgeEnv {
                 infeasible_actions: self.infeasible,
                 avg_steps_chosen: 0.0,
                 efficiency: 0.0,
+                dropped_tasks: self.dropped_count,
+                tenant_reports: self.metrics.tenant_reports(),
             };
         }
         let n = self.scheduled_count as f64;
@@ -551,6 +624,8 @@ impl EdgeEnv {
             infeasible_actions: self.infeasible,
             avg_steps_chosen: self.sum_steps_chosen / n,
             efficiency: self.sum_efficiency / n,
+            dropped_tasks: self.dropped_count,
+            tenant_reports: self.metrics.tenant_reports(),
         }
     }
 }
@@ -788,6 +863,155 @@ mod tests {
         assert_eq!(streamed.avg_quality, materialised.avg_quality);
     }
 
+    fn tenant_cfg(total_rate: f64) -> EnvConfig {
+        use crate::qos::TenantsConfig;
+        let mut cfg = ExperimentConfig::preset_8node(0.1).env;
+        cfg.tenants = Some(TenantsConfig::three_tier(total_rate));
+        cfg.tasks_per_episode = 48;
+        cfg
+    }
+
+    #[test]
+    fn tenant_episode_reports_per_tenant_metrics() {
+        let mut e = EdgeEnv::new(tenant_cfg(0.3), 31);
+        let l = e.cfg.queue_window;
+        loop {
+            if e.step(&schedule_action(l, 0, 0.5)).done {
+                break;
+            }
+        }
+        let rep = e.report();
+        assert!(rep.completed_tasks > 0);
+        assert_eq!(rep.tenant_reports.len(), 3);
+        let offered: u64 = rep.tenant_reports.iter().map(|t| t.offered).sum();
+        let completed: u64 = rep.tenant_reports.iter().map(|t| t.completed).sum();
+        assert!(offered > 0);
+        assert_eq!(completed as usize, rep.completed_tasks);
+        for t in &rep.tenant_reports {
+            assert!((0.0..=1.0).contains(&t.slo_attainment), "{}: {}", t.name, t.slo_attainment);
+            assert!((0.0..=1.0).contains(&t.drop_rate));
+        }
+    }
+
+    #[test]
+    fn drop_tail_sheds_load_and_episode_still_terminates() {
+        use crate::qos::AdmissionConfig;
+        let mut cfg = tenant_cfg(2.0); // ~7 arrivals/s: massive overload
+        if let Some(t) = &mut cfg.tenants {
+            t.admission = AdmissionConfig::DropTail { max_queue: 4 };
+        }
+        cfg.tasks_per_episode = 40;
+        let mut e = EdgeEnv::new(cfg, 32);
+        let l = e.cfg.queue_window;
+        let mut done = false;
+        for _ in 0..e.cfg.step_limit + 1 {
+            if e.step(&schedule_action(l, 0, 0.5)).done {
+                done = true;
+                break;
+            }
+        }
+        assert!(done);
+        let rep = e.report();
+        assert!(rep.dropped_tasks > 0, "overload with a 4-slot queue must shed");
+        assert!(rep.completed_tasks + rep.dropped_tasks <= rep.total_tasks);
+        assert!(e.queue().len() <= 4, "queue exceeded its bound: {}", e.queue().len());
+        let dropped: u64 = rep.tenant_reports.iter().map(|t| t.dropped).sum();
+        assert_eq!(dropped as usize, rep.dropped_tasks);
+    }
+
+    #[test]
+    fn qos_queue_surfaces_premium_ahead_of_backlog() {
+        // Under overload the visible window (EDF/WFQ order) must show
+        // premium-tier tasks ahead of batch tasks that arrived earlier.
+        let mut e = EdgeEnv::new(tenant_cfg(2.0), 33);
+        let l = e.cfg.queue_window;
+        // Build a backlog without scheduling anything.
+        for _ in 0..200 {
+            if e.step(&Action::noop(l)).done {
+                break;
+            }
+        }
+        let q = e.queue();
+        assert!(q.len() > l, "need a backlog for the test to bite");
+        // Count premium tasks among the visible slots vs the whole queue:
+        // the weighted queue must over-represent premium at the head.
+        let premium_visible = q.iter().take(l).filter(|t| t.tenant == Some(0)).count();
+        let premium_total = q.iter().filter(|t| t.tenant == Some(0)).count();
+        let visible_share = premium_visible as f64 / l as f64;
+        let overall_share = premium_total as f64 / q.len() as f64;
+        assert!(
+            visible_share >= overall_share,
+            "premium visible share {visible_share} < overall {overall_share}"
+        );
+        // EDF within the visible window: premium tasks appear in deadline
+        // order.
+        let mut last = f64::NEG_INFINITY;
+        for t in q.iter().take(l).filter(|t| t.tenant == Some(0)) {
+            let d = t.deadline.expect("tenant tasks carry deadlines");
+            assert!(d >= last);
+            last = d;
+        }
+    }
+
+    #[test]
+    fn deadline_misses_penalise_reward_by_weight() {
+        // Same scheduled outcome, one with a met deadline and one missed:
+        // the missed one must earn strictly less reward.
+        let cfg = tenant_cfg(0.3);
+        let mut e = EdgeEnv::new(cfg, 34);
+        let l = e.cfg.queue_window;
+        while e.queue().is_empty() {
+            e.step(&Action::noop(l));
+        }
+        // Run two clones: one schedules now (meets the 120 s budget), one
+        // waits far past every queued deadline first.
+        let mut prompt_env = e.clone();
+        let now_reward = prompt_env.step(&schedule_action(l, 0, 0.5)).reward;
+        let mut late_env = e.clone();
+        for _ in 0..200 {
+            late_env.step(&Action::noop(l));
+            if late_env.now() > 300.0 {
+                break;
+            }
+        }
+        if late_env.queue().is_empty() {
+            return; // everything arrived and nothing queued: nothing to miss
+        }
+        let late_out = late_env.step(&schedule_action(l, 0, 0.5));
+        if let Some(sch) = &late_out.scheduled {
+            assert_eq!(sch.deadline_met, Some(false));
+            assert!(
+                late_out.reward < now_reward,
+                "missed-deadline reward {} should trail met-deadline {}",
+                late_out.reward,
+                now_reward
+            );
+        }
+    }
+
+    #[test]
+    fn flash_scenario_bounds_its_queue() {
+        use crate::workload::WorkloadConfig;
+        // The flash preset now ships a drop-tail admission default: under
+        // its 6x spike the pending queue must stay within the bound.
+        let mut cfg = ExperimentConfig::preset_8node(0.1).env;
+        cfg.workload = Some(WorkloadConfig::preset("flash", 0.1).unwrap());
+        cfg.tasks_per_episode = 96;
+        let mut e = EdgeEnv::new(cfg, 35);
+        let l = e.cfg.queue_window;
+        let mut max_queue = 0usize;
+        loop {
+            max_queue = max_queue.max(e.queue().len());
+            if e.step(&Action::noop(l)).done {
+                break;
+            }
+        }
+        assert!(max_queue <= 16, "flash queue grew to {max_queue}");
+        let rep = e.report();
+        assert!(rep.dropped_tasks > 0, "the spike must shed load");
+        assert_eq!(rep.completed_tasks + rep.dropped_tasks, rep.total_tasks - e.queue().len());
+    }
+
     #[test]
     fn per_task_quality_demand_drives_below_min_accounting() {
         use crate::workload::{ModelMix, QualityDemand, WorkloadConfig};
@@ -798,6 +1022,7 @@ mod tests {
             arrival: crate::workload::ArrivalConfig::Poisson { rate: 0.1 },
             model_mix: ModelMix::Uniform,
             quality_demand: QualityDemand::Uniform { lo: 0.9, hi: 0.95 },
+            admission: crate::qos::AdmissionConfig::AdmitAll,
         });
         cfg.tasks_per_episode = 8;
         let mut e = EdgeEnv::new(cfg, 22);

@@ -33,6 +33,12 @@ pub struct Task {
     /// Per-task minimum quality demand; `None` falls back to the
     /// episode-wide `RewardConfig::q_min`.
     pub q_min: Option<f64>,
+    /// Index into the episode's tenant registry (`EnvConfig::tenants`);
+    /// `None` for single-tenant workloads.
+    pub tenant: Option<u32>,
+    /// Absolute response deadline (arrival + the tenant's latency SLO
+    /// budget); drives EDF ordering and SLO-attainment accounting.
+    pub deadline: Option<f64>,
 }
 
 /// Stream of tasks for one episode, pre-generated from the arrival process
@@ -50,6 +56,10 @@ impl Workload {
     /// the seed implementation. With a scenario configured, that
     /// scenario's arrival process and task mix drive generation instead.
     pub fn generate(cfg: &EnvConfig, rng: &mut Pcg64) -> Workload {
+        if let Some(tenants) = &cfg.tenants {
+            let reg = crate::qos::TenantRegistry::new(tenants);
+            return crate::qos::generate_workload(cfg, &reg, cfg.tasks_per_episode, rng);
+        }
         let (mut arrival, mix) = crate::workload::build_for_env(cfg);
         crate::workload::generate(arrival.as_mut(), &mix, cfg.tasks_per_episode, rng)
     }
@@ -72,6 +82,8 @@ impl Workload {
                 model: ModelType(model),
                 arrival: t,
                 q_min: None,
+                tenant: None,
+                deadline: None,
             })
             .collect();
         Workload { tasks }

@@ -212,6 +212,147 @@ mod workload_props {
     }
 }
 
+/// QoS-subsystem properties: the invariants the deadline-aware queue,
+/// admission controllers, and tenant configs must hold for any parameters.
+#[cfg(test)]
+mod qos_props {
+    use super::check;
+    use crate::qos::{
+        AdmissionConfig, AdmissionState, EdfWfqQueue, QueueDiscipline, TenantsConfig,
+    };
+    use crate::sim::task::{ModelType, Task};
+    use crate::workload::{ArrivalConfig, ModelMix};
+
+    fn task(id: u64, deadline: Option<f64>) -> Task {
+        Task {
+            id,
+            prompt_id: id,
+            patches: 2,
+            model: ModelType(0),
+            arrival: 0.0,
+            q_min: None,
+            tenant: None,
+            deadline,
+        }
+    }
+
+    #[test]
+    fn edf_order_never_inverts_within_a_tier() {
+        // Under arbitrary interleavings of pushes, pops, and mid-queue
+        // removals, the dequeue order restricted to any single tier is
+        // always sorted by (deadline, insertion seq) — an earlier deadline
+        // is never behind a later one.
+        check("edf within tier", 40, |g| {
+            let tiers = g.usize_in(1, 5);
+            let weights: Vec<f64> = (0..tiers).map(|_| g.f64_in(0.5, 8.0)).collect();
+            let mut q = EdfWfqQueue::new(weights);
+            let mut next_id = 0u64;
+            for _ in 0..g.usize_in(10, 120) {
+                if !q.is_empty() && g.bool() && g.bool() {
+                    let n = g.usize_in(0, q.len());
+                    assert!(q.remove_nth(n).is_some());
+                } else {
+                    let deadline = if g.bool() {
+                        Some(g.f64_in(0.0, 500.0))
+                    } else {
+                        None
+                    };
+                    q.push(g.usize_in(0, tiers), task(next_id, deadline));
+                    next_id += 1;
+                }
+                let mut last = vec![(0u64, 0u64); tiers];
+                for (tier, key) in q.order(q.len()) {
+                    assert!(
+                        key >= last[tier],
+                        "tier {tier}: key {key:?} after {:?}",
+                        last[tier]
+                    );
+                    last[tier] = key;
+                }
+            }
+            // Drain fully: pop must yield exactly len() tasks.
+            let expect = q.len();
+            let mut drained = 0;
+            while q.pop().is_some() {
+                drained += 1;
+            }
+            assert_eq!(drained, expect);
+        });
+    }
+
+    #[test]
+    fn token_bucket_admission_rate_converges() {
+        // Saturating arrivals: the admitted count over a long horizon
+        // converges to burst + rate × horizon, i.e. the admitted *rate*
+        // converges to the bucket rate.
+        check("token bucket rate", 25, |g| {
+            let rate = g.f64_in(0.2, 2.0);
+            let burst = g.f64_in(1.0, 10.0);
+            let mut st = AdmissionState::new(AdmissionConfig::TokenBucket { rate, burst }, None);
+            let horizon = 2_000.0;
+            // Arrivals 2.5x-20x faster than the refill rate.
+            let gap = g.f64_in(0.05, 0.4) / rate;
+            let mut now = 0.0;
+            let mut admitted = 0u64;
+            while now < horizon {
+                if st.admit(None, now, 0) {
+                    admitted += 1;
+                }
+                now += gap;
+            }
+            let expect = burst.floor() + rate * horizon;
+            let err = (admitted as f64 - expect).abs() / expect;
+            assert!(err < 0.05, "admitted {admitted} vs expected {expect:.0} (err {err:.3})");
+        });
+    }
+
+    #[test]
+    fn tenant_config_json_roundtrips_for_random_configs() {
+        check("tenants json roundtrip", 30, |g| {
+            let n = g.usize_in(1, 5);
+            let tenants = (0..n)
+                .map(|i| crate::qos::TenantConfig {
+                    name: format!("tenant-{i}"),
+                    tier: g.usize_in(0, 4) as u8,
+                    weight: g.f64_in(0.1, 8.0),
+                    latency_slo: g.f64_in(10.0, 500.0),
+                    q_min: g.f64_in(0.05, 0.27),
+                    arrival: ArrivalConfig::Poisson {
+                        rate: g.f64_in(0.01, 0.5),
+                    },
+                    model_mix: if g.bool() {
+                        ModelMix::Uniform
+                    } else {
+                        ModelMix::Zipf {
+                            exponent: g.f64_in(0.5, 2.0),
+                        }
+                    },
+                })
+                .collect();
+            let cfg = TenantsConfig {
+                tenants,
+                admission: match g.usize_in(0, 3) {
+                    0 => AdmissionConfig::AdmitAll,
+                    1 => AdmissionConfig::DropTail {
+                        max_queue: g.usize_in(1, 128),
+                    },
+                    _ => AdmissionConfig::TokenBucket {
+                        rate: g.f64_in(0.01, 1.0),
+                        burst: g.f64_in(1.0, 16.0),
+                    },
+                },
+                queue: if g.bool() {
+                    QueueDiscipline::EdfWfq
+                } else {
+                    QueueDiscipline::Fifo
+                },
+            };
+            let back = TenantsConfig::from_json(&cfg.to_json()).unwrap();
+            assert_eq!(back, cfg);
+        });
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -1,0 +1,306 @@
+//! CSV → JSONL trace importer: map real request logs onto workload trace
+//! records (`eat trace import <csv> <out.jsonl>`).
+//!
+//! The first non-empty line is a header naming the columns (case
+//! insensitive, common aliases accepted); fields are comma separated and
+//! trimmed (no quoting — request logs exported for the simulator carry
+//! only numeric/identifier columns). Recognised columns:
+//!
+//! | column | aliases | default |
+//! |---|---|---|
+//! | `arrival` (required) | `arrival_time`, `timestamp`, `time`, `t` | — |
+//! | `patches` | `gang`, `workers`, `cooperate` | 1 |
+//! | `model` | `model_id`, `service`, `checkpoint` | 0 |
+//! | `q_min` | `qmin`, `quality_min` | none |
+//! | `tenant` | `tenant_id`, `class` | none |
+//! | `deadline` | `deadline_at` | none (absolute instant) |
+//! | `slo` | `latency_slo`, `deadline_rel` | none (budget: deadline = arrival + slo) |
+//! | `id` | `task_id` | row order |
+//! | `prompt_id` | — | = id |
+//! | `prompt` | — | hashed (FNV-1a) into `prompt_id` |
+//!
+//! Rows may arrive out of order; the importer normalises them through
+//! `Workload::from_tasks` (stable sort by arrival), after which a written
+//! trace round-trips bit-exactly through `workload::trace`.
+
+use crate::sim::task::{ModelType, Task, Workload};
+
+/// FNV-1a over the prompt text: deterministic prompt ids for logs that
+/// carry free-text prompts instead of numeric ids.
+fn fnv1a(text: &str) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in text.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+struct Columns {
+    arrival: usize,
+    patches: Option<usize>,
+    model: Option<usize>,
+    q_min: Option<usize>,
+    tenant: Option<usize>,
+    deadline: Option<usize>,
+    slo: Option<usize>,
+    id: Option<usize>,
+    prompt_id: Option<usize>,
+    prompt: Option<usize>,
+}
+
+impl Columns {
+    fn from_header(header: &str) -> anyhow::Result<Columns> {
+        let cols: Vec<String> = header
+            .split(',')
+            .map(|c| c.trim().to_ascii_lowercase())
+            .collect();
+        let find = |names: &[&str]| cols.iter().position(|c| names.contains(&c.as_str()));
+        let arrival = find(&["arrival", "arrival_time", "timestamp", "time", "t"])
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "csv header has no arrival column (looked for arrival/arrival_time/\
+                     timestamp/time/t in: {header})"
+                )
+            })?;
+        Ok(Columns {
+            arrival,
+            patches: find(&["patches", "gang", "workers", "cooperate"]),
+            model: find(&["model", "model_id", "service", "checkpoint"]),
+            q_min: find(&["q_min", "qmin", "quality_min"]),
+            tenant: find(&["tenant", "tenant_id", "class"]),
+            deadline: find(&["deadline", "deadline_at"]),
+            slo: find(&["slo", "latency_slo", "deadline_rel"]),
+            id: find(&["id", "task_id"]),
+            prompt_id: find(&["prompt_id"]),
+            prompt: find(&["prompt"]),
+        })
+    }
+}
+
+/// Non-empty field at `col`, if any.
+fn field<'a>(fields: &[&'a str], col: Option<usize>) -> Option<&'a str> {
+    fields
+        .get(col?)
+        .copied()
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+}
+
+/// Required numeric field with line context in errors.
+fn req_num(fields: &[&str], col: usize, what: &str, lineno: usize) -> anyhow::Result<f64> {
+    let s = field(fields, Some(col))
+        .ok_or_else(|| anyhow::anyhow!("csv line {lineno}: missing '{what}' field"))?;
+    s.parse::<f64>()
+        .map_err(|e| anyhow::anyhow!("csv line {lineno}: bad '{what}': {e}"))
+}
+
+/// Optional numeric field with line context in errors.
+fn opt_num(
+    fields: &[&str],
+    col: Option<usize>,
+    what: &str,
+    lineno: usize,
+) -> anyhow::Result<Option<f64>> {
+    match field(fields, col) {
+        None => Ok(None),
+        Some(s) => s
+            .parse::<f64>()
+            .map(Some)
+            .map_err(|e| anyhow::anyhow!("csv line {lineno}: bad '{what}': {e}")),
+    }
+}
+
+/// Parse a CSV request log into a workload (sorted by arrival).
+pub fn parse_csv(text: &str) -> anyhow::Result<Workload> {
+    let mut rows = text
+        .lines()
+        .enumerate()
+        .filter(|(_, l)| !l.trim().is_empty());
+    let (_, header) = rows
+        .next()
+        .ok_or_else(|| anyhow::anyhow!("csv is empty"))?;
+    let cols = Columns::from_header(header)?;
+
+    let mut tasks = Vec::new();
+    for (idx, line) in rows {
+        let lineno = idx + 1;
+        let fields: Vec<&str> = line.split(',').map(str::trim).collect();
+
+        let arrival = req_num(&fields, cols.arrival, "arrival", lineno)?;
+        anyhow::ensure!(
+            arrival.is_finite() && arrival >= 0.0,
+            "csv line {lineno}: arrival {arrival} must be finite and non-negative"
+        );
+        let patches = match opt_num(&fields, cols.patches, "patches", lineno)? {
+            Some(p) => p as usize,
+            None => 1,
+        };
+        anyhow::ensure!(
+            matches!(patches, 1 | 2 | 4 | 8),
+            "csv line {lineno}: patches must be one of 1/2/4/8, got {patches}"
+        );
+        let model = opt_num(&fields, cols.model, "model", lineno)?.map_or(0, |m| m as u32);
+        let q_min = match opt_num(&fields, cols.q_min, "q_min", lineno)? {
+            Some(q) => {
+                anyhow::ensure!(
+                    q.is_finite() && q > 0.0,
+                    "csv line {lineno}: q_min {q} must be positive"
+                );
+                Some(q)
+            }
+            None => None,
+        };
+        let tenant = match field(&fields, cols.tenant) {
+            Some(s) => Some(
+                s.parse::<u32>()
+                    .map_err(|e| anyhow::anyhow!("csv line {lineno}: bad 'tenant': {e}"))?,
+            ),
+            None => None,
+        };
+        // Absolute deadline wins over a relative SLO budget.
+        let deadline = match (
+            opt_num(&fields, cols.deadline, "deadline", lineno)?,
+            opt_num(&fields, cols.slo, "slo", lineno)?,
+        ) {
+            (Some(d), _) => {
+                anyhow::ensure!(
+                    d.is_finite() && d >= arrival,
+                    "csv line {lineno}: deadline {d} precedes arrival {arrival}"
+                );
+                Some(d)
+            }
+            (None, Some(slo)) => {
+                anyhow::ensure!(
+                    slo.is_finite() && slo > 0.0,
+                    "csv line {lineno}: slo {slo} must be positive"
+                );
+                Some(arrival + slo)
+            }
+            (None, None) => None,
+        };
+        let id = match opt_num(&fields, cols.id, "id", lineno)? {
+            Some(i) => i as u64,
+            None => tasks.len() as u64,
+        };
+        let prompt_id = match (field(&fields, cols.prompt_id), field(&fields, cols.prompt)) {
+            (Some(s), _) => s
+                .parse::<u64>()
+                .map_err(|e| anyhow::anyhow!("csv line {lineno}: bad 'prompt_id': {e}"))?,
+            (None, Some(p)) => fnv1a(p),
+            (None, None) => id,
+        };
+        tasks.push(Task {
+            id,
+            prompt_id,
+            patches,
+            model: ModelType(model),
+            arrival,
+            q_min,
+            tenant,
+            deadline,
+        });
+    }
+    anyhow::ensure!(!tasks.is_empty(), "csv contains a header but no task rows");
+    Ok(Workload::from_tasks(tasks))
+}
+
+/// Import a CSV request log and write it as a JSONL workload trace.
+/// Returns the number of imported tasks.
+pub fn import_file(csv_path: &str, out_path: &str) -> anyhow::Result<usize> {
+    let text = std::fs::read_to_string(csv_path)
+        .map_err(|e| anyhow::anyhow!("read csv '{csv_path}': {e}"))?;
+    let w = parse_csv(&text)?;
+    super::trace::write_file(&w, out_path)?;
+    Ok(w.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::trace;
+
+    const SAMPLE: &str = "\
+arrival,patches,model,tenant,slo,q_min,prompt
+0.5,2,1,0,60,0.24,a lighthouse at dawn
+12.25,4,0,1,120,0.2,red panda portrait
+3.0,1,2,,,,plain prompt
+";
+
+    #[test]
+    fn csv_imports_sorts_and_maps_columns() {
+        let w = parse_csv(SAMPLE).unwrap();
+        assert_eq!(w.len(), 3);
+        assert!(w.is_sorted());
+        // Row at t=3.0 sorted between the others.
+        assert_eq!(w.tasks[0].arrival, 0.5);
+        assert_eq!(w.tasks[1].arrival, 3.0);
+        assert_eq!(w.tasks[2].arrival, 12.25);
+        let first = &w.tasks[0];
+        assert_eq!(first.patches, 2);
+        assert_eq!(first.model.0, 1);
+        assert_eq!(first.tenant, Some(0));
+        assert_eq!(first.deadline, Some(60.5));
+        assert_eq!(first.q_min, Some(0.24));
+        assert_eq!(first.prompt_id, fnv1a("a lighthouse at dawn"));
+        let bare = &w.tasks[1];
+        assert_eq!(bare.tenant, None);
+        assert_eq!(bare.deadline, None);
+        assert_eq!(bare.q_min, None);
+    }
+
+    #[test]
+    fn csv_roundtrips_through_jsonl_trace() {
+        let w = parse_csv(SAMPLE).unwrap();
+        let back = trace::from_jsonl(&trace::to_jsonl(&w)).unwrap();
+        assert_eq!(w.len(), back.len());
+        for (a, b) in w.tasks.iter().zip(&back.tasks) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.prompt_id, b.prompt_id);
+            assert_eq!(a.patches, b.patches);
+            assert_eq!(a.model, b.model);
+            assert_eq!(a.arrival.to_bits(), b.arrival.to_bits());
+            assert_eq!(a.q_min.map(f64::to_bits), b.q_min.map(f64::to_bits));
+            assert_eq!(a.tenant, b.tenant);
+            assert_eq!(a.deadline.map(f64::to_bits), b.deadline.map(f64::to_bits));
+        }
+    }
+
+    #[test]
+    fn file_import_roundtrip() {
+        let dir = std::env::temp_dir().join("eat_import_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let csv = dir.join("log.csv");
+        let out = dir.join("log.jsonl");
+        std::fs::write(&csv, SAMPLE).unwrap();
+        let n = import_file(csv.to_str().unwrap(), out.to_str().unwrap()).unwrap();
+        assert_eq!(n, 3);
+        let replayed = trace::read_file(out.to_str().unwrap()).unwrap();
+        assert_eq!(replayed.len(), 3);
+        assert!(replayed.is_sorted());
+        std::fs::remove_file(&csv).ok();
+        std::fs::remove_file(&out).ok();
+    }
+
+    #[test]
+    fn header_aliases_and_defaults() {
+        let w = parse_csv("timestamp\n1.0\n2.0\n").unwrap();
+        assert_eq!(w.len(), 2);
+        assert_eq!(w.tasks[0].patches, 1);
+        assert_eq!(w.tasks[0].model.0, 0);
+        assert_eq!(w.tasks[0].prompt_id, w.tasks[0].id);
+    }
+
+    #[test]
+    fn bad_rows_carry_line_numbers() {
+        let err = parse_csv("arrival\nnot-a-number\n").unwrap_err().to_string();
+        assert!(err.contains("line 2"), "{err}");
+        let err = parse_csv("arrival,patches\n1.0,3\n").unwrap_err().to_string();
+        assert!(err.contains("patches"), "{err}");
+        let err = parse_csv("arrival,deadline\n5.0,1.0\n").unwrap_err().to_string();
+        assert!(err.contains("precedes"), "{err}");
+        assert!(parse_csv("nope\n1.0\n").is_err());
+        assert!(parse_csv("").is_err());
+        assert!(parse_csv("arrival\n").is_err());
+    }
+}

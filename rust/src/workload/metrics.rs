@@ -141,9 +141,72 @@ impl LatencyHistogram {
     }
 }
 
+/// Per-tenant streaming statistics: a latency histogram plus the QoS
+/// counters SLO attainment and drop rate derive from.
+#[derive(Clone, Debug)]
+pub struct TenantStats {
+    pub name: String,
+    pub tier: u8,
+    pub weight: f64,
+    pub latency: LatencyHistogram,
+    /// Tasks that arrived (admitted or not).
+    pub offered: u64,
+    /// Tasks rejected by admission control.
+    pub dropped: u64,
+    /// Tasks scheduled to completion.
+    pub completed: u64,
+    /// Completed tasks whose response met their deadline.
+    pub slo_met: u64,
+}
+
+impl TenantStats {
+    fn new(name: &str, tier: u8, weight: f64) -> Self {
+        TenantStats {
+            name: name.to_string(),
+            tier,
+            weight,
+            latency: LatencyHistogram::default_latency(),
+            offered: 0,
+            dropped: 0,
+            completed: 0,
+            slo_met: 0,
+        }
+    }
+
+    fn merge(&mut self, other: &TenantStats) {
+        self.latency.merge(&other.latency);
+        self.offered += other.offered;
+        self.dropped += other.dropped;
+        self.completed += other.completed;
+        self.slo_met += other.slo_met;
+    }
+}
+
+/// Derived per-tenant QoS summary (per episode and pooled across
+/// episodes): SLO attainment counts dropped and never-scheduled tasks as
+/// misses, so shedding a tenant's load cannot inflate its attainment.
+#[derive(Clone, Debug)]
+pub struct TenantReport {
+    pub name: String,
+    pub tier: u8,
+    pub weight: f64,
+    pub offered: u64,
+    pub completed: u64,
+    pub dropped: u64,
+    pub slo_met: u64,
+    /// slo_met / offered (0 when nothing was offered).
+    pub slo_attainment: f64,
+    /// dropped / offered (0 when nothing was offered).
+    pub drop_rate: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+}
+
 /// Streaming collector fed by the simulator (`EdgeEnv`) and the serving
-/// host: response/waiting latency histograms, per-server busy time, and
-/// model-reload counters.
+/// host: response/waiting latency histograms, per-server busy time,
+/// model-reload counters, admission-drop/deferral counters, and (when a
+/// tenant registry is configured) per-tenant QoS statistics.
 #[derive(Clone, Debug)]
 pub struct MetricsCollector {
     pub latency: LatencyHistogram,
@@ -152,6 +215,10 @@ pub struct MetricsCollector {
     sim_time: f64,
     reloads: u64,
     completed: u64,
+    offered: u64,
+    admission_dropped: u64,
+    deferred: u64,
+    tenants: Vec<TenantStats>,
 }
 
 impl MetricsCollector {
@@ -163,7 +230,24 @@ impl MetricsCollector {
             sim_time: 0.0,
             reloads: 0,
             completed: 0,
+            offered: 0,
+            admission_dropped: 0,
+            deferred: 0,
+            tenants: Vec::new(),
         }
+    }
+
+    /// A collector with per-tenant statistics enabled for every tenant in
+    /// the registry. Collectors merge only with same-shaped collectors.
+    pub fn with_tenants(num_servers: usize, registry: &crate::qos::TenantRegistry) -> Self {
+        let mut m = Self::new(num_servers);
+        m.tenants = (0..registry.num_tenants())
+            .map(|i| {
+                let t = registry.tenant(i);
+                TenantStats::new(&t.name, t.tier, t.weight)
+            })
+            .collect();
+        m
     }
 
     /// Record one completed (scheduled) task.
@@ -174,6 +258,88 @@ impl MetricsCollector {
         if reloaded {
             self.reloads += 1;
         }
+    }
+
+    fn tenant_mut(&mut self, tenant: Option<u32>) -> Option<&mut TenantStats> {
+        self.tenants.get_mut(tenant? as usize)
+    }
+
+    /// Record one arrival (before the admission decision).
+    pub fn observe_offered(&mut self, tenant: Option<u32>) {
+        self.offered += 1;
+        if let Some(t) = self.tenant_mut(tenant) {
+            t.offered += 1;
+        }
+    }
+
+    /// Record one arrival rejected by admission control.
+    pub fn observe_drop(&mut self, tenant: Option<u32>) {
+        self.admission_dropped += 1;
+        if let Some(t) = self.tenant_mut(tenant) {
+            t.dropped += 1;
+        }
+    }
+
+    /// Record one dispatch skipped as infeasible (deferred, not vanished).
+    pub fn observe_deferred(&mut self) {
+        self.deferred += 1;
+    }
+
+    /// Record a completed task against its tenant's SLO. `deadline_met` is
+    /// `None` for tasks without a deadline (counted as met).
+    pub fn observe_tenant_task(
+        &mut self,
+        tenant: Option<u32>,
+        response: f64,
+        deadline_met: Option<bool>,
+    ) {
+        if let Some(t) = self.tenant_mut(tenant) {
+            t.completed += 1;
+            t.latency.observe(response);
+            if deadline_met.unwrap_or(true) {
+                t.slo_met += 1;
+            }
+        }
+    }
+
+    pub fn offered(&self) -> u64 {
+        self.offered
+    }
+
+    pub fn admission_dropped(&self) -> u64 {
+        self.admission_dropped
+    }
+
+    pub fn deferred(&self) -> u64 {
+        self.deferred
+    }
+
+    pub fn tenant_stats(&self) -> &[TenantStats] {
+        &self.tenants
+    }
+
+    /// Derived per-tenant QoS reports (empty unless tenants are enabled).
+    pub fn tenant_reports(&self) -> Vec<TenantReport> {
+        self.tenants
+            .iter()
+            .map(|t| {
+                let offered = t.offered.max(1) as f64;
+                TenantReport {
+                    name: t.name.clone(),
+                    tier: t.tier,
+                    weight: t.weight,
+                    offered: t.offered,
+                    completed: t.completed,
+                    dropped: t.dropped,
+                    slo_met: t.slo_met,
+                    slo_attainment: t.slo_met as f64 / offered,
+                    drop_rate: t.dropped as f64 / offered,
+                    p50: t.latency.p50(),
+                    p90: t.latency.p90(),
+                    p99: t.latency.p99(),
+                }
+            })
+            .collect()
     }
 
     /// Credit `dt` seconds of busy time to one server.
@@ -223,6 +389,7 @@ impl MetricsCollector {
     /// Merge a same-shape collector (cross-episode aggregation).
     pub fn merge(&mut self, other: &MetricsCollector) {
         assert_eq!(self.busy.len(), other.busy.len(), "server count mismatch");
+        assert_eq!(self.tenants.len(), other.tenants.len(), "tenant shape mismatch");
         self.latency.merge(&other.latency);
         self.waiting.merge(&other.waiting);
         for (a, b) in self.busy.iter_mut().zip(&other.busy) {
@@ -231,18 +398,27 @@ impl MetricsCollector {
         self.sim_time += other.sim_time;
         self.reloads += other.reloads;
         self.completed += other.completed;
+        self.offered += other.offered;
+        self.admission_dropped += other.admission_dropped;
+        self.deferred += other.deferred;
+        for (a, b) in self.tenants.iter_mut().zip(&other.tenants) {
+            a.merge(b);
+        }
     }
 
     /// One-line human summary (serving CLI and scenario sweep footer).
     pub fn summary_line(&self) -> String {
         format!(
-            "completed {}  p50 {:.1}s  p90 {:.1}s  p99 {:.1}s  util {:.3}  reloads {}",
+            "completed {}  p50 {:.1}s  p90 {:.1}s  p99 {:.1}s  util {:.3}  reloads {}  \
+             dropped {}  deferred {}",
             self.completed,
             self.latency.p50(),
             self.latency.p90(),
             self.latency.p99(),
             self.avg_utilization(),
-            self.reloads
+            self.reloads,
+            self.admission_dropped,
+            self.deferred
         )
     }
 }
@@ -344,6 +520,61 @@ mod tests {
         assert_eq!(m.completed(), 2);
         assert_eq!(m.reloads(), 1);
         assert!(m.summary_line().contains("completed 2"));
+    }
+
+    #[test]
+    fn tenant_stats_attainment_and_drop_rate() {
+        use crate::qos::{TenantRegistry, TenantsConfig};
+        let reg = TenantRegistry::new(&TenantsConfig::three_tier(0.3));
+        let mut m = MetricsCollector::with_tenants(2, &reg);
+        // Premium: 3 offered, 2 completed in-SLO, 1 dropped.
+        for _ in 0..3 {
+            m.observe_offered(Some(0));
+        }
+        m.observe_drop(Some(0));
+        m.observe_tenant_task(Some(0), 10.0, Some(true));
+        m.observe_tenant_task(Some(0), 50.0, Some(true));
+        // Batch: 2 offered, 1 completed late.
+        m.observe_offered(Some(2));
+        m.observe_offered(Some(2));
+        m.observe_tenant_task(Some(2), 400.0, Some(false));
+        // Untenanted observations only touch the global counters.
+        m.observe_offered(None);
+        m.observe_drop(None);
+        m.observe_deferred();
+        let reports = m.tenant_reports();
+        assert_eq!(reports.len(), 3);
+        let premium = &reports[0];
+        assert_eq!(premium.name, "premium");
+        assert_eq!(premium.offered, 3);
+        assert!((premium.slo_attainment - 2.0 / 3.0).abs() < 1e-12);
+        assert!((premium.drop_rate - 1.0 / 3.0).abs() < 1e-12);
+        let batch = &reports[2];
+        assert_eq!(batch.completed, 1);
+        assert_eq!(batch.slo_met, 0);
+        assert_eq!(batch.slo_attainment, 0.0);
+        assert_eq!(m.offered(), 6);
+        assert_eq!(m.admission_dropped(), 2);
+        assert_eq!(m.deferred(), 1);
+        assert!(m.summary_line().contains("deferred 1"));
+
+        // Merging doubles every tenant counter.
+        let other = m.clone();
+        m.merge(&other);
+        let reports = m.tenant_reports();
+        assert_eq!(reports[0].offered, 6);
+        assert_eq!(reports[0].slo_met, 4);
+        assert!((reports[0].slo_attainment - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn merge_rejects_tenant_shape_mismatch() {
+        use crate::qos::{TenantRegistry, TenantsConfig};
+        let reg = TenantRegistry::new(&TenantsConfig::three_tier(0.3));
+        let mut a = MetricsCollector::with_tenants(2, &reg);
+        let b = MetricsCollector::new(2);
+        a.merge(&b);
     }
 
     #[test]

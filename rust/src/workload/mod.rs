@@ -23,17 +23,19 @@
 //! seed generator draw-for-draw.
 
 pub mod arrival;
+pub mod import;
 pub mod metrics;
 pub mod mix;
 pub mod stream;
 pub mod trace;
 
 pub use arrival::ArrivalProcess;
-pub use metrics::{LatencyHistogram, MetricsCollector};
+pub use metrics::{LatencyHistogram, MetricsCollector, TenantReport, TenantStats};
 pub use mix::{MixSample, ModelMix, QualityDemand, TaskMix};
 pub use stream::{TaskSource, TaskStream};
 
 use crate::config::EnvConfig;
+use crate::qos::AdmissionConfig;
 use crate::sim::task::{Task, Workload};
 use crate::util::json::Value;
 use crate::util::rng::Pcg64;
@@ -61,6 +63,8 @@ pub fn generate(
             model: s.model,
             arrival: t,
             q_min: s.q_min,
+            tenant: None,
+            deadline: None,
         });
     }
     Workload { tasks }
@@ -109,6 +113,35 @@ pub enum ArrivalConfig {
 }
 
 impl ArrivalConfig {
+    /// The same process with every rate multiplied by `factor` (overload
+    /// sweeps); dwell times, periods and spike windows are unchanged.
+    pub fn scaled(&self, factor: f64) -> ArrivalConfig {
+        let mut out = self.clone();
+        match &mut out {
+            ArrivalConfig::Poisson { rate } | ArrivalConfig::Constant { rate } => {
+                *rate *= factor;
+            }
+            ArrivalConfig::Mmpp {
+                rate_on, rate_off, ..
+            } => {
+                *rate_on *= factor;
+                *rate_off *= factor;
+            }
+            ArrivalConfig::Diurnal { base_rate, .. } => {
+                *base_rate *= factor;
+            }
+            ArrivalConfig::FlashCrowd {
+                base_rate,
+                spike_rate,
+                ..
+            } => {
+                *base_rate *= factor;
+                *spike_rate *= factor;
+            }
+        }
+        out
+    }
+
     pub fn build(&self) -> Box<dyn ArrivalProcess> {
         match *self {
             ArrivalConfig::Poisson { rate } => Box::new(arrival::Poisson { rate }),
@@ -277,7 +310,7 @@ impl ArrivalConfig {
     }
 }
 
-fn model_mix_to_json(m: &ModelMix) -> Value {
+pub(crate) fn model_mix_to_json(m: &ModelMix) -> Value {
     let mut v = Value::obj();
     match m {
         ModelMix::Uniform => {
@@ -295,7 +328,7 @@ fn model_mix_to_json(m: &ModelMix) -> Value {
     v
 }
 
-fn model_mix_from_json(v: &Value) -> anyhow::Result<ModelMix> {
+pub(crate) fn model_mix_from_json(v: &Value) -> anyhow::Result<ModelMix> {
     let kind = v
         .req("kind")?
         .as_str()
@@ -378,6 +411,10 @@ pub struct WorkloadConfig {
     pub arrival: ArrivalConfig,
     pub model_mix: ModelMix,
     pub quality_demand: QualityDemand,
+    /// Admission control for the pending queue (`AdmitAll` = the seed's
+    /// unbounded queue). The `flash` preset defaults to a bounded queue so
+    /// overload spikes shed load instead of backlogging forever.
+    pub admission: AdmissionConfig,
 }
 
 /// Scenario-family preset names accepted by [`WorkloadConfig::preset`].
@@ -399,6 +436,7 @@ impl WorkloadConfig {
             arrival: ArrivalConfig::Poisson { rate },
             model_mix: ModelMix::Uniform,
             quality_demand: QualityDemand::Default,
+            admission: AdmissionConfig::AdmitAll,
         }
     }
 
@@ -433,7 +471,9 @@ impl WorkloadConfig {
                 },
                 uniform,
             ),
-            // 6x overload spike in the middle of the episode.
+            // 6x overload spike in the middle of the episode. The queue is
+            // bounded (drop-tail) so reports reflect shed load rather than
+            // an unbounded backlog inflating every percentile.
             "flash" => (
                 ArrivalConfig::FlashCrowd {
                     base_rate,
@@ -476,10 +516,16 @@ impl WorkloadConfig {
                 SCENARIO_NAMES.join(", ")
             ),
         };
+        let admission = if name == "flash" {
+            AdmissionConfig::DropTail { max_queue: 16 }
+        } else {
+            AdmissionConfig::AdmitAll
+        };
         let cfg = WorkloadConfig {
             arrival,
             model_mix,
             quality_demand,
+            admission,
         };
         cfg.validate()?;
         Ok(cfg)
@@ -529,7 +575,7 @@ impl WorkloadConfig {
                 "quality tiers must be positive and finite, got strict {strict_q} lax {lax_q}"
             );
         }
-        Ok(())
+        self.admission.validate()
     }
 
     pub fn to_json(&self) -> Value {
@@ -537,6 +583,9 @@ impl WorkloadConfig {
         v.set("arrival", self.arrival.to_json())
             .set("model_mix", model_mix_to_json(&self.model_mix))
             .set("quality_demand", quality_demand_to_json(&self.quality_demand));
+        if self.admission != AdmissionConfig::AdmitAll {
+            v.set("admission", self.admission.to_json());
+        }
         v
     }
 
@@ -550,6 +599,10 @@ impl WorkloadConfig {
             quality_demand: match v.get("quality_demand") {
                 Some(q) => quality_demand_from_json(q)?,
                 None => QualityDemand::Default,
+            },
+            admission: match v.get("admission") {
+                Some(a) => AdmissionConfig::from_json(a)?,
+                None => AdmissionConfig::AdmitAll,
             },
         };
         cfg.validate()?;

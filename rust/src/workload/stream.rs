@@ -63,6 +63,8 @@ impl TaskStream {
             model: s.model,
             arrival: t,
             q_min: s.q_min,
+            tenant: None,
+            deadline: None,
         };
         self.produced += 1;
         self.lookahead = Some(task);

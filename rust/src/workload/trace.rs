@@ -26,6 +26,12 @@ fn task_to_json(t: &Task) -> Value {
     if let Some(q) = t.q_min {
         v.set("q_min", q);
     }
+    if let Some(tenant) = t.tenant {
+        v.set("tenant", tenant);
+    }
+    if let Some(d) = t.deadline {
+        v.set("deadline", d);
+    }
     v
 }
 
@@ -63,6 +69,31 @@ fn task_from_json(v: &Value) -> anyhow::Result<Task> {
             Some(q)
         }
     };
+    let tenant = match v.get("tenant") {
+        None => None,
+        Some(t) => {
+            let t = t
+                .as_f64()
+                .filter(|x| x.is_finite() && *x >= 0.0)
+                .ok_or_else(|| {
+                    anyhow::anyhow!("trace field 'tenant' must be a non-negative number")
+                })?;
+            Some(t as u32)
+        }
+    };
+    let deadline = match v.get("deadline") {
+        None => None,
+        Some(d) => {
+            let d = d
+                .as_f64()
+                .ok_or_else(|| anyhow::anyhow!("trace field 'deadline' is not a number"))?;
+            anyhow::ensure!(
+                d.is_finite() && d >= 0.0,
+                "trace deadline {d} must be finite and non-negative"
+            );
+            Some(d)
+        }
+    };
     Ok(Task {
         id: num("id")? as u64,
         prompt_id,
@@ -70,6 +101,8 @@ fn task_from_json(v: &Value) -> anyhow::Result<Task> {
         model: ModelType(num("model")? as u32),
         arrival,
         q_min,
+        tenant,
+        deadline,
     })
 }
 
@@ -160,6 +193,8 @@ mod tests {
             assert_eq!(x.model, y.model);
             assert_eq!(x.arrival.to_bits(), y.arrival.to_bits());
             assert_eq!(x.q_min.map(f64::to_bits), y.q_min.map(f64::to_bits));
+            assert_eq!(x.tenant, y.tenant);
+            assert_eq!(x.deadline.map(f64::to_bits), y.deadline.map(f64::to_bits));
         }
     }
 
@@ -200,6 +235,21 @@ mod tests {
                     \"arrival\":1.5,\"q_min\":\"0.25\"}\n";
         let err = from_jsonl(line).unwrap_err().to_string();
         assert!(err.contains("q_min"), "{err}");
+    }
+
+    #[test]
+    fn tenant_workloads_roundtrip_bit_exactly() {
+        use crate::qos::{generate_workload, TenantRegistry, TenantsConfig};
+        let cfg = EnvConfig::default();
+        let reg = TenantRegistry::new(&TenantsConfig::three_tier(0.3));
+        let w = generate_workload(&cfg, &reg, 48, &mut Pcg64::seeded(7));
+        assert!(w.tasks.iter().all(|t| t.tenant.is_some() && t.deadline.is_some()));
+        let back = from_jsonl(&to_jsonl(&w)).unwrap();
+        assert_bit_exact(&w, &back);
+        // A malformed deadline must be an error, not a silent drop.
+        let bad = "{\"id\":0,\"prompt_id\":\"1\",\"patches\":2,\"model\":0,\
+                   \"arrival\":1.5,\"deadline\":-3.0}\n";
+        assert!(from_jsonl(bad).unwrap_err().to_string().contains("deadline"));
     }
 
     #[test]
