@@ -41,7 +41,7 @@ fn main() -> anyhow::Result<()> {
         // fewer steps, reused gangs can afford full quality.
         let steps = if reuse { 25 } else { 17 };
         let out = host.dispatch(task.id, "prompt", steps, task.model.0, &gang)?;
-        tracker.dispatch(&gang, 0.0, ModelType(task.model.0), reuse);
+        tracker.dispatch(&gang, 0.0, ModelType(task.model.0), reuse, task.arrival);
         let sim_s = out.sim_exec_seconds();
         lat.push(sim_s);
         if out.any_reload() {

@@ -1,0 +1,99 @@
+//! Fault-subsystem benches: stepping the health process over a 10k-server
+//! fleet (the per-tick cost the simulator pays for churn modelling), the
+//! same fleet under heavy straggler traffic, and a full churn episode
+//! through `EdgeEnv` to keep the end-to-end overhead visible.
+//!
+//! Uses the in-repo bench harness (`util::bench`); criterion is not
+//! available in the offline registry.
+
+use std::time::Duration;
+
+use eat::config::ExperimentConfig;
+use eat::faults::{FaultModel, FaultsConfig};
+use eat::sim::env::{Action, EdgeEnv};
+use eat::util::bench::{black_box, Bencher};
+use eat::util::rng::Pcg64;
+
+const FLEET: usize = 10_000;
+const TICKS: usize = 100;
+
+fn main() {
+    let mut b = Bencher::new(Duration::from_millis(50), Duration::from_millis(800), 1_000_000);
+
+    // Pure churn: up/down Markov transitions + zone shocks across 10k
+    // servers, 100 ticks per iteration.
+    let churn = FaultsConfig {
+        mtbf: 600.0,
+        mttr: 45.0,
+        zones: 16,
+        zone_shock_rate: 0.01,
+        straggler_rate: 0.0,
+        ..FaultsConfig::default()
+    };
+    let res = b
+        .bench("fault_model_churn_10k_servers_100_ticks", || {
+            let mut m = FaultModel::stochastic(churn.clone(), FLEET, Pcg64::seeded(1));
+            let mut events = 0usize;
+            for t in 0..TICKS {
+                events += m.step(t as f64, 1.0).len();
+            }
+            black_box(events)
+        })
+        .clone();
+    println!(
+        "       -> {:.1}M server-ticks/s",
+        (FLEET * TICKS) as f64 * res.throughput_per_sec() / 1e6
+    );
+
+    // Straggler-heavy dynamics: slowdown bouts starting/ending everywhere.
+    let slow = FaultsConfig {
+        mtbf: 0.0,
+        zone_shock_rate: 0.0,
+        straggler_rate: 0.05,
+        straggler_mean_duration: 10.0,
+        ..FaultsConfig::default()
+    };
+    b.bench("fault_model_stragglers_10k_servers_100_ticks", || {
+        let mut m = FaultModel::stochastic(slow.clone(), FLEET, Pcg64::seeded(2));
+        let mut events = 0usize;
+        for t in 0..TICKS {
+            events += m.step(t as f64, 1.0).len();
+        }
+        black_box(events)
+    });
+
+    // End to end: a full churn episode through the env (kills, retries,
+    // speculation, deferred accounting) vs the fault-free baseline.
+    let mut cfg = ExperimentConfig::preset_8node(0.1).env;
+    cfg.tasks_per_episode = 48;
+    cfg.patch_choices = vec![1, 2];
+    cfg.patch_weights = vec![1.0, 1.0];
+    let run_episode = |cfg: &eat::config::EnvConfig| {
+        let mut env = EdgeEnv::new(cfg.clone(), 7);
+        let l = cfg.queue_window;
+        let mut scores = vec![-1.0f32; l];
+        scores[0] = 1.0;
+        let action = Action {
+            exec_gate: -1.0,
+            steps_raw: 0.4,
+            task_scores: scores,
+        };
+        for _ in 0..=cfg.step_limit {
+            if env.step(&action).done {
+                break;
+            }
+        }
+        env.report().completed_tasks
+    };
+    let baseline = cfg.clone();
+    b.bench("episode_8node_fault_free", || black_box(run_episode(&baseline)));
+    let mut churny = cfg.clone();
+    churny.faults = Some(FaultsConfig {
+        mtbf: 200.0,
+        mttr: 30.0,
+        ..FaultsConfig::default()
+    });
+    b.bench("episode_8node_under_churn", || black_box(run_episode(&churny)));
+
+    println!("\n{}", b.summary());
+}

@@ -24,7 +24,7 @@ fn main() {
     let mut cluster = Cluster::new(8);
     // Populate some gangs for a realistic selection workload.
     let ids: Vec<usize> = (0..4).collect();
-    cluster.dispatch(&ids, 1.0, ModelType(0), false);
+    cluster.dispatch(&ids, 1.0, ModelType(0), false, 0.0);
     cluster.advance(1.0, 1.0);
     b.bench("cluster_select_reuse_hit", || cluster.select(ModelType(0), 4));
     b.bench("cluster_select_fresh", || cluster.select(ModelType(2), 2));

@@ -5,6 +5,7 @@
 //! (simulated) clusters at arrival rates {0.01..0.09}, {0.06..0.14},
 //! {0.11..0.19} respectively (Tables IX–XI); presets here mirror those.
 
+use crate::faults::FaultsConfig;
 use crate::qos::TenantsConfig;
 use crate::util::json::{self, Value};
 use crate::workload::WorkloadConfig;
@@ -131,6 +132,26 @@ impl Default for QualityConfig {
     }
 }
 
+/// Optional extra rows of the policy state matrix (Eq. 6 ships three).
+/// Both default to off, keeping `state_len` — and with it every trained
+/// checkpoint and AOT artifact shape — exactly as before.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StateFeatures {
+    /// One extra server row: health = 1/slowdown for up servers, 0 for
+    /// down ones (queue columns zero). Lets policies route around churn.
+    pub health: bool,
+    /// Two extra queue rows: per-task deadline slack and tenant service
+    /// weight (server columns zero). Lets trained policies see the
+    /// tenancy axis the QoS subsystem introduced.
+    pub tenancy: bool,
+}
+
+impl StateFeatures {
+    pub fn extra_rows(&self) -> usize {
+        (self.health as usize) + if self.tenancy { 2 } else { 0 }
+    }
+}
+
 /// Environment (cluster + workload + episode) configuration.
 #[derive(Clone, Debug, PartialEq)]
 pub struct EnvConfig {
@@ -166,6 +187,13 @@ pub struct EnvConfig {
     /// When set it supersedes `workload`/`arrival_rate` as the task
     /// source; `None` keeps the single-tenant behaviour exactly.
     pub tenants: Option<TenantsConfig>,
+    /// Server-health dynamics (failures / zone shocks / stragglers) plus
+    /// recovery, retry, and speculation policy. `None` — or an inert
+    /// section ([`FaultsConfig::is_active`] false) — keeps the seed's
+    /// fault-free behaviour bit-identically.
+    pub faults: Option<FaultsConfig>,
+    /// Optional extra state-matrix rows (health / tenancy features).
+    pub state_features: StateFeatures,
     pub reward: RewardConfig,
     pub exec: ExecModelConfig,
     pub quality: QualityConfig,
@@ -188,6 +216,8 @@ impl Default for EnvConfig {
             decision_dt: 1.0,
             workload: None,
             tenants: None,
+            faults: None,
+            state_features: StateFeatures::default(),
             reward: RewardConfig::default(),
             exec: ExecModelConfig::default(),
             quality: QualityConfig::default(),
@@ -196,9 +226,10 @@ impl Default for EnvConfig {
 }
 
 impl EnvConfig {
-    /// State matrix dimensions (Eq. 6): 3 × (|E| + l).
+    /// State matrix dimensions (Eq. 6): 3 × (|E| + l), plus any opt-in
+    /// feature rows (health / tenancy) behind `state_features`.
     pub fn state_rows(&self) -> usize {
-        3
+        3 + self.state_features.extra_rows()
     }
     pub fn state_cols(&self) -> usize {
         self.num_servers + self.queue_window
@@ -234,6 +265,9 @@ impl EnvConfig {
         }
         if let Some(t) = &self.tenants {
             t.validate()?;
+        }
+        if let Some(f) = &self.faults {
+            f.validate()?;
         }
         Ok(())
     }
@@ -473,6 +507,15 @@ impl ExperimentConfig {
         if let Some(t) = &e.tenants {
             env.set("tenants", t.to_json());
         }
+        if let Some(f) = &e.faults {
+            env.set("faults", f.to_json());
+        }
+        if e.state_features != StateFeatures::default() {
+            let mut sf = Value::obj();
+            sf.set("health", e.state_features.health)
+                .set("tenancy", e.state_features.tenancy);
+            env.set("state_features", sf);
+        }
         let r = &e.reward;
         let mut rew = Value::obj();
         rew.set("alpha_q", r.alpha_q)
@@ -566,6 +609,15 @@ impl ExperimentConfig {
             }
             if let Some(t) = env.get("tenants") {
                 e.tenants = Some(TenantsConfig::from_json(t)?);
+            }
+            if let Some(f) = env.get("faults") {
+                e.faults = Some(FaultsConfig::from_json(f)?);
+            }
+            if let Some(sf) = env.get("state_features") {
+                e.state_features.health =
+                    sf.get("health").and_then(Value::as_bool).unwrap_or(false);
+                e.state_features.tenancy =
+                    sf.get("tenancy").and_then(Value::as_bool).unwrap_or(false);
             }
             if let Some(r) = env.get("reward") {
                 let rc = &mut e.reward;
@@ -687,6 +739,43 @@ mod tests {
         bad.tenants[0].weight = -1.0;
         cfg.env.tenants = Some(bad);
         assert!(ExperimentConfig::from_json(&cfg.to_json()).is_err());
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_faults_section() {
+        let mut cfg = ExperimentConfig::preset_8node(0.1);
+        cfg.env.faults = Some(FaultsConfig {
+            mtbf: 240.0,
+            zones: 2,
+            health_aware: false,
+            ..FaultsConfig::default()
+        });
+        let back = ExperimentConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.env.faults, cfg.env.faults);
+        // A config without the section parses to None (old configs load).
+        cfg.env.faults = None;
+        let back = ExperimentConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.env.faults, None);
+        // Invalid sections fail at parse time.
+        cfg.env.faults = Some(FaultsConfig { mttr: -1.0, ..FaultsConfig::default() });
+        assert!(ExperimentConfig::from_json(&cfg.to_json()).is_err());
+    }
+
+    #[test]
+    fn state_features_extend_dims_and_roundtrip() {
+        let mut cfg = ExperimentConfig::preset_8node(0.1);
+        assert_eq!(cfg.env.state_rows(), 3);
+        cfg.env.state_features.health = true;
+        assert_eq!(cfg.env.state_rows(), 4);
+        assert_eq!(cfg.env.state_len(), 64);
+        cfg.env.state_features.tenancy = true;
+        assert_eq!(cfg.env.state_rows(), 6);
+        assert_eq!(cfg.env.state_len(), 96);
+        // Action length is untouched by state features.
+        assert_eq!(cfg.env.action_len(), 10);
+        let back = ExperimentConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.env.state_features, cfg.env.state_features);
+        assert_eq!(back.env.state_len(), 96);
     }
 
     #[test]

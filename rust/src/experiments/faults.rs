@@ -1,0 +1,448 @@
+//! Fault & straggler sweep (`eat faults`): MTBF × zone-shock rate ×
+//! straggler rate × dispatch mode (health-aware vs fault-blind), reported
+//! as goodput, wasted-work fraction, retries/kills, latency percentiles,
+//! and per-tenant SLO attainment under churn.
+//!
+//! Common random numbers hold twice over: the tenant workload is a
+//! function of (seed, episode) only, and the fault timeline is a function
+//! of (seed, episode, fault rates) only — the health process draws from
+//! its own stream and never consumes scheduling randomness — so the
+//! aware/blind pair of every fault cell replays the *same* arrivals under
+//! the *same* failure storm, isolating the dispatch mode.
+//!
+//! The dispatcher is the same deterministic work-conserving head-first
+//! loop as `eat qos`: each tick it schedules every queue-feasible task in
+//! queue order at fixed steps, so the table measures the resilience
+//! machinery, not a learned policy.
+
+use crate::config::ExperimentConfig;
+use crate::faults::FaultsConfig;
+use crate::qos::{TenantRegistry, TenantsConfig};
+use crate::sim::env::{Action, EdgeEnv};
+use crate::sim::task::Workload;
+use crate::util::cli::Args;
+use crate::util::rng::Pcg64;
+use crate::util::table::{f, Table};
+use crate::workload::{MetricsCollector, TenantReport};
+
+/// One sweep cell: a fault configuration × dispatch mode with pooled
+/// metrics over its episodes.
+#[derive(Clone, Debug)]
+pub struct FaultCell {
+    pub mtbf: f64,
+    pub zone_shock_rate: f64,
+    pub straggler_rate: f64,
+    pub health_aware: bool,
+    pub total_tasks: usize,
+    pub completed: usize,
+    pub failed_tasks: usize,
+    pub failures: usize,
+    pub gang_kills: usize,
+    pub retries: usize,
+    pub spec_launches: usize,
+    pub spec_wins: usize,
+    pub wasted_frac: f64,
+    /// Pooled completed tasks per simulated second.
+    pub goodput: f64,
+    pub p50: f64,
+    pub p99: f64,
+    /// Patch-second books pooled over episodes (balance check:
+    /// dispatched = completed + wasted + inflight).
+    pub dispatched_patch_s: f64,
+    pub completed_patch_s: f64,
+    pub wasted_patch_s: f64,
+    pub inflight_patch_s: f64,
+    pub tenants: Vec<TenantReport>,
+}
+
+impl FaultCell {
+    pub fn mode_name(&self) -> &'static str {
+        if self.health_aware {
+            "aware"
+        } else {
+            "blind"
+        }
+    }
+
+    pub fn tenant(&self, name: &str) -> &TenantReport {
+        self.tenants
+            .iter()
+            .find(|t| t.name == name)
+            .unwrap_or_else(|| panic!("no tenant '{name}' in cell"))
+    }
+}
+
+/// Run one cell's episodes with the head-first dispatcher at fixed steps.
+fn run_cell(cfg: &ExperimentConfig, episodes: usize, steps: u32) -> FaultCell {
+    let tenants_cfg = cfg.env.tenants.as_ref().expect("fault cell needs tenants");
+    let faults_cfg = cfg.env.faults.clone().unwrap_or_else(FaultsConfig::off);
+    let registry = TenantRegistry::new(tenants_cfg);
+    let mut pooled = MetricsCollector::with_tenants(cfg.env.num_servers, &registry);
+    let (mut total, mut completed, mut failed) = (0usize, 0usize, 0usize);
+    let mut sim_time = 0.0f64;
+    let mut inflight_ps = 0.0f64;
+    for ep in 0..episodes {
+        // Mirror `evaluate`'s CRN seeding: same (seed, ep) → same workload
+        // and same fault timeline for every dispatch mode in this cell.
+        let mut wl_rng = Pcg64::new(cfg.seed.wrapping_add(ep as u64), 0xC0FFEE);
+        let workload = Workload::generate(&cfg.env, &mut wl_rng);
+        let mut env = EdgeEnv::with_workload(
+            cfg.env.clone(),
+            workload,
+            Pcg64::new(cfg.seed.wrapping_add(ep as u64), 0xE21),
+        );
+        let noop = Action::noop(cfg.env.queue_window);
+        loop {
+            while let Some(idx) = env.first_feasible() {
+                if env.schedule_task_at(idx, steps).is_none() {
+                    break;
+                }
+            }
+            if env.step(&noop).done {
+                break;
+            }
+        }
+        let rep = env.report();
+        total += rep.total_tasks;
+        completed += rep.completed_tasks;
+        failed += rep.failed_tasks;
+        sim_time += rep.sim_time;
+        inflight_ps += rep.inflight_patch_s;
+        pooled.merge(env.metrics());
+    }
+    FaultCell {
+        mtbf: faults_cfg.mtbf,
+        zone_shock_rate: faults_cfg.zone_shock_rate,
+        straggler_rate: faults_cfg.straggler_rate,
+        health_aware: faults_cfg.health_aware,
+        total_tasks: total,
+        completed,
+        failed_tasks: failed,
+        failures: pooled.failures() as usize,
+        gang_kills: pooled.gang_kills() as usize,
+        retries: pooled.retries() as usize,
+        spec_launches: pooled.spec_launches() as usize,
+        spec_wins: pooled.spec_wins() as usize,
+        wasted_frac: pooled.wasted_frac(),
+        goodput: if sim_time > 0.0 {
+            completed as f64 / sim_time
+        } else {
+            0.0
+        },
+        p50: pooled.latency.p50(),
+        p99: pooled.latency.p99(),
+        dispatched_patch_s: pooled.dispatched_ps(),
+        completed_patch_s: pooled.completed_ps(),
+        wasted_patch_s: pooled.wasted_ps(),
+        inflight_patch_s: inflight_ps,
+        tenants: pooled.tenant_reports(),
+    }
+}
+
+/// Run the full sweep; one `FaultCell` per combination, in sweep order.
+#[allow(clippy::too_many_arguments)]
+pub fn sweep(
+    template: &ExperimentConfig,
+    tenants_base: &TenantsConfig,
+    faults_base: &FaultsConfig,
+    episodes: usize,
+    mtbfs: &[f64],
+    zone_rates: &[f64],
+    straggler_rates: &[f64],
+    modes: &[bool],
+) -> anyhow::Result<Vec<FaultCell>> {
+    let mut cells = Vec::new();
+    for &mtbf in mtbfs {
+        for &zone_rate in zone_rates {
+            for &straggler_rate in straggler_rates {
+                for &health_aware in modes {
+                    let mut faults = faults_base.clone();
+                    faults.mtbf = mtbf;
+                    faults.zone_shock_rate = zone_rate;
+                    faults.straggler_rate = straggler_rate;
+                    faults.health_aware = health_aware;
+                    let mut cfg = template.clone();
+                    cfg.env.tenants = Some(tenants_base.clone());
+                    cfg.env.faults = Some(faults);
+                    cfg.env.validate()?;
+                    cells.push(run_cell(&cfg, episodes, 20));
+                }
+            }
+        }
+    }
+    Ok(cells)
+}
+
+fn parse_f64_list(s: &str) -> anyhow::Result<Vec<f64>> {
+    s.split(',')
+        .map(|x| {
+            x.trim()
+                .parse::<f64>()
+                .map_err(|e| anyhow::anyhow!("bad number '{x}': {e}"))
+        })
+        .collect()
+}
+
+pub fn run(args: &Args) -> anyhow::Result<String> {
+    let nodes = args.get_usize("nodes", 8);
+    let tasks = args.get_usize("tasks", 120);
+    let episodes = args.get_usize("episodes", 1);
+    let seed = args.get_u64("seed", 42);
+    let default_rate = match nodes {
+        4 => 0.05,
+        12 => 0.15,
+        _ => 0.1,
+    };
+    let base_rate = args.get_f64("rate", default_rate);
+    let mtbfs = parse_f64_list(&args.get_or("mtbfs", "0,600,200"))?;
+    let zone_rates = parse_f64_list(&args.get_or("zone-rates", "0.002"))?;
+    let straggler_rates = parse_f64_list(&args.get_or("straggler-rates", "0.005"))?;
+    let modes: Vec<bool> = args
+        .get_or("modes", "aware,blind")
+        .split(',')
+        .map(|s| match s.trim() {
+            "aware" | "health-aware" => Ok(true),
+            "blind" | "fault-blind" => Ok(false),
+            other => Err(anyhow::anyhow!("unknown mode '{other}' (aware, blind)")),
+        })
+        .collect::<anyhow::Result<_>>()?;
+    let defaults = FaultsConfig::default();
+    let faults_base = FaultsConfig {
+        mttr: args.get_f64("mttr", defaults.mttr),
+        zones: args.get_usize("zones", defaults.zones),
+        spec_beta: args.get_f64("spec-beta", defaults.spec_beta),
+        max_retries: args.get_usize("max-retries", defaults.max_retries as usize) as u32,
+        ..defaults
+    };
+
+    let mut template = ExperimentConfig::preset(nodes);
+    template.seed = seed;
+    template.env.tasks_per_episode = tasks;
+    let tenants_base = TenantsConfig::three_tier(base_rate);
+    let cells = sweep(
+        &template,
+        &tenants_base,
+        &faults_base,
+        episodes,
+        &mtbfs,
+        &zone_rates,
+        &straggler_rates,
+        &modes,
+    )?;
+
+    let mut header: Vec<String> = [
+        "mtbf", "zshock", "slow", "mode", "done", "fail", "retry", "kills", "spec", "wasted%",
+        "goodput", "p50", "p99",
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .collect();
+    for t in &tenants_base.tenants {
+        header.push(format!("SLO% {}", t.name));
+    }
+    let header_refs: Vec<&str> = header.iter().map(String::as_str).collect();
+    let mut table = Table::new(
+        &format!(
+            "Fault & straggler sweep ({nodes} nodes, base rate {base_rate}, {tasks} tasks, \
+             {episodes} episode(s), mttr {}, {} zones)",
+            faults_base.mttr, faults_base.zones
+        ),
+        &header_refs,
+    );
+    for cell in &cells {
+        let mut row = vec![
+            if cell.mtbf > 0.0 { f(cell.mtbf, 0) } else { "off".to_string() },
+            f(cell.zone_shock_rate, 4),
+            f(cell.straggler_rate, 4),
+            cell.mode_name().to_string(),
+            format!("{}/{}", cell.completed, cell.total_tasks),
+            format!("{}", cell.failed_tasks),
+            format!("{}", cell.retries),
+            format!("{}", cell.gang_kills),
+            format!("{}/{}", cell.spec_wins, cell.spec_launches),
+            f(cell.wasted_frac * 100.0, 1),
+            f(cell.goodput * 1000.0, 2), // tasks per 1000 simulated seconds
+            f(cell.p50, 1),
+            f(cell.p99, 1),
+        ];
+        for t in &cell.tenants {
+            row.push(f(t.slo_attainment * 100.0, 1));
+        }
+        table.row(row);
+    }
+    let out = table.render();
+    println!("{out}");
+    println!("goodput column is completed tasks per 1000 simulated seconds");
+    super::save_csv(&format!("faults_n{nodes}"), &table.to_csv())?;
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// 8-node template with light gangs, like the QoS tests: large gangs
+    /// stall on feasibility under churn (an 8-patch task needs the whole
+    /// cluster up and idle), which would measure gang-size luck instead of
+    /// the dispatch mode.
+    fn light_gang_template(tasks: usize, seed: u64) -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::preset(8);
+        cfg.seed = seed;
+        cfg.env.tasks_per_episode = tasks;
+        cfg.env.patch_choices = vec![1, 2];
+        cfg.env.patch_weights = vec![1.0, 1.0];
+        cfg
+    }
+
+    /// Heavy churn, no stragglers/speculation: isolates health-aware
+    /// dispatch. mtbf 150 s on 8 servers ≈ dozens of failures per episode.
+    fn churn_base() -> FaultsConfig {
+        FaultsConfig {
+            mtbf: 150.0,
+            mttr: 60.0,
+            zones: 4,
+            zone_shock_rate: 0.002,
+            straggler_rate: 0.0,
+            spec_beta: 0.0,
+            max_retries: 3,
+            ..FaultsConfig::default()
+        }
+    }
+
+    /// The PR's acceptance criterion: under ≥1 failure-per-episode churn,
+    /// health-aware dispatch beats the fault-blind baseline on goodput and
+    /// p99 latency, and the patch-second books balance in every cell.
+    #[test]
+    fn health_aware_beats_fault_blind_under_churn() {
+        let cells = sweep(
+            &light_gang_template(120, 42),
+            &TenantsConfig::three_tier(0.1),
+            &churn_base(),
+            2,
+            &[150.0],
+            &[0.002],
+            &[0.0],
+            &[true, false],
+        )
+        .unwrap();
+        assert_eq!(cells.len(), 2);
+        let (aware, blind) = (&cells[0], &cells[1]);
+        assert!(aware.health_aware && !blind.health_aware);
+        // The churn regime actually bites: at least one failure per
+        // episode (we expect dozens), in both cells identically (CRN).
+        assert!(aware.failures >= 2, "only {} failures pooled", aware.failures);
+        assert_eq!(aware.failures, blind.failures, "fault timeline must be CRN-paired");
+        assert!(
+            aware.goodput > blind.goodput,
+            "health-aware goodput {} must beat fault-blind {}",
+            aware.goodput,
+            blind.goodput
+        );
+        assert!(
+            aware.p99 < blind.p99,
+            "health-aware p99 {} must beat fault-blind {}",
+            aware.p99,
+            blind.p99
+        );
+        // Blind dispatch onto down servers manufactures kills and wasted
+        // work that health masking avoids.
+        assert!(blind.gang_kills > aware.gang_kills);
+        assert!(blind.wasted_frac > aware.wasted_frac);
+        // Wasted-work accounting balances in every cell.
+        for cell in &cells {
+            let sum = cell.completed_patch_s + cell.wasted_patch_s + cell.inflight_patch_s;
+            assert!(
+                (sum - cell.dispatched_patch_s).abs()
+                    <= 1e-6 * cell.dispatched_patch_s.max(1.0),
+                "{}: dispatched {} != completed {} + wasted {} + inflight {}",
+                cell.mode_name(),
+                cell.dispatched_patch_s,
+                cell.completed_patch_s,
+                cell.wasted_patch_s,
+                cell.inflight_patch_s
+            );
+        }
+    }
+
+    #[test]
+    fn arrivals_stay_crn_paired_across_fault_cells() {
+        // Offered counts per tenant must be identical across every fault
+        // configuration — churn cannot change the arrival process.
+        let cells = sweep(
+            &light_gang_template(40, 11),
+            &TenantsConfig::three_tier(0.1),
+            &churn_base(),
+            1,
+            &[0.0, 300.0],
+            &[0.0],
+            &[0.0],
+            &[true],
+        )
+        .unwrap();
+        assert_eq!(cells.len(), 2);
+        for name in ["premium", "standard", "batch"] {
+            let offered: Vec<u64> = cells.iter().map(|c| c.tenant(name).offered).collect();
+            assert!(
+                offered.windows(2).all(|w| w[0] == w[1]),
+                "{name}: offered diverged across cells: {offered:?}"
+            );
+        }
+        // The fault-free cell reports no churn at all.
+        assert_eq!(cells[0].failures, 0);
+        assert_eq!(cells[0].wasted_frac, 0.0);
+        assert!(cells[1].failures > 0);
+    }
+
+    #[test]
+    fn stragglers_trigger_speculation_in_the_sweep() {
+        let mut base = churn_base();
+        base.mtbf = 0.0;
+        base.zone_shock_rate = 0.0;
+        base.spec_beta = 1.5;
+        base.straggler_mu = 1.6; // median ~5x slowdowns: clearly past beta
+        base.straggler_mean_duration = 120.0;
+        let cells = sweep(
+            &light_gang_template(80, 9),
+            &TenantsConfig::three_tier(0.1),
+            &base,
+            1,
+            &[0.0],
+            &[0.0],
+            &[0.02],
+            &[true],
+        )
+        .unwrap();
+        let cell = &cells[0];
+        assert!(
+            cell.spec_launches > 0,
+            "heavy stragglers must trigger speculative backups"
+        );
+        assert!(cell.spec_wins <= cell.spec_launches);
+        assert!(cell.completed > 0);
+    }
+
+    #[test]
+    fn cli_run_renders_table() {
+        let args = Args::parse(
+            [
+                "--nodes",
+                "8",
+                "--tasks",
+                "20",
+                "--mtbfs",
+                "200",
+                "--zone-rates",
+                "0.002",
+                "--straggler-rates",
+                "0.01",
+                "--modes",
+                "aware,blind",
+            ]
+            .map(String::from),
+        );
+        let out = run(&args).unwrap();
+        for needle in ["aware", "blind", "wasted%", "goodput", "SLO% premium", "200"] {
+            assert!(out.contains(needle), "missing {needle} in:\n{out}");
+        }
+    }
+}

@@ -15,7 +15,9 @@
 //! | Fig 7 (time prediction scatter) | `timepred` | `eat experiment fig7` |
 //! | Scenario sweep (beyond the paper) | `scenarios` | `eat scenarios` |
 //! | Multi-tenant QoS sweep (beyond the paper) | `qos` | `eat qos` |
+//! | Fault & straggler sweep (beyond the paper) | `faults` | `eat faults` |
 
+pub mod faults;
 pub mod fig4;
 pub mod grid;
 pub mod inittime;
@@ -47,6 +49,7 @@ pub fn run(name: &str, args: &Args) -> anyhow::Result<String> {
         "fig7" => timepred::run(args)?,
         "scenarios" => scenarios::run(args)?,
         "qos" => qos::run(args)?,
+        "faults" => faults::run(args)?,
         "all" => {
             let mut all = String::new();
             for id in [
@@ -59,7 +62,8 @@ pub fn run(name: &str, args: &Args) -> anyhow::Result<String> {
         }
         other => anyhow::bail!(
             "unknown experiment '{other}' (try table1, table2_4, table6, table9, \
-             table10, table11, table12, fig4, fig5, fig6, fig7, fig8, grid, scenarios, qos, all)"
+             table10, table11, table12, fig4, fig5, fig6, fig7, fig8, grid, scenarios, qos, \
+             faults, all)"
         ),
     };
     Ok(out)

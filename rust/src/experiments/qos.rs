@@ -15,7 +15,6 @@
 
 use crate::config::ExperimentConfig;
 use crate::qos::{AdmissionConfig, QueueDiscipline, TenantRegistry, TenantsConfig};
-use crate::sim::cluster::Selection;
 use crate::sim::env::{Action, EdgeEnv};
 use crate::sim::task::Workload;
 use crate::util::cli::Args;
@@ -45,14 +44,6 @@ impl QosCell {
     }
 }
 
-/// First queue-feasible task among the visible slots, in queue order.
-fn first_feasible(env: &EdgeEnv) -> Option<usize> {
-    env.queue()
-        .iter()
-        .take(env.cfg.queue_window)
-        .position(|t| !matches!(env.cluster.select(t.model, t.patches), Selection::Infeasible))
-}
-
 /// Run one cell's episodes with the head-first dispatcher at fixed steps.
 fn run_cell(cfg: &ExperimentConfig, episodes: usize, steps: u32) -> QosCell {
     let tenants_cfg = cfg.env.tenants.as_ref().expect("qos cell needs tenants");
@@ -71,7 +62,7 @@ fn run_cell(cfg: &ExperimentConfig, episodes: usize, steps: u32) -> QosCell {
         );
         let noop = Action::noop(cfg.env.queue_window);
         loop {
-            while let Some(idx) = first_feasible(&env) {
+            while let Some(idx) = env.first_feasible() {
                 if env.schedule_task_at(idx, steps).is_none() {
                     break;
                 }

@@ -1,0 +1,234 @@
+//! Fault & straggler resilience subsystem: the single source of
+//! server-health dynamics for the simulator and the serving layer.
+//!
+//! The paper's gang scheduling makes every task only as fast as its
+//! slowest patch, yet the seed simulator assumed servers never fail and
+//! never slow down. Edge deployments are exactly where that assumption
+//! breaks: heterogeneous, loosely managed servers crash, whole racks or
+//! zones lose power together, and load-dependent slowdowns turn one
+//! server into a straggler that stalls its entire gang. This module adds
+//! that axis:
+//!
+//! - [`FaultsConfig`] — a serialisable description of the health dynamics
+//!   (per-server Markov up/down churn with exponential MTBF/MTTR,
+//!   correlated zone-level shocks, transient lognormal straggler
+//!   slowdowns, speculative re-execution threshold, retry budget, and the
+//!   health-aware-dispatch switch), living in `EnvConfig::faults`.
+//! - [`FaultModel`] — the runtime process: stochastic stepping from a
+//!   dedicated RNG stream (forked from a *clone* of the env RNG, so the
+//!   main stream — and with it common-random-number pairing of arrivals
+//!   and execution jitter across policies — is bit-identical whether
+//!   faults are enabled or not), or scripted replay of a recorded
+//!   [`FaultEvent`] sequence for bit-exact episode reproduction.
+//! - [`FaultEvent`] — one health transition (fail / recover / slowdown
+//!   start / slowdown end), serialisable into the JSONL workload-trace
+//!   format (`workload::trace`) so a recorded episode replays with its
+//!   exact failure timeline.
+//!
+//! `EdgeEnv` consumes the events: a mid-flight failure kills the whole
+//! gang, re-queues the task (deadline and retry count intact), and the
+//! recovered server comes back weight-cold; stragglers stretch execution
+//! until speculative backups race them. `eat faults`
+//! (`experiments::faults`) sweeps MTBF × zone shocks × straggler rate ×
+//! dispatch mode and reports goodput, wasted work, retries, and
+//! per-tenant SLO attainment under churn.
+
+pub mod model;
+
+pub use model::{FaultEvent, FaultKind, FaultModel};
+
+use crate::util::json::Value;
+
+/// Serialisable description of server-health dynamics. `None` in
+/// `EnvConfig::faults` (or an [`FaultsConfig::off`] section) keeps the
+/// seed's fault-free behaviour bit-identically.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultsConfig {
+    /// Mean time between failures per up server (s); 0 disables
+    /// independent churn.
+    pub mtbf: f64,
+    /// Mean time to repair per down server (s).
+    pub mttr: f64,
+    /// Servers are striped into this many zones (server id mod `zones`);
+    /// a zone shock downs every up server in one zone at once.
+    pub zones: usize,
+    /// Cluster-wide rate of zone shocks (per simulated second); 0
+    /// disables correlated failures.
+    pub zone_shock_rate: f64,
+    /// Per-server onset rate of transient slowdowns (per s); 0 disables
+    /// stragglers.
+    pub straggler_rate: f64,
+    /// Lognormal(mu, sigma) slowdown multiplier, clamped to >= 1.
+    pub straggler_mu: f64,
+    pub straggler_sigma: f64,
+    /// Mean duration (s) of one slowdown bout (exponential).
+    pub straggler_mean_duration: f64,
+    /// Speculative re-execution: when a gang's elapsed time exceeds
+    /// `spec_beta` x its nominal duration and an idle *warm* gang of the
+    /// right shape exists, launch a backup; first finisher wins and the
+    /// loser is charged as wasted work. 0 disables speculation.
+    pub spec_beta: f64,
+    /// A task is dropped (counted failed) once it has been killed more
+    /// than this many times.
+    pub max_retries: u32,
+    /// Health-aware dispatch: mask down servers out of server selection.
+    /// `false` is the fault-blind baseline — the scheduler happily
+    /// dispatches onto down servers and pays for it with killed gangs.
+    pub health_aware: bool,
+}
+
+impl Default for FaultsConfig {
+    fn default() -> Self {
+        FaultsConfig {
+            mtbf: 600.0,
+            mttr: 45.0,
+            zones: 4,
+            zone_shock_rate: 0.001,
+            straggler_rate: 0.005,
+            straggler_mu: 0.9,
+            straggler_sigma: 0.35,
+            straggler_mean_duration: 40.0,
+            spec_beta: 2.0,
+            max_retries: 3,
+            health_aware: true,
+        }
+    }
+}
+
+impl FaultsConfig {
+    /// An inert section: no churn, no shocks, no stragglers. An env built
+    /// with it takes the exact seed code path (no fault runtime at all),
+    /// which the regression property test pins against `faults: None`.
+    pub fn off() -> FaultsConfig {
+        FaultsConfig {
+            mtbf: 0.0,
+            zone_shock_rate: 0.0,
+            straggler_rate: 0.0,
+            spec_beta: 0.0,
+            ..FaultsConfig::default()
+        }
+    }
+
+    /// Does this section produce any health dynamics at all?
+    pub fn is_active(&self) -> bool {
+        self.mtbf > 0.0 || self.zone_shock_rate > 0.0 || self.straggler_rate > 0.0
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        let nonneg = |name: &str, x: f64| -> anyhow::Result<()> {
+            anyhow::ensure!(x >= 0.0 && x.is_finite(), "faults.{name} must be finite and >= 0, got {x}");
+            Ok(())
+        };
+        nonneg("mtbf", self.mtbf)?;
+        nonneg("zone_shock_rate", self.zone_shock_rate)?;
+        nonneg("straggler_rate", self.straggler_rate)?;
+        nonneg("straggler_sigma", self.straggler_sigma)?;
+        anyhow::ensure!(
+            self.mttr > 0.0 && self.mttr.is_finite(),
+            "faults.mttr must be > 0, got {}",
+            self.mttr
+        );
+        anyhow::ensure!(self.zones >= 1, "faults.zones must be >= 1");
+        anyhow::ensure!(
+            self.straggler_mu.is_finite(),
+            "faults.straggler_mu must be finite"
+        );
+        anyhow::ensure!(
+            self.straggler_mean_duration > 0.0 && self.straggler_mean_duration.is_finite(),
+            "faults.straggler_mean_duration must be > 0"
+        );
+        anyhow::ensure!(
+            self.spec_beta == 0.0 || (self.spec_beta > 1.0 && self.spec_beta.is_finite()),
+            "faults.spec_beta must be 0 (off) or > 1, got {}",
+            self.spec_beta
+        );
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Value {
+        let mut v = Value::obj();
+        v.set("mtbf", self.mtbf)
+            .set("mttr", self.mttr)
+            .set("zones", self.zones)
+            .set("zone_shock_rate", self.zone_shock_rate)
+            .set("straggler_rate", self.straggler_rate)
+            .set("straggler_mu", self.straggler_mu)
+            .set("straggler_sigma", self.straggler_sigma)
+            .set("straggler_mean_duration", self.straggler_mean_duration)
+            .set("spec_beta", self.spec_beta)
+            .set("max_retries", self.max_retries as usize)
+            .set("health_aware", self.health_aware);
+        v
+    }
+
+    pub fn from_json(v: &Value) -> anyhow::Result<FaultsConfig> {
+        let mut cfg = FaultsConfig::default();
+        macro_rules! num {
+            ($key:literal, $field:expr, $ty:ty) => {
+                if let Some(x) = v.get($key).and_then(Value::as_f64) {
+                    $field = x as $ty;
+                }
+            };
+        }
+        num!("mtbf", cfg.mtbf, f64);
+        num!("mttr", cfg.mttr, f64);
+        num!("zones", cfg.zones, usize);
+        num!("zone_shock_rate", cfg.zone_shock_rate, f64);
+        num!("straggler_rate", cfg.straggler_rate, f64);
+        num!("straggler_mu", cfg.straggler_mu, f64);
+        num!("straggler_sigma", cfg.straggler_sigma, f64);
+        num!("straggler_mean_duration", cfg.straggler_mean_duration, f64);
+        num!("spec_beta", cfg.spec_beta, f64);
+        num!("max_retries", cfg.max_retries, u32);
+        if let Some(b) = v.get("health_aware").and_then(Value::as_bool) {
+            cfg.health_aware = b;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_active_and_valid() {
+        let cfg = FaultsConfig::default();
+        cfg.validate().unwrap();
+        assert!(cfg.is_active());
+        assert!(!FaultsConfig::off().is_active());
+        FaultsConfig::off().validate().unwrap();
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_fields() {
+        let cfg = FaultsConfig {
+            mtbf: 321.0,
+            zones: 2,
+            spec_beta: 1.75,
+            max_retries: 7,
+            health_aware: false,
+            ..FaultsConfig::default()
+        };
+        let back = FaultsConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back, cfg);
+    }
+
+    #[test]
+    fn invalid_sections_rejected() {
+        let bad = |f: FaultsConfig| assert!(f.validate().is_err());
+        bad(FaultsConfig { mttr: 0.0, ..FaultsConfig::default() });
+        bad(FaultsConfig { zones: 0, ..FaultsConfig::default() });
+        // Backups launched before the nominal finish would be nonsense.
+        bad(FaultsConfig { spec_beta: 0.5, ..FaultsConfig::default() });
+        bad(FaultsConfig { mtbf: -1.0, ..FaultsConfig::default() });
+    }
+
+    #[test]
+    fn json_rejects_invalid() {
+        let mut v = FaultsConfig::default().to_json();
+        v.set("mttr", -3.0);
+        assert!(FaultsConfig::from_json(&v).is_err());
+    }
+}

@@ -1,0 +1,367 @@
+//! The fault process: per-server Markov up/down churn, correlated
+//! zone-level shocks, and transient lognormal straggler slowdowns —
+//! stepped at the simulator's decision cadence, emitting [`FaultEvent`]s
+//! that `EdgeEnv` applies to the cluster.
+//!
+//! Two modes share one type:
+//!
+//! - **Stochastic**: transitions drawn from a dedicated [`Pcg64`] stream.
+//!   The draw sequence depends only on the health state (never on
+//!   scheduling decisions), so two runs of the same seed and fault config
+//!   see the *same* failure timeline regardless of policy — the fault
+//!   dimension is common-random-number paired across a sweep.
+//! - **Scripted**: replays a recorded event list by timestamp. Recording
+//!   a stochastic episode's events and replaying them through a fresh env
+//!   reproduces the episode bit-exactly (see `testing::prop`).
+
+use super::FaultsConfig;
+use crate::util::json::Value;
+use crate::util::rng::Pcg64;
+
+/// What happened to one server.
+#[derive(Clone, Debug, PartialEq)]
+pub enum FaultKind {
+    /// The server crashed: any gang it hosts dies, its model state is
+    /// lost (it will come back weight-cold).
+    Fail,
+    /// The server is back up (weight-cold).
+    Recover,
+    /// A transient slowdown began: execution proceeds at 1/factor speed
+    /// for ~`duration` seconds.
+    SlowStart { factor: f64, duration: f64 },
+    /// The slowdown ended; the server runs at nominal speed again.
+    SlowEnd,
+}
+
+/// One health transition, stamped with simulated time.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultEvent {
+    pub t: f64,
+    pub server: usize,
+    pub kind: FaultKind,
+}
+
+impl FaultEvent {
+    pub fn to_json(&self) -> Value {
+        let mut v = Value::obj();
+        let kind = match &self.kind {
+            FaultKind::Fail => "fail",
+            FaultKind::Recover => "recover",
+            FaultKind::SlowStart { .. } => "slow_start",
+            FaultKind::SlowEnd => "slow_end",
+        };
+        v.set("fault", kind).set("t", self.t).set("server", self.server);
+        if let FaultKind::SlowStart { factor, duration } = &self.kind {
+            v.set("factor", *factor).set("duration", *duration);
+        }
+        v
+    }
+
+    pub fn from_json(v: &Value) -> anyhow::Result<FaultEvent> {
+        let num = |key: &str| -> anyhow::Result<f64> {
+            v.req(key)?
+                .as_f64()
+                .ok_or_else(|| anyhow::anyhow!("fault field '{key}' is not a number"))
+        };
+        let kind_str = v
+            .req("fault")?
+            .as_str()
+            .ok_or_else(|| anyhow::anyhow!("fault 'fault' must be a string"))?;
+        let kind = match kind_str {
+            "fail" => FaultKind::Fail,
+            "recover" => FaultKind::Recover,
+            "slow_start" => FaultKind::SlowStart {
+                factor: num("factor")?,
+                duration: num("duration")?,
+            },
+            "slow_end" => FaultKind::SlowEnd,
+            other => anyhow::bail!("unknown fault kind '{other}'"),
+        };
+        let t = num("t")?;
+        anyhow::ensure!(t.is_finite() && t >= 0.0, "fault t {t} must be finite and >= 0");
+        Ok(FaultEvent {
+            t,
+            server: num("server")? as usize,
+            kind,
+        })
+    }
+}
+
+#[derive(Clone, Debug)]
+enum Mode {
+    Stochastic {
+        cfg: FaultsConfig,
+        rng: Pcg64,
+        /// Per-server health (true = up).
+        up: Vec<bool>,
+        /// Per-server slowdown-bout end time (NEG_INFINITY = not slowed).
+        slow_until: Vec<f64>,
+    },
+    Scripted {
+        events: Vec<FaultEvent>,
+        cursor: usize,
+    },
+}
+
+/// The server-health process. See module docs for the two modes.
+#[derive(Clone, Debug)]
+pub struct FaultModel {
+    mode: Mode,
+}
+
+impl FaultModel {
+    /// Stochastic dynamics for `num_servers` servers, all initially up.
+    pub fn stochastic(cfg: FaultsConfig, num_servers: usize, rng: Pcg64) -> FaultModel {
+        FaultModel {
+            mode: Mode::Stochastic {
+                cfg,
+                rng,
+                up: vec![true; num_servers],
+                slow_until: vec![f64::NEG_INFINITY; num_servers],
+            },
+        }
+    }
+
+    /// Replay a recorded event list (sorted by timestamp; sorted here
+    /// defensively with a stable sort).
+    pub fn scripted(mut events: Vec<FaultEvent>) -> FaultModel {
+        events.sort_by(|a, b| a.t.partial_cmp(&b.t).expect("NaN fault time"));
+        FaultModel {
+            mode: Mode::Scripted { events, cursor: 0 },
+        }
+    }
+
+    /// Advance the process over the tick ending at `now_start + dt`,
+    /// returning the transitions that occurred (stamped at the tick end in
+    /// stochastic mode — failures are detected at heartbeat cadence).
+    pub fn step(&mut self, now_start: f64, dt: f64) -> Vec<FaultEvent> {
+        match &mut self.mode {
+            Mode::Scripted { events, cursor } => {
+                let end = now_start + dt;
+                let mut out = Vec::new();
+                while *cursor < events.len() && events[*cursor].t <= end {
+                    out.push(events[*cursor].clone());
+                    *cursor += 1;
+                }
+                out
+            }
+            Mode::Stochastic {
+                cfg,
+                rng,
+                up,
+                slow_until,
+            } => {
+                let end = now_start + dt;
+                let mut out = Vec::new();
+                let p_fail = if cfg.mtbf > 0.0 { 1.0 - (-dt / cfg.mtbf).exp() } else { 0.0 };
+                let p_repair = 1.0 - (-dt / cfg.mttr).exp();
+                // 1. Independent per-server churn.
+                for i in 0..up.len() {
+                    if up[i] {
+                        if cfg.mtbf > 0.0 && rng.next_f64() < p_fail {
+                            up[i] = false;
+                            slow_until[i] = f64::NEG_INFINITY;
+                            out.push(FaultEvent { t: end, server: i, kind: FaultKind::Fail });
+                        }
+                    } else if rng.next_f64() < p_repair {
+                        up[i] = true;
+                        out.push(FaultEvent { t: end, server: i, kind: FaultKind::Recover });
+                    }
+                }
+                // 2. Correlated zone shock: one draw per tick; a shock
+                // downs every still-up server in a uniformly chosen zone.
+                if cfg.zone_shock_rate > 0.0 {
+                    let p_shock = 1.0 - (-cfg.zone_shock_rate * dt).exp();
+                    if rng.next_f64() < p_shock {
+                        let zone = rng.next_below(cfg.zones as u64) as usize;
+                        for i in 0..up.len() {
+                            if i % cfg.zones == zone && up[i] {
+                                up[i] = false;
+                                slow_until[i] = f64::NEG_INFINITY;
+                                out.push(FaultEvent { t: end, server: i, kind: FaultKind::Fail });
+                            }
+                        }
+                    }
+                }
+                // 3. Straggler bouts on up servers: end expired bouts,
+                // then maybe start new ones.
+                if cfg.straggler_rate > 0.0 {
+                    let p_slow = 1.0 - (-cfg.straggler_rate * dt).exp();
+                    for i in 0..up.len() {
+                        if !up[i] {
+                            continue;
+                        }
+                        if slow_until[i] > f64::NEG_INFINITY && end >= slow_until[i] {
+                            slow_until[i] = f64::NEG_INFINITY;
+                            out.push(FaultEvent { t: end, server: i, kind: FaultKind::SlowEnd });
+                        }
+                        if slow_until[i] == f64::NEG_INFINITY && rng.next_f64() < p_slow {
+                            let factor = rng
+                                .lognormal(cfg.straggler_mu, cfg.straggler_sigma)
+                                .max(1.0);
+                            let duration =
+                                rng.exponential(1.0 / cfg.straggler_mean_duration);
+                            slow_until[i] = end + duration;
+                            out.push(FaultEvent {
+                                t: end,
+                                server: i,
+                                kind: FaultKind::SlowStart { factor, duration },
+                            });
+                        }
+                    }
+                }
+                out
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn churn_cfg() -> FaultsConfig {
+        FaultsConfig {
+            mtbf: 100.0,
+            mttr: 20.0,
+            zones: 4,
+            zone_shock_rate: 0.0,
+            straggler_rate: 0.0,
+            ..FaultsConfig::default()
+        }
+    }
+
+    #[test]
+    fn churn_matches_mtbf_mttr_steady_state() {
+        // Down fraction converges to mttr / (mtbf + mttr) = 1/6.
+        let mut m = FaultModel::stochastic(churn_cfg(), 64, Pcg64::seeded(1));
+        let mut down = 0usize;
+        let mut samples = 0usize;
+        let mut down_now = vec![false; 64];
+        for step in 0..40_000 {
+            for ev in m.step(step as f64, 1.0) {
+                match ev.kind {
+                    FaultKind::Fail => down_now[ev.server] = true,
+                    FaultKind::Recover => down_now[ev.server] = false,
+                    _ => {}
+                }
+            }
+            if step >= 2_000 {
+                down += down_now.iter().filter(|&&d| d).count();
+                samples += 64;
+            }
+        }
+        let frac = down as f64 / samples as f64;
+        assert!((frac - 1.0 / 6.0).abs() < 0.02, "down frac {frac}");
+    }
+
+    #[test]
+    fn zone_shock_downs_a_whole_zone_at_once() {
+        let cfg = FaultsConfig {
+            mtbf: 0.0,
+            zone_shock_rate: 0.05,
+            zones: 4,
+            straggler_rate: 0.0,
+            ..FaultsConfig::default()
+        };
+        let mut m = FaultModel::stochastic(cfg, 8, Pcg64::seeded(2));
+        for step in 0..2_000 {
+            let evs = m.step(step as f64, 1.0);
+            let fails: Vec<usize> = evs
+                .iter()
+                .filter(|e| e.kind == FaultKind::Fail)
+                .map(|e| e.server)
+                .collect();
+            if fails.len() >= 2 {
+                // 8 servers / 4 zones: a shock hits exactly {z, z+4}.
+                let zone = fails[0] % 4;
+                assert!(fails.iter().all(|s| s % 4 == zone), "{fails:?}");
+                return;
+            }
+        }
+        panic!("no zone shock observed in 2000 ticks at rate 0.05");
+    }
+
+    #[test]
+    fn stragglers_start_and_end_with_sane_factors() {
+        let cfg = FaultsConfig {
+            mtbf: 0.0,
+            zone_shock_rate: 0.0,
+            straggler_rate: 0.05,
+            straggler_mean_duration: 10.0,
+            ..FaultsConfig::default()
+        };
+        let mut m = FaultModel::stochastic(cfg, 4, Pcg64::seeded(3));
+        let (mut starts, mut ends) = (0, 0);
+        for step in 0..4_000 {
+            for ev in m.step(step as f64, 1.0) {
+                match ev.kind {
+                    FaultKind::SlowStart { factor, duration } => {
+                        assert!(factor >= 1.0 && factor.is_finite());
+                        assert!(duration > 0.0);
+                        starts += 1;
+                    }
+                    FaultKind::SlowEnd => ends += 1,
+                    _ => {}
+                }
+            }
+        }
+        assert!(starts > 20, "only {starts} bouts started");
+        // Every bout eventually ends (the last may still be open).
+        assert!(ends >= starts - 4, "starts {starts} ends {ends}");
+    }
+
+    #[test]
+    fn stochastic_is_deterministic_and_policy_independent() {
+        let cfg = FaultsConfig::default();
+        let mut a = FaultModel::stochastic(cfg.clone(), 16, Pcg64::seeded(7));
+        let mut b = FaultModel::stochastic(cfg, 16, Pcg64::seeded(7));
+        for step in 0..500 {
+            assert_eq!(a.step(step as f64, 1.0), b.step(step as f64, 1.0));
+        }
+    }
+
+    #[test]
+    fn scripted_replays_recorded_events_bit_exactly() {
+        let cfg = FaultsConfig {
+            mtbf: 50.0,
+            mttr: 10.0,
+            straggler_rate: 0.02,
+            ..FaultsConfig::default()
+        };
+        let mut live = FaultModel::stochastic(cfg, 8, Pcg64::seeded(9));
+        let mut recorded = Vec::new();
+        let mut per_tick = Vec::new();
+        for step in 0..300 {
+            let evs = live.step(step as f64, 1.0);
+            recorded.extend(evs.clone());
+            per_tick.push(evs);
+        }
+        let mut replay = FaultModel::scripted(recorded);
+        for (step, expect) in per_tick.iter().enumerate() {
+            assert_eq!(&replay.step(step as f64, 1.0), expect, "tick {step}");
+        }
+    }
+
+    #[test]
+    fn event_json_roundtrip() {
+        for ev in [
+            FaultEvent { t: 12.5, server: 3, kind: FaultKind::Fail },
+            FaultEvent { t: 40.0, server: 0, kind: FaultKind::Recover },
+            FaultEvent {
+                t: 7.25,
+                server: 11,
+                kind: FaultKind::SlowStart { factor: 2.375, duration: 33.5 },
+            },
+            FaultEvent { t: 9.0, server: 11, kind: FaultKind::SlowEnd },
+        ] {
+            let back = FaultEvent::from_json(&ev.to_json()).unwrap();
+            assert_eq!(back, ev);
+        }
+        assert!(FaultEvent::from_json(&crate::util::json::parse(
+            "{\"fault\":\"melt\",\"t\":1.0,\"server\":0}"
+        )
+        .unwrap())
+        .is_err());
+    }
+}

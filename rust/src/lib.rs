@@ -36,6 +36,7 @@
 pub mod config;
 pub mod coordinator;
 pub mod experiments;
+pub mod faults;
 pub mod policy;
 pub mod qos;
 pub mod rl;

@@ -22,6 +22,10 @@
 //!       multi-tenant QoS sweep: overload factor × admission policy ×
 //!       queue discipline, with per-tenant p50/p90/p99, SLO attainment,
 //!       and drop rates
+//!   eat faults [--nodes 8] [--mtbfs 0,600,200] [--modes aware,blind]
+//!       fault & straggler sweep: MTBF x zone shocks x straggler rate x
+//!       dispatch mode, with goodput, wasted-work fraction, retries, and
+//!       per-tenant SLO attainment under churn
 //!   eat trace import <csv> <out.jsonl>                      map a CSV
 //!       request log onto a JSONL workload trace (replayable via
 //!       `eat scenarios --replay`)
@@ -37,7 +41,7 @@ use eat::util::cli::Args;
 
 fn usage() -> ! {
     eprintln!(
-        "usage: eat <experiment|train|eval|serve|scenarios|info> [options]\n\
+        "usage: eat <experiment|train|eval|serve|scenarios|qos|faults|info> [options]\n\
          \n  eat experiment <id>   ids: table1 table2_4 table6 table9 table10 table11\n\
          \x20                          table12 fig4 fig5 fig6 fig7 fig8 grid scenarios all\n\
          \x20     options: --nodes 4|8|12 --episodes K --train-episodes K --algs a,b,c\n\
@@ -52,6 +56,10 @@ fn usage() -> ! {
          \n  eat qos     [--nodes N] [--tasks K] [--episodes E] [--rate R] [--seed S]\n\
          \x20           [--overloads 1.0,3.0] [--admissions admit-all,drop-tail,token-bucket]\n\
          \x20           [--queues fifo,edf] [--max-queue Q] [--bucket-rate R] [--bucket-burst B]\n\
+         \n  eat faults  [--nodes N] [--tasks K] [--episodes E] [--rate R] [--seed S]\n\
+         \x20           [--mtbfs 0,600,200] [--zone-rates 0.002] [--straggler-rates 0.005]\n\
+         \x20           [--modes aware,blind] [--mttr T] [--zones Z] [--spec-beta B]\n\
+         \x20           [--max-retries R]\n\
          \n  eat trace import <csv> <out.jsonl>\n\
          \n  eat info"
     );
@@ -145,6 +153,9 @@ fn main() -> anyhow::Result<()> {
         }
         "qos" => {
             experiments::qos::run(&args)?;
+        }
+        "faults" => {
+            experiments::faults::run(&args)?;
         }
         "trace" => match args.positional.get(1).map(String::as_str) {
             Some("import") => {
@@ -250,7 +261,7 @@ fn serve(args: &Args) -> anyhow::Result<()> {
         let sim_s = out.sim_exec_seconds();
         metrics.advance_time(sim_s);
         sim_clock += sim_s;
-        tracker.dispatch(&gang, 0.0, ModelType(task.model.0), reuse);
+        tracker.dispatch(&gang, 0.0, ModelType(task.model.0), reuse, sim_clock);
         println!(
             "task {:>3}  patches {}  gang {:?}  wait {:>6.1}s  sim {:>6.1}s  reload {}  wall {:>6.3}s",
             task.id,

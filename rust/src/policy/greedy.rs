@@ -25,7 +25,9 @@ impl GreedyPolicy {
     /// simulator's dice).
     fn predicted_reward(&self, env: &EdgeEnv, idx: usize, steps: u32) -> Option<f64> {
         let task = env.queue().get(idx)?;
-        let sel = env.cluster.select(task.model, task.patches);
+        // Health-aware under an active fault config: down servers are
+        // masked, so Greedy never bids on a gang that cannot run.
+        let sel = env.select_for(task.model, task.patches);
         let (reuse, feasible) = match sel {
             Selection::Reuse(_) => (true, true),
             Selection::Fresh(_) => (false, true),

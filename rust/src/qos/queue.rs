@@ -248,6 +248,27 @@ impl PendingQueue {
         }
     }
 
+    /// Re-admit a task whose gang was killed mid-flight, deadline-aware:
+    /// under EDF/WFQ it re-enters its tier keyed by its (unchanged)
+    /// deadline, so an urgent retry overtakes laxer work automatically; in
+    /// FIFO mode it goes to the *front* — it arrived before everything
+    /// queued behind it, and a retry that re-waits the whole queue would
+    /// starve under churn.
+    pub fn push_retry(&mut self, task: Task) {
+        match &mut self.mode {
+            Mode::Fifo(q) => q.push_front(task),
+            Mode::Qos {
+                inner,
+                registry,
+                view,
+            } => {
+                let tier = registry.tier_slot(task.tenant);
+                inner.push(tier, task);
+                Self::rebuild(inner, view);
+            }
+        }
+    }
+
     /// Remove the task at visible position `index` (dequeue order).
     pub fn remove(&mut self, index: usize) -> Option<Task> {
         match &mut self.mode {
@@ -433,6 +454,25 @@ mod tests {
         assert_eq!(f.items().len(), 1);
         f.commit();
         assert_eq!(f.items().len(), 1);
+    }
+
+    #[test]
+    fn push_retry_is_deadline_aware() {
+        // FIFO: the retried task jumps the queue (it arrived first).
+        let mut q = PendingQueue::fifo();
+        q.push(task(0, None, None));
+        q.push(task(1, None, None));
+        q.push_retry(task(9, None, None));
+        assert_eq!(q.items()[0].id, 9);
+        // EDF: the retried task slots in by its unchanged deadline, ahead
+        // of laxer work and behind more urgent work in the same tier.
+        let reg = three_tier_registry();
+        let mut q = PendingQueue::qos(reg);
+        q.push(task(0, Some(0), Some(10.0)));
+        q.push(task(1, Some(0), Some(90.0)));
+        q.push_retry(task(9, Some(0), Some(50.0)));
+        let ids: Vec<u64> = q.items().iter().map(|t| t.id).collect();
+        assert_eq!(ids, vec![0, 9, 1]);
     }
 
     #[test]

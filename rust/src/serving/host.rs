@@ -4,12 +4,12 @@
 //! socket to the server responsible for execution ... then asynchronously
 //! monitors the server's result port".
 
-use super::protocol::{TaskRequest, TaskResult};
+use super::protocol::{self, TaskRequest, TaskResult};
 use crate::workload::MetricsCollector;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpStream};
 use std::sync::mpsc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Outcome of one gang-scheduled task: per-worker results plus wall time.
 #[derive(Clone, Debug)]
@@ -119,6 +119,152 @@ impl ServingHost {
         })
     }
 
+    /// Probe one worker with a heartbeat ping. `false` on connect
+    /// failure, timeout, or a malformed reply — the caller should treat
+    /// the worker as down and exclude it from gangs.
+    pub fn heartbeat(&self, worker: usize, timeout: Duration) -> bool {
+        let Some(addr) = self.workers.get(worker) else {
+            return false;
+        };
+        let probe = || -> anyhow::Result<bool> {
+            let mut stream = TcpStream::connect_timeout(addr, timeout)?;
+            stream.set_read_timeout(Some(timeout))?;
+            stream.set_write_timeout(Some(timeout))?;
+            stream.write_all(protocol::ping_json().as_bytes())?;
+            stream.write_all(b"\n")?;
+            let mut line = String::new();
+            BufReader::new(stream).read_line(&mut line)?;
+            Ok(protocol::pong_worker(line.trim()).is_some())
+        };
+        probe().unwrap_or(false)
+    }
+
+    /// One gang round with per-worker connect/read/write timeouts.
+    /// Returns the successful results plus the worker ids that failed
+    /// (connection refused, heartbeat timeout, or a garbled reply).
+    #[allow(clippy::too_many_arguments)]
+    fn try_dispatch(
+        &self,
+        task_id: u64,
+        prompt: &str,
+        steps: u32,
+        model: u32,
+        tenant: u32,
+        gang: &[usize],
+        timeout: Duration,
+    ) -> (Vec<TaskResult>, Vec<usize>) {
+        let (tx, rx) = mpsc::channel::<(usize, anyhow::Result<TaskResult>)>();
+        for (rank, &w) in gang.iter().enumerate() {
+            let addr = self.workers[w];
+            let req = TaskRequest {
+                task_id,
+                prompt: prompt.to_string(),
+                steps,
+                patches: gang.len(),
+                model,
+                rank,
+                tenant,
+            };
+            let tx = tx.clone();
+            std::thread::spawn(move || {
+                let send = || -> anyhow::Result<TaskResult> {
+                    let mut stream = TcpStream::connect_timeout(&addr, timeout)?;
+                    stream.set_read_timeout(Some(timeout))?;
+                    stream.set_write_timeout(Some(timeout))?;
+                    stream.write_all(req.to_json().as_bytes())?;
+                    stream.write_all(b"\n")?;
+                    let mut line = String::new();
+                    BufReader::new(stream).read_line(&mut line)?;
+                    anyhow::ensure!(!line.trim().is_empty(), "worker closed without a result");
+                    TaskResult::from_json(line.trim())
+                };
+                tx.send((w, send())).ok();
+            });
+        }
+        drop(tx);
+        let mut results = Vec::with_capacity(gang.len());
+        let mut failed = Vec::new();
+        for (w, r) in rx {
+            match r {
+                Ok(res) => results.push(res),
+                Err(_) => failed.push(w),
+            }
+        }
+        (results, failed)
+    }
+
+    /// Fault-tolerant gang dispatch: per-worker heartbeat timeouts, and on
+    /// failure the whole gang retries on a server set that *excludes* every
+    /// worker observed failing so far, refilled from `spares` (gang
+    /// semantics: partial patch results are useless, but surviving members
+    /// keep their loaded model, so the retry round reuses it). Returns the
+    /// outcome plus the excluded worker ids, so the caller can mark them
+    /// down and route around them (mirroring `EdgeEnv`'s health-aware
+    /// dispatch).
+    #[allow(clippy::too_many_arguments)]
+    pub fn dispatch_resilient(
+        &self,
+        task_id: u64,
+        prompt: &str,
+        steps: u32,
+        model: u32,
+        tenant: u32,
+        gang: &[usize],
+        spares: &[usize],
+        timeout: Duration,
+        max_rounds: usize,
+    ) -> anyhow::Result<(GangOutcome, Vec<usize>)> {
+        anyhow::ensure!(!gang.is_empty(), "empty gang");
+        anyhow::ensure!(
+            gang.iter().chain(spares).all(|&w| w < self.workers.len()),
+            "gang references unknown worker"
+        );
+        let started = Instant::now();
+        let mut excluded: Vec<usize> = Vec::new();
+        let mut current: Vec<usize> = gang.to_vec();
+        for _ in 0..max_rounds.max(1) {
+            let (mut results, failed) =
+                self.try_dispatch(task_id, prompt, steps, model, tenant, &current, timeout);
+            if failed.is_empty() {
+                results.sort_by_key(|r| r.worker_id);
+                let outcome = GangOutcome {
+                    task_id,
+                    results,
+                    wall_seconds: started.elapsed().as_secs_f64(),
+                };
+                return Ok((outcome, excluded));
+            }
+            for w in failed {
+                if !excluded.contains(&w) {
+                    excluded.push(w);
+                }
+            }
+            // Rebuild the gang: keep healthy members, refill from spares.
+            let mut next: Vec<usize> = current
+                .iter()
+                .copied()
+                .filter(|w| !excluded.contains(w))
+                .collect();
+            for &w in spares {
+                if next.len() >= current.len() {
+                    break;
+                }
+                if !excluded.contains(&w) && !next.contains(&w) {
+                    next.push(w);
+                }
+            }
+            anyhow::ensure!(
+                next.len() == current.len(),
+                "gang needs {} workers but only {} healthy candidates remain \
+                 (excluded: {excluded:?})",
+                current.len(),
+                next.len()
+            );
+            current = next;
+        }
+        anyhow::bail!("gang dispatch still failing after {max_rounds} rounds (excluded: {excluded:?})")
+    }
+
     /// `dispatch`, additionally feeding the streaming metrics collector:
     /// response latency (`waiting` + simulated gang execution), reload
     /// flag, and per-worker busy time. The caller advances the collector's
@@ -172,6 +318,50 @@ mod tests {
         let host = ServingHost::new(vec![]);
         assert!(host.dispatch(0, "x", 10, 0, &[]).is_err());
         assert!(host.dispatch(0, "x", 10, 0, &[3]).is_err());
+    }
+
+    /// An address with nothing listening behind it (bind, read the port,
+    /// drop the listener): connections are refused, like a crashed worker.
+    fn dead_addr() -> std::net::SocketAddr {
+        let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        l.local_addr().unwrap()
+    }
+
+    #[test]
+    fn heartbeat_detects_live_and_dead_workers() {
+        let pool = WorkerPool::spawn(2, ExecModelConfig::default(), 1e-4, 5).unwrap();
+        let mut addrs = pool.addrs().to_vec();
+        addrs.push(dead_addr());
+        let host = ServingHost::new(addrs);
+        let t = Duration::from_secs(2);
+        assert!(host.heartbeat(0, t));
+        assert!(host.heartbeat(1, t));
+        assert!(!host.heartbeat(2, t), "dead worker must fail its heartbeat");
+        assert!(!host.heartbeat(99, t), "unknown worker id is down by definition");
+        pool.shutdown();
+    }
+
+    #[test]
+    fn resilient_dispatch_excludes_failed_workers_and_retries() {
+        let pool = WorkerPool::spawn(3, ExecModelConfig::default(), 1e-4, 6).unwrap();
+        let mut addrs = pool.addrs().to_vec();
+        addrs.push(dead_addr()); // worker 3 is dead
+        let host = ServingHost::new(addrs);
+        let timeout = Duration::from_secs(2);
+        // Gang of 2 includes the dead worker; worker 2 is the spare.
+        let (out, excluded) = host
+            .dispatch_resilient(5, "p", 20, 0, 0, &[0, 3], &[2], timeout, 3)
+            .unwrap();
+        assert_eq!(excluded, vec![3]);
+        assert_eq!(out.results.len(), 2);
+        let ids: Vec<usize> = out.results.iter().map(|r| r.worker_id).collect();
+        assert_eq!(ids, vec![0, 2]);
+        // No healthy candidates left: the dispatch reports failure rather
+        // than hanging.
+        assert!(host
+            .dispatch_resilient(6, "p", 20, 0, 0, &[3], &[], timeout, 2)
+            .is_err());
+        pool.shutdown();
     }
 
     #[test]

@@ -1,8 +1,32 @@
 //! Wire protocol: newline-delimited JSON task requests and results,
 //! mirroring the paper's host→container JSON strings (prompt p_k and draw
-//! steps s_k in; result image + measured timings back).
+//! steps s_k in; result image + measured timings back), plus a heartbeat
+//! ping/pong used by the host to probe worker liveness under timeouts.
 
 use crate::util::json::{self, Value};
+
+/// The heartbeat request line: a worker answers with [`pong_json`]
+/// instead of executing anything.
+pub fn ping_json() -> String {
+    "{\"ping\":true}".to_string()
+}
+
+/// True when a parsed request line is a heartbeat ping.
+pub fn is_ping(v: &Value) -> bool {
+    v.get("ping").and_then(Value::as_bool) == Some(true)
+}
+
+/// The heartbeat reply carrying the worker's id.
+pub fn pong_json(worker_id: usize) -> String {
+    let mut v = Value::obj();
+    v.set("pong", worker_id);
+    v.to_json()
+}
+
+/// Parse a heartbeat reply; `None` if the line is not a pong.
+pub fn pong_worker(text: &str) -> Option<usize> {
+    json::parse(text).ok()?.get("pong")?.as_usize()
+}
 
 /// A task command sent from the host to one worker of a gang.
 #[derive(Clone, Debug, PartialEq)]
@@ -117,6 +141,16 @@ mod tests {
         )
         .unwrap();
         assert_eq!(req.tenant, 0);
+    }
+
+    #[test]
+    fn ping_pong_roundtrip() {
+        let ping = json::parse(&ping_json()).unwrap();
+        assert!(is_ping(&ping));
+        assert!(!is_ping(&json::parse("{\"task_id\":1}").unwrap()));
+        assert_eq!(pong_worker(&pong_json(3)), Some(3));
+        assert_eq!(pong_worker("{\"nope\":1}"), None);
+        assert_eq!(pong_worker("garbage"), None);
     }
 
     #[test]

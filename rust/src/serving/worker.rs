@@ -5,9 +5,10 @@
 //! initialisation time on change, like DistriFusion's model load), and
 //! replies with a result JSON.
 
-use super::protocol::{TaskRequest, TaskResult};
+use super::protocol::{self, TaskRequest, TaskResult};
 use crate::config::ExecModelConfig;
 use crate::sim::exec_model::ExecModel;
+use crate::util::json;
 use crate::util::rng::Pcg64;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -35,6 +36,16 @@ fn handle(
     reader.read_line(&mut line)?;
     if line.trim().is_empty() {
         return Ok(());
+    }
+    // Heartbeat: answer pings immediately, without touching model state
+    // or sleeping — the host uses them to detect dead/wedged workers.
+    if let Ok(v) = json::parse(line.trim()) {
+        if protocol::is_ping(&v) {
+            let mut out = stream;
+            out.write_all(protocol::pong_json(worker_id).as_bytes())?;
+            out.write_all(b"\n")?;
+            return Ok(());
+        }
     }
     let req = TaskRequest::from_json(line.trim())?;
     let want = Loaded {
@@ -190,6 +201,41 @@ mod tests {
         // Different model: reload.
         let r3 = send(&TaskRequest { task_id: 3, model: 1, ..req });
         assert!(!r3.reused);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn worker_answers_pings_without_touching_model_state() {
+        use crate::serving::protocol;
+        let pool = WorkerPool::spawn(1, ExecModelConfig::default(), 1e-4, 2).unwrap();
+        let addr = pool.addrs()[0];
+        let ping = || -> Option<usize> {
+            let mut stream = TcpStream::connect(addr).unwrap();
+            stream.write_all(protocol::ping_json().as_bytes()).unwrap();
+            stream.write_all(b"\n").unwrap();
+            let mut line = String::new();
+            BufReader::new(stream).read_line(&mut line).unwrap();
+            protocol::pong_worker(line.trim())
+        };
+        assert_eq!(ping(), Some(0));
+        // A task after pings still cold-loads (pings didn't fake a model).
+        let req = TaskRequest {
+            task_id: 1,
+            prompt: "p".into(),
+            steps: 20,
+            patches: 1,
+            model: 0,
+            rank: 0,
+            tenant: 0,
+        };
+        let mut stream = TcpStream::connect(addr).unwrap();
+        stream.write_all(req.to_json().as_bytes()).unwrap();
+        stream.write_all(b"\n").unwrap();
+        let mut line = String::new();
+        BufReader::new(stream).read_line(&mut line).unwrap();
+        let res = TaskResult::from_json(line.trim()).unwrap();
+        assert!(!res.reused);
+        assert_eq!(ping(), Some(0));
         pool.shutdown();
     }
 }

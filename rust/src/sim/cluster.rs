@@ -93,7 +93,24 @@ impl Cluster {
     ///    fragmentation": prefer empty servers, then members of already
     ///    broken (partially busy) gangs, then break the least-recently-used
     ///    complete idle gang.
+    ///
+    /// This variant is *fault-blind*: a down server has no remaining work,
+    /// so it counts as idle and can be chosen (and the dispatch will be
+    /// killed by the fault sweep). Health-aware callers use
+    /// [`select_healthy`](Self::select_healthy). With the fault subsystem
+    /// disabled every server is up and the two are identical.
     pub fn select(&self, model: ModelType, count: usize) -> Selection {
+        self.select_filtered(model, count, false)
+    }
+
+    /// [`select`](Self::select) restricted to up servers: down servers are
+    /// masked out of fresh placement (reuse needs loaded weights, which a
+    /// failed server has already lost, so it is masked implicitly).
+    pub fn select_healthy(&self, model: ModelType, count: usize) -> Selection {
+        self.select_filtered(model, count, true)
+    }
+
+    fn select_filtered(&self, model: ModelType, count: usize, healthy_only: bool) -> Selection {
         // 1. Exact reuse.
         for (_gid, members) in self.idle_gangs(model) {
             if members.len() == count {
@@ -101,7 +118,11 @@ impl Cluster {
             }
         }
         // 2. Fresh placement.
-        let idle: Vec<&Server> = self.servers.iter().filter(|s| s.is_idle()).collect();
+        let idle: Vec<&Server> = self
+            .servers
+            .iter()
+            .filter(|s| s.is_idle() && (!healthy_only || s.up))
+            .collect();
         if idle.len() < count {
             return Selection::Infeasible;
         }
@@ -145,20 +166,22 @@ impl Cluster {
     }
 
     /// Dispatch: mark servers busy for `duration`, loading `model` as a new
-    /// gang (fresh) or keeping the existing gang (reuse).
+    /// gang (fresh) or keeping the existing gang (reuse). `now` stamps the
+    /// eviction instant on freshly unloaded servers (LRU bookkeeping).
     pub fn dispatch(
         &mut self,
         server_ids: &[usize],
         duration: f64,
         model: ModelType,
         reuse: bool,
+        now: f64,
     ) -> GangId {
         let gang = if reuse {
             self.servers[server_ids[0]].gang.expect("reuse without gang")
         } else {
             let g = self.fresh_gang_id();
             for &id in server_ids {
-                self.servers[id].unload();
+                self.servers[id].unload(now);
             }
             g
         };
@@ -167,6 +190,15 @@ impl Cluster {
             self.servers[id].assign(duration, model, gang, size);
         }
         gang
+    }
+
+    /// Kill an in-flight gang: every member drops its work and goes
+    /// weight-cold (the DistriFusion process group is gone and reloading
+    /// pays in full). Used for mid-flight failures and speculative losers.
+    pub fn abort_gang(&mut self, server_ids: &[usize], now: f64) {
+        for &id in server_ids {
+            self.servers[id].abort(now);
+        }
     }
 
     /// Advance all servers by dt; returns ids that completed this tick.
@@ -188,7 +220,7 @@ mod tests {
     fn busy_all(c: &mut Cluster, dur: f64) {
         let n = c.len();
         let ids: Vec<usize> = (0..n).collect();
-        c.dispatch(&ids, dur, ModelType(0), false);
+        c.dispatch(&ids, dur, ModelType(0), false, 0.0);
     }
 
     #[test]
@@ -198,7 +230,7 @@ mod tests {
         let sel = c.select(ModelType(1), 2);
         let servers = sel.servers().unwrap().to_vec();
         assert!(!sel.is_reuse());
-        c.dispatch(&servers, 5.0, ModelType(1), false);
+        c.dispatch(&servers, 5.0, ModelType(1), false, 0.0);
         c.advance(5.0, 5.0);
         let sel2 = c.select(ModelType(1), 2);
         assert!(sel2.is_reuse());
@@ -210,7 +242,7 @@ mod tests {
         let mut c = Cluster::new(4);
         let sel = c.select(ModelType(1), 2);
         let servers = sel.servers().unwrap().to_vec();
-        c.dispatch(&servers, 5.0, ModelType(1), false);
+        c.dispatch(&servers, 5.0, ModelType(1), false, 0.0);
         c.advance(5.0, 5.0);
         // Same model but needs 4 servers: the 2-gang can't be reused as-is.
         let sel2 = c.select(ModelType(1), 4);
@@ -221,7 +253,7 @@ mod tests {
     fn no_reuse_for_wrong_model() {
         let mut c = Cluster::new(4);
         let servers = c.select(ModelType(1), 2).servers().unwrap().to_vec();
-        c.dispatch(&servers, 5.0, ModelType(1), false);
+        c.dispatch(&servers, 5.0, ModelType(1), false, 0.0);
         c.advance(5.0, 5.0);
         let sel2 = c.select(ModelType(2), 2);
         assert!(!sel2.is_reuse());
@@ -241,7 +273,7 @@ mod tests {
         let mut c = Cluster::new(6);
         // Gang A: servers for a 2-patch model-1 task (intact after done).
         let a = c.select(ModelType(1), 2).servers().unwrap().to_vec();
-        c.dispatch(&a, 1.0, ModelType(1), false);
+        c.dispatch(&a, 1.0, ModelType(1), false, 0.0);
         c.advance(1.0, 1.0);
         // Gang B: 2-patch model-2, then one member re-occupied → broken.
         let b: Vec<usize> = c
@@ -251,10 +283,10 @@ mod tests {
             .take(2)
             .map(|s| s.id)
             .collect();
-        c.dispatch(&b, 1.0, ModelType(2), false);
+        c.dispatch(&b, 1.0, ModelType(2), false, 1.0);
         c.advance(1.0, 2.0);
         // Occupy one member of gang B with a fresh 1-patch model-0 task.
-        c.dispatch(&[b[0]], 100.0, ModelType(0), false);
+        c.dispatch(&[b[0]], 100.0, ModelType(0), false, 2.0);
         // Now: 2 empty servers, 1 broken-gang server (b[1]), 2 intact gang-A
         // servers. A fresh 3-server model-0 task should take the 2 empty +
         // the broken one, leaving gang A intact.
@@ -268,18 +300,46 @@ mod tests {
     fn dispatch_reuse_keeps_gang_id() {
         let mut c = Cluster::new(2);
         let servers = c.select(ModelType(1), 2).servers().unwrap().to_vec();
-        let g1 = c.dispatch(&servers, 1.0, ModelType(1), false);
+        let g1 = c.dispatch(&servers, 1.0, ModelType(1), false, 0.0);
         c.advance(1.0, 1.0);
         let sel = c.select(ModelType(1), 2);
         assert!(sel.is_reuse());
-        let g2 = c.dispatch(sel.servers().unwrap(), 1.0, ModelType(1), true);
+        let g2 = c.dispatch(sel.servers().unwrap(), 1.0, ModelType(1), true, 1.0);
         assert_eq!(g1, g2);
+    }
+
+    #[test]
+    fn select_healthy_masks_down_servers_but_select_stays_blind() {
+        let mut c = Cluster::new(4);
+        c.servers[0].up = false;
+        c.servers[1].up = false;
+        // Blind selection still sees 4 "idle" servers.
+        assert!(c.select(ModelType(0), 4).servers().is_some());
+        // Health-aware selection only has 2 up servers left.
+        assert_eq!(c.select_healthy(ModelType(0), 4), Selection::Infeasible);
+        let sel = c.select_healthy(ModelType(0), 2);
+        assert_eq!(sel.servers().unwrap(), &[2, 3]);
+        // A recovered server is selectable again.
+        c.servers[0].up = true;
+        assert!(c.select_healthy(ModelType(0), 3).servers().is_some());
+    }
+
+    #[test]
+    fn abort_gang_frees_servers_weight_cold() {
+        let mut c = Cluster::new(2);
+        c.dispatch(&[0, 1], 50.0, ModelType(1), false, 0.0);
+        c.abort_gang(&[0, 1], 3.0);
+        assert_eq!(c.idle_count(), 2);
+        assert!(c.servers.iter().all(|s| s.model.is_none()));
+        assert!(c.servers.iter().all(|s| s.idle_since == 3.0));
+        // No reusable gang survives an abort.
+        assert!(c.idle_gangs(ModelType(1)).is_empty());
     }
 
     #[test]
     fn advance_reports_completions_once() {
         let mut c = Cluster::new(3);
-        c.dispatch(&[0, 1], 2.0, ModelType(0), false);
+        c.dispatch(&[0, 1], 2.0, ModelType(0), false, 0.0);
         assert!(c.advance(1.0, 1.0).is_empty());
         let done = c.advance(1.0, 2.0);
         assert_eq!(done, vec![0, 1]);

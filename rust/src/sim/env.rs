@@ -8,14 +8,16 @@
 //! servers via the greedy selector) or does nothing.
 
 use crate::config::EnvConfig;
+use crate::faults::{FaultEvent, FaultKind, FaultModel, FaultsConfig};
 use crate::qos::{AdmissionConfig, AdmissionState, PendingQueue, QueueDiscipline, TenantRegistry};
 use crate::sim::cluster::{Cluster, Selection};
+use crate::sim::server::GangId;
 use crate::sim::exec_model::ExecModel;
 use crate::sim::quality::QualityModel;
-use crate::sim::task::{Task, Workload};
+use crate::sim::task::{ModelType, Task, Workload};
 use crate::util::rng::Pcg64;
 use crate::workload::{MetricsCollector, TaskSource, TaskStream, TenantReport};
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, VecDeque};
 
 /// Decoded composite action (Eq. 8): `[a_c, a_s, a_k1..a_kl]`, every
 /// component in [-1, 1] (the policy networks end in tanh).
@@ -104,6 +106,69 @@ pub struct StepOutcome {
     pub infeasible: bool,
 }
 
+/// One scheduled attempt in flight under the fault subsystem: completion
+/// (and all per-task accounting) is deferred until every gang member has
+/// finished — or the gang is killed by a failure.
+#[derive(Clone, Debug)]
+struct InFlight {
+    task: Task,
+    steps: u32,
+    servers: Vec<usize>,
+    /// The gang id this attempt was dispatched as. A member that finishes
+    /// its patch early goes idle and may be re-dispatched (which assigns a
+    /// fresh gang id), so raw server ids are not enough to know whether a
+    /// server is still working for this attempt — the gang id is.
+    gang: GangId,
+    /// Per-member patch completion, parallel to `servers`. A finished
+    /// patch survives whatever happens to its server afterwards.
+    done: Vec<bool>,
+    reuse: bool,
+    start: f64,
+    /// Nominal duration charged at dispatch (init + exec before any
+    /// straggler stretch); the unit of patch-second accounting.
+    nominal: f64,
+    speculative: bool,
+}
+
+impl InFlight {
+    /// Nominal patch-seconds of this attempt (duration x gang size).
+    fn work(&self) -> f64 {
+        self.nominal * self.servers.len() as f64
+    }
+
+    fn all_done(&self) -> bool {
+        self.done.iter().all(|&d| d)
+    }
+}
+
+/// Abort exactly the servers still working for `att`: members whose patch
+/// already finished — and servers since re-dispatched to another task
+/// (their gang id changed) — are left alone.
+fn abort_attempt(cluster: &mut Cluster, att: &InFlight, now: f64) {
+    for (i, &m) in att.servers.iter().enumerate() {
+        if !att.done[i] && cluster.servers[m].gang == Some(att.gang) {
+            cluster.servers[m].abort(now);
+        }
+    }
+}
+
+/// Runtime state of the fault subsystem: the health process, the in-flight
+/// gang registry, per-task kill counts, and the event log (recordable into
+/// JSONL traces and replayable via [`EdgeEnv::script_faults`]). Present
+/// only when `EnvConfig::faults` is active — otherwise the env takes the
+/// seed's code path bit-identically.
+#[derive(Clone)]
+struct FaultState {
+    cfg: FaultsConfig,
+    model: FaultModel,
+    inflight: Vec<InFlight>,
+    /// Kill count per still-live task id (dropped once resolved).
+    attempts: BTreeMap<u64, u32>,
+    events: Vec<FaultEvent>,
+    /// Tasks dropped after exhausting their retry budget.
+    failed_tasks: usize,
+}
+
 /// Aggregated per-episode metrics (feeds Tables IX–XI, Fig 5/8, and the
 /// scenario sweep). Percentiles and utilization come from the streaming
 /// `MetricsCollector`; when no task was ever scheduled they are censored
@@ -137,6 +202,28 @@ pub struct EpisodeReport {
     /// Per-tenant SLO attainment / drop-rate / latency percentiles (empty
     /// unless `EnvConfig::tenants` is configured).
     pub tenant_reports: Vec<TenantReport>,
+    /// Completed tasks per simulated second (goodput under churn).
+    pub goodput: f64,
+    // --- fault-subsystem metrics (all zero when faults are disabled) ---
+    /// Server failure events (independent churn + zone shocks).
+    pub failures: usize,
+    /// In-flight gangs killed by a member failure.
+    pub gang_kills: usize,
+    /// Killed tasks re-queued for another attempt.
+    pub retries: usize,
+    /// Tasks dropped after exhausting `FaultsConfig::max_retries`.
+    pub failed_tasks: usize,
+    /// Speculative backup attempts launched / won.
+    pub spec_launches: usize,
+    pub spec_wins: usize,
+    /// Patch-second accounting: dispatched = completed + wasted +
+    /// in-flight (the balance the acceptance test pins).
+    pub dispatched_patch_s: f64,
+    pub completed_patch_s: f64,
+    pub wasted_patch_s: f64,
+    pub inflight_patch_s: f64,
+    /// wasted / dispatched patch-seconds (0 when nothing dispatched).
+    pub wasted_work_frac: f64,
 }
 
 /// The EAT MDP environment. `Clone` supports the meta-heuristic baselines
@@ -152,6 +239,7 @@ pub struct EdgeEnv {
     queue: PendingQueue,
     registry: Option<TenantRegistry>,
     admission: AdmissionState,
+    faults: Option<FaultState>,
     now: f64,
     steps_taken: usize,
     rng: Pcg64,
@@ -222,6 +310,26 @@ impl EdgeEnv {
             Some(reg) => MetricsCollector::with_tenants(cfg.num_servers, reg),
             None => MetricsCollector::new(cfg.num_servers),
         };
+        // The fault stream is seeded from a *clone* of the env RNG: the
+        // main stream is bit-identical whether faults are on or off, so
+        // arrivals and execution jitter stay common-random-number paired
+        // across policies and across fault settings. An inert section
+        // (`is_active` false) builds no runtime at all — the seed's exact
+        // code path.
+        let faults = cfg.faults.as_ref().filter(|f| f.is_active()).map(|f| {
+            let seed = {
+                let mut probe = rng.clone();
+                probe.next_u64()
+            };
+            FaultState {
+                cfg: f.clone(),
+                model: FaultModel::stochastic(f.clone(), cfg.num_servers, Pcg64::new(seed, 0xFA17)),
+                inflight: Vec::new(),
+                attempts: BTreeMap::new(),
+                events: Vec::new(),
+                failed_tasks: 0,
+            }
+        });
         let mut env = EdgeEnv {
             cfg,
             cluster,
@@ -231,6 +339,7 @@ impl EdgeEnv {
             queue,
             registry,
             admission,
+            faults,
             now: 0.0,
             steps_taken: 0,
             rng,
@@ -279,11 +388,50 @@ impl EdgeEnv {
         &self.metrics
     }
 
+    /// Every health transition applied so far this episode (empty when
+    /// faults are disabled). Recordable into the JSONL trace format and
+    /// replayable via [`script_faults`](Self::script_faults).
+    pub fn fault_events(&self) -> &[FaultEvent] {
+        self.faults.as_ref().map_or(&[], |f| f.events.as_slice())
+    }
+
+    /// Replace the stochastic fault process with a scripted replay of
+    /// `events` (recorded from a previous episode): the same workload,
+    /// env seed, and policy then reproduce that episode bit-exactly.
+    /// Must be called before the first step, on an env whose config has
+    /// an active `faults` section.
+    pub fn script_faults(&mut self, events: Vec<FaultEvent>) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.now == 0.0,
+            "fault scripts must be installed before the first step"
+        );
+        let fs = self.faults.as_mut().ok_or_else(|| {
+            anyhow::anyhow!("script_faults needs an active `faults` section in the env config")
+        })?;
+        fs.model = FaultModel::scripted(events);
+        fs.events.clear();
+        Ok(())
+    }
+
+    /// Server selection for a task, honouring health-aware dispatch: with
+    /// an active fault section and `health_aware = true`, down servers are
+    /// masked; otherwise (including every fault-free config) this is the
+    /// seed's selector exactly. Heuristic policies route through this.
+    pub fn select_for(&self, model: ModelType, patches: usize) -> Selection {
+        match &self.faults {
+            Some(fs) if fs.cfg.health_aware => self.cluster.select_healthy(model, patches),
+            _ => self.cluster.select(model, patches),
+        }
+    }
+
     /// Remaining (not yet arrived) + queued + in-flight tasks exist?
-    /// Tasks shed by admission control count as resolved.
+    /// Tasks shed by admission control — or dropped after exhausting
+    /// their retry budget under churn — count as resolved.
     pub fn all_done(&self) -> bool {
-        self.scheduled_count + self.dropped_count == self.source.total()
+        let failed = self.faults.as_ref().map_or(0, |f| f.failed_tasks);
+        self.scheduled_count + self.dropped_count + failed == self.source.total()
             && self.cluster.servers.iter().all(|s| s.is_idle())
+            && self.faults.as_ref().map_or(true, |f| f.inflight.is_empty())
     }
 
     fn absorb_arrivals(&mut self) {
@@ -315,15 +463,18 @@ impl EdgeEnv {
     }
 
     /// Build the normalised state vector: the 3×(|E|+l) matrix of Eq. 6 in
-    /// row-major order, scaled to roughly [0, 1] for the networks.
+    /// row-major order, scaled to roughly [0, 1] for the networks, plus
+    /// any opt-in feature rows (`EnvConfig::state_features`).
     ///
     /// Layout: row 0 = [a_e ... | waiting_k ...], row 1 = [t^r_e ... |
-    /// c_k ...], row 2 = [d_e ... | 0 ...].
+    /// c_k ...], row 2 = [d_e ... | 0 ...]; then (optional) a health row
+    /// (1/slowdown for up servers, 0 for down ones), then (optional) a
+    /// deadline-slack row and a tenant-weight row over the queue slots.
     pub fn state(&self) -> Vec<f32> {
         let e = self.cfg.num_servers;
         let l = self.cfg.queue_window;
         let cols = e + l;
-        let mut s = vec![0.0f32; 3 * cols];
+        let mut s = vec![0.0f32; self.cfg.state_len()];
         const T_SCALE: f32 = 1.0 / 100.0;
         for (i, srv) in self.cluster.servers.iter().enumerate() {
             s[i] = if srv.is_idle() { 1.0 } else { 0.0 };
@@ -342,6 +493,29 @@ impl EdgeEnv {
             // we use it to mark slot occupancy, which the padded matrix
             // otherwise loses for a task with zero wait and c=0 normalise.
             s[2 * cols + c] = 1.0;
+        }
+        let mut row = 3 * cols;
+        if self.cfg.state_features.health {
+            for (i, srv) in self.cluster.servers.iter().enumerate() {
+                s[row + i] = if srv.up { (1.0 / srv.slowdown) as f32 } else { 0.0 };
+            }
+            row += cols;
+        }
+        if self.cfg.state_features.tenancy {
+            let max_w = self.registry.as_ref().map_or(1.0, |r| {
+                r.config().tenants.iter().map(|t| t.weight).fold(1.0, f64::max)
+            });
+            for (j, task) in self.queue.items().iter().take(l).enumerate() {
+                let c = row + e + j;
+                // Deadline slack in the same time scale as the wait row;
+                // negative = already past due, 4.0 = far-off / no deadline.
+                s[c] = match task.deadline {
+                    Some(d) => (((d - self.now) as f32) * T_SCALE).clamp(-1.0, 4.0),
+                    None => 4.0,
+                };
+                let w = self.registry.as_ref().map_or(1.0, |r| r.weight(task.tenant));
+                s[row + cols + e + j] = (w / max_w) as f32;
+            }
         }
         s
     }
@@ -380,15 +554,18 @@ impl EdgeEnv {
         }
         self.total_reward += outcome.reward;
         // Advance simulated time, crediting busy time before the tick.
+        // A straggling server stays busy `slowdown` times longer than its
+        // remaining nominal work; a down server processes nothing.
         let dt = self.cfg.decision_dt;
         for s in &self.cluster.servers {
-            if !s.is_idle() {
-                self.metrics.observe_busy(s.id, s.remaining.min(dt));
+            if s.up && !s.is_idle() {
+                self.metrics.observe_busy(s.id, (s.remaining * s.slowdown).min(dt));
             }
         }
         self.metrics.advance_time(dt);
         self.now += dt;
-        self.cluster.advance(dt, self.now);
+        let finished = self.cluster.advance(dt, self.now);
+        self.fault_tick(&finished, dt);
         self.absorb_arrivals();
         self.steps_taken += 1;
         outcome.done = self.is_done();
@@ -429,7 +606,7 @@ impl EdgeEnv {
     /// by heuristic policies.
     pub fn schedule_task_at(&mut self, index: usize, steps: u32) -> Option<Scheduled> {
         let task = self.queue.items().get(index)?.clone();
-        let selection = self.cluster.select(task.model, task.patches);
+        let selection = self.select_for(task.model, task.patches);
         let (servers, reuse) = match &selection {
             Selection::Reuse(v) => (v.clone(), true),
             Selection::Fresh(v) => (v.clone(), false),
@@ -453,6 +630,13 @@ impl EdgeEnv {
             || server_ids.iter().any(|&id| !self.cluster.servers[id].is_idle())
         {
             return None;
+        }
+        if let Some(fs) = &self.faults {
+            if fs.cfg.health_aware
+                && server_ids.iter().any(|&id| !self.cluster.servers[id].up)
+            {
+                return None;
+            }
         }
         let reuse = self
             .cluster
@@ -499,7 +683,7 @@ impl EdgeEnv {
             }
         };
         let duration = exec + init;
-        self.cluster.dispatch(&servers, duration, task.model, reuse);
+        let gang = self.cluster.dispatch(&servers, duration, task.model, reuse, self.now);
         self.queue.remove(index);
         let waiting = (self.now - task.arrival).max(0.0);
         let response = waiting + duration;
@@ -521,6 +705,30 @@ impl EdgeEnv {
             tenant: task.tenant,
             deadline_met,
         };
+        if self.faults.is_some() {
+            // Under churn an attempt may be killed or stretched, so all
+            // per-task accounting is deferred to actual completion
+            // (`fault_tick`). The nominal `Scheduled` is still returned —
+            // the immediate reward keeps its seed semantics. Loads are
+            // counted at dispatch: a killed cold attempt really did load.
+            if !reuse {
+                self.reload_count += 1;
+            }
+            self.metrics.observe_dispatched_work(duration * sch.servers.len() as f64);
+            let att = InFlight {
+                task,
+                steps,
+                done: vec![false; sch.servers.len()],
+                servers: sch.servers.clone(),
+                gang,
+                reuse,
+                start: self.now,
+                nominal: duration,
+                speculative: false,
+            };
+            self.faults.as_mut().expect("checked above").inflight.push(att);
+            return Some(sch);
+        }
         // Metrics.
         self.scheduled_count += 1;
         if !reuse {
@@ -537,6 +745,215 @@ impl EdgeEnv {
         self.metrics.observe_tenant_task(task.tenant, response, deadline_met);
         self.trace.push(sch.clone());
         Some(sch)
+    }
+
+    /// One fault-subsystem tick (no-op without an active `faults`
+    /// section): apply health transitions, kill gangs with a failed
+    /// member (re-queueing their tasks, deadline and retry count intact),
+    /// resolve completions (first finisher of a speculative race wins,
+    /// losers are charged as wasted work), and launch speculative backups
+    /// for gangs running past `spec_beta` x their nominal duration.
+    fn fault_tick(&mut self, finished_servers: &[usize], dt: f64) {
+        let Some(mut fs) = self.faults.take() else {
+            return;
+        };
+        let now = self.now;
+        // 0. Credit patches that finished this tick, matched by gang id —
+        // a member that finished earlier may since have been re-dispatched
+        // under a new gang, and its completion then belongs to that
+        // attempt, not this one. A finished patch survives whatever
+        // happens to its server afterwards.
+        for &sid in finished_servers {
+            let Some(sgang) = self.cluster.servers.get(sid).and_then(|s| s.gang) else {
+                continue;
+            };
+            for att in fs.inflight.iter_mut() {
+                if att.gang == sgang {
+                    if let Some(pos) = att.servers.iter().position(|&m| m == sid) {
+                        att.done[pos] = true;
+                    }
+                    break;
+                }
+            }
+        }
+        // 1. Health transitions. A failing server loses its work and its
+        // model weights; a recovering one comes back up weight-cold.
+        let events = fs.model.step(now - dt, dt);
+        let mut downed: Vec<usize> = Vec::new();
+        for ev in &events {
+            let Some(srv) = self.cluster.servers.get_mut(ev.server) else {
+                continue;
+            };
+            match &ev.kind {
+                FaultKind::Fail => {
+                    if srv.up {
+                        srv.up = false;
+                        self.metrics.observe_failure();
+                    }
+                    srv.slowdown = 1.0;
+                    srv.abort(now);
+                    downed.push(ev.server);
+                }
+                FaultKind::Recover => {
+                    srv.up = true;
+                    srv.idle_since = now;
+                }
+                FaultKind::SlowStart { factor, .. } => {
+                    srv.slowdown = factor.max(1.0);
+                }
+                FaultKind::SlowEnd => {
+                    srv.slowdown = 1.0;
+                }
+            }
+        }
+        fs.events.extend(events);
+        // 2. Kill every in-flight gang with a *still-working* failed
+        // member (including one that failed and recovered within this
+        // tick, whose work is gone regardless). Members whose patch
+        // already finished don't kill their gang by failing afterwards.
+        let (killed, alive): (Vec<InFlight>, Vec<InFlight>) =
+            fs.inflight.drain(..).partition(|att| {
+                att.servers.iter().enumerate().any(|(i, &id)| {
+                    !att.done[i]
+                        && (!self.cluster.servers[id].up || downed.contains(&id))
+                })
+            });
+        fs.inflight = alive;
+        let mut handled: Vec<u64> = Vec::new();
+        for att in killed {
+            abort_attempt(&mut self.cluster, &att, now);
+            self.metrics.observe_gang_kill(att.work());
+            let tid = att.task.id;
+            // Re-queue once per task, and only if no sibling attempt is
+            // still racing.
+            if handled.contains(&tid) || fs.inflight.iter().any(|a| a.task.id == tid) {
+                continue;
+            }
+            handled.push(tid);
+            let count = fs.attempts.entry(tid).or_insert(0);
+            *count += 1;
+            if *count > fs.cfg.max_retries {
+                fs.attempts.remove(&tid);
+                fs.failed_tasks += 1;
+                self.metrics.observe_task_failure();
+            } else {
+                self.metrics.observe_retry();
+                self.queue.push_retry(att.task);
+            }
+        }
+        // 3. Completions: a gang is done when every member's patch has
+        // finished (detected at heartbeat cadence). First finisher of a
+        // task wins; racing siblings are aborted and charged as wasted
+        // work.
+        let (finished, running): (Vec<InFlight>, Vec<InFlight>) =
+            fs.inflight.drain(..).partition(InFlight::all_done);
+        fs.inflight = running;
+        let mut won: Vec<u64> = Vec::new();
+        for att in finished {
+            let tid = att.task.id;
+            if won.contains(&tid) {
+                self.metrics.observe_wasted_work(att.work());
+                continue;
+            }
+            won.push(tid);
+            let mut keep = Vec::with_capacity(fs.inflight.len());
+            for sib in fs.inflight.drain(..) {
+                if sib.task.id == tid {
+                    abort_attempt(&mut self.cluster, &sib, now);
+                    self.metrics.observe_wasted_work(sib.work());
+                } else {
+                    keep.push(sib);
+                }
+            }
+            fs.inflight = keep;
+            fs.attempts.remove(&tid);
+            self.complete_attempt(att);
+        }
+        // 4. Speculative re-execution: a primary past beta x nominal gets
+        // one backup, launched only onto an idle *warm* gang of the right
+        // shape (a backup that must cold-load would lose the race to the
+        // reload itself).
+        if fs.cfg.spec_beta > 1.0 {
+            let mut backups: Vec<InFlight> = Vec::new();
+            for att in &fs.inflight {
+                if att.speculative || now - att.start <= fs.cfg.spec_beta * att.nominal {
+                    continue;
+                }
+                let tid = att.task.id;
+                if fs.inflight.iter().any(|a| a.task.id == tid && a.speculative)
+                    || backups.iter().any(|b| b.task.id == tid)
+                {
+                    continue;
+                }
+                let sel = if fs.cfg.health_aware {
+                    self.cluster.select_healthy(att.task.model, att.task.patches)
+                } else {
+                    self.cluster.select(att.task.model, att.task.patches)
+                };
+                let Selection::Reuse(servers) = sel else {
+                    continue;
+                };
+                let exec =
+                    self.exec_model
+                        .sample_exec(att.steps, att.task.patches, &mut self.rng);
+                let gang = self.cluster.dispatch(&servers, exec, att.task.model, true, now);
+                self.metrics.observe_spec_launch();
+                self.metrics.observe_dispatched_work(exec * servers.len() as f64);
+                backups.push(InFlight {
+                    task: att.task.clone(),
+                    steps: att.steps,
+                    done: vec![false; servers.len()],
+                    servers,
+                    gang,
+                    reuse: true,
+                    start: now,
+                    nominal: exec,
+                    speculative: true,
+                });
+            }
+            fs.inflight.extend(backups);
+        }
+        self.faults = Some(fs);
+    }
+
+    /// Deferred completion accounting for one winning attempt (fault
+    /// subsystem only): realised response runs to the detection instant,
+    /// so stragglers and retries show up in every latency metric.
+    fn complete_attempt(&mut self, att: InFlight) {
+        let now = self.now;
+        let waiting = (att.start - att.task.arrival).max(0.0);
+        let response = (now - att.task.arrival).max(0.0);
+        let quality = self.quality_model.sample_quality(att.steps, att.task.prompt_id);
+        let q_floor = att.task.q_min.unwrap_or(self.cfg.reward.q_min);
+        let deadline_met = att.task.deadline.map(|d| now <= d);
+        let sch = Scheduled {
+            task_id: att.task.id,
+            steps: att.steps,
+            servers: att.servers.clone(),
+            reused_model: att.reuse,
+            duration: now - att.start,
+            waiting,
+            response,
+            quality,
+            q_min: q_floor,
+            tenant: att.task.tenant,
+            deadline_met,
+        };
+        self.scheduled_count += 1;
+        self.sum_quality += quality;
+        self.sum_response += response;
+        self.sum_steps_chosen += att.steps as f64;
+        self.sum_efficiency += quality / response.max(1e-9);
+        if quality < q_floor {
+            self.below_min += 1;
+        }
+        self.metrics.observe_task(response, waiting, !att.reuse);
+        self.metrics.observe_tenant_task(att.task.tenant, response, deadline_met);
+        self.metrics.observe_completed_work(att.work());
+        if att.speculative {
+            self.metrics.observe_spec_win();
+        }
+        self.trace.push(sch);
     }
 
     /// Immediate reward (§V.A.4):
@@ -561,13 +978,20 @@ impl EdgeEnv {
         reward
     }
 
-    /// Can any queued task currently be gang-scheduled?
-    pub fn any_feasible(&self) -> bool {
+    /// Index of the first queue-feasible task among the visible slots, in
+    /// queue order (down servers masked under health-aware dispatch). The
+    /// head-first dispatchers of `eat qos` / `eat faults` drive this.
+    pub fn first_feasible(&self) -> Option<usize> {
         self.queue
             .items()
             .iter()
             .take(self.cfg.queue_window)
-            .any(|t| !matches!(self.cluster.select(t.model, t.patches), Selection::Infeasible))
+            .position(|t| !matches!(self.select_for(t.model, t.patches), Selection::Infeasible))
+    }
+
+    /// Can any queued task currently be gang-scheduled?
+    pub fn any_feasible(&self) -> bool {
+        self.first_feasible().is_some()
     }
 
     /// Arrival times of the underlying workload (testing / diagnostics).
@@ -577,13 +1001,37 @@ impl EdgeEnv {
         self.source.known_arrivals()
     }
 
+    /// Fault-subsystem report fields (all zero without an active
+    /// section), shared by both report branches.
+    fn fill_fault_fields(&self, rep: &mut EpisodeReport) {
+        rep.goodput = if self.now > 0.0 {
+            self.scheduled_count as f64 / self.now
+        } else {
+            0.0
+        };
+        rep.failures = self.metrics.failures() as usize;
+        rep.gang_kills = self.metrics.gang_kills() as usize;
+        rep.retries = self.metrics.retries() as usize;
+        rep.failed_tasks = self.faults.as_ref().map_or(0, |f| f.failed_tasks);
+        rep.spec_launches = self.metrics.spec_launches() as usize;
+        rep.spec_wins = self.metrics.spec_wins() as usize;
+        rep.dispatched_patch_s = self.metrics.dispatched_ps();
+        rep.completed_patch_s = self.metrics.completed_ps();
+        rep.wasted_patch_s = self.metrics.wasted_ps();
+        rep.inflight_patch_s = self
+            .faults
+            .as_ref()
+            .map_or(0.0, |f| f.inflight.iter().map(InFlight::work).sum());
+        rep.wasted_work_frac = self.metrics.wasted_frac();
+    }
+
     /// Final episode report. If the policy never scheduled anything the
     /// latency (and its percentiles) is censored at the episode's
     /// simulated time (otherwise a do-nothing policy would report a
     /// perfect 0-second latency).
     pub fn report(&self) -> EpisodeReport {
         if self.scheduled_count == 0 {
-            return EpisodeReport {
+            let mut rep = EpisodeReport {
                 completed_tasks: 0,
                 total_tasks: self.source.total(),
                 decision_steps: self.steps_taken,
@@ -603,10 +1051,13 @@ impl EdgeEnv {
                 efficiency: 0.0,
                 dropped_tasks: self.dropped_count,
                 tenant_reports: self.metrics.tenant_reports(),
+                ..EpisodeReport::default()
             };
+            self.fill_fault_fields(&mut rep);
+            return rep;
         }
         let n = self.scheduled_count as f64;
-        EpisodeReport {
+        let mut rep = EpisodeReport {
             completed_tasks: self.scheduled_count,
             total_tasks: self.source.total(),
             decision_steps: self.steps_taken,
@@ -626,7 +1077,10 @@ impl EdgeEnv {
             efficiency: self.sum_efficiency / n,
             dropped_tasks: self.dropped_count,
             tenant_reports: self.metrics.tenant_reports(),
-        }
+            ..EpisodeReport::default()
+        };
+        self.fill_fault_fields(&mut rep);
+        rep
     }
 }
 
@@ -1010,6 +1464,298 @@ mod tests {
         let rep = e.report();
         assert!(rep.dropped_tasks > 0, "the spike must shed load");
         assert_eq!(rep.completed_tasks + rep.dropped_tasks, rep.total_tasks - e.queue().len());
+    }
+
+    /// A 2-server, 2-patch, single-model env with an active (but inert
+    /// unless scripted) fault section: scripted tests drive the health
+    /// timeline deterministically.
+    fn scripted_fault_cfg(max_retries: u32, spec_beta: f64) -> EnvConfig {
+        let mut cfg = ExperimentConfig::preset_4node(0.05).env;
+        cfg.num_servers = 2;
+        cfg.num_models = 1;
+        cfg.patch_choices = vec![2];
+        cfg.patch_weights = vec![1.0];
+        cfg.tasks_per_episode = 1;
+        cfg.faults = Some(FaultsConfig {
+            mtbf: 0.0,
+            zone_shock_rate: 0.0,
+            straggler_rate: 1e-9, // active, but never fires before scripting
+            spec_beta,
+            max_retries,
+            ..FaultsConfig::default()
+        });
+        cfg
+    }
+
+    fn run_to_done(e: &mut EdgeEnv) -> EpisodeReport {
+        let l = e.cfg.queue_window;
+        for _ in 0..=e.cfg.step_limit {
+            if e.step(&schedule_action(l, 0, 0.5)).done {
+                break;
+            }
+        }
+        e.report()
+    }
+
+    fn assert_work_balance(rep: &EpisodeReport) {
+        let sum = rep.completed_patch_s + rep.wasted_patch_s + rep.inflight_patch_s;
+        assert!(
+            (sum - rep.dispatched_patch_s).abs() <= 1e-6 * rep.dispatched_patch_s.max(1.0),
+            "patch-second books don't balance: dispatched {} vs completed {} + wasted {} + inflight {}",
+            rep.dispatched_patch_s,
+            rep.completed_patch_s,
+            rep.wasted_patch_s,
+            rep.inflight_patch_s
+        );
+    }
+
+    #[test]
+    fn inert_faults_section_is_bit_identical_to_none() {
+        // The regression guard of this PR: `faults: Some(off)` builds no
+        // fault runtime, so episodes match `faults: None` bit-for-bit.
+        let run = |faults: Option<FaultsConfig>| {
+            let mut cfg = ExperimentConfig::preset_8node(0.1).env;
+            cfg.faults = faults;
+            let mut e = EdgeEnv::new(cfg, 91);
+            let rep = run_to_done(&mut e);
+            assert!(e.fault_events().is_empty());
+            rep
+        };
+        let a = run(None);
+        let b = run(Some(FaultsConfig::off()));
+        assert_eq!(a.completed_tasks, b.completed_tasks);
+        assert_eq!(a.total_reward.to_bits(), b.total_reward.to_bits());
+        assert_eq!(a.avg_response_latency.to_bits(), b.avg_response_latency.to_bits());
+        assert_eq!(a.p99_latency.to_bits(), b.p99_latency.to_bits());
+        assert_eq!(a.avg_quality.to_bits(), b.avg_quality.to_bits());
+        assert_eq!(a.reloads, b.reloads);
+        assert_eq!(b.failures, 0);
+        assert_eq!(b.dispatched_patch_s, 0.0);
+    }
+
+    #[test]
+    fn active_faults_keep_arrivals_and_exec_draws_crn_paired() {
+        // The fault stream forks from a *clone* of the env RNG: enabling
+        // churn must not move the arrival sequence or the first dispatch's
+        // execution-jitter draw.
+        let first_sch = |faults: Option<FaultsConfig>| {
+            let mut cfg = ExperimentConfig::preset_8node(0.1).env;
+            cfg.faults = faults;
+            let mut e = EdgeEnv::new(cfg, 17);
+            let arrivals = e.workload_arrivals();
+            let l = e.cfg.queue_window;
+            loop {
+                if let Some(sch) = e.step(&schedule_action(l, 0, 0.5)).scheduled {
+                    return (arrivals, sch.duration);
+                }
+            }
+        };
+        let (arr_a, dur_a) = first_sch(None);
+        let (arr_b, dur_b) = first_sch(Some(FaultsConfig::default()));
+        assert_eq!(arr_a.len(), arr_b.len());
+        for (x, y) in arr_a.iter().zip(&arr_b) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        assert_eq!(dur_a.to_bits(), dur_b.to_bits());
+    }
+
+    #[test]
+    fn scripted_failure_kills_gang_requeues_and_recovers_cold() {
+        let cfg = scripted_fault_cfg(3, 0.0);
+        let wl = Workload::fixed(&[(0.0, 2, 0)]);
+        let mut e = EdgeEnv::with_workload(cfg, wl, Pcg64::seeded(5));
+        e.script_faults(vec![
+            FaultEvent { t: 5.0, server: 0, kind: FaultKind::Fail },
+            FaultEvent { t: 6.0, server: 0, kind: FaultKind::Recover },
+        ])
+        .unwrap();
+        let rep = run_to_done(&mut e);
+        assert_eq!(rep.completed_tasks, 1, "the retried task must finish");
+        assert_eq!(rep.failures, 1);
+        assert_eq!(rep.gang_kills, 1);
+        assert_eq!(rep.retries, 1);
+        assert_eq!(rep.failed_tasks, 0);
+        assert!(rep.wasted_patch_s > 0.0, "the killed attempt is wasted work");
+        assert_work_balance(&rep);
+        // Two fresh loads: the killed attempt's and the retry's — the
+        // recovered server came back weight-cold.
+        assert_eq!(rep.reloads, 2);
+        // The re-queued task kept its arrival: its waiting spans the kill.
+        let done = e.trace().last().unwrap();
+        assert!(done.waiting >= 5.0, "waiting {} must span the failure", done.waiting);
+        assert!(rep.goodput > 0.0);
+    }
+
+    #[test]
+    fn retry_budget_exhaustion_drops_the_task() {
+        let cfg = scripted_fault_cfg(1, 0.0);
+        let wl = Workload::fixed(&[(0.0, 2, 0)]);
+        let mut e = EdgeEnv::with_workload(cfg, wl, Pcg64::seeded(6));
+        e.script_faults(vec![
+            FaultEvent { t: 2.0, server: 0, kind: FaultKind::Fail },
+            FaultEvent { t: 3.0, server: 0, kind: FaultKind::Recover },
+            FaultEvent { t: 6.0, server: 0, kind: FaultKind::Fail },
+        ])
+        .unwrap();
+        let rep = run_to_done(&mut e);
+        assert_eq!(rep.completed_tasks, 0);
+        assert_eq!(rep.failed_tasks, 1, "second kill exceeds max_retries=1");
+        assert_eq!(rep.gang_kills, 2);
+        assert_eq!(rep.retries, 1);
+        assert_work_balance(&rep);
+        // The episode resolves (dropped task counts as done) long before
+        // the step limit.
+        assert!(rep.decision_steps < 100, "steps {}", rep.decision_steps);
+    }
+
+    #[test]
+    fn speculative_backup_beats_straggling_primary() {
+        let mut cfg = scripted_fault_cfg(3, 1.5);
+        cfg.patch_choices = vec![1];
+        cfg.tasks_per_episode = 2;
+        let wl = Workload::fixed(&[(0.0, 1, 0), (1.0, 1, 0)]);
+        let mut e = EdgeEnv::with_workload(cfg, wl, Pcg64::seeded(7));
+        // Server 0 (task 0's host) slows 20x shortly after dispatch; the
+        // warm server 1 hosts the backup once beta x nominal elapses.
+        e.script_faults(vec![FaultEvent {
+            t: 2.0,
+            server: 0,
+            kind: FaultKind::SlowStart { factor: 20.0, duration: 1000.0 },
+        }])
+        .unwrap();
+        let rep = run_to_done(&mut e);
+        assert_eq!(rep.completed_tasks, 2);
+        assert_eq!(rep.spec_launches, 1);
+        assert_eq!(rep.spec_wins, 1, "the warm backup must win the race");
+        assert!(rep.wasted_patch_s > 0.0, "the aborted primary is wasted work");
+        assert_work_balance(&rep);
+        // Without speculation the 20x-slowed primary would run ~800 s;
+        // the backup resolves the episode in a fraction of that.
+        assert!(rep.sim_time < 300.0, "sim_time {}", rep.sim_time);
+    }
+
+    #[test]
+    fn early_finished_member_can_serve_another_task_without_corruption() {
+        // A straggler desynchronises a gang: the fast member finishes its
+        // patch early and is re-dispatched to another task. The straggling
+        // gang's completion must wait only for its own straggler, and the
+        // re-hosted task must run to its own completion.
+        let mut cfg = scripted_fault_cfg(3, 0.0);
+        cfg.patch_choices = vec![1, 2];
+        cfg.patch_weights = vec![1.0, 1.0];
+        cfg.tasks_per_episode = 2;
+        let wl = Workload::fixed(&[(0.0, 2, 0), (1.0, 1, 0)]);
+        let mut e = EdgeEnv::with_workload(cfg, wl, Pcg64::seeded(9));
+        e.script_faults(vec![FaultEvent {
+            t: 2.0,
+            server: 1,
+            kind: FaultKind::SlowStart { factor: 5.0, duration: 1000.0 },
+        }])
+        .unwrap();
+        let rep = run_to_done(&mut e);
+        assert_eq!(rep.completed_tasks, 2);
+        assert_eq!(rep.gang_kills, 0);
+        assert_eq!(rep.failed_tasks, 0);
+        assert_work_balance(&rep);
+        let find = |id: u64| e.trace().iter().find(|s| s.task_id == id).unwrap();
+        let (slow, quick) = (find(0), find(1));
+        // The re-hosted task's duration is its own full run, not a stub.
+        assert!(quick.duration > 30.0, "duration {}", quick.duration);
+        // The gang task is paced by its 5x straggler, far past the other.
+        assert!(
+            slow.response > quick.response + 50.0,
+            "slow {} quick {}",
+            slow.response,
+            quick.response
+        );
+    }
+
+    #[test]
+    fn straggler_gang_kill_spares_a_rehosted_member() {
+        // While task 0's gang straggles on server 1, server 0 has already
+        // finished its patch and is running task 1. Killing task 0's gang
+        // (server 1 fails) must not destroy server 0's new work.
+        let mut cfg = scripted_fault_cfg(3, 0.0);
+        cfg.patch_choices = vec![1, 2];
+        cfg.patch_weights = vec![1.0, 1.0];
+        cfg.tasks_per_episode = 2;
+        let wl = Workload::fixed(&[(0.0, 2, 0), (1.0, 1, 0)]);
+        let mut e = EdgeEnv::with_workload(cfg, wl, Pcg64::seeded(10));
+        e.script_faults(vec![
+            FaultEvent {
+                t: 2.0,
+                server: 1,
+                kind: FaultKind::SlowStart { factor: 5.0, duration: 1000.0 },
+            },
+            FaultEvent { t: 50.0, server: 1, kind: FaultKind::Fail },
+            FaultEvent { t: 60.0, server: 1, kind: FaultKind::Recover },
+        ])
+        .unwrap();
+        let rep = run_to_done(&mut e);
+        assert_eq!(rep.completed_tasks, 2, "both tasks must finish");
+        assert_eq!(rep.gang_kills, 1);
+        assert_eq!(rep.retries, 1);
+        assert_work_balance(&rep);
+        let find = |id: u64| e.trace().iter().find(|s| s.task_id == id).unwrap();
+        // Task 1 survived the kill of the gang its server used to host:
+        // its ~44 s run is intact, not truncated at the failure instant.
+        assert!(find(1).duration > 30.0, "duration {}", find(1).duration);
+        // Task 0 was re-queued and completed on its second attempt, after
+        // waiting out the failure and the busy fast server.
+        assert!(find(0).waiting >= 50.0, "waiting {}", find(0).waiting);
+    }
+
+    #[test]
+    fn health_state_row_tracks_churn() {
+        let mut cfg = scripted_fault_cfg(3, 0.0);
+        cfg.state_features.health = true;
+        cfg.tasks_per_episode = 1;
+        let wl = Workload::fixed(&[(500.0, 2, 0)]); // keep the cluster idle
+        let mut e = EdgeEnv::with_workload(cfg, wl, Pcg64::seeded(8));
+        e.script_faults(vec![
+            FaultEvent { t: 1.0, server: 0, kind: FaultKind::Fail },
+            FaultEvent {
+                t: 1.0,
+                server: 1,
+                kind: FaultKind::SlowStart { factor: 2.0, duration: 50.0 },
+            },
+        ])
+        .unwrap();
+        let l = e.cfg.queue_window;
+        assert_eq!(e.state().len(), e.cfg.state_len());
+        e.step(&Action::noop(l));
+        let s = e.state();
+        let cols = e.cfg.state_cols();
+        assert_eq!(s[3 * cols], 0.0, "down server reads 0 health");
+        assert_eq!(s[3 * cols + 1], 0.5, "2x straggler reads 1/2 health");
+        // Queue columns of the health row stay zero.
+        assert_eq!(s[3 * cols + 2], 0.0);
+    }
+
+    #[test]
+    fn tenancy_state_rows_expose_slack_and_weight() {
+        let mut cfg = tenant_cfg(0.3);
+        cfg.state_features.tenancy = true;
+        let mut e = EdgeEnv::new(cfg, 44);
+        let l = e.cfg.queue_window;
+        while e.queue().is_empty() {
+            e.step(&Action::noop(l));
+        }
+        let s = e.state();
+        assert_eq!(s.len(), e.cfg.state_len());
+        let cols = e.cfg.state_cols();
+        let e_servers = e.cfg.num_servers;
+        let head = &e.queue()[0];
+        let slack_row = 3 * cols;
+        let weight_row = 4 * cols;
+        let expect_slack =
+            (((head.deadline.unwrap() - e.now()) as f32) / 100.0).clamp(-1.0, 4.0);
+        assert!((s[slack_row + e_servers] - expect_slack).abs() < 1e-6);
+        let w = s[weight_row + e_servers];
+        assert!(w > 0.0 && w <= 1.0, "weight feature {w} outside (0,1]");
+        // Server columns of the tenancy rows stay zero.
+        assert_eq!(s[slack_row], 0.0);
+        assert_eq!(s[weight_row], 0.0);
     }
 
     #[test]

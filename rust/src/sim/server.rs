@@ -3,7 +3,9 @@
 //! DistriFusion loads one model instance *per process group*, so reuse
 //! requires the exact previous gang (same model, same size, same members)
 //! to be idle — matching the paper's |G_m| = c_k reuse condition and the
-//! Table II trace where Task 4 reuses Init 1 on GPUs {1,2}.
+//! Table II trace where Task 4 reuses Init 1 on GPUs {1,2} — plus health
+//! state for the fault subsystem: `up` (Markov churn / zone shocks) and a
+//! transient straggler `slowdown` multiplier on execution speed.
 
 use super::task::ModelType;
 
@@ -25,6 +27,13 @@ pub struct Server {
     pub gang_size: usize,
     /// Simulation time when the server last became idle (for LRU eviction).
     pub idle_since: f64,
+    /// Health: a down server makes no progress and (under health-aware
+    /// dispatch) is masked out of server selection. Always `true` when the
+    /// fault subsystem is disabled.
+    pub up: bool,
+    /// Straggler multiplier >= 1: execution proceeds at 1/slowdown speed.
+    /// 1.0 = nominal (and always 1.0 when faults are disabled).
+    pub slowdown: f64,
 }
 
 impl Server {
@@ -36,19 +45,30 @@ impl Server {
             gang: None,
             gang_size: 0,
             idle_since: 0.0,
+            up: true,
+            slowdown: 1.0,
         }
     }
 
-    /// Availability a_e(t): idle iff no remaining work.
+    /// Availability a_e(t): idle iff no remaining work. (A down server has
+    /// no remaining work either — use [`is_available`](Self::is_available)
+    /// when health matters.)
     pub fn is_idle(&self) -> bool {
         self.remaining <= 0.0
     }
 
+    /// Idle *and* up: dispatchable under health-aware selection.
+    pub fn is_available(&self) -> bool {
+        self.is_idle() && self.up
+    }
+
     /// Advance simulated time by dt; returns true if the server finished
-    /// its current work during this tick.
+    /// its current work during this tick. A straggling server processes
+    /// work at 1/slowdown speed; a down server makes no progress at all
+    /// (its gang is killed by the fault sweep anyway).
     pub fn advance(&mut self, dt: f64, now: f64) -> bool {
-        if self.remaining > 0.0 {
-            self.remaining = (self.remaining - dt).max(0.0);
+        if self.up && self.remaining > 0.0 {
+            self.remaining = (self.remaining - dt / self.slowdown).max(0.0);
             if self.remaining == 0.0 {
                 self.idle_since = now;
                 return true;
@@ -66,11 +86,22 @@ impl Server {
         self.gang_size = gang_size;
     }
 
-    /// Drop the loaded model (eviction before loading a different one).
-    pub fn unload(&mut self) {
+    /// Drop the loaded model (eviction before loading a different one, or
+    /// weight loss on failure). Resets `idle_since` to `now`: a just-
+    /// evicted server must not keep ranking by its pre-eviction idle time
+    /// in the LRU tie-break of `Cluster::select`.
+    pub fn unload(&mut self, now: f64) {
         self.model = None;
         self.gang = None;
         self.gang_size = 0;
+        self.idle_since = now;
+    }
+
+    /// Cancel in-flight work without signalling completion (gang kill or
+    /// speculative-loser abort): the server goes idle and weight-cold.
+    pub fn abort(&mut self, now: f64) {
+        self.remaining = 0.0;
+        self.unload(now);
     }
 }
 
@@ -101,13 +132,44 @@ mod tests {
     }
 
     #[test]
-    fn unload_clears_model() {
+    fn unload_clears_model_and_resets_idle_since() {
         let mut s = Server::new(0);
         s.assign(1.0, ModelType(0), GangId(1), 1);
         s.advance(1.0, 1.0);
-        s.unload();
+        assert_eq!(s.idle_since, 1.0);
+        s.unload(5.0);
         assert_eq!(s.model, None);
         assert_eq!(s.gang, None);
         assert_eq!(s.gang_size, 0);
+        // The LRU clock restarts at eviction, not at the pre-eviction idle
+        // instant.
+        assert_eq!(s.idle_since, 5.0);
+    }
+
+    #[test]
+    fn slowdown_stretches_execution() {
+        let mut s = Server::new(0);
+        s.assign(2.0, ModelType(0), GangId(1), 1);
+        s.slowdown = 2.0; // half speed: 2 s of work takes 4 s
+        assert!(!s.advance(1.0, 1.0));
+        assert!(!s.advance(1.0, 2.0));
+        assert!(!s.advance(1.0, 3.0));
+        assert!(s.advance(1.0, 4.0));
+    }
+
+    #[test]
+    fn down_server_makes_no_progress_and_abort_goes_cold() {
+        let mut s = Server::new(0);
+        s.assign(1.0, ModelType(2), GangId(3), 2);
+        s.up = false;
+        assert!(!s.advance(10.0, 10.0));
+        assert_eq!(s.remaining, 1.0);
+        assert!(!s.is_available());
+        s.abort(10.0);
+        assert!(s.is_idle());
+        assert_eq!(s.model, None);
+        assert_eq!(s.idle_since, 10.0);
+        s.up = true;
+        assert!(s.is_available());
     }
 }

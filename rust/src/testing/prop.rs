@@ -353,6 +353,153 @@ mod qos_props {
     }
 }
 
+/// Fault-subsystem properties (PR 4's determinism guards): a recorded
+/// churn episode replays bit-exactly through the JSONL trace, and configs
+/// with faults disabled are bit-identical to the pre-faults trajectories.
+#[cfg(test)]
+mod fault_props {
+    use super::check;
+    use crate::config::ExperimentConfig;
+    use crate::faults::FaultsConfig;
+    use crate::sim::env::{Action, EdgeEnv, EpisodeReport};
+    use crate::sim::task::Workload;
+    use crate::util::rng::Pcg64;
+    use crate::workload::trace;
+
+    fn drive(env: &mut EdgeEnv) -> EpisodeReport {
+        let l = env.cfg.queue_window;
+        let mut scores = vec![-1.0f32; l];
+        scores[0] = 1.0;
+        let action = Action {
+            exec_gate: -1.0,
+            steps_raw: 0.4,
+            task_scores: scores,
+        };
+        for _ in 0..=env.cfg.step_limit {
+            if env.step(&action).done {
+                break;
+            }
+        }
+        env.report()
+    }
+
+    fn assert_reports_bit_equal(a: &EpisodeReport, b: &EpisodeReport, what: &str) {
+        assert_eq!(a.completed_tasks, b.completed_tasks, "{what}: completed");
+        assert_eq!(a.decision_steps, b.decision_steps, "{what}: steps");
+        assert_eq!(a.total_reward.to_bits(), b.total_reward.to_bits(), "{what}: reward");
+        assert_eq!(
+            a.avg_response_latency.to_bits(),
+            b.avg_response_latency.to_bits(),
+            "{what}: latency"
+        );
+        assert_eq!(a.p99_latency.to_bits(), b.p99_latency.to_bits(), "{what}: p99");
+        assert_eq!(a.avg_quality.to_bits(), b.avg_quality.to_bits(), "{what}: quality");
+        assert_eq!(a.reloads, b.reloads, "{what}: reloads");
+        assert_eq!(a.retries, b.retries, "{what}: retries");
+        assert_eq!(a.failures, b.failures, "{what}: failures");
+        assert_eq!(a.failed_tasks, b.failed_tasks, "{what}: failed tasks");
+        assert_eq!(
+            a.wasted_patch_s.to_bits(),
+            b.wasted_patch_s.to_bits(),
+            "{what}: wasted work"
+        );
+        assert_eq!(a.spec_wins, b.spec_wins, "{what}: spec wins");
+    }
+
+    fn random_churn(g: &mut super::Gen) -> FaultsConfig {
+        FaultsConfig {
+            mtbf: g.f64_in(80.0, 400.0),
+            mttr: g.f64_in(5.0, 60.0),
+            zones: g.usize_in(1, 5),
+            zone_shock_rate: g.f64_in(0.0, 0.004),
+            straggler_rate: g.f64_in(0.0, 0.02),
+            spec_beta: if g.bool() { 1.5 } else { 0.0 },
+            max_retries: g.usize_in(1, 4) as u32,
+            health_aware: g.bool(),
+            ..FaultsConfig::default()
+        }
+    }
+
+    #[test]
+    fn recorded_fault_episode_replays_bit_exactly_through_jsonl() {
+        // Record: stochastic faults over a fixed workload. Replay: the
+        // same workload and env seed, with the recorded events round-
+        // tripped through the JSONL trace and scripted back in. Every
+        // number must match bit-for-bit.
+        check("fault trace replay", 8, |g| {
+            let mut cfg = ExperimentConfig::preset_8node(0.1).env;
+            cfg.tasks_per_episode = g.usize_in(8, 24);
+            cfg.patch_choices = vec![1, 2];
+            cfg.patch_weights = vec![1.0, 1.0];
+            cfg.faults = Some(random_churn(g));
+            let seed = g.usize_in(0, 1_000_000) as u64;
+            let workload = Workload::generate(&cfg, &mut Pcg64::new(seed, 0xC0FFEE));
+            let mut live = EdgeEnv::with_workload(
+                cfg.clone(),
+                workload.clone(),
+                Pcg64::new(seed, 0xE21),
+            );
+            let live_rep = drive(&mut live);
+            // Round-trip workload + events through the JSONL trace.
+            let text = trace::to_jsonl_with_faults(&workload, live.fault_events());
+            let (replay_wl, replay_events) = trace::from_jsonl_with_faults(&text).unwrap();
+            let mut replay =
+                EdgeEnv::with_workload(cfg, replay_wl, Pcg64::new(seed, 0xE21));
+            replay.script_faults(replay_events).unwrap();
+            let replay_rep = drive(&mut replay);
+            assert_reports_bit_equal(&live_rep, &replay_rep, "trace replay");
+        });
+    }
+
+    #[test]
+    fn disabled_faults_are_bit_identical_to_pre_faults_path() {
+        // The regression guard (the analogue of PR 3's no-tenants FIFO
+        // guarantee): `faults: None` and `faults: Some(off)` take the
+        // seed's exact code path, for any env shape.
+        check("faults-off regression", 8, |g| {
+            let nodes = *g.pick(&[4usize, 8]);
+            let mut cfg = ExperimentConfig::preset(nodes).env;
+            cfg.tasks_per_episode = g.usize_in(6, 20);
+            cfg.arrival_rate = g.f64_in(0.03, 0.15);
+            let seed = g.usize_in(0, 1_000_000) as u64;
+            let mut none_env = EdgeEnv::new(cfg.clone(), seed);
+            let none_rep = drive(&mut none_env);
+            cfg.faults = Some(FaultsConfig::off());
+            let mut off_env = EdgeEnv::new(cfg, seed);
+            let off_rep = drive(&mut off_env);
+            assert!(off_env.fault_events().is_empty());
+            assert_eq!(off_rep.failures, 0);
+            assert_eq!(off_rep.dispatched_patch_s, 0.0);
+            assert_reports_bit_equal(&none_rep, &off_rep, "faults off");
+        });
+    }
+
+    #[test]
+    fn patch_second_books_balance_under_random_churn() {
+        // completed + wasted + in-flight nominal patch-seconds always
+        // equals dispatched, whatever the churn or dispatch mode.
+        check("work balance", 8, |g| {
+            let mut cfg = ExperimentConfig::preset_8node(0.1).env;
+            cfg.tasks_per_episode = g.usize_in(8, 24);
+            cfg.patch_choices = vec![1, 2, 4];
+            cfg.patch_weights = vec![1.0, 1.0, 1.0];
+            cfg.faults = Some(random_churn(g));
+            let seed = g.usize_in(0, 1_000_000) as u64;
+            let mut env = EdgeEnv::new(cfg, seed);
+            let rep = drive(&mut env);
+            let sum = rep.completed_patch_s + rep.wasted_patch_s + rep.inflight_patch_s;
+            assert!(
+                (sum - rep.dispatched_patch_s).abs() <= 1e-6 * rep.dispatched_patch_s.max(1.0),
+                "dispatched {} != completed {} + wasted {} + inflight {}",
+                rep.dispatched_patch_s,
+                rep.completed_patch_s,
+                rep.wasted_patch_s,
+                rep.inflight_patch_s
+            );
+        });
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -219,6 +219,18 @@ pub struct MetricsCollector {
     admission_dropped: u64,
     deferred: u64,
     tenants: Vec<TenantStats>,
+    // --- fault-subsystem counters (all zero when faults are disabled) ---
+    failures: u64,
+    gang_kills: u64,
+    retries: u64,
+    task_failures: u64,
+    spec_launches: u64,
+    spec_wins: u64,
+    /// Patch-second accounting: nominal work dispatched / completed /
+    /// wasted (killed gangs and speculative losers).
+    dispatched_ps: f64,
+    completed_ps: f64,
+    wasted_ps: f64,
 }
 
 impl MetricsCollector {
@@ -234,6 +246,15 @@ impl MetricsCollector {
             admission_dropped: 0,
             deferred: 0,
             tenants: Vec::new(),
+            failures: 0,
+            gang_kills: 0,
+            retries: 0,
+            task_failures: 0,
+            spec_launches: 0,
+            spec_wins: 0,
+            dispatched_ps: 0.0,
+            completed_ps: 0.0,
+            wasted_ps: 0.0,
         }
     }
 
@@ -283,6 +304,97 @@ impl MetricsCollector {
     /// Record one dispatch skipped as infeasible (deferred, not vanished).
     pub fn observe_deferred(&mut self) {
         self.deferred += 1;
+    }
+
+    // --- fault subsystem -------------------------------------------------
+
+    /// One server failure event (independent churn or zone shock).
+    pub fn observe_failure(&mut self) {
+        self.failures += 1;
+    }
+
+    /// One in-flight gang killed; its nominal work is wasted.
+    pub fn observe_gang_kill(&mut self, wasted_patch_s: f64) {
+        self.gang_kills += 1;
+        self.wasted_ps += wasted_patch_s;
+    }
+
+    /// Wasted work without a kill (a speculative loser's attempt).
+    pub fn observe_wasted_work(&mut self, wasted_patch_s: f64) {
+        self.wasted_ps += wasted_patch_s;
+    }
+
+    /// A killed task re-queued for another attempt.
+    pub fn observe_retry(&mut self) {
+        self.retries += 1;
+    }
+
+    /// A task dropped after exhausting its retry budget.
+    pub fn observe_task_failure(&mut self) {
+        self.task_failures += 1;
+    }
+
+    pub fn observe_spec_launch(&mut self) {
+        self.spec_launches += 1;
+    }
+
+    pub fn observe_spec_win(&mut self) {
+        self.spec_wins += 1;
+    }
+
+    /// Nominal patch-seconds handed to servers at dispatch.
+    pub fn observe_dispatched_work(&mut self, patch_s: f64) {
+        self.dispatched_ps += patch_s;
+    }
+
+    /// Nominal patch-seconds credited on actual completion.
+    pub fn observe_completed_work(&mut self, patch_s: f64) {
+        self.completed_ps += patch_s;
+    }
+
+    pub fn failures(&self) -> u64 {
+        self.failures
+    }
+
+    pub fn gang_kills(&self) -> u64 {
+        self.gang_kills
+    }
+
+    pub fn retries(&self) -> u64 {
+        self.retries
+    }
+
+    pub fn task_failures(&self) -> u64 {
+        self.task_failures
+    }
+
+    pub fn spec_launches(&self) -> u64 {
+        self.spec_launches
+    }
+
+    pub fn spec_wins(&self) -> u64 {
+        self.spec_wins
+    }
+
+    pub fn dispatched_ps(&self) -> f64 {
+        self.dispatched_ps
+    }
+
+    pub fn completed_ps(&self) -> f64 {
+        self.completed_ps
+    }
+
+    pub fn wasted_ps(&self) -> f64 {
+        self.wasted_ps
+    }
+
+    /// Wasted / dispatched patch-seconds (0 before any dispatch).
+    pub fn wasted_frac(&self) -> f64 {
+        if self.dispatched_ps > 0.0 {
+            self.wasted_ps / self.dispatched_ps
+        } else {
+            0.0
+        }
     }
 
     /// Record a completed task against its tenant's SLO. `deadline_met` is
@@ -401,6 +513,15 @@ impl MetricsCollector {
         self.offered += other.offered;
         self.admission_dropped += other.admission_dropped;
         self.deferred += other.deferred;
+        self.failures += other.failures;
+        self.gang_kills += other.gang_kills;
+        self.retries += other.retries;
+        self.task_failures += other.task_failures;
+        self.spec_launches += other.spec_launches;
+        self.spec_wins += other.spec_wins;
+        self.dispatched_ps += other.dispatched_ps;
+        self.completed_ps += other.completed_ps;
+        self.wasted_ps += other.wasted_ps;
         for (a, b) in self.tenants.iter_mut().zip(&other.tenants) {
             a.merge(b);
         }
@@ -408,7 +529,7 @@ impl MetricsCollector {
 
     /// One-line human summary (serving CLI and scenario sweep footer).
     pub fn summary_line(&self) -> String {
-        format!(
+        let mut line = format!(
             "completed {}  p50 {:.1}s  p90 {:.1}s  p99 {:.1}s  util {:.3}  reloads {}  \
              dropped {}  deferred {}",
             self.completed,
@@ -419,7 +540,16 @@ impl MetricsCollector {
             self.reloads,
             self.admission_dropped,
             self.deferred
-        )
+        );
+        if self.failures > 0 || self.wasted_ps > 0.0 {
+            line.push_str(&format!(
+                "  failures {}  retries {}  wasted {:.1}%",
+                self.failures,
+                self.retries,
+                self.wasted_frac() * 100.0
+            ));
+        }
+        line
     }
 }
 
@@ -565,6 +695,43 @@ mod tests {
         assert_eq!(reports[0].offered, 6);
         assert_eq!(reports[0].slo_met, 4);
         assert!((reports[0].slo_attainment - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fault_counters_accumulate_and_merge() {
+        let mut m = MetricsCollector::new(2);
+        m.observe_dispatched_work(100.0);
+        m.observe_failure();
+        m.observe_gang_kill(40.0);
+        m.observe_retry();
+        m.observe_dispatched_work(60.0);
+        m.observe_completed_work(60.0);
+        m.observe_spec_launch();
+        m.observe_spec_win();
+        m.observe_wasted_work(10.0);
+        m.observe_task_failure();
+        assert_eq!(m.failures(), 1);
+        assert_eq!(m.gang_kills(), 1);
+        assert_eq!(m.retries(), 1);
+        assert_eq!(m.task_failures(), 1);
+        assert_eq!(m.spec_launches(), 1);
+        assert_eq!(m.spec_wins(), 1);
+        assert_eq!(m.dispatched_ps(), 160.0);
+        assert_eq!(m.completed_ps(), 60.0);
+        assert_eq!(m.wasted_ps(), 50.0);
+        assert!((m.wasted_frac() - 50.0 / 160.0).abs() < 1e-12);
+        let line = m.summary_line();
+        assert!(line.contains("failures 1"), "{line}");
+        assert!(line.contains("wasted 31.2%") || line.contains("wasted 31.3%"), "{line}");
+        // Merging doubles everything; a fault-free collector stays silent.
+        let other = m.clone();
+        m.merge(&other);
+        assert_eq!(m.failures(), 2);
+        assert_eq!(m.dispatched_ps(), 320.0);
+        assert!((m.wasted_frac() - 100.0 / 320.0).abs() < 1e-12);
+        let clean = MetricsCollector::new(2);
+        assert!(!clean.summary_line().contains("failures"));
+        assert_eq!(clean.wasted_frac(), 0.0);
     }
 
     #[test]

@@ -10,6 +10,7 @@
 //! same policy and env seed reproduces the episode's numbers bit-for-bit
 //! (common-random-number policy comparisons across machines and PRs).
 
+use crate::faults::FaultEvent;
 use crate::sim::task::{ModelType, Task, Workload};
 use crate::util::json::{self, Value};
 
@@ -108,27 +109,52 @@ fn task_from_json(v: &Value) -> anyhow::Result<Task> {
 
 /// Serialise a workload as a JSONL trace string.
 pub fn to_jsonl(w: &Workload) -> String {
+    to_jsonl_with_faults(w, &[])
+}
+
+/// Serialise a workload plus its episode's fault events: replaying both
+/// (workload via `EdgeEnv::with_workload`, events via
+/// `EdgeEnv::script_faults`) reproduces a recorded churn episode
+/// bit-exactly. Event lines are recognised by their `fault` field and
+/// ignored by task-only readers of older tooling.
+pub fn to_jsonl_with_faults(w: &Workload, events: &[FaultEvent]) -> String {
     let mut out = String::new();
     let mut header = Value::obj();
     header
         .set("format", FORMAT)
         .set("version", VERSION)
         .set("tasks", w.len());
+    if !events.is_empty() {
+        header.set("faults", events.len());
+    }
     out.push_str(&header.to_json());
     out.push('\n');
     for t in &w.tasks {
         out.push_str(&task_to_json(t).to_json());
         out.push('\n');
     }
+    for ev in events {
+        out.push_str(&ev.to_json().to_json());
+        out.push('\n');
+    }
     out
 }
 
-/// Parse a JSONL trace. The header line is validated when present; task
-/// lines are recognised by their `arrival` field. Out-of-order arrivals
-/// are normalised by a stable sort (see `Workload::from_tasks`).
+/// Parse a JSONL trace, dropping any fault-event lines. The header line
+/// is validated when present; task lines are recognised by their
+/// `arrival` field. Out-of-order arrivals are normalised by a stable sort
+/// (see `Workload::from_tasks`).
 pub fn from_jsonl(text: &str) -> anyhow::Result<Workload> {
+    Ok(from_jsonl_with_faults(text)?.0)
+}
+
+/// Parse a JSONL trace including its recorded fault events (empty for a
+/// fault-free trace). Events come back sorted by timestamp.
+pub fn from_jsonl_with_faults(text: &str) -> anyhow::Result<(Workload, Vec<FaultEvent>)> {
     let mut tasks = Vec::new();
+    let mut events = Vec::new();
     let mut declared: Option<usize> = None;
+    let mut declared_faults: Option<usize> = None;
     for (lineno, line) in text.lines().enumerate() {
         let line = line.trim();
         if line.is_empty() {
@@ -148,6 +174,16 @@ pub fn from_jsonl(text: &str) -> anyhow::Result<Workload> {
             if let Some(n) = v.get("tasks").and_then(Value::as_usize) {
                 declared = Some(n);
             }
+            if let Some(n) = v.get("faults").and_then(Value::as_usize) {
+                declared_faults = Some(n);
+            }
+            continue;
+        }
+        if v.get("fault").is_some() {
+            events.push(
+                FaultEvent::from_json(&v)
+                    .map_err(|e| anyhow::anyhow!("trace line {}: {e}", lineno + 1))?,
+            );
             continue;
         }
         tasks.push(
@@ -161,7 +197,15 @@ pub fn from_jsonl(text: &str) -> anyhow::Result<Workload> {
             tasks.len()
         );
     }
-    Ok(Workload::from_tasks(tasks))
+    if let Some(n) = declared_faults {
+        anyhow::ensure!(
+            n == events.len(),
+            "trace header declares {n} fault events, found {}",
+            events.len()
+        );
+    }
+    events.sort_by(|a, b| a.t.partial_cmp(&b.t).expect("NaN fault time"));
+    Ok((Workload::from_tasks(tasks), events))
 }
 
 /// Write a workload trace to a file.
@@ -250,6 +294,38 @@ mod tests {
         let bad = "{\"id\":0,\"prompt_id\":\"1\",\"patches\":2,\"model\":0,\
                    \"arrival\":1.5,\"deadline\":-3.0}\n";
         assert!(from_jsonl(bad).unwrap_err().to_string().contains("deadline"));
+    }
+
+    #[test]
+    fn fault_events_roundtrip_and_stay_invisible_to_task_readers() {
+        use crate::faults::{FaultEvent, FaultKind};
+        let w = Workload::fixed(&[(0.0, 2, 0), (5.0, 4, 1)]);
+        let events = vec![
+            FaultEvent { t: 3.0, server: 1, kind: FaultKind::Fail },
+            FaultEvent { t: 9.0, server: 1, kind: FaultKind::Recover },
+            FaultEvent {
+                t: 4.5,
+                server: 0,
+                kind: FaultKind::SlowStart { factor: 2.5, duration: 20.0 },
+            },
+        ];
+        let text = to_jsonl_with_faults(&w, &events);
+        let (back_w, back_e) = from_jsonl_with_faults(&text).unwrap();
+        assert_bit_exact(&w, &back_w);
+        // Events come back sorted by time.
+        assert_eq!(back_e.len(), 3);
+        assert!(back_e.windows(2).all(|p| p[0].t <= p[1].t));
+        assert!(back_e.contains(&events[0]) && back_e.contains(&events[2]));
+        // A task-only reader sees the same workload and ignores events.
+        let tasks_only = from_jsonl(&text).unwrap();
+        assert_bit_exact(&w, &tasks_only);
+        // A mismatched fault count in the header is an error.
+        let broken: String = text
+            .lines()
+            .filter(|l| !l.contains("slow_start"))
+            .map(|l| format!("{l}\n"))
+            .collect();
+        assert!(from_jsonl_with_faults(&broken).is_err());
     }
 
     #[test]

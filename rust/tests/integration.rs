@@ -219,7 +219,7 @@ fn selection_prefers_reuse_over_fresh_when_available() {
     // Manufacture a reusable gang: schedule, let it finish.
     use eat::sim::task::ModelType;
     let ids = vec![0, 1];
-    env.cluster.dispatch(&ids, 1.0, ModelType(0), false);
+    env.cluster.dispatch(&ids, 1.0, ModelType(0), false, 0.0);
     env.cluster.advance(1.0, 1.0);
     match env.cluster.select(ModelType(0), 2) {
         Selection::Reuse(v) => assert_eq!(v, ids),
