@@ -152,6 +152,82 @@ impl StateFeatures {
     }
 }
 
+/// Fault-aware serving-loop configuration (`eat serve --resilient`):
+/// heartbeat cadence, down-detection threshold, and the resilient-dispatch
+/// retry budget. Times are real (wall-clock) seconds — the serving system
+/// runs against live sockets, not the simulation clock.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServingConfig {
+    /// Seconds between heartbeat sweeps over the worker set.
+    pub hb_interval: f64,
+    /// Per-probe socket timeout (connect, read, write) in seconds.
+    pub hb_timeout: f64,
+    /// Consecutive missed probes before a worker is marked down.
+    pub down_after: u32,
+    /// Per-worker socket timeout during resilient gang dispatch (s).
+    pub dispatch_timeout: f64,
+    /// Maximum dispatch rounds per task (1 initial + retries).
+    pub max_rounds: usize,
+    /// Seconds an infeasible task waits for workers to recover before it
+    /// is deferred (the serving twin of "infeasible tasks wait, not drop").
+    pub defer_timeout: f64,
+}
+
+impl Default for ServingConfig {
+    fn default() -> Self {
+        ServingConfig {
+            hb_interval: 0.5,
+            hb_timeout: 0.25,
+            down_after: 2,
+            dispatch_timeout: 5.0,
+            max_rounds: 3,
+            defer_timeout: 30.0,
+        }
+    }
+}
+
+impl ServingConfig {
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.hb_interval > 0.0, "hb_interval must be > 0");
+        anyhow::ensure!(self.hb_timeout > 0.0, "hb_timeout must be > 0");
+        anyhow::ensure!(self.down_after >= 1, "down_after must be >= 1");
+        anyhow::ensure!(self.dispatch_timeout > 0.0, "dispatch_timeout must be > 0");
+        anyhow::ensure!(self.max_rounds >= 1, "max_rounds must be >= 1");
+        anyhow::ensure!(self.defer_timeout >= 0.0, "defer_timeout must be >= 0");
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Value {
+        let mut v = Value::obj();
+        v.set("hb_interval", self.hb_interval)
+            .set("hb_timeout", self.hb_timeout)
+            .set("down_after", self.down_after as usize)
+            .set("dispatch_timeout", self.dispatch_timeout)
+            .set("max_rounds", self.max_rounds)
+            .set("defer_timeout", self.defer_timeout);
+        v
+    }
+
+    pub fn from_json(v: &Value) -> anyhow::Result<Self> {
+        let mut cfg = ServingConfig::default();
+        macro_rules! num {
+            ($key:literal, $field:expr, $ty:ty) => {
+                if let Some(x) = v.get($key).and_then(Value::as_f64) {
+                    $field = x as $ty;
+                }
+            };
+        }
+        num!("hb_interval", cfg.hb_interval, f64);
+        num!("hb_timeout", cfg.hb_timeout, f64);
+        num!("down_after", cfg.down_after, u32);
+        num!("dispatch_timeout", cfg.dispatch_timeout, f64);
+        num!("max_rounds", cfg.max_rounds, usize);
+        num!("defer_timeout", cfg.defer_timeout, f64);
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
 /// Environment (cluster + workload + episode) configuration.
 #[derive(Clone, Debug, PartialEq)]
 pub struct EnvConfig {
@@ -417,6 +493,9 @@ pub struct ExperimentConfig {
     pub seed: u64,
     /// Directory with AOT artifacts + manifest.json.
     pub artifacts_dir: String,
+    /// Fault-aware serving-loop settings (`eat serve --resilient`);
+    /// `None` uses the built-in defaults.
+    pub serving: Option<ServingConfig>,
 }
 
 impl Default for ExperimentConfig {
@@ -427,6 +506,7 @@ impl Default for ExperimentConfig {
             algorithm: Algorithm::Eat,
             seed: 42,
             artifacts_dir: "artifacts".to_string(),
+            serving: None,
         }
     }
 }
@@ -487,6 +567,9 @@ impl ExperimentConfig {
         v.set("algorithm", self.algorithm.name().to_ascii_lowercase().replace('-', "_"));
         v.set("seed", self.seed);
         v.set("artifacts_dir", self.artifacts_dir.as_str());
+        if let Some(s) = &self.serving {
+            v.set("serving", s.to_json());
+        }
         let e = &self.env;
         let mut env = Value::obj();
         env.set("num_servers", e.num_servers)
@@ -578,6 +661,9 @@ impl ExperimentConfig {
         }
         if let Some(d) = v.get("artifacts_dir").and_then(Value::as_str) {
             cfg.artifacts_dir = d.to_string();
+        }
+        if let Some(s) = v.get("serving") {
+            cfg.serving = Some(ServingConfig::from_json(s)?);
         }
         if let Some(env) = v.get("env") {
             let e = &mut cfg.env;
@@ -705,6 +791,34 @@ mod tests {
         assert_eq!(back.env.num_servers, 8);
         assert!((back.env.arrival_rate - 0.12).abs() < 1e-12);
         assert_eq!(back.env.workload, None);
+    }
+
+    #[test]
+    fn serving_config_roundtrips_and_validates() {
+        let cfg = ServingConfig {
+            hb_interval: 0.2,
+            hb_timeout: 0.1,
+            down_after: 1,
+            dispatch_timeout: 2.0,
+            max_rounds: 4,
+            defer_timeout: 12.0,
+        };
+        let back = ServingConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back, cfg);
+        // The section rides the experiment-config file round trip.
+        let mut exp = ExperimentConfig::preset_4node(0.05);
+        exp.serving = Some(cfg.clone());
+        let exp_back = ExperimentConfig::from_json(&exp.to_json()).unwrap();
+        assert_eq!(exp_back.serving, Some(cfg));
+        assert_eq!(ExperimentConfig::default().serving, None);
+        // Defaults fill absent keys.
+        let sparse =
+            ServingConfig::from_json(&json::parse("{\"hb_interval\":1.5}").unwrap()).unwrap();
+        assert!((sparse.hb_interval - 1.5).abs() < 1e-12);
+        assert_eq!(sparse.down_after, ServingConfig::default().down_after);
+        // Invalid values fail at parse time.
+        assert!(ServingConfig::from_json(&json::parse("{\"max_rounds\":0}").unwrap()).is_err());
+        assert!(ServingConfig::from_json(&json::parse("{\"hb_interval\":0}").unwrap()).is_err());
     }
 
     #[test]

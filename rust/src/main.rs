@@ -9,10 +9,12 @@
 //!   eat eval [--alg eat] [--nodes 8] [--episodes 5]        evaluate one
 //!       policy and print the summary
 //!   eat serve [--workers 4] [--tasks 16] [--time-scale 2e-3]
-//!            [--scenario <family>]
+//!            [--scenario <family>] [--resilient] [--kill-at K] [--wedge]
 //!       run the socket-based serving system end to end with the
 //!       reuse-aware scheduler; --scenario drives it with any workload
-//!       scenario family instead of stationary Poisson
+//!       scenario family instead of stationary Poisson; --resilient adds
+//!       the heartbeat health registry + fault-tolerant gang dispatch,
+//!       and --kill-at/--wedge/--respawn-at inject worker faults mid-run
 //!   eat scenarios [--nodes 8] [--episodes 2] [--algs greedy,random,...]
 //!       sweep every workload scenario family (poisson, constant, bursty,
 //!       diurnal, flash, zipf-hot, rotating) across policies with
@@ -50,6 +52,11 @@ fn usage() -> ! {
          \n  eat eval    --alg <any> --nodes N --episodes K [--train-episodes K]\n\
          \n  eat serve   --workers 4 --tasks 16 --time-scale 2e-3 [--seed S]\n\
          \x20           [--scenario poisson|constant|bursty|diurnal|flash|zipf-hot|rotating]\n\
+         \x20           [--resilient] [--hb-interval S] [--hb-timeout S] [--down-after N]\n\
+         \x20           [--dispatch-timeout S] [--max-rounds R] [--defer-timeout S]\n\
+         \x20           [--config file.json (reads its \"serving\" section)]\n\
+         \x20           [--max-patches P] [--kill-at K [--kill-worker W] [--wedge]]\n\
+         \x20           [--respawn-at K]\n\
          \n  eat scenarios [--nodes N] [--episodes K] [--rate R] [--algs a,b,c]\n\
          \x20             [--scenarios poisson,bursty,...] [--record dir]\n\
          \x20             [--replay file [--scenario name] [--ep K]]\n\
@@ -186,46 +193,278 @@ fn main() -> anyhow::Result<()> {
 /// End-to-end serving: spawn socket workers, generate a task stream, and
 /// schedule it with the reuse-aware gang scheduler, reporting per-task
 /// latency and the throughput/reload summary.
+///
+/// With `--resilient`, a background heartbeat thread maintains a live
+/// health registry that both masks down workers out of gang selection
+/// (`Cluster::select_healthy`) and supplies spares to the fault-tolerant
+/// dispatch path; `--kill-at` / `--wedge` / `--respawn-at` inject worker
+/// faults mid-run so the recovery is demonstrable end-to-end.
 fn serve(args: &Args) -> anyhow::Result<()> {
-    use eat::serving::{ServingHost, WorkerPool};
-    use eat::sim::cluster::{Cluster, Selection};
-    use eat::sim::task::{ModelType, Workload};
+    use eat::config::ServingConfig;
+    use eat::serving::{HealthMonitor, HealthRegistry, ServingHost, WorkerPool};
+    use eat::sim::cluster::Cluster;
+    use eat::sim::task::Workload;
     use eat::util::rng::Pcg64;
     use eat::workload::{MetricsCollector, WorkloadConfig};
+    use std::sync::Arc;
+    use std::time::Duration;
 
     let workers = args.get_usize("workers", 4);
     let n_tasks = args.get_usize("tasks", 12);
     let time_scale = args.get_f64("time-scale", 2e-3);
     let seed = args.get_u64("seed", 42);
+    let resilient = args.has_flag("resilient");
     let mut cfg = ExperimentConfig::preset(workers.max(4)).env;
     cfg.num_servers = workers;
     cfg.tasks_per_episode = n_tasks;
-    cfg.patch_choices.retain(|&c| c <= workers);
+    let max_patches = args.get_usize("max-patches", workers);
+    cfg.patch_choices.retain(|&c| c <= workers.min(max_patches));
+    anyhow::ensure!(
+        !cfg.patch_choices.is_empty(),
+        "--max-patches {max_patches} leaves no feasible gang size on {workers} workers"
+    );
     cfg.patch_weights = vec![1.0; cfg.patch_choices.len()];
     // Any scenario family can drive the serving emulation too.
     if let Some(name) = args.get("scenario") {
         cfg.workload = Some(WorkloadConfig::preset(name, cfg.arrival_rate)?);
     }
 
-    println!("spawning {workers} socket workers (time scale {time_scale})...");
-    let pool = WorkerPool::spawn(workers, cfg.exec.clone(), time_scale, seed)?;
+    // Serving-loop settings: a `serving` section in --config seeds the
+    // defaults, individual CLI flags override it, and — when neither
+    // pins a dispatch timeout — it auto-scales with --time-scale so a
+    // legitimately sleeping cold gang is never excluded as dead.
+    let file_serving = match args.get("config") {
+        Some(path) => ExperimentConfig::load(path)?.serving,
+        None => None,
+    };
+    let cli_timeout = args.get("dispatch-timeout").is_some();
+    let file_section = file_serving.is_some();
+    let defaults = file_serving.unwrap_or_default();
+    let mut serving = ServingConfig {
+        hb_interval: args.get_f64("hb-interval", defaults.hb_interval),
+        hb_timeout: args.get_f64("hb-timeout", defaults.hb_timeout),
+        down_after: args.get_usize("down-after", defaults.down_after as usize) as u32,
+        dispatch_timeout: args.get_f64("dispatch-timeout", defaults.dispatch_timeout),
+        max_rounds: args.get_usize("max-rounds", defaults.max_rounds),
+        defer_timeout: args.get_f64("defer-timeout", defaults.defer_timeout),
+    };
+    if !cli_timeout {
+        // Floor the dispatch timeout at the worst legitimate scaled sleep
+        // (a cold load plus SERVE_STEPS of execution, slept at
+        // time_scale; 2x + 1 s of margin covers the sampling jitter).
+        // This also lifts a config file's too-small value — only an
+        // explicit --dispatch-timeout pins it exactly.
+        let exec = eat::sim::exec_model::ExecModel::new(cfg.exec.clone());
+        let worst_sim = cfg
+            .patch_choices
+            .iter()
+            .map(|&p| exec.predict_init(p) + exec.predict_exec(SERVE_STEPS, p))
+            .fold(0.0, f64::max);
+        serving.dispatch_timeout = serving
+            .dispatch_timeout
+            .max(worst_sim * time_scale * 2.0 + 1.0);
+    }
+    serving.validate()?;
+    // The non-resilient path has no retries, so its per-worker timeout
+    // stays generous unless the flag or a config-file section chose one.
+    let plain_timeout = if cli_timeout || file_section {
+        Duration::from_secs_f64(serving.dispatch_timeout)
+    } else {
+        eat::serving::DEFAULT_DISPATCH_TIMEOUT
+    };
+    let inject = FaultInjection {
+        kill_at: args.get_usize_opt("kill-at"),
+        worker: args.get_usize_opt("kill-worker"),
+        wedge: args.has_flag("wedge"),
+        respawn_at: args.get_usize_opt("respawn-at"),
+    };
+    if let Some(k) = inject.kill_at {
+        anyhow::ensure!(
+            k < n_tasks,
+            "--kill-at ({k}) is past the last task (tasks: {n_tasks}); the fault would never fire"
+        );
+    }
+    if let Some(w) = inject.worker {
+        anyhow::ensure!(
+            w < workers,
+            "--kill-worker ({w}) does not exist (workers: {workers})"
+        );
+    }
+    anyhow::ensure!(
+        inject.kill_at.is_some() || (inject.worker.is_none() && !inject.wedge),
+        "--kill-worker/--wedge need --kill-at to say when the fault fires"
+    );
+    if let Some(r) = inject.respawn_at {
+        let Some(k) = inject.kill_at else {
+            anyhow::bail!("--respawn-at needs --kill-at (nothing to revive)");
+        };
+        anyhow::ensure!(
+            r > k,
+            "--respawn-at ({r}) must come after --kill-at ({k}); the fault \
+             is injected first"
+        );
+        anyhow::ensure!(
+            r < n_tasks,
+            "--respawn-at ({r}) is past the last task (tasks: {n_tasks}); \
+             the revival would never run"
+        );
+    }
+    println!(
+        "spawning {workers} socket workers (time scale {time_scale}{})...",
+        if resilient { ", resilient" } else { "" }
+    );
+    let mut pool = WorkerPool::spawn(workers, cfg.exec.clone(), time_scale, seed)?;
     let host = ServingHost::new(pool.addrs().to_vec());
+    let registry = resilient.then(|| Arc::new(HealthRegistry::new(workers, serving.down_after)));
+    let monitor = registry.as_ref().map(|reg| {
+        HealthMonitor::start(
+            host.clone(),
+            reg.clone(),
+            Duration::from_secs_f64(serving.hb_interval),
+            Duration::from_secs_f64(serving.hb_timeout),
+        )
+    });
     let mut tracker = Cluster::new(workers); // mirrors worker model state
     let workload = Workload::generate(&cfg, &mut Pcg64::new(seed, 1));
     let mut metrics = MetricsCollector::new(workers);
 
     let t0 = std::time::Instant::now();
+    let result = serve_loop(
+        &host,
+        &mut pool,
+        &mut tracker,
+        &workload,
+        &mut metrics,
+        registry.as_deref(),
+        &serving,
+        plain_timeout,
+        time_scale,
+        &inject,
+    );
+    // Teardown runs on EVERY exit path: a dispatch error used to return
+    // early and strand the worker listeners and their threads.
+    if let Some(m) = monitor {
+        m.stop();
+    }
+    if let Some(reg) = &registry {
+        let st = reg.stats();
+        metrics.observe_recoveries(st.recoveries);
+        println!(
+            "health: {} probes  {} downs  {} recoveries  ({}/{} workers up)",
+            st.probes,
+            st.downs,
+            st.recoveries,
+            reg.up_count(),
+            workers
+        );
+    }
+    println!(
+        "\nserved {}/{} tasks in {:.2}s wall; total simulated exec {:.1}s",
+        metrics.completed(),
+        workload.len(),
+        t0.elapsed().as_secs_f64(),
+        metrics.sim_time(),
+    );
+    println!("{}", metrics.summary_line());
+    if resilient {
+        // The serving books mirror the simulator's invariant:
+        // dispatched = completed + wasted (+ in-flight, always 0 here).
+        println!(
+            "books: dispatched {:.1} patch-s = completed {:.1} + wasted {:.1}",
+            metrics.dispatched_ps(),
+            metrics.completed_ps(),
+            metrics.wasted_ps()
+        );
+    }
+    pool.shutdown();
+    result
+}
+
+/// Inference steps the serving loop requests for every task. The
+/// dispatch-timeout auto-floor in `serve` is computed from this same
+/// constant, so the two cannot drift apart.
+const SERVE_STEPS: u32 = 20;
+
+/// Mid-run worker fault injection for `eat serve`: before dispatching task
+/// ordinal `kill_at`, kill (or, with `wedge`, hang) a worker — `worker` if
+/// given, else the first member of that task's selected gang, which
+/// guarantees the fault lands on the dispatch path. `respawn_at` restarts
+/// the faulted worker (or unwedges it) before that task ordinal.
+struct FaultInjection {
+    kill_at: Option<usize>,
+    worker: Option<usize>,
+    wedge: bool,
+    respawn_at: Option<usize>,
+}
+
+#[allow(clippy::too_many_arguments)]
+fn serve_loop(
+    host: &eat::serving::ServingHost,
+    pool: &mut eat::serving::WorkerPool,
+    tracker: &mut eat::sim::cluster::Cluster,
+    workload: &eat::sim::task::Workload,
+    metrics: &mut eat::workload::MetricsCollector,
+    registry: Option<&eat::serving::HealthRegistry>,
+    serving: &eat::config::ServingConfig,
+    plain_timeout: std::time::Duration,
+    time_scale: f64,
+    inject: &FaultInjection,
+) -> anyhow::Result<()> {
+    use eat::sim::cluster::Selection;
+    use eat::sim::task::ModelType;
+    use std::time::{Duration, Instant};
+
+    let timeout = Duration::from_secs_f64(serving.dispatch_timeout);
+    let mut faulted: Option<usize> = None;
+    let mut fault_injected = false;
     // Dispatch is synchronous, so model a sequential simulated timeline:
     // a task starts once it has arrived AND the previous dispatch
     // finished. This makes the arrival process matter — bursty/flash
     // scenarios build genuine backlog (waiting > 0) while sparse ones
     // leave idle gaps.
     let mut sim_clock = 0.0f64;
-    for task in &workload.tasks {
-        // Gang selection with the reuse-aware greedy selector. The tracker
-        // never marks servers busy (dispatch below is synchronous), so
-        // selection is purely about model-reuse placement.
-        let sel = tracker.select(ModelType(task.model.0), task.patches);
+    for (ordinal, task) in workload.tasks.iter().enumerate() {
+        if inject.respawn_at == Some(ordinal) {
+            if let Some(w) = faulted.take() {
+                if inject.wedge {
+                    pool.unwedge(w);
+                } else {
+                    pool.respawn(w)?;
+                }
+                println!(">>> revived worker {w} before task {}", task.id);
+                if let Some(reg) = registry {
+                    // Block until a probe confirms the revival, so the
+                    // demonstration is deterministic.
+                    let deadline = Instant::now() + Duration::from_secs_f64(serving.defer_timeout);
+                    while !reg.up(w) && Instant::now() < deadline {
+                        std::thread::sleep(Duration::from_millis(10));
+                    }
+                }
+            }
+        }
+        if let Some(reg) = registry {
+            tracker.set_health(&reg.snapshot(), sim_clock);
+        }
+        // Gang selection with the reuse-aware greedy selector — restricted
+        // to up workers when a health registry is live. The tracker never
+        // marks servers busy (dispatch below is synchronous), so selection
+        // is purely about model-reuse placement and health. Under
+        // resilience an infeasible task *waits* for workers to recover
+        // (mirroring the simulator, where infeasible tasks queue rather
+        // than vanish) up to `defer_timeout` wall seconds.
+        let model = ModelType(task.model.0);
+        let mut sel = match registry {
+            Some(_) => tracker.select_healthy(model, task.patches),
+            None => tracker.select(model, task.patches),
+        };
+        if let Some(reg) = registry {
+            let deadline = Instant::now() + Duration::from_secs_f64(serving.defer_timeout);
+            while sel == Selection::Infeasible && Instant::now() < deadline {
+                std::thread::sleep(Duration::from_secs_f64(serving.hb_interval));
+                tracker.set_health(&reg.snapshot(), sim_clock);
+                sel = tracker.select_healthy(model, task.patches);
+            }
+        }
         let (gang, reuse) = match &sel {
             Selection::Reuse(v) => (v.clone(), true),
             Selection::Fresh(v) => (v.clone(), false),
@@ -236,50 +475,112 @@ fn serve(args: &Args) -> anyhow::Result<()> {
                 metrics.observe_deferred();
                 eprintln!(
                     "task {:>3}  patches {}  deferred: no feasible gang on {} workers",
-                    task.id, task.patches, workers
+                    task.id,
+                    task.patches,
+                    tracker.len()
                 );
                 continue;
             }
         };
+        // `>=` rather than `==`: if the task at the kill-at ordinal was
+        // deferred (its iteration `continue`s before reaching here), the
+        // fault still fires on the next dispatched task — but only once
+        // (`fault_injected`), never again after a respawn.
+        if inject.kill_at.is_some_and(|k| ordinal >= k) && !fault_injected {
+            fault_injected = true;
+            // Default to a gang member so the fault provably lands on the
+            // dispatch path, not on an idle bystander.
+            let w = inject.worker.unwrap_or(gang[0]);
+            if inject.wedge {
+                pool.wedge(w);
+                println!(">>> wedged worker {w} before task {} (accepts, never replies)", task.id);
+            } else {
+                pool.kill(w);
+                println!(">>> killed worker {w} before task {}", task.id);
+            }
+            faulted = Some(w);
+        }
         let waiting = (sim_clock - task.arrival).max(0.0);
         if task.arrival > sim_clock {
             // Idle until the task arrives.
             metrics.advance_time(task.arrival - sim_clock);
             sim_clock = task.arrival;
         }
-        let steps = 20;
-        let out = host.dispatch_collect(
-            task.id,
-            &format!("prompt-{}", task.prompt_id),
-            steps,
-            task.model.0,
-            task.tenant.unwrap_or(0),
-            &gang,
-            waiting,
-            &mut metrics,
-        )?;
-        let sim_s = out.sim_exec_seconds();
+        let steps = SERVE_STEPS;
+        let prompt = format!("prompt-{}", task.prompt_id);
+        let (out, excluded) = match registry {
+            Some(reg) => {
+                let spares: Vec<usize> = reg
+                    .healthy()
+                    .into_iter()
+                    .filter(|w| !gang.contains(w))
+                    .collect();
+                let (out, excluded) = host
+                    .dispatch_resilient_collect(
+                        task.id,
+                        &prompt,
+                        steps,
+                        task.model.0,
+                        task.tenant,
+                        &gang,
+                        &spares,
+                        timeout,
+                        serving.max_rounds,
+                        time_scale,
+                        waiting,
+                        metrics,
+                    )
+                    .map_err(|e| anyhow::anyhow!("{e} (task ordinal {ordinal})"))?;
+                // Down until a heartbeat probe revives them; their mirror
+                // loses the loaded weights immediately.
+                for &w in &excluded {
+                    reg.mark_down(w);
+                }
+                tracker.abort_gang(&excluded, sim_clock);
+                (out, excluded)
+            }
+            None => {
+                let out = host
+                    .dispatch_collect(
+                        task.id,
+                        &prompt,
+                        steps,
+                        task.model.0,
+                        task.tenant,
+                        &gang,
+                        waiting,
+                        plain_timeout,
+                        metrics,
+                    )
+                    .map_err(|e| anyhow::anyhow!("{e} (task ordinal {ordinal})"))?;
+                (out, Vec::new())
+            }
+        };
+        // Failed retry rounds burnt simulated time too: the task's slot
+        // on the timeline covers them, exactly as a simulator retry runs
+        // later than the original dispatch.
+        let sim_s = out.retry_seconds + out.sim_exec_seconds();
         metrics.advance_time(sim_s);
         sim_clock += sim_s;
-        tracker.dispatch(&gang, 0.0, ModelType(task.model.0), reuse, sim_clock);
+        // Track the gang that actually completed — spares may have
+        // replaced excluded members, and a rebuilt gang is a fresh load.
+        let final_gang: Vec<usize> = out.results.iter().map(|r| r.worker_id).collect();
+        tracker.dispatch(&final_gang, 0.0, model, reuse && excluded.is_empty(), sim_clock);
         println!(
-            "task {:>3}  patches {}  gang {:?}  wait {:>6.1}s  sim {:>6.1}s  reload {}  wall {:>6.3}s",
+            "task {:>3}  patches {}  gang {:?}  wait {:>6.1}s  sim {:>6.1}s  reload {}{}  wall {:>6.3}s",
             task.id,
             task.patches,
-            gang,
+            final_gang,
             waiting,
             sim_s,
             out.any_reload(),
+            if excluded.is_empty() {
+                String::new()
+            } else {
+                format!("  excluded {excluded:?}")
+            },
             out.wall_seconds
         );
     }
-    println!(
-        "\nserved {} tasks in {:.2}s wall; total simulated exec {:.1}s",
-        workload.len(),
-        t0.elapsed().as_secs_f64(),
-        metrics.sim_time(),
-    );
-    println!("{}", metrics.summary_line());
-    pool.shutdown();
     Ok(())
 }

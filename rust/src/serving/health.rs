@@ -1,0 +1,331 @@
+//! Live worker health: a registry of per-worker up/down state maintained
+//! by periodic heartbeat probes on a background thread, feeding both gang
+//! selection (`Cluster::select_healthy` with the registry mirrored in) and
+//! resilient dispatch (spares drawn from healthy workers, excluded workers
+//! marked down until a probe revives them). This is the serving-side twin
+//! of the simulator's fault subsystem: edge AIGC serving treats server
+//! churn as a first-class concern, not an error path.
+
+use super::host::ServingHost;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Per-worker probe state.
+#[derive(Clone, Copy, Debug)]
+struct WorkerHealth {
+    up: bool,
+    /// Consecutive missed probes (reset by any successful probe).
+    misses: u32,
+    /// Bumped by every `mark_down`: a successful probe that *started*
+    /// before a mark-down (stale pong from a worker killed meanwhile)
+    /// must not revive it.
+    generation: u64,
+}
+
+/// Aggregate probe statistics, surfaced in the serving summary.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct HealthStats {
+    /// Total heartbeat probes sent.
+    pub probes: u64,
+    /// up→down transitions (probe misses or dispatch-observed failures).
+    pub downs: u64,
+    /// down→up transitions (a probe reached a revived worker).
+    pub recoveries: u64,
+}
+
+/// Shared up/down registry. Probes and dispatch failures write it; gang
+/// selection and spare-picking read it. All methods take `&self` (interior
+/// mutex) so the registry can sit behind an `Arc` shared with the probe
+/// thread.
+pub struct HealthRegistry {
+    state: Mutex<Vec<WorkerHealth>>,
+    stats: Mutex<HealthStats>,
+    /// Consecutive missed probes before a worker is marked down.
+    down_after: u32,
+}
+
+impl HealthRegistry {
+    /// All workers start up (optimistic until the first probe says
+    /// otherwise). `down_after` is clamped to at least 1.
+    pub fn new(workers: usize, down_after: u32) -> Self {
+        let fresh = WorkerHealth {
+            up: true,
+            misses: 0,
+            generation: 0,
+        };
+        HealthRegistry {
+            state: Mutex::new(vec![fresh; workers]),
+            stats: Mutex::new(HealthStats::default()),
+            down_after: down_after.max(1),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Token to capture *before* sending a probe; pass it to
+    /// [`record_probe_from`](Self::record_probe_from) so a pong that was
+    /// in flight when `mark_down` hit the worker cannot revive it.
+    pub fn probe_token(&self, worker: usize) -> u64 {
+        self.state
+            .lock()
+            .unwrap()
+            .get(worker)
+            .map_or(0, |w| w.generation)
+    }
+
+    /// Record one probe outcome. A success revives the worker (the only
+    /// way back up); a miss marks it down after `down_after` consecutive
+    /// misses.
+    pub fn record_probe(&self, worker: usize, ok: bool) {
+        let token = self.probe_token(worker);
+        self.record_probe_from(worker, ok, token);
+    }
+
+    /// [`record_probe`](Self::record_probe) for a probe that started when
+    /// [`probe_token`](Self::probe_token) returned `token`: a successful
+    /// probe from a previous generation (a `mark_down` landed while the
+    /// ping was in flight) is discarded instead of reviving the worker.
+    pub fn record_probe_from(&self, worker: usize, ok: bool, token: u64) {
+        let mut state = self.state.lock().unwrap();
+        let Some(w) = state.get_mut(worker) else {
+            return;
+        };
+        let mut stats = self.stats.lock().unwrap();
+        stats.probes += 1;
+        if ok {
+            if w.generation != token {
+                return; // stale pong: the worker was marked down meanwhile
+            }
+            w.misses = 0;
+            if !w.up {
+                w.up = true;
+                stats.recoveries += 1;
+            }
+        } else {
+            w.misses = w.misses.saturating_add(1);
+            if w.up && w.misses >= self.down_after {
+                w.up = false;
+                stats.downs += 1;
+            }
+        }
+    }
+
+    /// Mark a worker down immediately (a dispatch observed it failing —
+    /// stronger evidence than a missed probe). It stays down until a
+    /// heartbeat probe succeeds against it again.
+    pub fn mark_down(&self, worker: usize) {
+        let mut state = self.state.lock().unwrap();
+        let Some(w) = state.get_mut(worker) else {
+            return;
+        };
+        w.misses = self.down_after;
+        w.generation += 1; // invalidate in-flight probes
+        if w.up {
+            w.up = false;
+            self.stats.lock().unwrap().downs += 1;
+        }
+    }
+
+    /// Whether a worker is currently believed up. Unknown ids are down.
+    pub fn up(&self, worker: usize) -> bool {
+        self.state.lock().unwrap().get(worker).is_some_and(|w| w.up)
+    }
+
+    /// Per-worker up/down snapshot, index-aligned with the worker pool
+    /// (mirror into `Cluster::set_health` before gang selection).
+    pub fn snapshot(&self) -> Vec<bool> {
+        self.state.lock().unwrap().iter().map(|w| w.up).collect()
+    }
+
+    /// Ids of all workers currently believed up.
+    pub fn healthy(&self) -> Vec<usize> {
+        self.state
+            .lock()
+            .unwrap()
+            .iter()
+            .enumerate()
+            .filter(|(_, w)| w.up)
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    pub fn up_count(&self) -> usize {
+        self.state.lock().unwrap().iter().filter(|w| w.up).count()
+    }
+
+    pub fn stats(&self) -> HealthStats {
+        *self.stats.lock().unwrap()
+    }
+}
+
+/// Background heartbeat prober: one long-lived thread per worker, each
+/// probing every `interval` and recording outcomes into the shared
+/// registry until stopped. Per-worker threads mean a hung worker (probe
+/// blocked until `timeout`) never delays detection on the others, with
+/// zero steady-state thread creation.
+pub struct HealthMonitor {
+    stop: Arc<AtomicBool>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl HealthMonitor {
+    pub fn start(
+        host: ServingHost,
+        registry: Arc<HealthRegistry>,
+        interval: Duration,
+        timeout: Duration,
+    ) -> Self {
+        let stop = Arc::new(AtomicBool::new(false));
+        let host = Arc::new(host);
+        let handles = (0..host.worker_count())
+            .map(|w| {
+                let (host, registry, stop) = (host.clone(), registry.clone(), stop.clone());
+                std::thread::spawn(move || {
+                    while !stop.load(Ordering::Relaxed) {
+                        let token = registry.probe_token(w);
+                        let ok = host.heartbeat(w, timeout);
+                        registry.record_probe_from(w, ok, token);
+                        std::thread::sleep(interval);
+                    }
+                })
+            })
+            .collect();
+        HealthMonitor { stop, handles }
+    }
+
+    /// Stop probing and join the prober threads.
+    pub fn stop(mut self) {
+        self.halt();
+    }
+
+    fn halt(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        for h in self.handles.drain(..) {
+            h.join().ok();
+        }
+    }
+}
+
+impl Drop for HealthMonitor {
+    fn drop(&mut self) {
+        self.halt();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExecModelConfig;
+    use crate::serving::worker::WorkerPool;
+    use std::time::Instant;
+
+    #[test]
+    fn registry_needs_consecutive_misses_to_mark_down() {
+        let reg = HealthRegistry::new(2, 2);
+        assert!(reg.up(0) && reg.up(1));
+        reg.record_probe(0, false);
+        assert!(reg.up(0), "one miss of two must not down the worker");
+        reg.record_probe(0, true); // miss streak broken
+        reg.record_probe(0, false);
+        assert!(reg.up(0));
+        reg.record_probe(0, false);
+        assert!(!reg.up(0), "two consecutive misses must down the worker");
+        assert_eq!(reg.healthy(), vec![1]);
+        assert_eq!(reg.snapshot(), vec![false, true]);
+        // A successful probe is the only way back up.
+        reg.record_probe(0, true);
+        assert!(reg.up(0));
+        let stats = reg.stats();
+        assert_eq!(stats.downs, 1);
+        assert_eq!(stats.recoveries, 1);
+        assert_eq!(stats.probes, 6);
+    }
+
+    #[test]
+    fn mark_down_is_immediate_and_sticky_until_probe() {
+        let reg = HealthRegistry::new(3, 3);
+        reg.mark_down(1);
+        assert!(!reg.up(1));
+        assert_eq!(reg.up_count(), 2);
+        // Repeated marks don't double-count the transition.
+        reg.mark_down(1);
+        assert_eq!(reg.stats().downs, 1);
+        // Out-of-range ids are ignored (and considered down).
+        reg.mark_down(99);
+        assert!(!reg.up(99));
+        reg.record_probe(1, true);
+        assert!(reg.up(1));
+        assert_eq!(reg.stats().recoveries, 1);
+    }
+
+    #[test]
+    fn stale_pong_cannot_revive_a_marked_down_worker() {
+        let reg = HealthRegistry::new(1, 2);
+        // A probe starts (token captured), then dispatch observes the
+        // worker failing, then the probe's stale pong arrives.
+        let token = reg.probe_token(0);
+        reg.mark_down(0);
+        reg.record_probe_from(0, true, token);
+        assert!(!reg.up(0), "a pre-kill pong must not revive the worker");
+        assert_eq!(reg.stats().recoveries, 0);
+        // A fresh probe (current token) does revive it.
+        reg.record_probe(0, true);
+        assert!(reg.up(0));
+        assert_eq!(reg.stats().recoveries, 1);
+    }
+
+    fn wait_until(deadline: Duration, mut cond: impl FnMut() -> bool) -> bool {
+        let t0 = Instant::now();
+        while t0.elapsed() < deadline {
+            if cond() {
+                return true;
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        cond()
+    }
+
+    #[test]
+    fn monitor_marks_killed_worker_down_and_revives_after_respawn() {
+        let mut pool = WorkerPool::spawn(2, ExecModelConfig::default(), 1e-4, 21).unwrap();
+        let host = ServingHost::new(pool.addrs().to_vec());
+        let registry = Arc::new(HealthRegistry::new(2, 2));
+        let monitor = HealthMonitor::start(
+            host,
+            registry.clone(),
+            Duration::from_millis(25),
+            Duration::from_millis(400),
+        );
+        let patient = Duration::from_secs(10);
+        assert!(
+            wait_until(patient, || registry.stats().probes >= 2),
+            "monitor never probed"
+        );
+        assert!(registry.up(0) && registry.up(1));
+
+        pool.kill(1);
+        assert!(
+            wait_until(patient, || !registry.up(1)),
+            "killed worker never marked down"
+        );
+        assert!(registry.up(0), "healthy worker must stay up");
+
+        pool.respawn(1).unwrap();
+        assert!(
+            wait_until(patient, || registry.up(1)),
+            "respawned worker never revived"
+        );
+        let stats = registry.stats();
+        assert!(stats.downs >= 1 && stats.recoveries >= 1, "{stats:?}");
+        monitor.stop();
+        pool.shutdown();
+    }
+}

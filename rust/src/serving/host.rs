@@ -11,6 +11,12 @@ use std::net::{SocketAddr, TcpStream};
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
+/// Per-worker socket timeout for the plain (non-resilient) dispatch path
+/// when the caller does not supply one. Generous relative to any scaled
+/// sleep the workers perform, but finite: a wedged worker surfaces as a
+/// timeout error instead of hanging the serving loop forever.
+pub const DEFAULT_DISPATCH_TIMEOUT: Duration = Duration::from_secs(300);
+
 /// Outcome of one gang-scheduled task: per-worker results plus wall time.
 #[derive(Clone, Debug)]
 pub struct GangOutcome {
@@ -18,6 +24,12 @@ pub struct GangOutcome {
     pub results: Vec<TaskResult>,
     /// Host-observed wall-clock seconds for the whole gang (max worker).
     pub wall_seconds: f64,
+    /// Simulated seconds burnt in failed resilient-dispatch rounds before
+    /// the successful one (max over each failed round's partial results —
+    /// patches run in parallel). 0 for plain dispatch. Counts toward the
+    /// task's latency and the caller's simulated clock: a killed gang's
+    /// retry happens *later*, exactly as in the simulator.
+    pub retry_seconds: f64,
 }
 
 impl GangOutcome {
@@ -33,9 +45,16 @@ impl GangOutcome {
     pub fn any_reload(&self) -> bool {
         self.results.iter().any(|r| !r.reused)
     }
+
+    /// Total simulated patch-seconds burnt across the gang (the work-book
+    /// currency: per-worker exec + load, summed).
+    fn patch_seconds(&self) -> f64 {
+        self.results.iter().map(|r| r.exec_time + r.load_time).sum()
+    }
 }
 
 /// The host: knows every worker's address and dispatches gangs.
+#[derive(Clone)]
 pub struct ServingHost {
     workers: Vec<SocketAddr>,
 }
@@ -60,20 +79,49 @@ impl ServingHost {
         model: u32,
         gang: &[usize],
     ) -> anyhow::Result<GangOutcome> {
-        self.dispatch_tagged(task_id, prompt, steps, model, 0, gang)
+        self.dispatch_tagged(task_id, prompt, steps, model, None, gang)
     }
 
     /// `dispatch` with an explicit tenant class: every worker request on
     /// the wire carries the tenant tag, so container-side logs and billing
-    /// can attribute GPU time per tenant.
+    /// can attribute GPU time per tenant. `None` (an untenanted workload)
+    /// omits the tag entirely — it is not tenant 0.
+    ///
+    /// Built on [`try_dispatch`](Self::try_dispatch), so it shares the
+    /// resilient path's per-worker timeouts and empty-reply guard; on
+    /// failure the error names every worker that failed and why.
     pub fn dispatch_tagged(
         &self,
         task_id: u64,
         prompt: &str,
         steps: u32,
         model: u32,
-        tenant: u32,
+        tenant: Option<u32>,
         gang: &[usize],
+    ) -> anyhow::Result<GangOutcome> {
+        self.dispatch_tagged_timeout(
+            task_id,
+            prompt,
+            steps,
+            model,
+            tenant,
+            gang,
+            DEFAULT_DISPATCH_TIMEOUT,
+        )
+    }
+
+    /// [`dispatch_tagged`](Self::dispatch_tagged) with an explicit
+    /// per-worker socket timeout.
+    #[allow(clippy::too_many_arguments)]
+    pub fn dispatch_tagged_timeout(
+        &self,
+        task_id: u64,
+        prompt: &str,
+        steps: u32,
+        model: u32,
+        tenant: Option<u32>,
+        gang: &[usize],
+        timeout: Duration,
     ) -> anyhow::Result<GangOutcome> {
         anyhow::ensure!(!gang.is_empty(), "empty gang");
         anyhow::ensure!(
@@ -81,41 +129,26 @@ impl ServingHost {
             "gang references unknown worker"
         );
         let started = Instant::now();
-        let (tx, rx) = mpsc::channel::<anyhow::Result<TaskResult>>();
-        for (rank, &w) in gang.iter().enumerate() {
-            let addr = self.workers[w];
-            let req = TaskRequest {
-                task_id,
-                prompt: prompt.to_string(),
-                steps,
-                patches: gang.len(),
-                model,
-                rank,
-                tenant,
-            };
-            let tx = tx.clone();
-            std::thread::spawn(move || {
-                let send = || -> anyhow::Result<TaskResult> {
-                    let mut stream = TcpStream::connect(addr)?;
-                    stream.write_all(req.to_json().as_bytes())?;
-                    stream.write_all(b"\n")?;
-                    let mut line = String::new();
-                    BufReader::new(stream).read_line(&mut line)?;
-                    TaskResult::from_json(line.trim())
-                };
-                tx.send(send()).ok();
-            });
-        }
-        drop(tx);
-        let mut results = Vec::with_capacity(gang.len());
-        for r in rx {
-            results.push(r?);
+        let (mut results, failed) =
+            self.try_dispatch(task_id, prompt, steps, model, tenant, gang, timeout);
+        if !failed.is_empty() {
+            let detail: Vec<String> = failed
+                .iter()
+                .map(|(w, e)| format!("worker {w}: {e}"))
+                .collect();
+            anyhow::bail!(
+                "task {task_id}: gang dispatch failed on {}/{} workers ({})",
+                failed.len(),
+                gang.len(),
+                detail.join("; ")
+            );
         }
         results.sort_by_key(|r| r.worker_id);
         Ok(GangOutcome {
             task_id,
             results,
             wall_seconds: started.elapsed().as_secs_f64(),
+            retry_seconds: 0.0,
         })
     }
 
@@ -140,8 +173,9 @@ impl ServingHost {
     }
 
     /// One gang round with per-worker connect/read/write timeouts.
-    /// Returns the successful results plus the worker ids that failed
-    /// (connection refused, heartbeat timeout, or a garbled reply).
+    /// Returns the successful results plus, per failed worker, the error
+    /// that felled it (connection refused, timeout, a clean close without
+    /// a result, or a garbled reply).
     #[allow(clippy::too_many_arguments)]
     fn try_dispatch(
         &self,
@@ -149,10 +183,10 @@ impl ServingHost {
         prompt: &str,
         steps: u32,
         model: u32,
-        tenant: u32,
+        tenant: Option<u32>,
         gang: &[usize],
         timeout: Duration,
-    ) -> (Vec<TaskResult>, Vec<usize>) {
+    ) -> (Vec<TaskResult>, Vec<(usize, anyhow::Error)>) {
         let (tx, rx) = mpsc::channel::<(usize, anyhow::Result<TaskResult>)>();
         for (rank, &w) in gang.iter().enumerate() {
             let addr = self.workers[w];
@@ -187,7 +221,7 @@ impl ServingHost {
         for (w, r) in rx {
             match r {
                 Ok(res) => results.push(res),
-                Err(_) => failed.push(w),
+                Err(e) => failed.push((w, e)),
             }
         }
         (results, failed)
@@ -208,11 +242,81 @@ impl ServingHost {
         prompt: &str,
         steps: u32,
         model: u32,
-        tenant: u32,
+        tenant: Option<u32>,
         gang: &[usize],
         spares: &[usize],
         timeout: Duration,
         max_rounds: usize,
+    ) -> anyhow::Result<(GangOutcome, Vec<usize>)> {
+        self.dispatch_resilient_inner(
+            task_id, prompt, steps, model, tenant, gang, spares, timeout, max_rounds, 0.0, 0.0,
+            None,
+        )
+    }
+
+    /// [`dispatch_resilient`](Self::dispatch_resilient) feeding the
+    /// streaming metrics collector, so retry rounds and excluded workers
+    /// show up in the serving summary and the books balance like the
+    /// simulator's: dispatched patch-seconds = completed + wasted. Records
+    /// per round: each failed worker as a failure, the partial results of
+    /// a failed round as a gang kill (their patches completed but the gang
+    /// result is useless), each extra round as a retry, and — on success —
+    /// response latency, reload flag, and per-worker busy time, exactly
+    /// like [`dispatch_collect`](Self::dispatch_collect). A task that
+    /// exhausts its rounds is recorded as a task failure.
+    ///
+    /// `time_scale` is the workers' sleep compression factor: it converts
+    /// a failed round's wall time back into simulated seconds, so a round
+    /// felled purely by timeouts (zero survivors — e.g. a wedged worker)
+    /// still charges its stall to `retry_seconds`. Pass 0 when unknown
+    /// (only the surviving partials' execution is charged then).
+    #[allow(clippy::too_many_arguments)]
+    pub fn dispatch_resilient_collect(
+        &self,
+        task_id: u64,
+        prompt: &str,
+        steps: u32,
+        model: u32,
+        tenant: Option<u32>,
+        gang: &[usize],
+        spares: &[usize],
+        timeout: Duration,
+        max_rounds: usize,
+        time_scale: f64,
+        waiting: f64,
+        metrics: &mut MetricsCollector,
+    ) -> anyhow::Result<(GangOutcome, Vec<usize>)> {
+        self.dispatch_resilient_inner(
+            task_id,
+            prompt,
+            steps,
+            model,
+            tenant,
+            gang,
+            spares,
+            timeout,
+            max_rounds,
+            time_scale,
+            waiting,
+            Some(metrics),
+        )
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn dispatch_resilient_inner(
+        &self,
+        task_id: u64,
+        prompt: &str,
+        steps: u32,
+        model: u32,
+        tenant: Option<u32>,
+        gang: &[usize],
+        spares: &[usize],
+        timeout: Duration,
+        max_rounds: usize,
+        time_scale: f64,
+        waiting: f64,
+        mut metrics: Option<&mut MetricsCollector>,
     ) -> anyhow::Result<(GangOutcome, Vec<usize>)> {
         anyhow::ensure!(!gang.is_empty(), "empty gang");
         anyhow::ensure!(
@@ -220,9 +324,17 @@ impl ServingHost {
             "gang references unknown worker"
         );
         let started = Instant::now();
+        let rounds = max_rounds.max(1);
         let mut excluded: Vec<usize> = Vec::new();
         let mut current: Vec<usize> = gang.to_vec();
-        for _ in 0..max_rounds.max(1) {
+        // Simulated seconds burnt by failed rounds: the retry can only
+        // start once the slowest survivor finished (max over the partial
+        // results — patches run in parallel) or, for timeout-felled
+        // members with no survivors, once the timeout fired — recovered
+        // from the round's wall time when time_scale is known.
+        let mut lost_sim = 0.0f64;
+        for round in 0..rounds {
+            let round_started = Instant::now();
             let (mut results, failed) =
                 self.try_dispatch(task_id, prompt, steps, model, tenant, &current, timeout);
             if failed.is_empty() {
@@ -231,12 +343,59 @@ impl ServingHost {
                     task_id,
                     results,
                     wall_seconds: started.elapsed().as_secs_f64(),
+                    retry_seconds: lost_sim,
                 };
+                if let Some(m) = metrics.as_deref_mut() {
+                    let work = outcome.patch_seconds();
+                    m.observe_dispatched_work(work);
+                    m.observe_completed_work(work);
+                    m.observe_task(
+                        waiting + lost_sim + outcome.sim_exec_seconds(),
+                        waiting,
+                        outcome.any_reload(),
+                    );
+                    for r in &outcome.results {
+                        m.observe_busy(r.worker_id, r.exec_time + r.load_time);
+                    }
+                }
                 return Ok((outcome, excluded));
             }
-            for w in failed {
-                if !excluded.contains(&w) {
-                    excluded.push(w);
+            let partial_sim = results
+                .iter()
+                .map(|r| r.exec_time + r.load_time)
+                .fold(0.0, f64::max);
+            // Wall-derived charge only when a member actually hit its
+            // timeout (the round lasted at least that long): an instantly
+            // refused member costs just the surviving partials, and
+            // timeout-free rounds stay free of host-speed noise.
+            let round_wall = round_started.elapsed();
+            let wall_sim = if time_scale > 0.0 && round_wall >= timeout {
+                round_wall.as_secs_f64() / time_scale
+            } else {
+                0.0
+            };
+            lost_sim += partial_sim.max(wall_sim);
+            if let Some(m) = metrics.as_deref_mut() {
+                // The round's surviving patches did burn their workers'
+                // time, but without the full gang the result is useless:
+                // book the partial work as dispatched AND wasted. A round
+                // with zero survivors killed nothing that ever executed,
+                // so it is not a gang kill.
+                if !results.is_empty() {
+                    let burnt: f64 = results.iter().map(|r| r.exec_time + r.load_time).sum();
+                    m.observe_dispatched_work(burnt);
+                    m.observe_gang_kill(burnt);
+                    for r in &results {
+                        m.observe_busy(r.worker_id, r.exec_time + r.load_time);
+                    }
+                }
+                for _ in &failed {
+                    m.observe_failure();
+                }
+            }
+            for (w, _) in &failed {
+                if !excluded.contains(w) {
+                    excluded.push(*w);
                 }
             }
             // Rebuild the gang: keep healthy members, refill from spares.
@@ -253,34 +412,53 @@ impl ServingHost {
                     next.push(w);
                 }
             }
-            anyhow::ensure!(
-                next.len() == current.len(),
-                "gang needs {} workers but only {} healthy candidates remain \
-                 (excluded: {excluded:?})",
-                current.len(),
-                next.len()
-            );
-            current = next;
+            if next.len() != current.len() {
+                if let Some(m) = metrics.as_deref_mut() {
+                    m.observe_task_failure();
+                }
+                anyhow::bail!(
+                    "task {task_id}: gang needs {} workers but only {} healthy candidates remain \
+                     (excluded: {excluded:?})",
+                    current.len(),
+                    next.len()
+                );
+            }
+            if round + 1 < rounds {
+                if let Some(m) = metrics.as_deref_mut() {
+                    m.observe_retry();
+                }
+                current = next;
+            }
         }
-        anyhow::bail!("gang dispatch still failing after {max_rounds} rounds (excluded: {excluded:?})")
+        if let Some(m) = metrics.as_deref_mut() {
+            m.observe_task_failure();
+        }
+        anyhow::bail!(
+            "task {task_id}: gang dispatch still failing after {rounds} rounds (excluded: {excluded:?})"
+        )
     }
 
     /// `dispatch`, additionally feeding the streaming metrics collector:
     /// response latency (`waiting` + simulated gang execution), reload
     /// flag, and per-worker busy time. The caller advances the collector's
-    /// clock (`advance_time`) according to its own notion of elapsed time.
+    /// clock (`advance_time`) according to its own notion of elapsed time,
+    /// and supplies the per-worker socket timeout
+    /// ([`DEFAULT_DISPATCH_TIMEOUT`] when in doubt).
+    #[allow(clippy::too_many_arguments)]
     pub fn dispatch_collect(
         &self,
         task_id: u64,
         prompt: &str,
         steps: u32,
         model: u32,
-        tenant: u32,
+        tenant: Option<u32>,
         gang: &[usize],
         waiting: f64,
+        timeout: Duration,
         metrics: &mut MetricsCollector,
     ) -> anyhow::Result<GangOutcome> {
-        let out = self.dispatch_tagged(task_id, prompt, steps, model, tenant, gang)?;
+        let out =
+            self.dispatch_tagged_timeout(task_id, prompt, steps, model, tenant, gang, timeout)?;
         metrics.observe_task(waiting + out.sim_exec_seconds(), waiting, out.any_reload());
         // Busy time is per worker: patches run in parallel and each worker
         // is free again after its own exec+load, not after the slowest
@@ -328,6 +506,43 @@ mod tests {
     }
 
     #[test]
+    fn dispatch_error_names_the_failed_worker() {
+        let pool = WorkerPool::spawn(1, ExecModelConfig::default(), 1e-4, 3).unwrap();
+        let mut addrs = pool.addrs().to_vec();
+        addrs.push(dead_addr()); // worker 1 is dead
+        let host = ServingHost::new(addrs);
+        let err = host.dispatch(4, "p", 20, 0, &[0, 1]).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("task 4"), "{msg}");
+        assert!(msg.contains("worker 1"), "{msg}");
+        assert!(!msg.contains("worker 0:"), "healthy worker blamed: {msg}");
+        pool.shutdown();
+    }
+
+    #[test]
+    fn clean_close_reports_empty_reply_not_a_parse_error() {
+        // A worker that accepts and closes without replying used to
+        // surface as a JSON parse error on ""; now both dispatch paths
+        // share try_dispatch's empty-reply guard.
+        let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = l.local_addr().unwrap();
+        let closer = std::thread::spawn(move || {
+            if let Ok((stream, _)) = l.accept() {
+                // Consume the request, then close cleanly without a reply.
+                let mut line = String::new();
+                BufReader::new(&stream).read_line(&mut line).ok();
+                drop(stream);
+            }
+        });
+        let host = ServingHost::new(vec![addr]);
+        let err = host.dispatch(1, "p", 20, 0, &[0]).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("worker 0"), "{msg}");
+        assert!(msg.contains("closed without a result"), "{msg}");
+        closer.join().unwrap();
+    }
+
+    #[test]
     fn heartbeat_detects_live_and_dead_workers() {
         let pool = WorkerPool::spawn(2, ExecModelConfig::default(), 1e-4, 5).unwrap();
         let mut addrs = pool.addrs().to_vec();
@@ -342,6 +557,26 @@ mod tests {
     }
 
     #[test]
+    fn heartbeat_times_out_against_a_wedged_worker() {
+        let pool = WorkerPool::spawn(1, ExecModelConfig::default(), 1e-4, 8).unwrap();
+        let host = ServingHost::new(pool.addrs().to_vec());
+        assert!(host.heartbeat(0, Duration::from_secs(2)));
+        pool.wedge(0);
+        let t0 = Instant::now();
+        assert!(
+            !host.heartbeat(0, Duration::from_millis(250)),
+            "wedged worker accepts but never replies — the probe must fail"
+        );
+        assert!(
+            t0.elapsed() < Duration::from_secs(2),
+            "probe must fail within its timeout, not hang"
+        );
+        pool.unwedge(0);
+        assert!(host.heartbeat(0, Duration::from_secs(2)), "unwedged worker revives");
+        pool.shutdown();
+    }
+
+    #[test]
     fn resilient_dispatch_excludes_failed_workers_and_retries() {
         let pool = WorkerPool::spawn(3, ExecModelConfig::default(), 1e-4, 6).unwrap();
         let mut addrs = pool.addrs().to_vec();
@@ -350,7 +585,7 @@ mod tests {
         let timeout = Duration::from_secs(2);
         // Gang of 2 includes the dead worker; worker 2 is the spare.
         let (out, excluded) = host
-            .dispatch_resilient(5, "p", 20, 0, 0, &[0, 3], &[2], timeout, 3)
+            .dispatch_resilient(5, "p", 20, 0, None, &[0, 3], &[2], timeout, 3)
             .unwrap();
         assert_eq!(excluded, vec![3]);
         assert_eq!(out.results.len(), 2);
@@ -359,8 +594,94 @@ mod tests {
         // No healthy candidates left: the dispatch reports failure rather
         // than hanging.
         assert!(host
-            .dispatch_resilient(6, "p", 20, 0, 0, &[3], &[], timeout, 2)
+            .dispatch_resilient(6, "p", 20, 0, None, &[3], &[], timeout, 2)
             .is_err());
+        pool.shutdown();
+    }
+
+    #[test]
+    fn resilient_dispatch_refills_from_spares_after_a_mid_run_kill() {
+        let mut pool = WorkerPool::spawn(3, ExecModelConfig::default(), 1e-4, 11).unwrap();
+        let host = ServingHost::new(pool.addrs().to_vec());
+        let timeout = Duration::from_secs(2);
+        // Warm run: the gang [0, 1] completes with nothing excluded.
+        let (_, ex) = host
+            .dispatch_resilient(1, "p", 20, 0, None, &[0, 1], &[2], timeout, 3)
+            .unwrap();
+        assert!(ex.is_empty());
+        // Kill a gang member mid-run: the next dispatch of the same gang
+        // must exclude it and complete on the spare.
+        pool.kill(1);
+        let (out, ex) = host
+            .dispatch_resilient(2, "p", 20, 0, None, &[0, 1], &[2], timeout, 3)
+            .unwrap();
+        assert_eq!(ex, vec![1]);
+        let ids: Vec<usize> = out.results.iter().map(|r| r.worker_id).collect();
+        assert_eq!(ids, vec![0, 2]);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn resilient_collect_books_retries_failures_and_wasted_work() {
+        let mut pool = WorkerPool::spawn(3, ExecModelConfig::default(), 1e-4, 12).unwrap();
+        let host = ServingHost::new(pool.addrs().to_vec());
+        let timeout = Duration::from_secs(2);
+        pool.kill(1);
+        let mut m = MetricsCollector::new(3);
+        let (out, excluded) = host
+            .dispatch_resilient_collect(
+                7,
+                "p",
+                20,
+                0,
+                None,
+                &[0, 1],
+                &[2],
+                timeout,
+                3,
+                1e-4,
+                1.5,
+                &mut m,
+            )
+            .unwrap();
+        assert_eq!(excluded, vec![1]);
+        assert_eq!(m.completed(), 1);
+        assert_eq!(m.failures(), 1);
+        assert_eq!(m.retries(), 1);
+        assert_eq!(m.gang_kills(), 1);
+        assert!(m.wasted_ps() > 0.0, "worker 0's first patch was burnt");
+        assert!(
+            out.retry_seconds > 0.0,
+            "the failed round's simulated time must be charged to the task"
+        );
+        // Serving books mirror the simulator's: dispatched = completed + wasted.
+        assert!(
+            (m.dispatched_ps() - m.completed_ps() - m.wasted_ps()).abs() < 1e-9,
+            "books out of balance: {} != {} + {}",
+            m.dispatched_ps(),
+            m.completed_ps(),
+            m.wasted_ps()
+        );
+        assert!(m.latency.p50() >= 1.5 + out.retry_seconds + out.sim_exec_seconds() - 1e-9);
+        // Exhausting the gang (no spares left) books a task failure.
+        assert!(host
+            .dispatch_resilient_collect(
+                8,
+                "p",
+                20,
+                0,
+                None,
+                &[1],
+                &[],
+                timeout,
+                2,
+                1e-4,
+                0.0,
+                &mut m,
+            )
+            .is_err());
+        assert_eq!(m.task_failures(), 1);
+        assert_eq!(m.completed(), 1, "a failed task is not a completion");
         pool.shutdown();
     }
 
@@ -370,7 +691,17 @@ mod tests {
         let host = ServingHost::new(pool.addrs().to_vec());
         let mut m = MetricsCollector::new(2);
         let out = host
-            .dispatch_collect(1, "p", 20, 0, 0, &[0, 1], 2.5, &mut m)
+            .dispatch_collect(
+                1,
+                "p",
+                20,
+                0,
+                None,
+                &[0, 1],
+                2.5,
+                DEFAULT_DISPATCH_TIMEOUT,
+                &mut m,
+            )
             .unwrap();
         m.advance_time(out.sim_exec_seconds());
         assert_eq!(m.completed(), 1);

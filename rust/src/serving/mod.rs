@@ -11,10 +11,12 @@
 //! predicted duration scaled by `time_scale`). See DESIGN.md
 //! §Substitutions.
 
+pub mod health;
 pub mod host;
 pub mod protocol;
 pub mod worker;
 
-pub use host::ServingHost;
+pub use health::{HealthMonitor, HealthRegistry, HealthStats};
+pub use host::{ServingHost, DEFAULT_DISPATCH_TIMEOUT};
 pub use protocol::{TaskRequest, TaskResult};
 pub use worker::WorkerPool;

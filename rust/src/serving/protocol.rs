@@ -42,9 +42,11 @@ pub struct TaskRequest {
     pub model: u32,
     /// Rank of this worker within the gang (0-based).
     pub rank: usize,
-    /// Tenant class of the task (0 for single-tenant workloads); carried
-    /// on the wire so workers/containers can tag logs and billing.
-    pub tenant: u32,
+    /// Tenant class of the task; carried on the wire so workers/containers
+    /// can tag logs and billing. `None` for untenanted workloads — kept
+    /// distinct from tenant 0 (a real, configurable tenant) and omitted
+    /// from the wire format entirely, so pre-tenant traces stay parseable.
+    pub tenant: Option<u32>,
 }
 
 impl TaskRequest {
@@ -55,8 +57,10 @@ impl TaskRequest {
             .set("steps", self.steps as usize)
             .set("patches", self.patches)
             .set("model", self.model as usize)
-            .set("rank", self.rank)
-            .set("tenant", self.tenant as usize);
+            .set("rank", self.rank);
+        if let Some(t) = self.tenant {
+            v.set("tenant", t as usize);
+        }
         v.to_json()
     }
 
@@ -69,8 +73,9 @@ impl TaskRequest {
             patches: v.req("patches")?.as_usize().unwrap_or(1),
             model: v.req("model")?.as_f64().unwrap_or(0.0) as u32,
             rank: v.req("rank")?.as_usize().unwrap_or(0),
-            // Optional for wire compatibility with pre-tenant requests.
-            tenant: v.get("tenant").and_then(Value::as_f64).unwrap_or(0.0) as u32,
+            // Absent on the wire for untenanted tasks (and in pre-tenant
+            // traces): parses to `None`, never conflated with tenant 0.
+            tenant: v.get("tenant").and_then(Value::as_f64).map(|t| t as u32),
         })
     }
 }
@@ -128,19 +133,29 @@ mod tests {
             patches: 4,
             model: 2,
             rank: 3,
-            tenant: 1,
+            tenant: Some(1),
         };
         let back = TaskRequest::from_json(&req.to_json()).unwrap();
         assert_eq!(back, req);
+        // Tenant 0 is a real tenant and survives the round trip distinctly
+        // from "no tenant".
+        let zero = TaskRequest { tenant: Some(0), ..req.clone() };
+        assert_eq!(TaskRequest::from_json(&zero.to_json()).unwrap().tenant, Some(0));
+        let untenanted = TaskRequest { tenant: None, ..req };
+        let json = untenanted.to_json();
+        assert!(!json.contains("tenant"), "absent tenant must be omitted: {json}");
+        assert_eq!(TaskRequest::from_json(&json).unwrap(), untenanted);
     }
 
     #[test]
-    fn request_without_tenant_defaults_to_zero() {
+    fn request_without_tenant_parses_as_untenanted() {
+        // Pre-tenant wire format (no `tenant` key) stays parseable and is
+        // NOT conflated with tenant 0.
         let req = TaskRequest::from_json(
             "{\"task_id\":1,\"prompt\":\"p\",\"steps\":20,\"patches\":2,\"model\":0,\"rank\":0}",
         )
         .unwrap();
-        assert_eq!(req.tenant, 0);
+        assert_eq!(req.tenant, None);
     }
 
     #[test]

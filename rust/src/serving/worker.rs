@@ -3,7 +3,15 @@
 //! the worker "executes" it (sleeping the calibrated duration x
 //! `time_scale`), tracks which model instance it has loaded (charging
 //! initialisation time on change, like DistriFusion's model load), and
-//! replies with a result JSON.
+//! replies with a result JSON. Connections are handled on their own
+//! threads: tasks serialise on the simulated GPU (one runs at a time),
+//! but heartbeat pings bypass it, so a busy worker still answers probes.
+//!
+//! The pool supports controlled fault injection so the fault-aware serving
+//! loop is demonstrable end-to-end: `kill` (listener gone, connections
+//! refused — a crashed container), `wedge` (accepts connections but never
+//! replies — a hung GPU process, detectable only via timeouts), and
+//! `respawn` (a fresh worker on the same address, weight-cold).
 
 use super::protocol::{self, TaskRequest, TaskResult};
 use crate::config::ExecModelConfig;
@@ -13,7 +21,7 @@ use crate::util::rng::Pcg64;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
 /// Per-worker loaded-model state.
@@ -23,12 +31,22 @@ struct Loaded {
     patches: usize,
 }
 
+/// The simulated GPU: model state + jitter RNG behind one mutex. Task
+/// execution holds the lock for its whole (scaled) duration — one GPU
+/// runs one patch at a time — while heartbeat pings never touch it, so a
+/// busy worker still answers probes instantly (a real container serves
+/// health checks off the execution thread; without this, a long task
+/// would starve the probe loop and get the worker falsely marked down).
+struct GpuState {
+    loaded: Option<Loaded>,
+    rng: Pcg64,
+}
+
 fn handle(
     stream: TcpStream,
     worker_id: usize,
     exec: &ExecModel,
-    loaded: &mut Option<Loaded>,
-    rng: &mut Pcg64,
+    gpu: &Mutex<GpuState>,
     time_scale: f64,
 ) -> anyhow::Result<()> {
     let mut reader = BufReader::new(stream.try_clone()?);
@@ -52,18 +70,24 @@ fn handle(
         model: req.model,
         patches: req.patches,
     };
-    // Model reuse: a loaded instance matches only if both the model type
-    // and the gang size agree (DistriFusion loads per process group).
-    let reused = *loaded == Some(want);
-    let load_time = if reused {
-        0.0
-    } else {
-        exec.sample_init(req.patches, rng)
+    let (reused, load_time, exec_time) = {
+        let mut g = gpu.lock().unwrap();
+        // Model reuse: a loaded instance matches only if both the model
+        // type and the gang size agree (DistriFusion loads per process
+        // group).
+        let reused = g.loaded == Some(want);
+        let load_time = if reused {
+            0.0
+        } else {
+            exec.sample_init(req.patches, &mut g.rng)
+        };
+        g.loaded = Some(want);
+        let exec_time = exec.sample_exec(req.steps, req.patches, &mut g.rng);
+        let simulated = (load_time + exec_time) * time_scale;
+        // Sleep while holding the lock: the GPU is busy for the duration.
+        std::thread::sleep(std::time::Duration::from_secs_f64(simulated));
+        (reused, load_time, exec_time)
     };
-    *loaded = Some(want);
-    let exec_time = exec.sample_exec(req.steps, req.patches, rng);
-    let simulated = (load_time + exec_time) * time_scale;
-    std::thread::sleep(std::time::Duration::from_secs_f64(simulated));
     let result = TaskResult {
         task_id: req.task_id,
         worker_id,
@@ -78,61 +102,138 @@ fn handle(
     Ok(())
 }
 
-/// A pool of worker listeners bound to ephemeral localhost ports.
+/// The accept loop of one worker. Owns the listener: when the loop exits
+/// (stop flag), the listener drops and further connections are refused,
+/// exactly like a crashed container.
+fn run_worker(
+    listener: TcpListener,
+    worker_id: usize,
+    exec_cfg: ExecModelConfig,
+    time_scale: f64,
+    seed: u64,
+    stop: Arc<AtomicBool>,
+    wedged: Arc<AtomicBool>,
+) {
+    let exec = Arc::new(ExecModel::new(exec_cfg));
+    let gpu = Arc::new(Mutex::new(GpuState {
+        loaded: None,
+        rng: Pcg64::new(seed, worker_id as u64 + 0xB0),
+    }));
+    // Wedged-mode connections are parked here: accepted, request line
+    // consumed, never answered. The client only notices via its read
+    // timeout — the signature of a hung (not crashed) worker.
+    let mut parked: Vec<TcpStream> = Vec::new();
+    while !stop.load(Ordering::Relaxed) {
+        if !wedged.load(Ordering::Relaxed) {
+            parked.clear(); // unwedged: release the held connections (EOF)
+        } else {
+            // Shed parked connections whose client already gave up (its
+            // read timeout fired and it closed), so a long wedge holds at
+            // most the currently-waiting clients and cannot leak FDs.
+            parked.retain(|s| {
+                s.set_nonblocking(true).ok();
+                let mut buf = [0u8; 1];
+                match s.peek(&mut buf) {
+                    Ok(0) => false, // peer closed
+                    Ok(_) => true,
+                    Err(e) => e.kind() == std::io::ErrorKind::WouldBlock,
+                }
+            });
+        }
+        match listener.accept() {
+            Ok((stream, _)) => {
+                stream.set_nonblocking(false).ok();
+                if wedged.load(Ordering::Relaxed) {
+                    // Bounded read: a client that connects but never
+                    // writes must not wedge the accept thread itself
+                    // (kill/respawn/shutdown join it).
+                    stream
+                        .set_read_timeout(Some(std::time::Duration::from_millis(250)))
+                        .ok();
+                    let mut line = String::new();
+                    if let Ok(clone) = stream.try_clone() {
+                        BufReader::new(clone).read_line(&mut line).ok();
+                    }
+                    parked.push(stream);
+                } else {
+                    // One thread per connection: pings answer while a
+                    // task sleeps on the GPU lock.
+                    let (exec, gpu) = (exec.clone(), gpu.clone());
+                    std::thread::spawn(move || {
+                        if let Err(e) = handle(stream, worker_id, &exec, &gpu, time_scale) {
+                            eprintln!("worker {worker_id}: {e}");
+                        }
+                    });
+                }
+            }
+            Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(std::time::Duration::from_millis(2));
+            }
+            Err(e) => {
+                eprintln!("worker {worker_id} accept: {e}");
+                break;
+            }
+        }
+    }
+}
+
+/// Control block for one live worker thread.
+struct WorkerSlot {
+    stop: Arc<AtomicBool>,
+    wedged: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+/// A pool of worker listeners bound to ephemeral localhost ports, with
+/// per-worker lifecycle control for fault injection.
 pub struct WorkerPool {
     addrs: Vec<SocketAddr>,
-    stop: Arc<AtomicBool>,
-    handles: Vec<JoinHandle<()>>,
+    exec_cfg: ExecModelConfig,
+    time_scale: f64,
+    seed: u64,
+    slots: Vec<WorkerSlot>,
 }
 
 impl WorkerPool {
     /// Spawn `n` workers. `time_scale` compresses simulated seconds into
     /// real sleeping time (e.g. 0.01 → a 33 s model load sleeps 330 ms).
-    pub fn spawn(n: usize, exec_cfg: ExecModelConfig, time_scale: f64, seed: u64) -> anyhow::Result<WorkerPool> {
-        let stop = Arc::new(AtomicBool::new(false));
-        let mut addrs = Vec::with_capacity(n);
-        let mut handles = Vec::with_capacity(n);
+    pub fn spawn(
+        n: usize,
+        exec_cfg: ExecModelConfig,
+        time_scale: f64,
+        seed: u64,
+    ) -> anyhow::Result<WorkerPool> {
+        let mut pool = WorkerPool {
+            addrs: Vec::with_capacity(n),
+            exec_cfg,
+            time_scale,
+            seed,
+            slots: Vec::with_capacity(n),
+        };
         for worker_id in 0..n {
             let listener = TcpListener::bind("127.0.0.1:0")?;
             listener.set_nonblocking(true)?;
-            addrs.push(listener.local_addr()?);
-            let stop_flag = stop.clone();
-            let cfg = exec_cfg.clone();
-            handles.push(std::thread::spawn(move || {
-                let exec = ExecModel::new(cfg);
-                let mut rng = Pcg64::new(seed, worker_id as u64 + 0xB0);
-                let mut loaded: Option<Loaded> = None;
-                while !stop_flag.load(Ordering::Relaxed) {
-                    match listener.accept() {
-                        Ok((stream, _)) => {
-                            stream.set_nonblocking(false).ok();
-                            if let Err(e) = handle(
-                                stream,
-                                worker_id,
-                                &exec,
-                                &mut loaded,
-                                &mut rng,
-                                time_scale,
-                            ) {
-                                eprintln!("worker {worker_id}: {e}");
-                            }
-                        }
-                        Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                            std::thread::sleep(std::time::Duration::from_millis(2));
-                        }
-                        Err(e) => {
-                            eprintln!("worker {worker_id} accept: {e}");
-                            break;
-                        }
-                    }
-                }
-            }));
+            pool.addrs.push(listener.local_addr()?);
+            let slot = pool.launch(listener, worker_id);
+            pool.slots.push(slot);
         }
-        Ok(WorkerPool {
-            addrs,
+        Ok(pool)
+    }
+
+    fn launch(&self, listener: TcpListener, worker_id: usize) -> WorkerSlot {
+        let stop = Arc::new(AtomicBool::new(false));
+        let wedged = Arc::new(AtomicBool::new(false));
+        let (stop_flag, wedged_flag) = (stop.clone(), wedged.clone());
+        let cfg = self.exec_cfg.clone();
+        let (time_scale, seed) = (self.time_scale, self.seed);
+        let handle = std::thread::spawn(move || {
+            run_worker(listener, worker_id, cfg, time_scale, seed, stop_flag, wedged_flag)
+        });
+        WorkerSlot {
             stop,
-            handles,
-        })
+            wedged,
+            handle: Some(handle),
+        }
     }
 
     pub fn addrs(&self) -> &[SocketAddr] {
@@ -147,21 +248,85 @@ impl WorkerPool {
         self.addrs.is_empty()
     }
 
+    /// Whether the worker's thread is still running (killed workers are
+    /// not; wedged workers are).
+    pub fn is_alive(&self, worker: usize) -> bool {
+        self.slots.get(worker).is_some_and(|s| s.handle.is_some())
+    }
+
+    /// Kill one worker: stop its thread and drop its listener, so further
+    /// connections are refused. In-flight requests finish first (a crash
+    /// mid-request is modelled by `wedge`). Idempotent.
+    pub fn kill(&mut self, worker: usize) {
+        if let Some(slot) = self.slots.get_mut(worker) {
+            slot.stop.store(true, Ordering::Relaxed);
+            if let Some(h) = slot.handle.take() {
+                h.join().ok();
+            }
+        }
+    }
+
+    /// Wedge one worker: it keeps accepting connections and reading
+    /// requests but never replies — only a timeout can detect it.
+    pub fn wedge(&self, worker: usize) {
+        if let Some(slot) = self.slots.get(worker) {
+            slot.wedged.store(true, Ordering::Relaxed);
+        }
+    }
+
+    /// Undo `wedge`: parked connections are dropped (their clients already
+    /// timed out) and new requests are served normally again.
+    pub fn unwedge(&self, worker: usize) {
+        if let Some(slot) = self.slots.get(worker) {
+            slot.wedged.store(false, Ordering::Relaxed);
+        }
+    }
+
+    /// Restart a worker on its original address, weight-cold (a fresh
+    /// container remembers nothing). Kills the old thread first if it is
+    /// still running. The old listener may linger briefly after a kill, so
+    /// the re-bind retries for a short grace period.
+    pub fn respawn(&mut self, worker: usize) -> anyhow::Result<()> {
+        anyhow::ensure!(worker < self.addrs.len(), "unknown worker {worker}");
+        self.kill(worker);
+        let addr = self.addrs[worker];
+        let mut listener = None;
+        for _ in 0..100 {
+            match TcpListener::bind(addr) {
+                Ok(l) => {
+                    listener = Some(l);
+                    break;
+                }
+                Err(_) => std::thread::sleep(std::time::Duration::from_millis(10)),
+            }
+        }
+        let listener =
+            listener.ok_or_else(|| anyhow::anyhow!("worker {worker}: cannot rebind {addr}"))?;
+        listener.set_nonblocking(true)?;
+        self.slots[worker] = self.launch(listener, worker);
+        Ok(())
+    }
+
+    fn stop_all(&mut self) {
+        for slot in &self.slots {
+            slot.stop.store(true, Ordering::Relaxed);
+        }
+        for slot in &mut self.slots {
+            if let Some(h) = slot.handle.take() {
+                h.join().ok();
+            }
+        }
+    }
+
     /// Signal workers to stop and join their threads.
     pub fn shutdown(mut self) {
-        self.stop.store(true, Ordering::Relaxed);
-        for h in self.handles.drain(..) {
-            h.join().ok();
-        }
+        self.stop_all();
     }
 }
 
 impl Drop for WorkerPool {
     fn drop(&mut self) {
-        self.stop.store(true, Ordering::Relaxed);
-        for h in self.handles.drain(..) {
-            h.join().ok();
-        }
+        self.stop_all();
     }
 }
 
@@ -170,36 +335,41 @@ mod tests {
     use super::*;
     use std::io::{BufRead, BufReader, Write};
 
-    #[test]
-    fn worker_executes_and_reports_reuse() {
-        let pool = WorkerPool::spawn(1, ExecModelConfig::default(), 1e-4, 1).unwrap();
-        let addr = pool.addrs()[0];
-        let send = |req: &TaskRequest| -> TaskResult {
-            let mut stream = TcpStream::connect(addr).unwrap();
-            stream.write_all(req.to_json().as_bytes()).unwrap();
-            stream.write_all(b"\n").unwrap();
-            let mut line = String::new();
-            BufReader::new(stream).read_line(&mut line).unwrap();
-            TaskResult::from_json(line.trim()).unwrap()
-        };
-        let req = TaskRequest {
-            task_id: 1,
+    fn send_to(addr: SocketAddr, req: &TaskRequest) -> anyhow::Result<TaskResult> {
+        let mut stream = TcpStream::connect(addr)?;
+        stream.write_all(req.to_json().as_bytes())?;
+        stream.write_all(b"\n")?;
+        let mut line = String::new();
+        BufReader::new(stream).read_line(&mut line)?;
+        anyhow::ensure!(!line.trim().is_empty(), "worker closed without a result");
+        TaskResult::from_json(line.trim())
+    }
+
+    fn request(task_id: u64) -> TaskRequest {
+        TaskRequest {
+            task_id,
             prompt: "p".into(),
             steps: 20,
             patches: 2,
             model: 0,
             rank: 0,
-            tenant: 0,
-        };
-        let r1 = send(&req);
+            tenant: None,
+        }
+    }
+
+    #[test]
+    fn worker_executes_and_reports_reuse() {
+        let pool = WorkerPool::spawn(1, ExecModelConfig::default(), 1e-4, 1).unwrap();
+        let addr = pool.addrs()[0];
+        let r1 = send_to(addr, &request(1)).unwrap();
         assert!(!r1.reused);
         assert!(r1.load_time > 20.0, "load={}", r1.load_time);
         // Same model + gang size again: reused, zero load.
-        let r2 = send(&TaskRequest { task_id: 2, ..req.clone() });
+        let r2 = send_to(addr, &request(2)).unwrap();
         assert!(r2.reused);
         assert_eq!(r2.load_time, 0.0);
         // Different model: reload.
-        let r3 = send(&TaskRequest { task_id: 3, model: 1, ..req });
+        let r3 = send_to(addr, &TaskRequest { model: 1, ..request(3) }).unwrap();
         assert!(!r3.reused);
         pool.shutdown();
     }
@@ -219,23 +389,79 @@ mod tests {
         };
         assert_eq!(ping(), Some(0));
         // A task after pings still cold-loads (pings didn't fake a model).
-        let req = TaskRequest {
-            task_id: 1,
-            prompt: "p".into(),
-            steps: 20,
-            patches: 1,
-            model: 0,
-            rank: 0,
-            tenant: 0,
-        };
+        let res = send_to(addr, &TaskRequest { patches: 1, ..request(1) }).unwrap();
+        assert!(!res.reused);
+        assert_eq!(ping(), Some(0));
+        pool.shutdown();
+    }
+
+    #[test]
+    fn busy_worker_still_answers_pings() {
+        use crate::serving::protocol;
+        // Time scale chosen so one cold task sleeps roughly 300-600 ms.
+        let pool = WorkerPool::spawn(1, ExecModelConfig::default(), 1e-2, 9).unwrap();
+        let addr = pool.addrs()[0];
+        let task = std::thread::spawn(move || send_to(addr, &request(1)).unwrap());
+        // Give the task time to reach its GPU sleep, then probe: the ping
+        // must be answered while the task is still executing.
+        std::thread::sleep(std::time::Duration::from_millis(50));
         let mut stream = TcpStream::connect(addr).unwrap();
-        stream.write_all(req.to_json().as_bytes()).unwrap();
+        stream
+            .set_read_timeout(Some(std::time::Duration::from_millis(200)))
+            .unwrap();
+        stream.write_all(protocol::ping_json().as_bytes()).unwrap();
         stream.write_all(b"\n").unwrap();
         let mut line = String::new();
         BufReader::new(stream).read_line(&mut line).unwrap();
-        let res = TaskResult::from_json(line.trim()).unwrap();
+        assert_eq!(
+            protocol::pong_worker(line.trim()),
+            Some(0),
+            "a worker busy executing must still answer heartbeats"
+        );
+        let res = task.join().unwrap();
         assert!(!res.reused);
-        assert_eq!(ping(), Some(0));
+        pool.shutdown();
+    }
+
+    #[test]
+    fn killed_worker_refuses_connections_and_respawn_revives_it_cold() {
+        let mut pool = WorkerPool::spawn(2, ExecModelConfig::default(), 1e-4, 3).unwrap();
+        let addr = pool.addrs()[1];
+        let warm = send_to(addr, &request(1)).unwrap();
+        assert!(!warm.reused);
+        assert!(pool.is_alive(1));
+        pool.kill(1);
+        assert!(!pool.is_alive(1));
+        assert!(send_to(addr, &request(2)).is_err(), "killed worker must refuse");
+        // The other worker is unaffected.
+        assert!(send_to(pool.addrs()[0], &request(3)).is_ok());
+        pool.respawn(1).unwrap();
+        assert!(pool.is_alive(1));
+        let back = send_to(addr, &request(4)).unwrap();
+        assert!(!back.reused, "a respawned worker must come back weight-cold");
+        pool.shutdown();
+    }
+
+    #[test]
+    fn wedged_worker_accepts_but_never_replies() {
+        let pool = WorkerPool::spawn(1, ExecModelConfig::default(), 1e-4, 4).unwrap();
+        let addr = pool.addrs()[0];
+        pool.wedge(0);
+        let mut stream = TcpStream::connect(addr).unwrap(); // still accepts
+        stream
+            .set_read_timeout(Some(std::time::Duration::from_millis(200)))
+            .unwrap();
+        stream.write_all(request(1).to_json().as_bytes()).unwrap();
+        stream.write_all(b"\n").unwrap();
+        let mut line = String::new();
+        let got = BufReader::new(stream).read_line(&mut line);
+        assert!(
+            got.is_err() || line.trim().is_empty(),
+            "wedged worker must not reply, got {line:?}"
+        );
+        pool.unwedge(0);
+        let res = send_to(addr, &request(2)).unwrap();
+        assert_eq!(res.task_id, 2);
         pool.shutdown();
     }
 }

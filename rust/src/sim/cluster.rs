@@ -192,6 +192,21 @@ impl Cluster {
         gang
     }
 
+    /// Mirror an external per-server health snapshot (e.g. the serving
+    /// layer's `HealthRegistry`) into the cluster. A server transitioning
+    /// up→down loses its in-flight work and loaded weights (`abort`), so
+    /// the reuse path of [`select_healthy`](Self::select_healthy) can
+    /// never hand out a gang with a dead member; a recovered server comes
+    /// back up weight-cold. Extra snapshot entries are ignored.
+    pub fn set_health(&mut self, up: &[bool], now: f64) {
+        for (s, &u) in self.servers.iter_mut().zip(up) {
+            if s.up && !u {
+                s.abort(now);
+            }
+            s.up = u;
+        }
+    }
+
     /// Kill an in-flight gang: every member drops its work and goes
     /// weight-cold (the DistriFusion process group is gone and reloading
     /// pays in full). Used for mid-flight failures and speculative losers.
@@ -322,6 +337,31 @@ mod tests {
         // A recovered server is selectable again.
         c.servers[0].up = true;
         assert!(c.select_healthy(ModelType(0), 3).servers().is_some());
+    }
+
+    #[test]
+    fn set_health_drops_down_servers_weights_and_masks_reuse() {
+        let mut c = Cluster::new(3);
+        // Load a 2-gang of model 1 on [0, 1] and let it finish: reusable.
+        c.dispatch(&[0, 1], 1.0, ModelType(1), false, 0.0);
+        c.advance(1.0, 1.0);
+        assert!(c.select_healthy(ModelType(1), 2).is_reuse());
+        // Server 1 goes down: the gang is no longer reusable (its weights
+        // are gone) and healthy selection works around it.
+        c.set_health(&[true, false, true], 2.0);
+        assert!(!c.servers[1].up);
+        assert_eq!(c.servers[1].model, None);
+        assert_eq!(c.servers[1].idle_since, 2.0);
+        let sel = c.select_healthy(ModelType(1), 2);
+        assert!(!sel.is_reuse());
+        assert!(!sel.servers().unwrap().contains(&1));
+        // Recovery: selectable again, but weight-cold.
+        c.set_health(&[true, true, true], 3.0);
+        assert!(c.select_healthy(ModelType(1), 3).servers().is_some());
+        assert_eq!(c.servers[1].model, None);
+        // A short snapshot leaves the remaining servers untouched.
+        c.set_health(&[false], 4.0);
+        assert!(!c.servers[0].up && c.servers[1].up && c.servers[2].up);
     }
 
     #[test]

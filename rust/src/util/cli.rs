@@ -51,9 +51,16 @@ impl Args {
     }
 
     pub fn get_usize(&self, key: &str, default: usize) -> usize {
-        self.get(key)
-            .map(|s| s.parse().unwrap_or_else(|_| panic!("--{key} expects an integer, got {s:?}")))
-            .unwrap_or(default)
+        self.get_usize_opt(key).unwrap_or(default)
+    }
+
+    /// `Some(parsed)` when the option is present (panicking on a bad
+    /// value, like [`get_usize`](Self::get_usize)), `None` when absent.
+    pub fn get_usize_opt(&self, key: &str) -> Option<usize> {
+        self.get(key).map(|s| {
+            s.parse()
+                .unwrap_or_else(|_| panic!("--{key} expects an integer, got {s:?}"))
+        })
     }
 
     pub fn get_u64(&self, key: &str, default: u64) -> u64 {
@@ -103,6 +110,13 @@ mod tests {
         assert_eq!(a.get_or("alg", "eat"), "eat");
         assert_eq!(a.get_usize("episodes", 5), 5);
         assert!(!a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn optional_integers_distinguish_absent_from_zero() {
+        let a = parse("serve --kill-at 0");
+        assert_eq!(a.get_usize_opt("kill-at"), Some(0));
+        assert_eq!(a.get_usize_opt("respawn-at"), None);
     }
 
     #[test]

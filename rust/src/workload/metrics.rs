@@ -223,6 +223,9 @@ pub struct MetricsCollector {
     failures: u64,
     gang_kills: u64,
     retries: u64,
+    /// down→up worker transitions observed by the serving health registry
+    /// (always 0 in the simulator, which books recovery via MTTR instead).
+    recoveries: u64,
     task_failures: u64,
     spec_launches: u64,
     spec_wins: u64,
@@ -249,6 +252,7 @@ impl MetricsCollector {
             failures: 0,
             gang_kills: 0,
             retries: 0,
+            recoveries: 0,
             task_failures: 0,
             spec_launches: 0,
             spec_wins: 0,
@@ -329,6 +333,11 @@ impl MetricsCollector {
         self.retries += 1;
     }
 
+    /// Workers observed coming back up (serving health registry).
+    pub fn observe_recoveries(&mut self, n: u64) {
+        self.recoveries += n;
+    }
+
     /// A task dropped after exhausting its retry budget.
     pub fn observe_task_failure(&mut self) {
         self.task_failures += 1;
@@ -362,6 +371,10 @@ impl MetricsCollector {
 
     pub fn retries(&self) -> u64 {
         self.retries
+    }
+
+    pub fn recoveries(&self) -> u64 {
+        self.recoveries
     }
 
     pub fn task_failures(&self) -> u64 {
@@ -516,6 +529,7 @@ impl MetricsCollector {
         self.failures += other.failures;
         self.gang_kills += other.gang_kills;
         self.retries += other.retries;
+        self.recoveries += other.recoveries;
         self.task_failures += other.task_failures;
         self.spec_launches += other.spec_launches;
         self.spec_wins += other.spec_wins;
@@ -541,11 +555,12 @@ impl MetricsCollector {
             self.admission_dropped,
             self.deferred
         );
-        if self.failures > 0 || self.wasted_ps > 0.0 {
+        if self.failures > 0 || self.recoveries > 0 || self.wasted_ps > 0.0 {
             line.push_str(&format!(
-                "  failures {}  retries {}  wasted {:.1}%",
+                "  failures {}  retries {}  recoveries {}  wasted {:.1}%",
                 self.failures,
                 self.retries,
+                self.recoveries,
                 self.wasted_frac() * 100.0
             ));
         }
@@ -710,9 +725,11 @@ mod tests {
         m.observe_spec_win();
         m.observe_wasted_work(10.0);
         m.observe_task_failure();
+        m.observe_recoveries(2);
         assert_eq!(m.failures(), 1);
         assert_eq!(m.gang_kills(), 1);
         assert_eq!(m.retries(), 1);
+        assert_eq!(m.recoveries(), 2);
         assert_eq!(m.task_failures(), 1);
         assert_eq!(m.spec_launches(), 1);
         assert_eq!(m.spec_wins(), 1);
@@ -722,11 +739,13 @@ mod tests {
         assert!((m.wasted_frac() - 50.0 / 160.0).abs() < 1e-12);
         let line = m.summary_line();
         assert!(line.contains("failures 1"), "{line}");
+        assert!(line.contains("recoveries 2"), "{line}");
         assert!(line.contains("wasted 31.2%") || line.contains("wasted 31.3%"), "{line}");
         // Merging doubles everything; a fault-free collector stays silent.
         let other = m.clone();
         m.merge(&other);
         assert_eq!(m.failures(), 2);
+        assert_eq!(m.recoveries(), 4);
         assert_eq!(m.dispatched_ps(), 320.0);
         assert!((m.wasted_frac() - 100.0 / 320.0).abs() < 1e-12);
         let clean = MetricsCollector::new(2);
