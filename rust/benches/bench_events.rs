@@ -1,0 +1,119 @@
+//! Event-core benches: the calendar queue, the residency-indexed selector
+//! vs the legacy full-fleet scan, the busy-set advance, and the evented
+//! env step — the hot paths behind `eat bench`'s BENCH_sim.json numbers.
+
+use eat::config::ExperimentConfig;
+use eat::sim::cluster::Cluster;
+use eat::sim::env::{Action, EdgeEnv};
+use eat::sim::events::EventQueue;
+use eat::sim::task::ModelType;
+use eat::util::bench::Bencher;
+
+/// A 10k-server cluster with a quarter of the fleet busy and a spread of
+/// warm idle gangs — the selection regime the index is built for.
+fn populated_cluster(n: usize) -> Cluster {
+    let mut cluster = Cluster::new(n);
+    let mut id = 0usize;
+    let mut model = 0u32;
+    while id + 4 <= n / 2 {
+        let gang: Vec<usize> = (id..id + 4).collect();
+        cluster.dispatch(&gang, 1.0, ModelType(model % 5), false, 0.0);
+        model += 1;
+        id += 4;
+    }
+    // Half of the dispatched gangs finish and stay warm-idle; the rest
+    // keep running.
+    cluster.advance(1.0, 1.0);
+    let mut running = 0usize;
+    while running + 4 <= n / 4 {
+        let gang: Vec<usize> = (running..running + 4).collect();
+        cluster.dispatch(&gang, 50.0, ModelType(7), false, 1.0);
+        running += 4;
+    }
+    cluster
+}
+
+fn main() {
+    let mut b = Bencher::default();
+
+    b.bench("event_queue_push_pop_1k", || {
+        let mut q = EventQueue::new();
+        for i in 0..1000u64 {
+            q.push((i % 97) as f64, i);
+        }
+        let mut out = Vec::new();
+        let mut total = 0usize;
+        while !q.is_empty() {
+            total += q.pop_due_into(32.0, &mut out);
+            if out.is_empty() {
+                break;
+            }
+        }
+        total
+    });
+
+    let cluster = populated_cluster(10_000);
+    b.bench("select_indexed_reuse_10k", || cluster.select(ModelType(1), 4));
+    b.bench("select_indexed_fresh_10k", || cluster.select(ModelType(9), 4));
+    b.bench("select_scan_reuse_10k", || {
+        cluster.select_filtered_scan(ModelType(1), 4, false)
+    });
+    b.bench("select_scan_fresh_10k", || {
+        cluster.select_filtered_scan(ModelType(9), 4, false)
+    });
+
+    b.bench("advance_busy_set_10k", || {
+        let mut c = populated_cluster(10_000);
+        let mut finished = Vec::new();
+        for t in 0..50 {
+            c.advance_into(1.0, t as f64, &mut finished);
+        }
+        c.idle_count()
+    });
+    b.bench("advance_full_scan_10k", || {
+        let mut c = populated_cluster(10_000);
+        let mut finished = Vec::new();
+        for t in 0..50 {
+            c.advance_scan_into(1.0, t as f64, &mut finished);
+        }
+        c.idle_count()
+    });
+
+    let mut cfg = ExperimentConfig::preset(8).env;
+    cfg.num_servers = 1_000;
+    cfg.arrival_rate = 12.5;
+    cfg.tasks_per_episode = 500;
+    b.bench("env_step_event_core_1k_servers", || {
+        let mut env = EdgeEnv::new(cfg.clone(), 3);
+        let noop = Action::noop(cfg.queue_window);
+        for _ in 0..20 {
+            while let Some(idx) = env.first_feasible() {
+                if env.schedule_task_at(idx, 20).is_none() {
+                    break;
+                }
+            }
+            if env.step(&noop).done {
+                break;
+            }
+        }
+        env.queue().len()
+    });
+    b.bench("env_step_tick_core_1k_servers", || {
+        let mut env = EdgeEnv::new(cfg.clone(), 3);
+        env.set_legacy_scan(true);
+        let noop = Action::noop(cfg.queue_window);
+        for _ in 0..20 {
+            while let Some(idx) = env.first_feasible() {
+                if env.schedule_task_at(idx, 20).is_none() {
+                    break;
+                }
+            }
+            if env.step(&noop).done {
+                break;
+            }
+        }
+        env.queue().len()
+    });
+
+    println!("\n{}", b.summary());
+}

@@ -1,0 +1,400 @@
+//! `eat bench` — simulator-core benchmark (`BENCH_sim.json`).
+//!
+//! Runs a servers × tasks grid through the head-first dispatcher, once on
+//! the event-driven core (incremental busy set, residency index,
+//! infeasibility memo) and once on the seed's tick-scan core
+//! (`set_legacy_scan(true)`), and reports stepped throughput (completed
+//! tasks per wall second), per-tick decision latency percentiles, and
+//! peak RSS. Both cores consume identical RNG streams, so a cell's
+//! completed counts must agree exactly — the benchmark doubles as a
+//! scale-level cross-check of the bit-exactness property tests.
+//!
+//! The emitted JSON is the perf trajectory's unit of record: CI runs
+//! `eat bench --quick --check BENCH_sim.json --min-speedup 10` and fails
+//! if event-core throughput regresses more than 20% against the committed
+//! baseline, or if the ≥10k-server speedup over the tick core falls
+//! below the floor.
+
+use crate::config::ExperimentConfig;
+use crate::sim::env::{Action, EdgeEnv};
+use crate::util::cli::Args;
+use crate::util::json::{self, Value};
+use crate::workload::WorkloadConfig;
+
+/// Steps requested per task, matching the `eat qos`/`eat faults` drivers.
+const BENCH_STEPS: u32 = 20;
+
+/// One (servers, tasks, mode) measurement.
+#[derive(Clone, Debug)]
+pub struct CellResult {
+    pub servers: usize,
+    pub tasks: usize,
+    /// "event" or "tick".
+    pub mode: &'static str,
+    pub wall_s: f64,
+    pub ticks: usize,
+    pub completed: usize,
+    pub tasks_per_s: f64,
+    pub decision_p50_us: f64,
+    pub decision_p99_us: f64,
+}
+
+/// The benchmark grid: (servers, tasks, run the tick core too?). The
+/// tick core is skipped at metro scale — that cell exists to show the
+/// event core completing 100k servers / 1M tasks inside a CI budget,
+/// which the tick core cannot.
+fn grid(quick: bool) -> Vec<(usize, usize, bool)> {
+    let mut g = vec![(8, 2_000, true), (1_000, 20_000, true), (10_000, 50_000, true)];
+    if !quick {
+        g.push((100_000, 1_000_000, false));
+    }
+    g
+}
+
+/// Arrival rate scaling: the 8-node preset's 0.1 tasks/s, held per-server
+/// so every fleet runs at the same utilisation regime.
+fn rate_for(servers: usize) -> f64 {
+    servers as f64 / 80.0
+}
+
+fn bench_env(servers: usize, tasks: usize, seed: u64) -> anyhow::Result<EdgeEnv> {
+    let mut cfg = ExperimentConfig::preset(8).env;
+    cfg.num_servers = servers;
+    cfg.tasks_per_episode = tasks;
+    let rate = rate_for(servers);
+    cfg.arrival_rate = rate;
+    // A streamed Poisson source keeps workload memory O(1) regardless of
+    // task count (1M materialised tasks would dominate peak RSS).
+    cfg.workload = Some(WorkloadConfig::preset("poisson", rate)?);
+    // Budget: 1.5x the nominal arrival horizon plus drain headroom, so a
+    // cell ends at `done` (source drained, cluster idle) or at the cap.
+    let horizon = (tasks as f64 / rate * 1.5 / cfg.decision_dt).ceil() as usize + 400;
+    cfg.step_limit = horizon;
+    cfg.time_limit = horizon as f64 * cfg.decision_dt;
+    cfg.validate()?;
+    Ok(EdgeEnv::new(cfg, seed))
+}
+
+/// Run one cell with the head-first dispatcher; `legacy` selects the core.
+pub fn run_cell(
+    servers: usize,
+    tasks: usize,
+    seed: u64,
+    legacy: bool,
+) -> anyhow::Result<CellResult> {
+    let mut env = bench_env(servers, tasks, seed)?;
+    env.set_legacy_scan(legacy);
+    let noop = Action::noop(env.cfg.queue_window);
+    let mut decision_ns: Vec<u64> = Vec::new();
+    let t0 = std::time::Instant::now();
+    let mut ticks = 0usize;
+    loop {
+        let d0 = std::time::Instant::now();
+        while let Some(idx) = env.first_feasible() {
+            if env.schedule_task_at(idx, BENCH_STEPS).is_none() {
+                break;
+            }
+        }
+        decision_ns.push(d0.elapsed().as_nanos() as u64);
+        ticks += 1;
+        if env.step(&noop).done {
+            break;
+        }
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    let completed = env.report().completed_tasks;
+    decision_ns.sort_unstable();
+    let pct = |p: f64| -> f64 {
+        if decision_ns.is_empty() {
+            return 0.0;
+        }
+        let idx = ((decision_ns.len() - 1) as f64 * p).round() as usize;
+        decision_ns[idx] as f64 / 1_000.0
+    };
+    Ok(CellResult {
+        servers,
+        tasks,
+        mode: if legacy { "tick" } else { "event" },
+        wall_s,
+        ticks,
+        completed,
+        tasks_per_s: if wall_s > 0.0 {
+            completed as f64 / wall_s
+        } else {
+            0.0
+        },
+        decision_p50_us: pct(0.50),
+        decision_p99_us: pct(0.99),
+    })
+}
+
+/// Peak resident set size in MiB from /proc/self/status (0 where absent,
+/// e.g. non-Linux).
+pub fn peak_rss_mib() -> f64 {
+    let Ok(status) = std::fs::read_to_string("/proc/self/status") else {
+        return 0.0;
+    };
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("VmHWM:") {
+            let kb: f64 = rest
+                .trim()
+                .trim_end_matches("kB")
+                .trim()
+                .parse()
+                .unwrap_or(0.0);
+            return kb / 1024.0;
+        }
+    }
+    0.0
+}
+
+fn cell_json(c: &CellResult) -> Value {
+    let mut v = Value::obj();
+    v.set("mode", c.mode)
+        .set("wall_s", c.wall_s)
+        .set("ticks", c.ticks)
+        .set("completed", c.completed)
+        .set("tasks_per_s", c.tasks_per_s)
+        .set("decision_p50_us", c.decision_p50_us)
+        .set("decision_p99_us", c.decision_p99_us);
+    v
+}
+
+/// Assemble the BENCH_sim.json document from measured cells.
+pub fn report_json(quick: bool, seed: u64, cells: &[(usize, usize, Vec<CellResult>)]) -> Value {
+    let mut grid_rows: Vec<Value> = Vec::new();
+    for (servers, tasks, results) in cells {
+        let mut row = Value::obj();
+        row.set("servers", *servers).set("tasks", *tasks);
+        let event = results.iter().find(|c| c.mode == "event");
+        let tick = results.iter().find(|c| c.mode == "tick");
+        if let Some(c) = event {
+            row.set("event", cell_json(c));
+        }
+        if let Some(c) = tick {
+            row.set("tick", cell_json(c));
+        }
+        if let (Some(e), Some(t)) = (event, tick) {
+            if t.tasks_per_s > 0.0 {
+                row.set("speedup", e.tasks_per_s / t.tasks_per_s);
+            }
+        }
+        grid_rows.push(row);
+    }
+    let mut doc = Value::obj();
+    doc.set("schema", "eat-bench-v1")
+        .set("bench", "sim")
+        .set("quick", quick)
+        .set("seed", seed)
+        .set("steps_per_task", BENCH_STEPS as usize)
+        .set("peak_rss_mib", peak_rss_mib())
+        .set("grid", grid_rows);
+    doc
+}
+
+/// Regression gate: every event-mode cell present in both documents must
+/// reach ≥ `floor_frac` of the baseline's tasks/sec.
+pub fn check_against_baseline(
+    current: &Value,
+    baseline: &Value,
+    floor_frac: f64,
+) -> anyhow::Result<()> {
+    let base_rows = baseline.req("grid")?.as_arr().unwrap_or(&[]);
+    let cur_rows = current.req("grid")?.as_arr().unwrap_or(&[]);
+    let mut compared = 0usize;
+    for base in base_rows {
+        let (bs, bt) = (
+            base.req("servers")?.as_usize().unwrap_or(0),
+            base.req("tasks")?.as_usize().unwrap_or(0),
+        );
+        let Some(base_tps) = base
+            .get("event")
+            .and_then(|e| e.get("tasks_per_s"))
+            .and_then(Value::as_f64)
+        else {
+            continue;
+        };
+        let Some(cur) = cur_rows.iter().find(|r| {
+            r.get("servers").and_then(Value::as_usize) == Some(bs)
+                && r.get("tasks").and_then(Value::as_usize) == Some(bt)
+        }) else {
+            continue;
+        };
+        let cur_tps = cur
+            .req("event")?
+            .req("tasks_per_s")?
+            .as_f64()
+            .unwrap_or(0.0);
+        anyhow::ensure!(
+            cur_tps >= floor_frac * base_tps,
+            "throughput regression at {bs} servers / {bt} tasks: \
+             {cur_tps:.0} tasks/s < {floor_frac} x baseline {base_tps:.0}"
+        );
+        compared += 1;
+    }
+    anyhow::ensure!(
+        compared > 0,
+        "baseline check matched no grid cells (schema or grid mismatch)"
+    );
+    Ok(())
+}
+
+/// Speedup gate: every ≥10k-server cell that ran both cores must show the
+/// event core at ≥ `min_speedup` x the tick core's tasks/sec.
+pub fn check_speedup(cells: &[(usize, usize, Vec<CellResult>)], min_speedup: f64) -> anyhow::Result<()> {
+    let mut checked = 0usize;
+    for (servers, tasks, results) in cells {
+        if *servers < 10_000 {
+            continue;
+        }
+        let (Some(e), Some(t)) = (
+            results.iter().find(|c| c.mode == "event"),
+            results.iter().find(|c| c.mode == "tick"),
+        ) else {
+            continue;
+        };
+        let speedup = if t.tasks_per_s > 0.0 {
+            e.tasks_per_s / t.tasks_per_s
+        } else {
+            f64::INFINITY
+        };
+        anyhow::ensure!(
+            speedup >= min_speedup,
+            "event core only {speedup:.1}x the tick core at {servers} servers / {tasks} tasks \
+             (floor {min_speedup}x)"
+        );
+        checked += 1;
+    }
+    anyhow::ensure!(checked > 0, "--min-speedup given but no >=10k-server cell ran both cores");
+    Ok(())
+}
+
+pub fn run(args: &Args) -> anyhow::Result<String> {
+    let quick = args.has_flag("quick");
+    let seed = args.get_u64("seed", 42);
+    let out_path = args.get_or("out", "BENCH_sim.json");
+    let mut cells: Vec<(usize, usize, Vec<CellResult>)> = Vec::new();
+    for (servers, tasks, with_tick) in grid(quick) {
+        let mut results = Vec::new();
+        eprintln!("bench: {servers} servers / {tasks} tasks (event core)...");
+        let event = run_cell(servers, tasks, seed, false)?;
+        eprintln!(
+            "  event: {:.0} tasks/s ({} completed, {:.2}s wall, p99 decision {:.0}us)",
+            event.tasks_per_s, event.completed, event.wall_s, event.decision_p99_us
+        );
+        results.push(event);
+        if with_tick {
+            eprintln!("bench: {servers} servers / {tasks} tasks (tick core)...");
+            let tick = run_cell(servers, tasks, seed, true)?;
+            eprintln!(
+                "  tick:  {:.0} tasks/s ({} completed, {:.2}s wall, p99 decision {:.0}us)",
+                tick.tasks_per_s, tick.completed, tick.wall_s, tick.decision_p99_us
+            );
+            // Both cores ran the same seeds: the episodes must agree.
+            anyhow::ensure!(
+                results[0].completed == tick.completed,
+                "core divergence at {servers} servers: event completed {} vs tick {}",
+                results[0].completed,
+                tick.completed
+            );
+            results.push(tick);
+        }
+        cells.push((servers, tasks, results));
+    }
+
+    let doc = report_json(quick, seed, &cells);
+    if let Some(min_speedup) = args.get("min-speedup") {
+        check_speedup(&cells, min_speedup.parse()?)?;
+    }
+    if let Some(baseline_path) = args.get("check") {
+        let baseline = json::parse(&std::fs::read_to_string(baseline_path)?)?;
+        check_against_baseline(&doc, &baseline, 0.8)?;
+        eprintln!("baseline check vs {baseline_path}: ok");
+    }
+    let rendered = doc.to_json_pretty();
+    std::fs::write(&out_path, format!("{rendered}\n"))?;
+    println!("{rendered}");
+    eprintln!("wrote {out_path}");
+    Ok(rendered)
+}
+
+/// Deterministic smoke used by unit tests: tiny grid, both cores.
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiny_cell_runs_both_cores_and_agrees() {
+        let event = run_cell(8, 40, 7, false).unwrap();
+        let tick = run_cell(8, 40, 7, true).unwrap();
+        assert!(event.completed > 0, "no tasks completed: {event:?}");
+        assert_eq!(event.completed, tick.completed);
+        assert_eq!(event.ticks, tick.ticks);
+        assert!(event.tasks_per_s > 0.0);
+    }
+
+    #[test]
+    fn report_json_carries_grid_and_speedup() {
+        let cells = vec![(
+            10_000usize,
+            100usize,
+            vec![
+                CellResult {
+                    servers: 10_000,
+                    tasks: 100,
+                    mode: "event",
+                    wall_s: 1.0,
+                    ticks: 10,
+                    completed: 100,
+                    tasks_per_s: 100.0,
+                    decision_p50_us: 1.0,
+                    decision_p99_us: 2.0,
+                },
+                CellResult {
+                    servers: 10_000,
+                    tasks: 100,
+                    mode: "tick",
+                    wall_s: 12.0,
+                    ticks: 10,
+                    completed: 100,
+                    tasks_per_s: 100.0 / 12.0,
+                    decision_p50_us: 100.0,
+                    decision_p99_us: 200.0,
+                },
+            ],
+        )];
+        let doc = report_json(true, 42, &cells);
+        let row = &doc.req("grid").unwrap().as_arr().unwrap()[0];
+        assert_eq!(row.req("servers").unwrap().as_usize(), Some(10_000));
+        let speedup = row.req("speedup").unwrap().as_f64().unwrap();
+        assert!((speedup - 12.0).abs() < 1e-9);
+        // The speedup gate passes at 10x and fails at 13x.
+        check_speedup(&cells, 10.0).unwrap();
+        assert!(check_speedup(&cells, 13.0).is_err());
+    }
+
+    #[test]
+    fn baseline_check_flags_regressions() {
+        let fast = |tps: f64| {
+            let cells = vec![(
+                8usize,
+                10usize,
+                vec![CellResult {
+                    servers: 8,
+                    tasks: 10,
+                    mode: "event",
+                    wall_s: 1.0,
+                    ticks: 5,
+                    completed: 10,
+                    tasks_per_s: tps,
+                    decision_p50_us: 1.0,
+                    decision_p99_us: 2.0,
+                }],
+            )];
+            report_json(true, 1, &cells)
+        };
+        let baseline = fast(1000.0);
+        assert!(check_against_baseline(&fast(900.0), &baseline, 0.8).is_ok());
+        assert!(check_against_baseline(&fast(700.0), &baseline, 0.8).is_err());
+    }
+}

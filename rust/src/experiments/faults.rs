@@ -21,6 +21,7 @@ use crate::qos::{TenantRegistry, TenantsConfig};
 use crate::sim::env::{Action, EdgeEnv};
 use crate::sim::task::Workload;
 use crate::util::cli::Args;
+use crate::util::par;
 use crate::util::rng::Pcg64;
 use crate::util::table::{f, Table};
 use crate::workload::{MetricsCollector, TenantReport};
@@ -151,7 +152,39 @@ pub fn sweep(
     straggler_rates: &[f64],
     modes: &[bool],
 ) -> anyhow::Result<Vec<FaultCell>> {
-    let mut cells = Vec::new();
+    sweep_threaded(
+        template,
+        tenants_base,
+        faults_base,
+        episodes,
+        mtbfs,
+        zone_rates,
+        straggler_rates,
+        modes,
+        1,
+    )
+}
+
+/// [`sweep`] with the cells farmed out to `threads` workers. Both RNG
+/// streams of a cell (workload and fault timeline) are functions of
+/// `(cfg.seed, episode)` alone, so cells share no state and the result
+/// vector is identical for any thread count (pinned by
+/// `sweep_output_independent_of_thread_count`).
+#[allow(clippy::too_many_arguments)]
+pub fn sweep_threaded(
+    template: &ExperimentConfig,
+    tenants_base: &TenantsConfig,
+    faults_base: &FaultsConfig,
+    episodes: usize,
+    mtbfs: &[f64],
+    zone_rates: &[f64],
+    straggler_rates: &[f64],
+    modes: &[bool],
+    threads: usize,
+) -> anyhow::Result<Vec<FaultCell>> {
+    // Build the cell configs in sweep order first (validation stays on
+    // the caller's thread), then map them in parallel.
+    let mut jobs: Vec<ExperimentConfig> = Vec::new();
     for &mtbf in mtbfs {
         for &zone_rate in zone_rates {
             for &straggler_rate in straggler_rates {
@@ -165,12 +198,12 @@ pub fn sweep(
                     cfg.env.tenants = Some(tenants_base.clone());
                     cfg.env.faults = Some(faults);
                     cfg.env.validate()?;
-                    cells.push(run_cell(&cfg, episodes, 20));
+                    jobs.push(cfg);
                 }
             }
         }
     }
-    Ok(cells)
+    Ok(par::map_cells(jobs, threads, |cfg| run_cell(&cfg, episodes, 20)))
 }
 
 fn parse_f64_list(s: &str) -> anyhow::Result<Vec<f64>> {
@@ -215,11 +248,12 @@ pub fn run(args: &Args) -> anyhow::Result<String> {
         ..defaults
     };
 
+    let threads = args.get_usize("threads", par::default_threads());
     let mut template = ExperimentConfig::preset(nodes);
     template.seed = seed;
     template.env.tasks_per_episode = tasks;
     let tenants_base = TenantsConfig::three_tier(base_rate);
-    let cells = sweep(
+    let cells = sweep_threaded(
         &template,
         &tenants_base,
         &faults_base,
@@ -228,6 +262,7 @@ pub fn run(args: &Args) -> anyhow::Result<String> {
         &zone_rates,
         &straggler_rates,
         &modes,
+        threads,
     )?;
 
     let mut header: Vec<String> = [
@@ -419,6 +454,38 @@ mod tests {
         );
         assert!(cell.spec_wins <= cell.spec_launches);
         assert!(cell.completed > 0);
+    }
+
+    #[test]
+    fn sweep_output_independent_of_thread_count() {
+        // nproc may be 1 here, so force worker counts above it: the claim
+        // is about the fork-join plumbing, not about real parallel timing.
+        let run_with = |threads: usize| {
+            sweep_threaded(
+                &light_gang_template(30, 13),
+                &TenantsConfig::three_tier(0.1),
+                &churn_base(),
+                1,
+                &[0.0, 200.0],
+                &[0.0, 0.002],
+                &[0.0],
+                &[true, false],
+                threads,
+            )
+            .unwrap()
+        };
+        let sequential = run_with(1);
+        assert_eq!(sequential.len(), 8);
+        for threads in [3, 4] {
+            let parallel = run_with(threads);
+            // Debug formatting of f64 prints the shortest uniquely
+            // round-tripping string, so equal strings ⇒ equal bits.
+            assert_eq!(
+                format!("{sequential:?}"),
+                format!("{parallel:?}"),
+                "sweep diverged at {threads} threads"
+            );
+        }
     }
 
     #[test]

@@ -17,6 +17,7 @@
 //! | Multi-tenant QoS sweep (beyond the paper) | `qos` | `eat qos` |
 //! | Fault & straggler sweep (beyond the paper) | `faults` | `eat faults` |
 
+pub mod bench;
 pub mod faults;
 pub mod fig4;
 pub mod grid;
@@ -50,6 +51,7 @@ pub fn run(name: &str, args: &Args) -> anyhow::Result<String> {
         "scenarios" => scenarios::run(args)?,
         "qos" => qos::run(args)?,
         "faults" => faults::run(args)?,
+        "bench" => bench::run(args)?,
         "all" => {
             let mut all = String::new();
             for id in [

@@ -18,6 +18,7 @@ use crate::qos::{AdmissionConfig, QueueDiscipline, TenantRegistry, TenantsConfig
 use crate::sim::env::{Action, EdgeEnv};
 use crate::sim::task::Workload;
 use crate::util::cli::Args;
+use crate::util::par;
 use crate::util::rng::Pcg64;
 use crate::util::table::{f, Table};
 use crate::workload::{MetricsCollector, TenantReport};
@@ -99,7 +100,34 @@ pub fn sweep(
     admissions: &[AdmissionConfig],
     disciplines: &[QueueDiscipline],
 ) -> anyhow::Result<Vec<QosCell>> {
-    let mut cells = Vec::new();
+    sweep_threaded(
+        template,
+        tenants_base,
+        episodes,
+        overloads,
+        admissions,
+        disciplines,
+        1,
+    )
+}
+
+/// [`sweep`] with the cells farmed out to `threads` workers. Each cell
+/// seeds its own RNG streams from `(cfg.seed, episode)` alone, so cells
+/// share no state and the result vector is identical for any thread
+/// count (pinned by `sweep_output_independent_of_thread_count`).
+#[allow(clippy::too_many_arguments)]
+pub fn sweep_threaded(
+    template: &ExperimentConfig,
+    tenants_base: &TenantsConfig,
+    episodes: usize,
+    overloads: &[f64],
+    admissions: &[AdmissionConfig],
+    disciplines: &[QueueDiscipline],
+    threads: usize,
+) -> anyhow::Result<Vec<QosCell>> {
+    // Build the cell configs in sweep order first (validation stays on
+    // the caller's thread), then map them in parallel.
+    let mut jobs: Vec<(f64, ExperimentConfig)> = Vec::new();
     for &overload in overloads {
         anyhow::ensure!(overload > 0.0, "overload factor must be > 0");
         for admission in admissions {
@@ -110,13 +138,15 @@ pub fn sweep(
                 let mut cfg = template.clone();
                 cfg.env.tenants = Some(tenants);
                 cfg.env.validate()?;
-                let mut cell = run_cell(&cfg, episodes, 20);
-                cell.overload = overload;
-                cells.push(cell);
+                jobs.push((overload, cfg));
             }
         }
     }
-    Ok(cells)
+    Ok(par::map_cells(jobs, threads, |(overload, cfg)| {
+        let mut cell = run_cell(&cfg, episodes, 20);
+        cell.overload = overload;
+        cell
+    }))
 }
 
 fn parse_f64_list(s: &str) -> anyhow::Result<Vec<f64>> {
@@ -167,17 +197,19 @@ pub fn run(args: &Args) -> anyhow::Result<String> {
         .map(|s| QueueDiscipline::parse(s.trim()))
         .collect::<anyhow::Result<_>>()?;
 
+    let threads = args.get_usize("threads", par::default_threads());
     let mut template = ExperimentConfig::preset(nodes);
     template.seed = seed;
     template.env.tasks_per_episode = tasks;
     let tenants_base = TenantsConfig::three_tier(base_rate);
-    let cells = sweep(
+    let cells = sweep_threaded(
         &template,
         &tenants_base,
         episodes,
         &overloads,
         &admissions,
         &disciplines,
+        threads,
     )?;
 
     let mut table = Table::new(
@@ -315,6 +347,36 @@ mod tests {
             assert!(
                 offered.windows(2).all(|w| w[0] == w[1]),
                 "{name}: offered diverged across cells: {offered:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn sweep_output_independent_of_thread_count() {
+        // nproc may be 1 here, so force worker counts above it: the claim
+        // is about the fork-join plumbing, not about real parallel timing.
+        let run_with = |threads: usize| {
+            sweep_threaded(
+                &light_gang_template(40, 5),
+                &TenantsConfig::three_tier(0.1),
+                1,
+                &[1.0, 2.0],
+                &[AdmissionConfig::AdmitAll, AdmissionConfig::DropTail { max_queue: 8 }],
+                &[QueueDiscipline::Fifo, QueueDiscipline::EdfWfq],
+                threads,
+            )
+            .unwrap()
+        };
+        let sequential = run_with(1);
+        assert_eq!(sequential.len(), 8);
+        for threads in [3, 4] {
+            let parallel = run_with(threads);
+            // Debug formatting of f64 prints the shortest uniquely
+            // round-tripping string, so equal strings ⇒ equal bits.
+            assert_eq!(
+                format!("{sequential:?}"),
+                format!("{parallel:?}"),
+                "sweep diverged at {threads} threads"
             );
         }
     }

@@ -28,6 +28,13 @@
 //!       fault & straggler sweep: MTBF x zone shocks x straggler rate x
 //!       dispatch mode, with goodput, wasted-work fraction, retries, and
 //!       per-tenant SLO attainment under churn
+//!   eat bench [--quick] [--out BENCH_sim.json] [--check BASELINE.json]
+//!            [--min-speedup X]
+//!       simulator-core benchmark: servers × tasks grid on the
+//!       event-driven core vs the tick-scan core, emitting tasks/sec,
+//!       decision-latency percentiles, and peak RSS as BENCH_sim.json;
+//!       --check fails on >20% throughput regression vs a committed
+//!       baseline, --min-speedup gates the ≥10k-server speedup ratio
 //!   eat trace import <csv> <out.jsonl>                      map a CSV
 //!       request log onto a JSONL workload trace (replayable via
 //!       `eat scenarios --replay`)
@@ -43,7 +50,7 @@ use eat::util::cli::Args;
 
 fn usage() -> ! {
     eprintln!(
-        "usage: eat <experiment|train|eval|serve|scenarios|qos|faults|info> [options]\n\
+        "usage: eat <experiment|train|eval|serve|scenarios|qos|faults|bench|info> [options]\n\
          \n  eat experiment <id>   ids: table1 table2_4 table6 table9 table10 table11\n\
          \x20                          table12 fig4 fig5 fig6 fig7 fig8 grid scenarios all\n\
          \x20     options: --nodes 4|8|12 --episodes K --train-episodes K --algs a,b,c\n\
@@ -66,7 +73,9 @@ fn usage() -> ! {
          \n  eat faults  [--nodes N] [--tasks K] [--episodes E] [--rate R] [--seed S]\n\
          \x20           [--mtbfs 0,600,200] [--zone-rates 0.002] [--straggler-rates 0.005]\n\
          \x20           [--modes aware,blind] [--mttr T] [--zones Z] [--spec-beta B]\n\
-         \x20           [--max-retries R]\n\
+         \x20           [--max-retries R] [--threads T]\n\
+         \n  eat bench   [--quick] [--seed S] [--out BENCH_sim.json]\n\
+         \x20           [--check BASELINE.json] [--min-speedup X]\n\
          \n  eat trace import <csv> <out.jsonl>\n\
          \n  eat info"
     );
@@ -163,6 +172,9 @@ fn main() -> anyhow::Result<()> {
         }
         "faults" => {
             experiments::faults::run(&args)?;
+        }
+        "bench" => {
+            experiments::bench::run(&args)?;
         }
         "trace" => match args.positional.get(1).map(String::as_str) {
             Some("import") => {

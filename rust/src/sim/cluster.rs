@@ -1,6 +1,25 @@
 //! The server cluster E: gang lookup (Eq. 1's G_m groups), idle counting,
 //! and the greedy, fragmentation-minimising server selection strategy from
 //! §V.B.4 ("Server Selector").
+//!
+//! Selection and advance used to scan every server on every call; at
+//! metro scale (10^5 servers) those O(fleet) walks dominated the step
+//! time. The cluster now maintains an incremental index: a busy set
+//! (`advance_into` touches only running servers), idle servers bucketed
+//! by their selection score and ordered by the (idle_since, id) LRU key,
+//! and a (model, gang size) → intact-gang map for O(log) reuse lookup.
+//! Every mutation flows through `remove_idx`/`add_idx` around the state
+//! change, so the index is always consistent with the scan semantics; in
+//! debug builds every selection cross-checks the index against the
+//! original full scan (`select_filtered_scan`). An `epoch` counter bumps
+//! whenever idle capacity can have *increased* (completion, abort,
+//! failure, recovery) so callers can memoise infeasibility verdicts.
+//!
+//! External code may read `servers` freely but must mutate server state
+//! only through cluster methods (`dispatch`, `set_health`, `fail_server`,
+//! `recover_server`, `abort_server`, ...) or the index desynchronises.
+
+use std::collections::{BTreeMap, BTreeSet};
 
 use super::server::{GangId, Server};
 use super::task::ModelType;
@@ -31,11 +50,58 @@ impl Selection {
     }
 }
 
+/// Index record for one gang instance: which servers carry it and how many
+/// of them are currently idle. `members` stays sorted ascending; a gang is
+/// *intact* (reusable) iff all `size` original members still point at it
+/// and all are idle.
+#[derive(Clone, Debug)]
+struct GangInfo {
+    model: ModelType,
+    size: usize,
+    members: Vec<usize>,
+    idle_count: usize,
+}
+
+impl GangInfo {
+    fn is_intact(&self) -> bool {
+        self.members.len() == self.size && self.idle_count == self.size
+    }
+}
+
 /// Cluster of edge servers.
 #[derive(Clone, Debug)]
 pub struct Cluster {
     pub servers: Vec<Server>,
     next_gang: u64,
+    /// Bumped whenever idle capacity may have increased; see module docs.
+    epoch: u64,
+    /// Ids with remaining work (up or down — a down busy server stays
+    /// busy, it just makes no progress until recovery or abort).
+    busy: BTreeSet<usize>,
+    /// Idle servers with no model loaded (selection score 0), keyed by
+    /// (idle_since bits, id) — the LRU order `select` sorts by. Times are
+    /// non-negative so the IEEE bit pattern is order-isomorphic to f64.
+    idle_empty: BTreeSet<(u64, usize)>,
+    /// Idle servers holding a model outside an intact gang (score 1).
+    idle_broken: BTreeSet<(u64, usize)>,
+    /// Idle members of intact (fully idle, complete) gangs (score 2).
+    idle_intact: BTreeSet<(u64, usize)>,
+    /// Gang id → membership/idleness record.
+    gangs: BTreeMap<u64, GangInfo>,
+    /// (model, gang size) → intact gang ids, ascending (reuse picks the
+    /// lowest id, matching the scan's BTreeMap iteration order).
+    reuse: BTreeMap<(u32, usize), BTreeSet<u64>>,
+    /// Idle *and up* servers (healthy-mode feasibility count).
+    idle_up: usize,
+    /// Servers currently down.
+    down_count: usize,
+    /// Down servers that still hold a model (possible only after a
+    /// fault-blind dispatch onto a down server): in that corner the
+    /// healthy-scan's intactness differs from the blind index, so
+    /// selection falls back to the scan while any such server exists.
+    down_loaded: usize,
+    /// Reusable scratch for `advance_into` (busy ids of the tick).
+    busy_scratch: Vec<usize>,
 }
 
 impl Cluster {
@@ -43,6 +109,17 @@ impl Cluster {
         Cluster {
             servers: (0..n).map(Server::new).collect(),
             next_gang: 0,
+            epoch: 0,
+            busy: BTreeSet::new(),
+            idle_empty: (0..n).map(|id| (0.0f64.to_bits(), id)).collect(),
+            idle_broken: BTreeSet::new(),
+            idle_intact: BTreeSet::new(),
+            gangs: BTreeMap::new(),
+            reuse: BTreeMap::new(),
+            idle_up: n,
+            down_count: 0,
+            down_loaded: 0,
+            busy_scratch: Vec::new(),
         }
     }
 
@@ -55,7 +132,32 @@ impl Cluster {
     }
 
     pub fn idle_count(&self) -> usize {
-        self.servers.iter().filter(|s| s.is_idle()).count()
+        let n = self.idle_empty.len() + self.idle_broken.len() + self.idle_intact.len();
+        debug_assert_eq!(n, self.servers.iter().filter(|s| s.is_idle()).count());
+        n
+    }
+
+    /// Monotone counter bumped whenever idle capacity can have increased
+    /// (completion, abort, failure, recovery, health flip). An
+    /// `Infeasible` verdict for (model, count) stays valid until the
+    /// epoch changes — the basis of `EdgeEnv`'s infeasibility memo.
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Currently-down server count (0 whenever faults are disabled).
+    pub fn down_count(&self) -> usize {
+        self.down_count
+    }
+
+    /// Ids of servers with remaining work, ascending.
+    pub fn busy_ids(&self) -> &BTreeSet<usize> {
+        &self.busy
+    }
+
+    /// True when no server has remaining work.
+    pub fn all_idle(&self) -> bool {
+        self.busy.is_empty()
     }
 
     pub fn fresh_gang_id(&mut self) -> GangId {
@@ -63,11 +165,164 @@ impl Cluster {
         GangId(self.next_gang)
     }
 
+    // ---- incremental index maintenance ---------------------------------
+
+    /// Drop `id` from the index, based on its *current* (pre-mutation)
+    /// state. Always paired with an `add_idx` after the mutation.
+    fn remove_idx(&mut self, id: usize) {
+        let s = &self.servers[id];
+        if !s.up {
+            self.down_count -= 1;
+            if s.model.is_some() {
+                self.down_loaded -= 1;
+            }
+        }
+        if !s.is_idle() {
+            self.busy.remove(&id);
+            return;
+        }
+        if s.up {
+            self.idle_up -= 1;
+        }
+        let key = (s.idle_since.to_bits(), id);
+        match (s.model, s.gang) {
+            (None, _) => {
+                let had = self.idle_empty.remove(&key);
+                debug_assert!(had, "server {id} missing from idle_empty");
+            }
+            (Some(_), None) => {
+                let had = self.idle_broken.remove(&key);
+                debug_assert!(had, "server {id} missing from idle_broken");
+            }
+            (Some(_), Some(g)) => {
+                let gid = g.0;
+                let gi = self.gangs.get_mut(&gid).expect("gang missing from index");
+                let was_intact = gi.is_intact();
+                gi.idle_count -= 1;
+                if was_intact {
+                    // The gang breaks: its other idle members drop from
+                    // score 2 to score 1, and it leaves the reuse map.
+                    let model = gi.model;
+                    let size = gi.size;
+                    let members = std::mem::take(&mut gi.members);
+                    if let Some(set) = self.reuse.get_mut(&(model.0, size)) {
+                        set.remove(&gid);
+                        if set.is_empty() {
+                            self.reuse.remove(&(model.0, size));
+                        }
+                    }
+                    for &m in &members {
+                        if m != id {
+                            let mkey = (self.servers[m].idle_since.to_bits(), m);
+                            let moved = self.idle_intact.remove(&mkey);
+                            debug_assert!(moved, "gang mate {m} not in idle_intact");
+                            self.idle_broken.insert(mkey);
+                        }
+                    }
+                    self.gangs.get_mut(&gid).expect("gang vanished").members = members;
+                    let had = self.idle_intact.remove(&key);
+                    debug_assert!(had, "server {id} missing from idle_intact");
+                } else {
+                    let had = self.idle_broken.remove(&key);
+                    debug_assert!(had, "server {id} missing from idle_broken");
+                }
+            }
+        }
+    }
+
+    /// Insert `id` into the index, based on its *new* (post-mutation)
+    /// state.
+    fn add_idx(&mut self, id: usize) {
+        let s = &self.servers[id];
+        if !s.up {
+            self.down_count += 1;
+            if s.model.is_some() {
+                self.down_loaded += 1;
+            }
+        }
+        if !s.is_idle() {
+            self.busy.insert(id);
+            return;
+        }
+        if s.up {
+            self.idle_up += 1;
+        }
+        let key = (s.idle_since.to_bits(), id);
+        match (s.model, s.gang) {
+            (None, _) => {
+                self.idle_empty.insert(key);
+            }
+            (Some(_), None) => {
+                self.idle_broken.insert(key);
+            }
+            (Some(_), Some(g)) => {
+                let gid = g.0;
+                let gi = self.gangs.get_mut(&gid).expect("gang missing from index");
+                gi.idle_count += 1;
+                if gi.is_intact() {
+                    // Last member came home: promote the whole gang.
+                    let model = gi.model;
+                    let size = gi.size;
+                    let members = std::mem::take(&mut gi.members);
+                    for &m in &members {
+                        if m != id {
+                            let mkey = (self.servers[m].idle_since.to_bits(), m);
+                            let moved = self.idle_broken.remove(&mkey);
+                            debug_assert!(moved, "gang mate {m} not in idle_broken");
+                            self.idle_intact.insert(mkey);
+                        }
+                    }
+                    self.gangs.get_mut(&gid).expect("gang vanished").members = members;
+                    self.reuse.entry((model.0, size)).or_default().insert(gid);
+                    self.idle_intact.insert(key);
+                } else {
+                    self.idle_broken.insert(key);
+                }
+            }
+        }
+    }
+
+    /// Forget that `id` belongs to its gang (called between `remove_idx`
+    /// and a mutation that clears `gang`: unload, abort, failure). Once a
+    /// member detaches the gang can never be intact again, matching the
+    /// scan semantics where a gang missing a loaded member never reaches
+    /// its full idle count.
+    fn detach_gang(&mut self, id: usize) {
+        let Some(g) = self.servers[id].gang else {
+            return;
+        };
+        let gi = self.gangs.get_mut(&g.0).expect("gang missing from index");
+        gi.members.retain(|&m| m != id);
+        if gi.members.is_empty() {
+            self.gangs.remove(&g.0);
+        }
+    }
+
+    // ---- queries -------------------------------------------------------
+
     /// G^t_m restricted to complete idle gangs: groups of idle servers that
     /// share a gang id, model `m`, and whose full gang (gang_size members)
-    /// is idle. Returns (gang id, member server ids) pairs.
+    /// is idle. Returns (gang id, member server ids) pairs, ascending by
+    /// gang id with members ascending — read from the reuse index.
     pub fn idle_gangs(&self, model: ModelType) -> Vec<(GangId, Vec<usize>)> {
-        use std::collections::BTreeMap;
+        let mut out: Vec<(GangId, Vec<usize>)> = Vec::new();
+        for set in self
+            .reuse
+            .range((model.0, 0)..=(model.0, usize::MAX))
+            .map(|(_, set)| set)
+        {
+            for &gid in set {
+                out.push((GangId(gid), self.gangs[&gid].members.clone()));
+            }
+        }
+        out.sort_by_key(|(g, _)| g.0);
+        debug_assert_eq!(out, self.idle_gangs_scan(model));
+        out
+    }
+
+    /// Original full-scan implementation of [`idle_gangs`], kept as the
+    /// debug cross-check oracle and for the legacy tick-scan mode.
+    pub fn idle_gangs_scan(&self, model: ModelType) -> Vec<(GangId, Vec<usize>)> {
         let mut groups: BTreeMap<u64, Vec<usize>> = BTreeMap::new();
         let mut sizes: BTreeMap<u64, usize> = BTreeMap::new();
         for s in &self.servers {
@@ -111,8 +366,68 @@ impl Cluster {
     }
 
     fn select_filtered(&self, model: ModelType, count: usize, healthy_only: bool) -> Selection {
+        let fast = if self.down_loaded == 0 {
+            self.select_indexed(model, count, healthy_only)
+        } else {
+            self.select_filtered_scan(model, count, healthy_only)
+        };
+        debug_assert_eq!(fast, self.select_filtered_scan(model, count, healthy_only));
+        fast
+    }
+
+    /// Index-backed selection; exact replay of the scan's outcome.
+    fn select_indexed(&self, model: ModelType, count: usize, healthy_only: bool) -> Selection {
+        // 1. Exact reuse: lowest intact gang id of this (model, size). The
+        //    scan's reuse check precedes its health filter, so reuse is
+        //    deliberately not gated on `up` here either (with no model
+        //    loaded on any down server — the `down_loaded == 0` fast-path
+        //    precondition — an intact gang cannot contain a down member).
+        if let Some(set) = self.reuse.get(&(model.0, count)) {
+            let gid = *set.iter().next().expect("empty reuse entry");
+            return Selection::Reuse(self.gangs[&gid].members.clone());
+        }
+        // 2. Feasibility.
+        let avail = if healthy_only {
+            self.idle_up
+        } else {
+            self.idle_empty.len() + self.idle_broken.len() + self.idle_intact.len()
+        };
+        if avail < count {
+            return Selection::Infeasible;
+        }
+        // 3. Fresh placement: empty servers first, then broken-gang ones,
+        //    then break an intact gang — each bucket in (idle_since, id)
+        //    order, exactly the scan's (score, idle_since, id) sort.
+        let mut chosen = Vec::with_capacity(count);
+        for &(_, id) in self
+            .idle_empty
+            .iter()
+            .chain(self.idle_broken.iter())
+            .chain(self.idle_intact.iter())
+        {
+            if healthy_only && !self.servers[id].up {
+                continue;
+            }
+            chosen.push(id);
+            if chosen.len() == count {
+                break;
+            }
+        }
+        debug_assert_eq!(chosen.len(), count);
+        Selection::Fresh(chosen)
+    }
+
+    /// Original full-scan selection, kept verbatim: the debug cross-check
+    /// oracle for [`select_indexed`] and the baseline the `eat bench`
+    /// tick-vs-event comparison measures.
+    pub fn select_filtered_scan(
+        &self,
+        model: ModelType,
+        count: usize,
+        healthy_only: bool,
+    ) -> Selection {
         // 1. Exact reuse.
-        for (_gid, members) in self.idle_gangs(model) {
+        for (_gid, members) in self.idle_gangs_scan(model) {
             if members.len() == count {
                 return Selection::Reuse(members);
             }
@@ -129,7 +444,6 @@ impl Cluster {
         // Completeness of each gang among idle servers: a gang is "intact"
         // if all its members are idle (breaking it destroys a reusable
         // group; avoid if possible).
-        use std::collections::BTreeMap;
         let mut idle_by_gang: BTreeMap<u64, usize> = BTreeMap::new();
         for s in &idle {
             if let Some(g) = s.gang {
@@ -165,6 +479,8 @@ impl Cluster {
         Selection::Fresh(chosen)
     }
 
+    // ---- mutations -----------------------------------------------------
+
     /// Dispatch: mark servers busy for `duration`, loading `model` as a new
     /// gang (fresh) or keeping the existing gang (reuse). `now` stamps the
     /// eviction instant on freshly unloaded servers (LRU bookkeeping).
@@ -181,13 +497,29 @@ impl Cluster {
         } else {
             let g = self.fresh_gang_id();
             for &id in server_ids {
+                self.remove_idx(id);
+                self.detach_gang(id);
                 self.servers[id].unload(now);
+                self.add_idx(id);
             }
+            let mut members = server_ids.to_vec();
+            members.sort_unstable();
+            self.gangs.insert(
+                g.0,
+                GangInfo {
+                    model,
+                    size: server_ids.len(),
+                    members,
+                    idle_count: 0,
+                },
+            );
             g
         };
         let size = server_ids.len();
         for &id in server_ids {
+            self.remove_idx(id);
             self.servers[id].assign(duration, model, gang, size);
+            self.add_idx(id);
         }
         gang
     }
@@ -199,12 +531,63 @@ impl Cluster {
     /// never hand out a gang with a dead member; a recovered server comes
     /// back up weight-cold. Extra snapshot entries are ignored.
     pub fn set_health(&mut self, up: &[bool], now: f64) {
-        for (s, &u) in self.servers.iter_mut().zip(up) {
-            if s.up && !u {
-                s.abort(now);
+        let n = self.servers.len().min(up.len());
+        for (id, &u) in up.iter().enumerate().take(n) {
+            if self.servers[id].up == u {
+                continue;
             }
-            s.up = u;
+            self.remove_idx(id);
+            if !u {
+                self.detach_gang(id);
+                self.servers[id].abort(now);
+            }
+            self.servers[id].up = u;
+            self.add_idx(id);
+            self.epoch += 1;
         }
+    }
+
+    /// Take `id` down: it loses its in-flight work, loaded weights and any
+    /// straggler slowdown (the replacement hardware is nominal). Returns
+    /// whether the server was up before the call (for failure accounting —
+    /// the fault model may emit redundant Fail events).
+    pub fn fail_server(&mut self, id: usize, now: f64) -> bool {
+        let was_up = self.servers[id].up;
+        self.remove_idx(id);
+        self.detach_gang(id);
+        let s = &mut self.servers[id];
+        s.up = false;
+        s.slowdown = 1.0;
+        s.abort(now);
+        self.add_idx(id);
+        self.epoch += 1;
+        was_up
+    }
+
+    /// Bring `id` back up, weight-cold, with its LRU clock restarted.
+    pub fn recover_server(&mut self, id: usize, now: f64) {
+        self.remove_idx(id);
+        let s = &mut self.servers[id];
+        s.up = true;
+        s.idle_since = now;
+        self.add_idx(id);
+        self.epoch += 1;
+    }
+
+    /// Straggler on/off: execution speed changes, occupancy does not, so
+    /// the index is untouched.
+    pub fn set_slowdown(&mut self, id: usize, factor: f64) {
+        self.servers[id].slowdown = factor;
+    }
+
+    /// Cancel `id`'s in-flight work without signalling completion; the
+    /// server goes idle and weight-cold.
+    pub fn abort_server(&mut self, id: usize, now: f64) {
+        self.remove_idx(id);
+        self.detach_gang(id);
+        self.servers[id].abort(now);
+        self.add_idx(id);
+        self.epoch += 1;
     }
 
     /// Kill an in-flight gang: every member drops its work and goes
@@ -212,18 +595,53 @@ impl Cluster {
     /// pays in full). Used for mid-flight failures and speculative losers.
     pub fn abort_gang(&mut self, server_ids: &[usize], now: f64) {
         for &id in server_ids {
-            self.servers[id].abort(now);
+            self.abort_server(id, now);
+        }
+    }
+
+    /// Advance all running servers by dt; pushes ids that completed this
+    /// tick into `done` (cleared first), ascending. Touches only the busy
+    /// set — O(busy), not O(fleet) — which is bit-exact with the full
+    /// scan because `Server::advance` is a no-op on idle servers and the
+    /// busy set iterates in the same ascending-id order.
+    pub fn advance_into(&mut self, dt: f64, now: f64, done: &mut Vec<usize>) {
+        done.clear();
+        self.busy_scratch.clear();
+        self.busy_scratch.extend(self.busy.iter().copied());
+        for i in 0..self.busy_scratch.len() {
+            let id = self.busy_scratch[i];
+            if self.servers[id].advance(dt, now) {
+                done.push(id);
+                self.busy.remove(&id);
+                self.add_idx(id);
+                self.epoch += 1;
+            }
+        }
+        debug_assert_eq!(
+            self.busy.len(),
+            self.servers.iter().filter(|s| !s.is_idle()).count()
+        );
+    }
+
+    /// Legacy full-scan advance (every server, every tick): the baseline
+    /// for the tick-vs-event benchmark. Identical results to
+    /// [`advance_into`](Self::advance_into); still maintains the index.
+    pub fn advance_scan_into(&mut self, dt: f64, now: f64, done: &mut Vec<usize>) {
+        done.clear();
+        for id in 0..self.servers.len() {
+            if self.servers[id].advance(dt, now) {
+                done.push(id);
+                self.busy.remove(&id);
+                self.add_idx(id);
+                self.epoch += 1;
+            }
         }
     }
 
     /// Advance all servers by dt; returns ids that completed this tick.
     pub fn advance(&mut self, dt: f64, now: f64) -> Vec<usize> {
         let mut done = Vec::new();
-        for s in &mut self.servers {
-            if s.advance(dt, now) {
-                done.push(s.id);
-            }
-        }
+        self.advance_into(dt, now, &mut done);
         done
     }
 }
@@ -326,8 +744,7 @@ mod tests {
     #[test]
     fn select_healthy_masks_down_servers_but_select_stays_blind() {
         let mut c = Cluster::new(4);
-        c.servers[0].up = false;
-        c.servers[1].up = false;
+        c.set_health(&[false, false, true, true], 0.0);
         // Blind selection still sees 4 "idle" servers.
         assert!(c.select(ModelType(0), 4).servers().is_some());
         // Health-aware selection only has 2 up servers left.
@@ -335,7 +752,7 @@ mod tests {
         let sel = c.select_healthy(ModelType(0), 2);
         assert_eq!(sel.servers().unwrap(), &[2, 3]);
         // A recovered server is selectable again.
-        c.servers[0].up = true;
+        c.set_health(&[true, false, true, true], 0.0);
         assert!(c.select_healthy(ModelType(0), 3).servers().is_some());
     }
 
@@ -384,5 +801,124 @@ mod tests {
         let done = c.advance(1.0, 2.0);
         assert_eq!(done, vec![0, 1]);
         assert!(c.advance(1.0, 3.0).is_empty());
+    }
+
+    #[test]
+    fn busy_set_tracks_dispatch_and_completion() {
+        let mut c = Cluster::new(4);
+        assert!(c.all_idle());
+        c.dispatch(&[1, 3], 2.0, ModelType(0), false, 0.0);
+        assert_eq!(c.busy_ids().iter().copied().collect::<Vec<_>>(), vec![1, 3]);
+        c.advance(2.0, 2.0);
+        assert!(c.all_idle());
+        assert_eq!(c.idle_count(), 4);
+    }
+
+    #[test]
+    fn advance_into_reuses_buffer_and_matches_scan_advance() {
+        let mut a = Cluster::new(6);
+        let mut b = a.clone();
+        a.dispatch(&[0, 2, 4], 3.0, ModelType(1), false, 0.0);
+        b.dispatch(&[0, 2, 4], 3.0, ModelType(1), false, 0.0);
+        let mut done_a = Vec::new();
+        let mut done_b = Vec::new();
+        for t in 1..=4 {
+            a.advance_into(1.0, t as f64, &mut done_a);
+            b.advance_scan_into(1.0, t as f64, &mut done_b);
+            assert_eq!(done_a, done_b);
+        }
+        assert_eq!(a.select(ModelType(1), 3), b.select(ModelType(1), 3));
+    }
+
+    #[test]
+    fn epoch_bumps_when_capacity_can_grow() {
+        let mut c = Cluster::new(2);
+        let e0 = c.epoch();
+        c.dispatch(&[0, 1], 5.0, ModelType(0), false, 0.0);
+        // Dispatch never frees capacity: no bump, memoised Infeasible
+        // verdicts stay valid.
+        assert_eq!(c.epoch(), e0);
+        c.advance(5.0, 5.0);
+        assert!(c.epoch() > e0, "completions must invalidate the memo");
+        let e1 = c.epoch();
+        c.fail_server(0, 6.0);
+        assert!(c.epoch() > e1);
+        let e2 = c.epoch();
+        c.recover_server(0, 7.0);
+        assert!(c.epoch() > e2);
+    }
+
+    #[test]
+    fn fail_and_recover_maintain_index_and_counters() {
+        let mut c = Cluster::new(3);
+        c.dispatch(&[0, 1], 10.0, ModelType(1), false, 0.0);
+        assert!(c.fail_server(0, 2.0), "first failure reports was_up");
+        assert!(!c.fail_server(0, 2.5), "redundant failure reports !was_up");
+        assert_eq!(c.down_count(), 1);
+        // The downed server dropped its work; its gang mate is still busy.
+        assert_eq!(c.busy_ids().iter().copied().collect::<Vec<_>>(), vec![1]);
+        assert_eq!(c.servers[0].model, None);
+        // Healthy selection sees only server 2; blind also sees server 0.
+        assert_eq!(c.select_healthy(ModelType(0), 1).servers().unwrap(), &[2]);
+        assert_eq!(c.select(ModelType(0), 2).servers().unwrap(), &[2, 0]);
+        c.recover_server(0, 4.0);
+        assert_eq!(c.down_count(), 0);
+        assert_eq!(c.servers[0].idle_since, 4.0);
+        // The finished gang mate can never form an intact gang again (its
+        // partner detached on failure).
+        c.advance(10.0, 10.0);
+        assert!(c.idle_gangs(ModelType(1)).is_empty());
+        assert!(!c.select(ModelType(1), 2).is_reuse());
+    }
+
+    #[test]
+    fn duration_zero_dispatch_yields_immediately_reusable_gang() {
+        // The serving layer uses the cluster as a residency tracker and
+        // dispatches with duration 0: the gang must be intact (reusable)
+        // straight away without an advance in between.
+        let mut c = Cluster::new(4);
+        let g1 = c.dispatch(&[0, 1], 0.0, ModelType(2), false, 1.0);
+        assert!(c.all_idle());
+        let sel = c.select(ModelType(2), 2);
+        assert!(sel.is_reuse());
+        assert_eq!(sel.servers().unwrap(), &[0, 1]);
+        let g2 = c.dispatch(&[0, 1], 0.0, ModelType(2), true, 2.0);
+        assert_eq!(g1, g2);
+    }
+
+    #[test]
+    fn index_matches_scan_through_mixed_churn() {
+        // Torture loop: deterministic mixed dispatch/advance/fail/recover
+        // sequence; the debug_assert in select_filtered cross-checks the
+        // index against the scan on every query.
+        let mut c = Cluster::new(9);
+        for step in 0..200u64 {
+            let now = step as f64;
+            let model = ModelType((step % 3) as u32);
+            let count = 1 + (step % 4) as usize;
+            match c.select(model, count) {
+                Selection::Reuse(ids) => {
+                    c.dispatch(&ids, 2.0 + (step % 5) as f64, model, true, now);
+                }
+                Selection::Fresh(ids) => {
+                    c.dispatch(&ids, 2.0 + (step % 5) as f64, model, false, now);
+                }
+                Selection::Infeasible => {}
+            }
+            if step % 11 == 0 {
+                c.fail_server((step % 9) as usize, now);
+            }
+            if step % 13 == 0 {
+                c.recover_server((step.wrapping_mul(7) % 9) as usize, now);
+            }
+            c.advance(1.0, now + 1.0);
+            // Cross-check healthy selection too (scan oracle in debug).
+            let _ = c.select_healthy(model, count);
+            let _ = c.idle_gangs(model);
+            assert_eq!(
+                c.idle_count(),
+                c.servers.iter().filter(|s| s.is_idle()).count()
+            );
+        }
     }
 }

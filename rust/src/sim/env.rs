@@ -11,12 +11,14 @@ use crate::config::EnvConfig;
 use crate::faults::{FaultEvent, FaultKind, FaultModel, FaultsConfig};
 use crate::qos::{AdmissionConfig, AdmissionState, PendingQueue, QueueDiscipline, TenantRegistry};
 use crate::sim::cluster::{Cluster, Selection};
+use crate::sim::events::EventQueue;
 use crate::sim::server::GangId;
 use crate::sim::exec_model::ExecModel;
 use crate::sim::quality::QualityModel;
 use crate::sim::task::{ModelType, Task, Workload};
 use crate::util::rng::Pcg64;
 use crate::workload::{MetricsCollector, TaskSource, TaskStream, TenantReport};
+use std::cell::RefCell;
 use std::collections::{BTreeMap, VecDeque};
 
 /// Decoded composite action (Eq. 8): `[a_c, a_s, a_k1..a_kl]`, every
@@ -128,6 +130,9 @@ struct InFlight {
     /// straggler stretch); the unit of patch-second accounting.
     nominal: f64,
     speculative: bool,
+    /// Monotone attempt id, the key under which this attempt's
+    /// speculative-launch deadline sits in `FaultState::spec_events`.
+    seq: u64,
 }
 
 impl InFlight {
@@ -147,7 +152,7 @@ impl InFlight {
 fn abort_attempt(cluster: &mut Cluster, att: &InFlight, now: f64) {
     for (i, &m) in att.servers.iter().enumerate() {
         if !att.done[i] && cluster.servers[m].gang == Some(att.gang) {
-            cluster.servers[m].abort(now);
+            cluster.abort_server(m, now);
         }
     }
 }
@@ -167,6 +172,18 @@ struct FaultState {
     events: Vec<FaultEvent>,
     /// Tasks dropped after exhausting their retry budget.
     failed_tasks: usize,
+    /// Next attempt sequence number (keys for `spec_events`).
+    next_seq: u64,
+    /// Speculative-launch deadlines: one event per primary attempt at
+    /// `start + spec_beta x nominal`. The fault tick only runs the
+    /// phase-4 backup scan when an event is due, instead of scanning
+    /// every in-flight attempt every tick. Stale keys (attempt already
+    /// resolved) are dropped lazily; a due-but-not-launched candidate is
+    /// re-armed one tick out so the scan keeps the original per-tick
+    /// cadence while an attempt is "hot".
+    spec_events: EventQueue,
+    /// Reusable pop buffer for `spec_events`.
+    spec_pop: Vec<u64>,
 }
 
 /// Aggregated per-episode metrics (feeds Tables IX–XI, Fig 5/8, and the
@@ -244,6 +261,19 @@ pub struct EdgeEnv {
     steps_taken: usize,
     rng: Pcg64,
     metrics: MetricsCollector,
+    /// Infeasibility memo: (model, patches) → cluster epoch at which the
+    /// gang constraint was last found unsatisfiable. A verdict stays
+    /// valid until the epoch changes (dispatches never free capacity, so
+    /// they don't bump it). Interior-mutable because `first_feasible`
+    /// is a `&self` query.
+    feas_memo: RefCell<BTreeMap<(u32, usize), u64>>,
+    /// Reusable buffer for per-tick completed-server ids.
+    finished_buf: Vec<usize>,
+    /// Debug/bench switch: route selection, advance and the fault sweep
+    /// through the original O(fleet)-per-tick scan paths. Set before the
+    /// first step; the property tests pin bit-exactness against it and
+    /// `eat bench` measures the speedup over it.
+    legacy_scan: bool,
     // accumulators
     scheduled_count: usize,
     dropped_count: usize,
@@ -328,6 +358,9 @@ impl EdgeEnv {
                 attempts: BTreeMap::new(),
                 events: Vec::new(),
                 failed_tasks: 0,
+                next_seq: 0,
+                spec_events: EventQueue::new(),
+                spec_pop: Vec::new(),
             }
         });
         let mut env = EdgeEnv {
@@ -344,6 +377,9 @@ impl EdgeEnv {
             steps_taken: 0,
             rng,
             metrics,
+            feas_memo: RefCell::new(BTreeMap::new()),
+            finished_buf: Vec::new(),
+            legacy_scan: false,
             scheduled_count: 0,
             dropped_count: 0,
             reload_count: 0,
@@ -418,10 +454,23 @@ impl EdgeEnv {
     /// masked; otherwise (including every fault-free config) this is the
     /// seed's selector exactly. Heuristic policies route through this.
     pub fn select_for(&self, model: ModelType, patches: usize) -> Selection {
-        match &self.faults {
-            Some(fs) if fs.cfg.health_aware => self.cluster.select_healthy(model, patches),
-            _ => self.cluster.select(model, patches),
+        let healthy = matches!(&self.faults, Some(fs) if fs.cfg.health_aware);
+        if self.legacy_scan {
+            return self.cluster.select_filtered_scan(model, patches, healthy);
         }
+        if healthy {
+            self.cluster.select_healthy(model, patches)
+        } else {
+            self.cluster.select(model, patches)
+        }
+    }
+
+    /// Route selection, advance and the fault sweep through the original
+    /// full-scan code paths (the pre-event tick core). For the
+    /// bit-exactness property tests and the `eat bench` tick-vs-event
+    /// comparison; call before the first step.
+    pub fn set_legacy_scan(&mut self, on: bool) {
+        self.legacy_scan = on;
     }
 
     /// Remaining (not yet arrived) + queued + in-flight tasks exist?
@@ -430,7 +479,7 @@ impl EdgeEnv {
     pub fn all_done(&self) -> bool {
         let failed = self.faults.as_ref().map_or(0, |f| f.failed_tasks);
         self.scheduled_count + self.dropped_count + failed == self.source.total()
-            && self.cluster.servers.iter().all(|s| s.is_idle())
+            && self.cluster.all_idle()
             && self.faults.as_ref().map_or(true, |f| f.inflight.is_empty())
     }
 
@@ -557,15 +606,33 @@ impl EdgeEnv {
         // A straggling server stays busy `slowdown` times longer than its
         // remaining nominal work; a down server processes nothing.
         let dt = self.cfg.decision_dt;
-        for s in &self.cluster.servers {
-            if s.up && !s.is_idle() {
-                self.metrics.observe_busy(s.id, (s.remaining * s.slowdown).min(dt));
+        if self.legacy_scan {
+            for s in &self.cluster.servers {
+                if s.up && !s.is_idle() {
+                    self.metrics.observe_busy(s.id, (s.remaining * s.slowdown).min(dt));
+                }
+            }
+        } else {
+            // Only busy servers contribute credit; the busy set iterates
+            // ascending, the same order (and f64 summation order) as the
+            // full scan above.
+            for &id in self.cluster.busy_ids() {
+                let s = &self.cluster.servers[id];
+                if s.up {
+                    self.metrics.observe_busy(s.id, (s.remaining * s.slowdown).min(dt));
+                }
             }
         }
         self.metrics.advance_time(dt);
         self.now += dt;
-        let finished = self.cluster.advance(dt, self.now);
+        let mut finished = std::mem::take(&mut self.finished_buf);
+        if self.legacy_scan {
+            self.cluster.advance_scan_into(dt, self.now, &mut finished);
+        } else {
+            self.cluster.advance_into(dt, self.now, &mut finished);
+        }
         self.fault_tick(&finished, dt);
+        self.finished_buf = finished;
         self.absorb_arrivals();
         self.steps_taken += 1;
         outcome.done = self.is_done();
@@ -715,6 +782,18 @@ impl EdgeEnv {
                 self.reload_count += 1;
             }
             self.metrics.observe_dispatched_work(duration * sch.servers.len() as f64);
+            let now = self.now;
+            let fs = self.faults.as_mut().expect("checked above");
+            let seq = fs.next_seq;
+            fs.next_seq += 1;
+            if fs.cfg.spec_beta > 1.0 {
+                // Arm this attempt's speculative-launch deadline. The
+                // heap time can round off the scan's exact
+                // `now - start > beta * nominal` comparison, so the pop
+                // horizon carries a one-tick slack and the scan itself
+                // re-checks exactly.
+                fs.spec_events.push(now + fs.cfg.spec_beta * duration, seq);
+            }
             let att = InFlight {
                 task,
                 steps,
@@ -722,11 +801,12 @@ impl EdgeEnv {
                 servers: sch.servers.clone(),
                 gang,
                 reuse,
-                start: self.now,
+                start: now,
                 nominal: duration,
                 speculative: false,
+                seq,
             };
-            self.faults.as_mut().expect("checked above").inflight.push(att);
+            fs.inflight.push(att);
             return Some(sch);
         }
         // Metrics.
@@ -777,32 +857,30 @@ impl EdgeEnv {
             }
         }
         // 1. Health transitions. A failing server loses its work and its
-        // model weights; a recovering one comes back up weight-cold.
+        // model weights; a recovering one comes back up weight-cold. All
+        // state changes route through the cluster so its incremental
+        // index (and the epoch counter) stay consistent.
         let events = fs.model.step(now - dt, dt);
         let mut downed: Vec<usize> = Vec::new();
         for ev in &events {
-            let Some(srv) = self.cluster.servers.get_mut(ev.server) else {
+            if ev.server >= self.cluster.len() {
                 continue;
-            };
+            }
             match &ev.kind {
                 FaultKind::Fail => {
-                    if srv.up {
-                        srv.up = false;
+                    if self.cluster.fail_server(ev.server, now) {
                         self.metrics.observe_failure();
                     }
-                    srv.slowdown = 1.0;
-                    srv.abort(now);
                     downed.push(ev.server);
                 }
                 FaultKind::Recover => {
-                    srv.up = true;
-                    srv.idle_since = now;
+                    self.cluster.recover_server(ev.server, now);
                 }
                 FaultKind::SlowStart { factor, .. } => {
-                    srv.slowdown = factor.max(1.0);
+                    self.cluster.set_slowdown(ev.server, factor.max(1.0));
                 }
                 FaultKind::SlowEnd => {
-                    srv.slowdown = 1.0;
+                    self.cluster.set_slowdown(ev.server, 1.0);
                 }
             }
         }
@@ -811,107 +889,155 @@ impl EdgeEnv {
         // member (including one that failed and recovered within this
         // tick, whose work is gone regardless). Members whose patch
         // already finished don't kill their gang by failing afterwards.
-        let (killed, alive): (Vec<InFlight>, Vec<InFlight>) =
-            fs.inflight.drain(..).partition(|att| {
-                att.servers.iter().enumerate().any(|(i, &id)| {
-                    !att.done[i]
-                        && (!self.cluster.servers[id].up || downed.contains(&id))
-                })
-            });
-        fs.inflight = alive;
-        let mut handled: Vec<u64> = Vec::new();
-        for att in killed {
-            abort_attempt(&mut self.cluster, &att, now);
-            self.metrics.observe_gang_kill(att.work());
-            let tid = att.task.id;
-            // Re-queue once per task, and only if no sibling attempt is
-            // still racing.
-            if handled.contains(&tid) || fs.inflight.iter().any(|a| a.task.id == tid) {
-                continue;
-            }
-            handled.push(tid);
-            let count = fs.attempts.entry(tid).or_insert(0);
-            *count += 1;
-            if *count > fs.cfg.max_retries {
-                fs.attempts.remove(&tid);
-                fs.failed_tasks += 1;
-                self.metrics.observe_task_failure();
-            } else {
-                self.metrics.observe_retry();
-                self.queue.push_retry(att.task);
+        // With no down server and no failure this tick the kill
+        // predicate is vacuously false, so the sweep is skipped (a down
+        // server from an *earlier* tick can still be hosting a
+        // fault-blind dispatch, hence the `down_count` guard).
+        if self.legacy_scan || !downed.is_empty() || self.cluster.down_count() > 0 {
+            let (killed, alive): (Vec<InFlight>, Vec<InFlight>) =
+                fs.inflight.drain(..).partition(|att| {
+                    att.servers.iter().enumerate().any(|(i, &id)| {
+                        !att.done[i]
+                            && (!self.cluster.servers[id].up || downed.contains(&id))
+                    })
+                });
+            fs.inflight = alive;
+            let mut handled: Vec<u64> = Vec::new();
+            for att in killed {
+                abort_attempt(&mut self.cluster, &att, now);
+                self.metrics.observe_gang_kill(att.work());
+                let tid = att.task.id;
+                if att.speculative && !self.legacy_scan {
+                    // A surviving primary just lost its backup: the old
+                    // per-tick scan would reconsider it next tick, so
+                    // re-arm its deadline event.
+                    if let Some(primary) =
+                        fs.inflight.iter().find(|a| a.task.id == tid && !a.speculative)
+                    {
+                        fs.spec_events.push(now + dt, primary.seq);
+                    }
+                }
+                // Re-queue once per task, and only if no sibling attempt is
+                // still racing.
+                if handled.contains(&tid) || fs.inflight.iter().any(|a| a.task.id == tid) {
+                    continue;
+                }
+                handled.push(tid);
+                let count = fs.attempts.entry(tid).or_insert(0);
+                *count += 1;
+                if *count > fs.cfg.max_retries {
+                    fs.attempts.remove(&tid);
+                    fs.failed_tasks += 1;
+                    self.metrics.observe_task_failure();
+                } else {
+                    self.metrics.observe_retry();
+                    self.queue.push_retry(att.task);
+                }
             }
         }
         // 3. Completions: a gang is done when every member's patch has
         // finished (detected at heartbeat cadence). First finisher of a
         // task wins; racing siblings are aborted and charged as wasted
-        // work.
-        let (finished, running): (Vec<InFlight>, Vec<InFlight>) =
-            fs.inflight.drain(..).partition(InFlight::all_done);
-        fs.inflight = running;
-        let mut won: Vec<u64> = Vec::new();
-        for att in finished {
-            let tid = att.task.id;
-            if won.contains(&tid) {
-                self.metrics.observe_wasted_work(att.work());
-                continue;
-            }
-            won.push(tid);
-            let mut keep = Vec::with_capacity(fs.inflight.len());
-            for sib in fs.inflight.drain(..) {
-                if sib.task.id == tid {
-                    abort_attempt(&mut self.cluster, &sib, now);
-                    self.metrics.observe_wasted_work(sib.work());
-                } else {
-                    keep.push(sib);
+        // work. Done flags only flip in phase 0, so with no completed
+        // server this tick no attempt can have newly become all-done.
+        if self.legacy_scan || !finished_servers.is_empty() {
+            let (finished, running): (Vec<InFlight>, Vec<InFlight>) =
+                fs.inflight.drain(..).partition(InFlight::all_done);
+            fs.inflight = running;
+            let mut won: Vec<u64> = Vec::new();
+            for att in finished {
+                let tid = att.task.id;
+                if won.contains(&tid) {
+                    self.metrics.observe_wasted_work(att.work());
+                    continue;
                 }
+                won.push(tid);
+                let mut keep = Vec::with_capacity(fs.inflight.len());
+                for sib in fs.inflight.drain(..) {
+                    if sib.task.id == tid {
+                        abort_attempt(&mut self.cluster, &sib, now);
+                        self.metrics.observe_wasted_work(sib.work());
+                    } else {
+                        keep.push(sib);
+                    }
+                }
+                fs.inflight = keep;
+                fs.attempts.remove(&tid);
+                self.complete_attempt(att);
             }
-            fs.inflight = keep;
-            fs.attempts.remove(&tid);
-            self.complete_attempt(att);
         }
         // 4. Speculative re-execution: a primary past beta x nominal gets
         // one backup, launched only onto an idle *warm* gang of the right
         // shape (a backup that must cold-load would lose the race to the
-        // reload itself).
+        // reload itself). The scan over in-flight attempts only runs when
+        // a deadline event is due (it has no side effect unless it
+        // launches, so extra runs are harmless and missed runs are not);
+        // the one-tick pop slack absorbs the heap time's rounding vs the
+        // scan's exact comparison.
         if fs.cfg.spec_beta > 1.0 {
-            let mut backups: Vec<InFlight> = Vec::new();
-            for att in &fs.inflight {
-                if att.speculative || now - att.start <= fs.cfg.spec_beta * att.nominal {
-                    continue;
+            let mut pop = std::mem::take(&mut fs.spec_pop);
+            let due = fs.spec_events.pop_due_into(now + dt, &mut pop) > 0;
+            fs.spec_pop = pop;
+            if due || self.legacy_scan {
+                let mut next_seq = fs.next_seq;
+                let mut backups: Vec<InFlight> = Vec::new();
+                for att in &fs.inflight {
+                    if att.speculative || now - att.start <= fs.cfg.spec_beta * att.nominal {
+                        continue;
+                    }
+                    let tid = att.task.id;
+                    if fs.inflight.iter().any(|a| a.task.id == tid && a.speculative)
+                        || backups.iter().any(|b| b.task.id == tid)
+                    {
+                        continue;
+                    }
+                    let sel = if fs.cfg.health_aware {
+                        self.cluster.select_healthy(att.task.model, att.task.patches)
+                    } else {
+                        self.cluster.select(att.task.model, att.task.patches)
+                    };
+                    let Selection::Reuse(servers) = sel else {
+                        continue;
+                    };
+                    let exec =
+                        self.exec_model
+                            .sample_exec(att.steps, att.task.patches, &mut self.rng);
+                    let gang = self.cluster.dispatch(&servers, exec, att.task.model, true, now);
+                    self.metrics.observe_spec_launch();
+                    self.metrics.observe_dispatched_work(exec * servers.len() as f64);
+                    let seq = next_seq;
+                    next_seq += 1;
+                    backups.push(InFlight {
+                        task: att.task.clone(),
+                        steps: att.steps,
+                        done: vec![false; servers.len()],
+                        servers,
+                        gang,
+                        reuse: true,
+                        start: now,
+                        nominal: exec,
+                        speculative: true,
+                        seq,
+                    });
                 }
-                let tid = att.task.id;
-                if fs.inflight.iter().any(|a| a.task.id == tid && a.speculative)
-                    || backups.iter().any(|b| b.task.id == tid)
-                {
-                    continue;
+                fs.next_seq = next_seq;
+                fs.inflight.extend(backups);
+                if !self.legacy_scan {
+                    // Keep hot candidates (due but unlaunched, e.g. no
+                    // warm gang free yet) on the per-tick cadence.
+                    for att in &fs.inflight {
+                        if !att.speculative
+                            && att.start + fs.cfg.spec_beta * att.nominal <= now + dt
+                            && !fs
+                                .inflight
+                                .iter()
+                                .any(|a| a.task.id == att.task.id && a.speculative)
+                        {
+                            fs.spec_events.push(now + dt, att.seq);
+                        }
+                    }
                 }
-                let sel = if fs.cfg.health_aware {
-                    self.cluster.select_healthy(att.task.model, att.task.patches)
-                } else {
-                    self.cluster.select(att.task.model, att.task.patches)
-                };
-                let Selection::Reuse(servers) = sel else {
-                    continue;
-                };
-                let exec =
-                    self.exec_model
-                        .sample_exec(att.steps, att.task.patches, &mut self.rng);
-                let gang = self.cluster.dispatch(&servers, exec, att.task.model, true, now);
-                self.metrics.observe_spec_launch();
-                self.metrics.observe_dispatched_work(exec * servers.len() as f64);
-                backups.push(InFlight {
-                    task: att.task.clone(),
-                    steps: att.steps,
-                    done: vec![false; servers.len()],
-                    servers,
-                    gang,
-                    reuse: true,
-                    start: now,
-                    nominal: exec,
-                    speculative: true,
-                });
             }
-            fs.inflight.extend(backups);
         }
         self.faults = Some(fs);
     }
@@ -981,12 +1107,42 @@ impl EdgeEnv {
     /// Index of the first queue-feasible task among the visible slots, in
     /// queue order (down servers masked under health-aware dispatch). The
     /// head-first dispatchers of `eat qos` / `eat faults` drive this.
+    ///
+    /// An infeasibility memo keyed by `(model, patches)` short-circuits
+    /// repeat probes: feasibility of a shape can only change when cluster
+    /// capacity changes, which bumps the cluster epoch, so a shape found
+    /// infeasible at the current epoch stays infeasible until the epoch
+    /// moves. Dispatching between probes never *adds* capacity, so memo
+    /// entries stay valid across the dispatch loop within one tick.
     pub fn first_feasible(&self) -> Option<usize> {
+        if self.legacy_scan {
+            return self
+                .queue
+                .items()
+                .iter()
+                .take(self.cfg.queue_window)
+                .position(|t| {
+                    !matches!(self.select_for(t.model, t.patches), Selection::Infeasible)
+                });
+        }
+        let epoch = self.cluster.epoch();
+        let mut memo = self.feas_memo.borrow_mut();
         self.queue
             .items()
             .iter()
             .take(self.cfg.queue_window)
-            .position(|t| !matches!(self.select_for(t.model, t.patches), Selection::Infeasible))
+            .position(|t| {
+                let key = (t.model.0, t.patches);
+                if memo.get(&key) == Some(&epoch) {
+                    return false;
+                }
+                if matches!(self.select_for(t.model, t.patches), Selection::Infeasible) {
+                    memo.insert(key, epoch);
+                    false
+                } else {
+                    true
+                }
+            })
     }
 
     /// Can any queued task currently be gang-scheduled?
@@ -1781,5 +1937,205 @@ mod tests {
         let rep = e.report();
         assert!(rep.completed_tasks > 0);
         assert_eq!(rep.below_quality_min, rep.completed_tasks);
+    }
+
+    // --- event-driven core vs tick-scan core: bit-exact CRN pairing ---
+    //
+    // `set_legacy_scan(true)` routes every hot path back through the
+    // seed's full-fleet scans (selection, busy credit, advance, fault
+    // sweeps, per-tick speculative scan). These tests pin that the
+    // indexed/evented paths produce byte-identical episodes.
+
+    fn assert_reports_bit_identical(a: &EpisodeReport, b: &EpisodeReport) {
+        assert_eq!(a.completed_tasks, b.completed_tasks);
+        assert_eq!(a.total_tasks, b.total_tasks);
+        assert_eq!(a.decision_steps, b.decision_steps);
+        assert_eq!(a.sim_time.to_bits(), b.sim_time.to_bits());
+        assert_eq!(a.total_reward.to_bits(), b.total_reward.to_bits());
+        assert_eq!(a.avg_quality.to_bits(), b.avg_quality.to_bits());
+        assert_eq!(
+            a.avg_response_latency.to_bits(),
+            b.avg_response_latency.to_bits()
+        );
+        assert_eq!(a.p50_latency.to_bits(), b.p50_latency.to_bits());
+        assert_eq!(a.p90_latency.to_bits(), b.p90_latency.to_bits());
+        assert_eq!(a.p99_latency.to_bits(), b.p99_latency.to_bits());
+        assert_eq!(a.avg_utilization.to_bits(), b.avg_utilization.to_bits());
+        assert_eq!(a.reload_rate.to_bits(), b.reload_rate.to_bits());
+        assert_eq!(a.reloads, b.reloads);
+        assert_eq!(a.below_quality_min, b.below_quality_min);
+        assert_eq!(a.infeasible_actions, b.infeasible_actions);
+        assert_eq!(a.avg_steps_chosen.to_bits(), b.avg_steps_chosen.to_bits());
+        assert_eq!(a.efficiency.to_bits(), b.efficiency.to_bits());
+        assert_eq!(a.dropped_tasks, b.dropped_tasks);
+        assert_eq!(a.goodput.to_bits(), b.goodput.to_bits());
+        assert_eq!(a.failures, b.failures);
+        assert_eq!(a.gang_kills, b.gang_kills);
+        assert_eq!(a.retries, b.retries);
+        assert_eq!(a.failed_tasks, b.failed_tasks);
+        assert_eq!(a.spec_launches, b.spec_launches);
+        assert_eq!(a.spec_wins, b.spec_wins);
+        assert_eq!(a.dispatched_patch_s.to_bits(), b.dispatched_patch_s.to_bits());
+        assert_eq!(a.completed_patch_s.to_bits(), b.completed_patch_s.to_bits());
+        assert_eq!(a.wasted_patch_s.to_bits(), b.wasted_patch_s.to_bits());
+        assert_eq!(a.inflight_patch_s.to_bits(), b.inflight_patch_s.to_bits());
+        assert_eq!(a.wasted_work_frac.to_bits(), b.wasted_work_frac.to_bits());
+        assert_eq!(a.tenant_reports.len(), b.tenant_reports.len());
+        for (ta, tb) in a.tenant_reports.iter().zip(&b.tenant_reports) {
+            assert_eq!(ta.completed, tb.completed);
+            assert_eq!(ta.dropped, tb.dropped);
+        }
+    }
+
+    /// The greedy head-first dispatcher the experiment runners use: it
+    /// exercises `first_feasible` (and so the infeasibility memo), the
+    /// selection index, and the busy-set advance on every tick.
+    fn run_head_first(mut e: EdgeEnv, legacy: bool) -> EpisodeReport {
+        e.set_legacy_scan(legacy);
+        let l = e.cfg.queue_window;
+        let s_max = e.cfg.s_max;
+        for _ in 0..=e.cfg.step_limit {
+            while let Some(idx) = e.first_feasible() {
+                if e.schedule_task_at(idx, s_max).is_none() {
+                    break;
+                }
+            }
+            if e.step(&Action::noop(l)).done {
+                break;
+            }
+        }
+        e.report()
+    }
+
+    #[test]
+    fn event_core_matches_tick_core_plain() {
+        for seed in [11_u64, 12, 13] {
+            let cfg = ExperimentConfig::preset_8node(0.1).env;
+            let tick = run_head_first(EdgeEnv::new(cfg.clone(), seed), true);
+            let event = run_head_first(EdgeEnv::new(cfg, seed), false);
+            assert!(event.completed_tasks > 0, "trivial episode at seed {seed}");
+            assert_reports_bit_identical(&tick, &event);
+        }
+    }
+
+    #[test]
+    fn event_core_matches_tick_core_policy_driven() {
+        // The action path (policy scheduling via `step`) instead of the
+        // head-first loop, over a scenario-style mixed workload.
+        for seed in [21_u64, 22] {
+            let run = |legacy: bool| {
+                let mut cfg = ExperimentConfig::preset_8node(0.12).env;
+                cfg.tasks_per_episode = 40;
+                let mut e = EdgeEnv::new(cfg, seed);
+                e.set_legacy_scan(legacy);
+                run_to_done(&mut e)
+            };
+            assert_reports_bit_identical(&run(true), &run(false));
+        }
+    }
+
+    #[test]
+    fn event_core_matches_tick_core_with_tenants() {
+        for seed in [31_u64, 32] {
+            let tick = run_head_first(EdgeEnv::new(tenant_cfg(0.3), seed), true);
+            let event = run_head_first(EdgeEnv::new(tenant_cfg(0.3), seed), false);
+            assert_reports_bit_identical(&tick, &event);
+        }
+    }
+
+    #[test]
+    fn event_core_matches_tick_core_under_stochastic_faults() {
+        // Churn + stragglers + speculation, under both fault-blind and
+        // health-aware dispatch — the full fault sweep incl. the evented
+        // speculative-deadline path.
+        for health_aware in [false, true] {
+            for seed in [41_u64, 42] {
+                let cfg = || {
+                    let mut cfg = ExperimentConfig::preset_8node(0.1).env;
+                    cfg.tasks_per_episode = 40;
+                    cfg.faults = Some(FaultsConfig {
+                        mtbf: 150.0,
+                        mttr: 60.0,
+                        zones: 4,
+                        zone_shock_rate: 0.002,
+                        straggler_rate: 0.01,
+                        spec_beta: 1.5,
+                        max_retries: 3,
+                        health_aware,
+                        ..FaultsConfig::default()
+                    });
+                    cfg
+                };
+                let tick = run_head_first(EdgeEnv::new(cfg(), seed), true);
+                let event = run_head_first(EdgeEnv::new(cfg(), seed), false);
+                assert_reports_bit_identical(&tick, &event);
+            }
+        }
+    }
+
+    #[test]
+    fn event_core_matches_tick_core_on_scripted_fault_replay() {
+        // Record a live churn episode's fault trace, then replay it
+        // scripted on both cores: all three must agree bit-for-bit.
+        let cfg = || {
+            let mut cfg = ExperimentConfig::preset_8node(0.1).env;
+            cfg.tasks_per_episode = 32;
+            cfg.faults = Some(FaultsConfig {
+                mtbf: 120.0,
+                mttr: 40.0,
+                zones: 4,
+                straggler_rate: 0.01,
+                spec_beta: 1.4,
+                max_retries: 3,
+                ..FaultsConfig::default()
+            });
+            cfg
+        };
+        let mut live = EdgeEnv::new(cfg(), 51);
+        let l = live.cfg.queue_window;
+        let s_max = live.cfg.s_max;
+        for _ in 0..=live.cfg.step_limit {
+            while let Some(idx) = live.first_feasible() {
+                if live.schedule_task_at(idx, s_max).is_none() {
+                    break;
+                }
+            }
+            if live.step(&Action::noop(l)).done {
+                break;
+            }
+        }
+        let trace = live.fault_events().to_vec();
+        let live_rep = live.report();
+        let replay = |legacy: bool| {
+            let mut e = EdgeEnv::new(cfg(), 51);
+            e.script_faults(trace.clone()).unwrap();
+            run_head_first(e, legacy)
+        };
+        assert_reports_bit_identical(&live_rep, &replay(true));
+        assert_reports_bit_identical(&live_rep, &replay(false));
+    }
+
+    #[test]
+    fn first_feasible_memo_matches_full_rescan() {
+        // At every decision point of a driven episode, the memo-backed
+        // `first_feasible` must agree with the seed's full rescan on an
+        // identical clone.
+        let mut e = EdgeEnv::new(ExperimentConfig::preset_8node(0.15).env, 61);
+        let l = e.cfg.queue_window;
+        let s_max = e.cfg.s_max;
+        for _ in 0..=e.cfg.step_limit {
+            loop {
+                let mut scan = e.clone();
+                scan.set_legacy_scan(true);
+                assert_eq!(e.first_feasible(), scan.first_feasible());
+                let Some(idx) = e.first_feasible() else { break };
+                if e.schedule_task_at(idx, s_max).is_none() {
+                    break;
+                }
+            }
+            if e.step(&Action::noop(l)).done {
+                break;
+            }
+        }
     }
 }

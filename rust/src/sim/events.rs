@@ -1,0 +1,136 @@
+//! Calendar queue for the event-driven simulator core.
+//!
+//! The environment keeps its fixed decision cadence (`EdgeEnv::step` is one
+//! `decision_dt` tick — per-tick busy credit, per-tick stochastic fault
+//! draws and per-tick `remaining` decrements are all observable, so ticks
+//! cannot be skipped without changing results bit-for-bit). What *can* be
+//! evented away is the per-tick scanning:
+//!
+//! - **Completions** come from the cluster's incremental busy set
+//!   (`Cluster::advance_into` walks O(busy) servers, not O(fleet)).
+//! - **Arrivals** are already O(1) per tick: `TaskSource` keeps a one-task
+//!   lookahead cursor.
+//! - **Fault transitions** are either scripted (a sorted cursor) or
+//!   per-server stochastic draws whose RNG order is part of the CRN
+//!   contract and must be replayed tick by tick.
+//! - **Speculative-launch deadlines** are the one genuinely sparse,
+//!   future-dated condition (`now - start > beta * nominal` per in-flight
+//!   attempt), and this queue hosts them: the fault sweep consults
+//!   `next_time()` instead of scanning every in-flight attempt every tick.
+//!
+//! Keys are caller-defined (attempt sequence numbers); cancellation is
+//! lazy — stale keys are dropped by the consumer when they no longer map
+//! to a live attempt. Ordering is (time, key) ascending; times are
+//! non-negative finite f64s compared via their IEEE bit patterns, which is
+//! order-preserving for non-negative floats and keeps the queue totally
+//! ordered (and `Ord`-safe) without wrapping comparators around NaN.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// Min-heap of (time, key) events.
+#[derive(Clone, Debug, Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<Reverse<(u64, u64)>>,
+}
+
+impl EventQueue {
+    pub fn new() -> EventQueue {
+        EventQueue::default()
+    }
+
+    /// Schedule `key` at simulated time `time` (non-negative, finite).
+    pub fn push(&mut self, time: f64, key: u64) {
+        debug_assert!(time >= 0.0 && time.is_finite(), "event time {time}");
+        self.heap.push(Reverse((time.to_bits(), key)));
+    }
+
+    /// Time of the earliest pending event.
+    pub fn next_time(&self) -> Option<f64> {
+        self.heap.peek().map(|Reverse((t, _))| f64::from_bits(*t))
+    }
+
+    /// Pop every event with time <= `horizon` into `out` (cleared first),
+    /// in (time, key) order. Returns the number popped.
+    pub fn pop_due_into(&mut self, horizon: f64, out: &mut Vec<u64>) -> usize {
+        out.clear();
+        while let Some(Reverse((t, _))) = self.heap.peek() {
+            if f64::from_bits(*t) > horizon {
+                break;
+            }
+            let Reverse((_, key)) = self.heap.pop().expect("peeked");
+            out.push(key);
+        }
+        out.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    pub fn clear(&mut self) {
+        self.heap.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order_with_key_tiebreak() {
+        let mut q = EventQueue::new();
+        q.push(5.0, 2);
+        q.push(1.0, 9);
+        q.push(5.0, 1);
+        q.push(0.5, 3);
+        assert_eq!(q.len(), 4);
+        assert_eq!(q.next_time(), Some(0.5));
+        let mut out = Vec::new();
+        assert_eq!(q.pop_due_into(f64::INFINITY, &mut out), 4);
+        assert_eq!(out, vec![3, 9, 1, 2]);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn horizon_gates_pops() {
+        let mut q = EventQueue::new();
+        q.push(1.0, 1);
+        q.push(2.0, 2);
+        q.push(3.0, 3);
+        let mut out = Vec::new();
+        q.pop_due_into(2.0, &mut out);
+        assert_eq!(out, vec![1, 2]);
+        assert_eq!(q.next_time(), Some(3.0));
+        // The buffer is cleared on each call.
+        q.pop_due_into(10.0, &mut out);
+        assert_eq!(out, vec![3]);
+        assert!(q.next_time().is_none());
+    }
+
+    #[test]
+    fn fractional_times_order_correctly_via_bits() {
+        let mut q = EventQueue::new();
+        q.push(0.1 + 0.2, 1); // 0.30000000000000004
+        q.push(0.3, 2);
+        let mut out = Vec::new();
+        q.pop_due_into(1.0, &mut out);
+        assert_eq!(out, vec![2, 1]);
+    }
+
+    #[test]
+    fn clone_is_independent() {
+        let mut a = EventQueue::new();
+        a.push(1.0, 1);
+        let mut b = a.clone();
+        b.push(0.5, 2);
+        assert_eq!(a.len(), 1);
+        assert_eq!(b.len(), 2);
+        a.clear();
+        assert!(a.is_empty() && !b.is_empty());
+    }
+}

@@ -9,6 +9,7 @@
 
 pub mod cluster;
 pub mod env;
+pub mod events;
 pub mod exec_model;
 pub mod quality;
 pub mod server;

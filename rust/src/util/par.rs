@@ -1,0 +1,113 @@
+//! Deterministic fork-join over independent sweep cells.
+//!
+//! The experiment grids (`eat scenarios` / `eat qos` / `eat faults`)
+//! evaluate many (config, seed) cells whose RNG streams are forked
+//! per-cell up front, so cells share no state and can run concurrently
+//! without touching the common-random-number pairing *within* a cell.
+//! [`map_cells`] farms the cells out to a scoped thread pool and returns
+//! results in input order, so the output is byte-identical regardless of
+//! thread count or completion order — pinned by a property test in the
+//! experiments layer.
+//!
+//! No ecosystem crates are available offline (see `util/mod.rs`), so this
+//! is a minimal `std::thread::scope` pool over a shared atomic cursor.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Default worker count: the machine's available parallelism, falling
+/// back to 1 when it cannot be queried.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Apply `f` to every item, using up to `threads` workers, returning
+/// results in input order.
+///
+/// `f` must be deterministic per item for the thread-count independence
+/// guarantee to mean anything; each worker claims items off a shared
+/// cursor, computes, and writes the result into the item's own slot.
+/// With `threads <= 1` (or a single item) everything runs inline on the
+/// caller's thread — no spawn, identical results.
+pub fn map_cells<T, R, F>(items: Vec<T>, threads: usize, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    let n = items.len();
+    if threads <= 1 || n <= 1 {
+        return items.into_iter().map(f).collect();
+    }
+    let workers = threads.min(n);
+    // Hand out items through a cursor over Option slots; collect results
+    // into pre-sized Option slots keyed by the same index.
+    let jobs: Vec<Mutex<Option<T>>> = items.into_iter().map(|t| Mutex::new(Some(t))).collect();
+    let results: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    let cursor = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let item = jobs[i].lock().expect("job slot").take().expect("unclaimed job");
+                let r = f(item);
+                *results[i].lock().expect("result slot") = Some(r);
+            });
+        }
+    });
+    results
+        .into_iter()
+        .map(|m| m.into_inner().expect("result lock").expect("worker wrote slot"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_input_order() {
+        let items: Vec<usize> = (0..37).collect();
+        let out = map_cells(items, 4, |i| i * i);
+        assert_eq!(out, (0..37).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn thread_count_does_not_change_output() {
+        let work = |i: usize| {
+            // Unequal per-item cost so completion order differs from
+            // claim order under real parallelism.
+            let mut acc = i as u64;
+            for k in 0..(i % 7) * 1000 {
+                acc = acc.wrapping_mul(6364136223846793005).wrapping_add(k);
+            }
+            (i, acc)
+        };
+        let base = map_cells((0..25).collect(), 1, work);
+        for threads in [2, 3, 8] {
+            assert_eq!(map_cells((0..25).collect(), threads, work), base);
+        }
+    }
+
+    #[test]
+    fn single_item_runs_inline() {
+        let out = map_cells(vec![41usize], 8, |i| i + 1);
+        assert_eq!(out, vec![42]);
+    }
+
+    #[test]
+    fn empty_input_yields_empty_output() {
+        let out: Vec<usize> = map_cells(Vec::<usize>::new(), 4, |i| i);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn default_threads_is_positive() {
+        assert!(default_threads() >= 1);
+    }
+}
