@@ -151,6 +151,36 @@ mod tests {
     }
 
     #[test]
+    fn pooled_percentiles_match_manually_merged_episodes() {
+        // EvalSummary's percentile columns come from the merged histogram;
+        // re-running the same CRN episodes by hand and merging their
+        // per-episode collectors must land on the same bits.
+        let cfg = ExperimentConfig::preset_4node(0.05);
+        let episodes = 3;
+        let s = evaluate(&cfg, &mut GreedyPolicy::new(cfg.env.clone()), episodes);
+        let mut policy = GreedyPolicy::new(cfg.env.clone());
+        let mut pooled = MetricsCollector::new(cfg.env.num_servers);
+        for ep in 0..episodes {
+            let mut wl_rng = Pcg64::new(cfg.seed.wrapping_add(ep as u64), 0xC0FFEE);
+            let workload = Workload::generate(&cfg.env, &mut wl_rng);
+            let mut env = EdgeEnv::with_workload(
+                cfg.env.clone(),
+                workload,
+                Pcg64::new(cfg.seed.wrapping_add(ep as u64), 0xE21),
+            );
+            let rep = run_episode(&mut env, &mut policy, None);
+            pooled.merge(env.metrics());
+            if rep.completed_tasks == 0 {
+                pooled.latency.observe(rep.sim_time);
+            }
+        }
+        for (q, got) in [(0.5, s.p50_latency), (0.9, s.p90_latency), (0.99, s.p99_latency)] {
+            let want = pooled.latency.percentile(q).unwrap();
+            assert_eq!(want.to_bits(), got.to_bits(), "q={q}: {want} vs {got}");
+        }
+    }
+
+    #[test]
     fn tenant_config_flows_through_evaluate() {
         use crate::qos::TenantsConfig;
         let mut cfg = ExperimentConfig::preset_8node(0.1);

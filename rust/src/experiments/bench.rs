@@ -128,24 +128,19 @@ pub fn run_cell(
     })
 }
 
-/// Peak resident set size in MiB from /proc/self/status (0 where absent,
-/// e.g. non-Linux).
-pub fn peak_rss_mib() -> f64 {
-    let Ok(status) = std::fs::read_to_string("/proc/self/status") else {
-        return 0.0;
-    };
+/// Peak resident set size in MiB from /proc/self/status. `None` where the
+/// probe has no source (non-Linux, or an unparsable VmHWM line) — reported
+/// as JSON `null` rather than a fake 0, so downstream tooling can tell
+/// "no data" from "no memory".
+pub fn peak_rss_mib() -> Option<f64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
     for line in status.lines() {
         if let Some(rest) = line.strip_prefix("VmHWM:") {
-            let kb: f64 = rest
-                .trim()
-                .trim_end_matches("kB")
-                .trim()
-                .parse()
-                .unwrap_or(0.0);
-            return kb / 1024.0;
+            let kb: f64 = rest.trim().trim_end_matches("kB").trim().parse().ok()?;
+            return Some(kb / 1024.0);
         }
     }
-    0.0
+    None
 }
 
 fn cell_json(c: &CellResult) -> Value {
@@ -187,7 +182,7 @@ pub fn report_json(quick: bool, seed: u64, cells: &[(usize, usize, Vec<CellResul
         .set("quick", quick)
         .set("seed", seed)
         .set("steps_per_task", BENCH_STEPS as usize)
-        .set("peak_rss_mib", peak_rss_mib())
+        .set("peak_rss_mib", peak_rss_mib().map_or(Value::Null, Value::Num))
         .set("grid", grid_rows);
     doc
 }
@@ -276,17 +271,17 @@ pub fn run(args: &Args) -> anyhow::Result<String> {
     let mut cells: Vec<(usize, usize, Vec<CellResult>)> = Vec::new();
     for (servers, tasks, with_tick) in grid(quick) {
         let mut results = Vec::new();
-        eprintln!("bench: {servers} servers / {tasks} tasks (event core)...");
+        crate::log_info!("bench: {servers} servers / {tasks} tasks (event core)...");
         let event = run_cell(servers, tasks, seed, false)?;
-        eprintln!(
+        crate::log_info!(
             "  event: {:.0} tasks/s ({} completed, {:.2}s wall, p99 decision {:.0}us)",
             event.tasks_per_s, event.completed, event.wall_s, event.decision_p99_us
         );
         results.push(event);
         if with_tick {
-            eprintln!("bench: {servers} servers / {tasks} tasks (tick core)...");
+            crate::log_info!("bench: {servers} servers / {tasks} tasks (tick core)...");
             let tick = run_cell(servers, tasks, seed, true)?;
-            eprintln!(
+            crate::log_info!(
                 "  tick:  {:.0} tasks/s ({} completed, {:.2}s wall, p99 decision {:.0}us)",
                 tick.tasks_per_s, tick.completed, tick.wall_s, tick.decision_p99_us
             );
@@ -309,12 +304,12 @@ pub fn run(args: &Args) -> anyhow::Result<String> {
     if let Some(baseline_path) = args.get("check") {
         let baseline = json::parse(&std::fs::read_to_string(baseline_path)?)?;
         check_against_baseline(&doc, &baseline, 0.8)?;
-        eprintln!("baseline check vs {baseline_path}: ok");
+        crate::log_info!("baseline check vs {baseline_path}: ok");
     }
     let rendered = doc.to_json_pretty();
     std::fs::write(&out_path, format!("{rendered}\n"))?;
     println!("{rendered}");
-    eprintln!("wrote {out_path}");
+    crate::log_info!("wrote {out_path}");
     Ok(rendered)
 }
 
@@ -371,6 +366,21 @@ mod tests {
         // The speedup gate passes at 10x and fails at 13x.
         check_speedup(&cells, 10.0).unwrap();
         assert!(check_speedup(&cells, 13.0).is_err());
+    }
+
+    #[test]
+    fn peak_rss_probe_is_positive_or_null() {
+        let doc = report_json(true, 1, &[]);
+        let field = doc.req("peak_rss_mib").unwrap();
+        match peak_rss_mib() {
+            // Linux: VmHWM exists and a running process has touched memory.
+            Some(mib) => {
+                assert!(mib > 0.0, "VmHWM parsed but non-positive: {mib}");
+                assert!(field.as_f64().is_some_and(|x| x > 0.0));
+            }
+            // Elsewhere the report must say null, never a fake 0.
+            None => assert!(matches!(field, Value::Null)),
+        }
     }
 
     #[test]

@@ -17,6 +17,7 @@
 
 use crate::config::ExperimentConfig;
 use crate::faults::FaultsConfig;
+use crate::obs::trace::TraceRecorder;
 use crate::qos::{TenantRegistry, TenantsConfig};
 use crate::sim::env::{Action, EdgeEnv};
 use crate::sim::task::Workload;
@@ -138,6 +139,29 @@ fn run_cell(cfg: &ExperimentConfig, episodes: usize, steps: u32) -> FaultCell {
         inflight_patch_s: inflight_ps,
         tenants: pooled.tenant_reports(),
     }
+}
+
+/// Re-run episode 0 of `cfg` with lifecycle tracing on and return the
+/// recorder. Recording never perturbs the episode (no RNG draws, no
+/// scheduling feedback — pinned by `tracing_on_or_off_is_bit_identical`
+/// in `sim::env`), so the trace describes exactly what the sweep measured.
+pub fn traced_episode(cfg: &ExperimentConfig, steps: u32) -> TraceRecorder {
+    let mut wl_rng = Pcg64::new(cfg.seed, 0xC0FFEE);
+    let workload = Workload::generate(&cfg.env, &mut wl_rng);
+    let mut env = EdgeEnv::with_workload(cfg.env.clone(), workload, Pcg64::new(cfg.seed, 0xE21));
+    env.enable_tracing(TraceRecorder::default_capacity());
+    let noop = Action::noop(cfg.env.queue_window);
+    loop {
+        while let Some(idx) = env.first_feasible() {
+            if env.schedule_task_at(idx, steps).is_none() {
+                break;
+            }
+        }
+        if env.step(&noop).done {
+            break;
+        }
+    }
+    env.take_tracer().expect("tracing was enabled")
 }
 
 /// Run the full sweep; one `FaultCell` per combination, in sweep order.
@@ -309,6 +333,22 @@ pub fn run(args: &Args) -> anyhow::Result<String> {
     println!("{out}");
     println!("goodput column is completed tasks per 1000 simulated seconds");
     super::save_csv(&format!("faults_n{nodes}"), &table.to_csv())?;
+    if let Some(path) = args.get("trace") {
+        // Trace the first sweep cell's episode 0 — the same config the
+        // sweep just measured — and export it for `eat trace analyze`.
+        let mut faults = faults_base.clone();
+        faults.mtbf = mtbfs.first().copied().unwrap_or(0.0);
+        faults.zone_shock_rate = zone_rates.first().copied().unwrap_or(0.0);
+        faults.straggler_rate = straggler_rates.first().copied().unwrap_or(0.0);
+        faults.health_aware = modes.first().copied().unwrap_or(true);
+        let mut cfg = template.clone();
+        cfg.env.tenants = Some(tenants_base.clone());
+        cfg.env.faults = Some(faults);
+        cfg.env.validate()?;
+        let tr = traced_episode(&cfg, 20);
+        tr.write_jsonl(path)?;
+        println!("wrote trace {path} ({} events, {} evicted)", tr.len(), tr.evicted());
+    }
     Ok(out)
 }
 
@@ -486,6 +526,19 @@ mod tests {
                 "sweep diverged at {threads} threads"
             );
         }
+    }
+
+    #[test]
+    fn traced_episode_books_balance() {
+        let mut cfg = light_gang_template(30, 5);
+        cfg.env.tenants = Some(TenantsConfig::three_tier(0.1));
+        cfg.env.faults = Some(churn_base());
+        cfg.env.validate().unwrap();
+        let tr = traced_episode(&cfg, 20);
+        assert!(!tr.is_empty());
+        let a = crate::obs::analyze::analyze_jsonl(&tr.to_jsonl()).unwrap();
+        a.check_books().unwrap();
+        assert!(!a.tasks.is_empty());
     }
 
     #[test]

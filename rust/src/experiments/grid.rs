@@ -87,7 +87,7 @@ pub fn run(args: &Args) -> anyhow::Result<String> {
         cfg.algorithm = *alg;
         cfg.seed = seed;
         if verbose {
-            eprintln!("preparing {} ({} nodes)...", alg.name(), nodes);
+            crate::log_debug!("preparing {} ({} nodes)...", alg.name(), nodes);
         }
         let mut policy = super::trained_policy(&cfg, rt.as_ref(), train_episodes, verbose)?;
         let mut q_row = vec![alg.name().to_string()];
@@ -99,7 +99,7 @@ pub fn run(args: &Args) -> anyhow::Result<String> {
             ecfg.env.arrival_rate = rate;
             let summary = evaluate(&ecfg, policy.as_mut(), episodes);
             if verbose {
-                eprintln!(
+                crate::log_debug!(
                     "  {} rate {rate}: q={:.3} lat={:.1} reload={:.3}",
                     alg.name(),
                     summary.avg_quality,

@@ -108,12 +108,12 @@ pub fn trained_policy(
             if std::path::Path::new(&ckpt).exists() {
                 driver.load_actor(&ckpt)?;
                 if verbose {
-                    eprintln!("loaded checkpoint {ckpt}");
+                    crate::log_debug!("loaded checkpoint {ckpt}");
                 }
             } else if train_episodes > 0 {
                 driver.train_loop(cfg, train_episodes, |p| {
                     if verbose {
-                        eprintln!(
+                        crate::log_debug!(
                             "  [PPO ep {}] reward {:.1} len {}",
                             p.episode, p.reward, p.episode_len
                         );
@@ -131,12 +131,12 @@ pub fn trained_policy(
             if std::path::Path::new(&ckpt).exists() {
                 driver.load_actor(&ckpt)?;
                 if verbose {
-                    eprintln!("loaded checkpoint {ckpt}");
+                    crate::log_debug!("loaded checkpoint {ckpt}");
                 }
             } else if train_episodes > 0 {
                 driver.train_loop(cfg, train_episodes, |p| {
                     if verbose {
-                        eprintln!(
+                        crate::log_debug!(
                             "  [{} ep {}] reward {:.1} len {} critic {:.3}",
                             cfg.algorithm.name(),
                             p.episode,

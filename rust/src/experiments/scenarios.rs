@@ -96,7 +96,7 @@ pub fn run(args: &Args) -> anyhow::Result<String> {
                 let path = format!("{dir}/{scenario}_ep{ep}.jsonl");
                 trace::write_file(&w, &path)?;
                 if verbose {
-                    eprintln!("recorded {path} ({} tasks)", w.len());
+                    crate::log_debug!("recorded {path} ({} tasks)", w.len());
                 }
             }
         }
@@ -120,7 +120,7 @@ pub fn run(args: &Args) -> anyhow::Result<String> {
         verbose: bool,
     ) -> anyhow::Result<Vec<String>> {
         if verbose {
-            eprintln!("scenario {scenario}: running {}...", cfg.algorithm.name());
+            crate::log_debug!("scenario {scenario}: running {}...", cfg.algorithm.name());
         }
         let mut policy = super::trained_policy(cfg, rt, train_episodes, verbose)?;
         let s = evaluate(cfg, policy.as_mut(), episodes);
@@ -156,6 +156,26 @@ pub fn run(args: &Args) -> anyhow::Result<String> {
     let out = table.render();
     println!("{out}");
     super::save_csv(&format!("scenarios_n{nodes}"), &table.to_csv())?;
+    if let Some(path) = args.get("trace") {
+        // Trace the first (scenario × algorithm) cell's episode 0 — the
+        // same CRN streams the sweep used, with the same policy driving
+        // dispatch — and export it for `eat trace analyze`.
+        let scenario = scenarios.first().map(String::as_str).unwrap_or("poisson");
+        let mut cfg = ExperimentConfig::preset(nodes);
+        cfg.seed = seed;
+        cfg.env.arrival_rate = rate;
+        cfg.env.workload = Some(WorkloadConfig::preset(scenario, rate)?);
+        cfg.algorithm = *algorithms.first().unwrap_or(&Algorithm::Greedy);
+        let mut policy = super::trained_policy(&cfg, rt.as_ref(), train_episodes, verbose)?;
+        let mut wl_rng = Pcg64::new(seed, 0xC0FFEE);
+        let workload = Workload::generate(&cfg.env, &mut wl_rng);
+        let mut env = EdgeEnv::with_workload(cfg.env.clone(), workload, Pcg64::new(seed, 0xE21));
+        env.enable_tracing(crate::obs::trace::TraceRecorder::default_capacity());
+        run_episode(&mut env, policy.as_mut(), None);
+        let tr = env.take_tracer().expect("tracing was enabled");
+        tr.write_jsonl(path)?;
+        println!("wrote trace {path} ({} events, {} evicted)", tr.len(), tr.evicted());
+    }
     Ok(out)
 }
 

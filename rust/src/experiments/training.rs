@@ -59,7 +59,7 @@ pub fn run(args: &Args) -> anyhow::Result<String> {
         cfg.seed = seed;
         let on_ep = |p: &EpisodePoint| {
             if verbose {
-                eprintln!(
+                crate::log_debug!(
                     "  [{} ep {}] reward {:.1} len {}",
                     alg.name(),
                     p.episode,

@@ -37,6 +37,7 @@ pub mod config;
 pub mod coordinator;
 pub mod experiments;
 pub mod faults;
+pub mod obs;
 pub mod policy;
 pub mod qos;
 pub mod rl;

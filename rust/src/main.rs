@@ -47,6 +47,7 @@ use eat::experiments;
 use eat::rl::{PpoDriver, SacDriver};
 use eat::runtime::Runtime;
 use eat::util::cli::Args;
+use eat::{log_info, log_warn};
 
 fn usage() -> ! {
     eprintln!(
@@ -63,27 +64,31 @@ fn usage() -> ! {
          \x20           [--dispatch-timeout S] [--max-rounds R] [--defer-timeout S]\n\
          \x20           [--config file.json (reads its \"serving\" section)]\n\
          \x20           [--max-patches P] [--kill-at K [--kill-worker W] [--wedge]]\n\
-         \x20           [--respawn-at K]\n\
+         \x20           [--respawn-at K] [--metrics-addr 127.0.0.1:9184] [--trace out.jsonl]\n\
          \n  eat scenarios [--nodes N] [--episodes K] [--rate R] [--algs a,b,c]\n\
          \x20             [--scenarios poisson,bursty,...] [--record dir]\n\
-         \x20             [--replay file [--scenario name] [--ep K]]\n\
+         \x20             [--replay file [--scenario name] [--ep K]] [--trace out.jsonl]\n\
          \n  eat qos     [--nodes N] [--tasks K] [--episodes E] [--rate R] [--seed S]\n\
          \x20           [--overloads 1.0,3.0] [--admissions admit-all,drop-tail,token-bucket]\n\
          \x20           [--queues fifo,edf] [--max-queue Q] [--bucket-rate R] [--bucket-burst B]\n\
          \n  eat faults  [--nodes N] [--tasks K] [--episodes E] [--rate R] [--seed S]\n\
          \x20           [--mtbfs 0,600,200] [--zone-rates 0.002] [--straggler-rates 0.005]\n\
          \x20           [--modes aware,blind] [--mttr T] [--zones Z] [--spec-beta B]\n\
-         \x20           [--max-retries R] [--threads T]\n\
+         \x20           [--max-retries R] [--threads T] [--trace out.jsonl]\n\
          \n  eat bench   [--quick] [--seed S] [--out BENCH_sim.json]\n\
          \x20           [--check BASELINE.json] [--min-speedup X]\n\
          \n  eat trace import <csv> <out.jsonl>\n\
-         \n  eat info"
+         \n  eat trace analyze <trace.jsonl> [--json]   decompose per-task latency into\n\
+         \x20     queue/retry/cold/exec/straggler components (non-zero exit on imbalance)\n\
+         \n  eat info\n\
+         \nglobal: --quiet caps progress logging at warnings; EAT_LOG=error|warn|info|debug"
     );
     std::process::exit(2)
 }
 
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
+    eat::obs::log::init(args.has_flag("quiet"), args.has_flag("verbose"));
     let Some(cmd) = args.positional.first().map(String::as_str) else {
         usage()
     };
@@ -184,6 +189,20 @@ fn main() -> anyhow::Result<()> {
                 };
                 let n = eat::workload::import::import_file(csv, out)?;
                 println!("imported {n} tasks: {csv} -> {out}");
+            }
+            Some("analyze") => {
+                let Some(path) = args.positional.get(2) else { usage() };
+                let text = std::fs::read_to_string(path)
+                    .map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+                let analysis = eat::obs::analyze_jsonl(&text)?;
+                if args.has_flag("json") {
+                    println!("{}", analysis.to_json(path).to_json_pretty());
+                } else {
+                    println!("{}", analysis.render(path));
+                }
+                // Books invariant: every decomposition must sum to its
+                // measured latency bit-exactly; imbalance exits non-zero.
+                analysis.check_books()?;
             }
             _ => usage(),
         },
@@ -339,9 +358,24 @@ fn serve(args: &Args) -> anyhow::Result<()> {
     let mut tracker = Cluster::new(workers); // mirrors worker model state
     let workload = Workload::generate(&cfg, &mut Pcg64::new(seed, 1));
     let mut metrics = MetricsCollector::new(workers);
+    // --metrics-addr: a live Prometheus text-exposition endpoint sharing
+    // one registry with the serving loop, scrapeable mid-run.
+    let metrics_srv = args
+        .get("metrics-addr")
+        .map(|addr| -> anyhow::Result<_> {
+            let reg = Arc::new(eat::obs::MetricRegistry::new());
+            let server = eat::obs::MetricsServer::bind(addr, reg.clone())?;
+            log_info!("metrics: exposition live on http://{}/metrics", server.local_addr());
+            Ok((reg, server))
+        })
+        .transpose()?;
+    // --trace: record every task's lifecycle spans for `eat trace analyze`.
+    let mut tracer = args
+        .get("trace")
+        .map(|_| eat::obs::TraceRecorder::new(eat::obs::TraceRecorder::default_capacity()));
 
     let t0 = std::time::Instant::now();
-    let result = serve_loop(
+    let mut result = serve_loop(
         &host,
         &mut pool,
         &mut tracker,
@@ -352,6 +386,8 @@ fn serve(args: &Args) -> anyhow::Result<()> {
         plain_timeout,
         time_scale,
         &inject,
+        metrics_srv.as_ref().map(|(reg, _)| reg.as_ref()),
+        tracer.as_mut(),
     );
     // Teardown runs on EVERY exit path: a dispatch error used to return
     // early and strand the worker listeners and their threads.
@@ -361,6 +397,11 @@ fn serve(args: &Args) -> anyhow::Result<()> {
     if let Some(reg) = &registry {
         let st = reg.stats();
         metrics.observe_recoveries(st.recoveries);
+        if let Some((mreg, _)) = &metrics_srv {
+            // Final mirror: a recovery landing after the last dispatch
+            // still shows up on the endpoint before teardown.
+            export_health(mreg, st, reg.counts());
+        }
         println!(
             "health: {} probes  {} downs  {} recoveries  ({}/{} workers up)",
             st.probes,
@@ -388,8 +429,44 @@ fn serve(args: &Args) -> anyhow::Result<()> {
             metrics.wasted_ps()
         );
     }
+    if let (Some(path), Some(tr)) = (args.get("trace"), tracer.as_ref()) {
+        let wrote = tr.write_jsonl(path).map(|()| {
+            println!(
+                "wrote trace {path} ({} events, {} evicted)",
+                tr.len(),
+                tr.evicted()
+            );
+        });
+        result = result.and(wrote);
+    }
     pool.shutdown();
     result
+}
+
+/// Mirror the health registry's monotone totals and up/down gauges into
+/// the Prometheus registry (used per task iteration and once at teardown).
+fn export_health(
+    mreg: &eat::obs::MetricRegistry,
+    st: eat::serving::HealthStats,
+    (up, total): (usize, usize),
+) {
+    mreg.counter_set("eat_health_probes_total", "heartbeat probes sent", st.probes);
+    mreg.counter_set(
+        "eat_health_downs_total",
+        "up->down worker transitions",
+        st.downs,
+    );
+    mreg.counter_set(
+        "eat_recoveries_total",
+        "down->up worker transitions (a probe revived the worker)",
+        st.recoveries,
+    );
+    mreg.gauge_set(
+        "eat_workers_up",
+        "workers currently believed up",
+        up as f64,
+    );
+    mreg.gauge_set("eat_workers", "worker pool size", total as f64);
 }
 
 /// Inference steps the serving loop requests for every task. The
@@ -421,7 +498,10 @@ fn serve_loop(
     plain_timeout: std::time::Duration,
     time_scale: f64,
     inject: &FaultInjection,
+    mreg: Option<&eat::obs::MetricRegistry>,
+    mut tracer: Option<&mut eat::obs::TraceRecorder>,
 ) -> anyhow::Result<()> {
+    use eat::obs::trace::{GangRef, SpanKind};
     use eat::sim::cluster::Selection;
     use eat::sim::task::ModelType;
     use std::time::{Duration, Instant};
@@ -443,7 +523,7 @@ fn serve_loop(
                 } else {
                     pool.respawn(w)?;
                 }
-                println!(">>> revived worker {w} before task {}", task.id);
+                log_warn!(">>> revived worker {w} before task {}", task.id);
                 if let Some(reg) = registry {
                     // Block until a probe confirms the revival, so the
                     // demonstration is deterministic.
@@ -485,7 +565,10 @@ fn serve_loop(
                 // than workers) used to vanish silently; count it so the
                 // summary reflects deferred work instead of hiding it.
                 metrics.observe_deferred();
-                eprintln!(
+                if let Some(mr) = mreg {
+                    mr.counter_add("eat_deferred_total", "tasks deferred (no feasible gang)", 1);
+                }
+                log_warn!(
                     "task {:>3}  patches {}  deferred: no feasible gang on {} workers",
                     task.id,
                     task.patches,
@@ -505,10 +588,10 @@ fn serve_loop(
             let w = inject.worker.unwrap_or(gang[0]);
             if inject.wedge {
                 pool.wedge(w);
-                println!(">>> wedged worker {w} before task {} (accepts, never replies)", task.id);
+                log_warn!(">>> wedged worker {w} before task {} (accepts, never replies)", task.id);
             } else {
                 pool.kill(w);
-                println!(">>> killed worker {w} before task {}", task.id);
+                log_warn!(">>> killed worker {w} before task {}", task.id);
             }
             faulted = Some(w);
         }
@@ -517,6 +600,15 @@ fn serve_loop(
             // Idle until the task arrives.
             metrics.advance_time(task.arrival - sim_clock);
             sim_clock = task.arrival;
+        }
+        // The dispatch instant on the simulated timeline. The analyzer's
+        // queue component is `dispatch.t - admitted.t`, which equals
+        // `waiting` bit-exactly: backlogged tasks dispatch at the old
+        // sim_clock (the same subtraction), fresh ones at their arrival
+        // (a zero subtraction).
+        let dispatched_at = sim_clock;
+        if let Some(tr) = tracer.as_deref_mut() {
+            tr.record(task.arrival, task.id, task.tenant, SpanKind::Admitted);
         }
         let steps = SERVE_STEPS;
         let prompt = format!("prompt-{}", task.prompt_id);
@@ -527,8 +619,8 @@ fn serve_loop(
                     .into_iter()
                     .filter(|w| !gang.contains(w))
                     .collect();
-                let (out, excluded) = host
-                    .dispatch_resilient_collect(
+                let (out, excluded) = match tracer.as_deref_mut() {
+                    Some(tr) => host.dispatch_resilient_traced(
                         task.id,
                         &prompt,
                         steps,
@@ -541,8 +633,25 @@ fn serve_loop(
                         time_scale,
                         waiting,
                         metrics,
-                    )
-                    .map_err(|e| anyhow::anyhow!("{e} (task ordinal {ordinal})"))?;
+                        dispatched_at,
+                        tr,
+                    ),
+                    None => host.dispatch_resilient_collect(
+                        task.id,
+                        &prompt,
+                        steps,
+                        task.model.0,
+                        task.tenant,
+                        &gang,
+                        &spares,
+                        timeout,
+                        serving.max_rounds,
+                        time_scale,
+                        waiting,
+                        metrics,
+                    ),
+                }
+                .map_err(|e| anyhow::anyhow!("{e} (task ordinal {ordinal})"))?;
                 // Down until a heartbeat probe revives them; their mirror
                 // loses the loaded weights immediately.
                 for &w in &excluded {
@@ -565,6 +674,45 @@ fn serve_loop(
                         metrics,
                     )
                     .map_err(|e| anyhow::anyhow!("{e} (task ordinal {ordinal})"))?;
+                if let Some(tr) = tracer.as_deref_mut() {
+                    // The plain path has no rounds: one dispatch, one
+                    // completion, response booked as waiting + exec (the
+                    // same expression `dispatch_collect` observed).
+                    let (cold, exec) = out
+                        .results
+                        .iter()
+                        .map(|r| (r.load_time, r.exec_time))
+                        .max_by(|a, b| (a.0 + a.1).total_cmp(&(b.0 + b.1)))
+                        .unwrap_or((0.0, 0.0));
+                    let members: Vec<usize> = out.results.iter().map(|r| r.worker_id).collect();
+                    let gref = GangRef::capture(&members, |i| {
+                        out.results.get(i).is_some_and(|r| r.reused)
+                    });
+                    let tid = task.id;
+                    tr.record(
+                        dispatched_at,
+                        tid,
+                        task.tenant,
+                        SpanKind::Dispatched {
+                            gang: gref,
+                            cold,
+                            exec,
+                            attempt: 0,
+                            speculative: false,
+                        },
+                    );
+                    tr.record(dispatched_at, tid, task.tenant, SpanKind::ExecStart);
+                    tr.record(
+                        dispatched_at + out.sim_exec_seconds(),
+                        tid,
+                        task.tenant,
+                        SpanKind::Completed {
+                            response: waiting + out.sim_exec_seconds(),
+                            start: dispatched_at,
+                            speculative: false,
+                        },
+                    );
+                }
                 (out, Vec::new())
             }
         };
@@ -578,7 +726,34 @@ fn serve_loop(
         // replaced excluded members, and a rebuilt gang is a fresh load.
         let final_gang: Vec<usize> = out.results.iter().map(|r| r.worker_id).collect();
         tracker.dispatch(&final_gang, 0.0, model, reuse && excluded.is_empty(), sim_clock);
-        println!(
+        if let Some(mr) = mreg {
+            mr.counter_add("eat_dispatches_total", "gang dispatches issued", 1);
+            mr.counter_set("eat_tasks_completed_total", "tasks completed", metrics.completed());
+            mr.counter_set("eat_retries_total", "gang retry rounds", metrics.retries());
+            mr.counter_set(
+                "eat_failures_total",
+                "worker failures observed by dispatch",
+                metrics.failures(),
+            );
+            mr.observe(
+                "eat_task_latency_seconds",
+                "per-task response latency (simulated seconds)",
+                waiting + sim_s,
+            );
+            let backlog = workload.tasks[ordinal + 1..]
+                .iter()
+                .filter(|t| t.arrival <= sim_clock)
+                .count();
+            mr.gauge_set(
+                "eat_queue_depth",
+                "arrived tasks awaiting dispatch",
+                backlog as f64,
+            );
+            if let Some(reg) = registry {
+                export_health(mr, reg.stats(), reg.counts());
+            }
+        }
+        log_info!(
             "task {:>3}  patches {}  gang {:?}  wait {:>6.1}s  sim {:>6.1}s  reload {}{}  wall {:>6.3}s",
             task.id,
             task.patches,

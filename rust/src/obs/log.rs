@@ -1,0 +1,127 @@
+//! Leveled stderr logger for progress/diagnostic output.
+//!
+//! Machine-readable output (tables, JSON, JSONL) goes to stdout via
+//! `println!` and is never routed through here; everything that is *about*
+//! a run rather than *of* it (progress lines, fault-injection notices,
+//! training telemetry) goes through the `log_*!` macros and lands on
+//! stderr, gated by a global level. The level comes from `EAT_LOG`
+//! (`error|warn|info|debug`), defaults to `info`, and the `--quiet` flag
+//! caps it at `warn`. No timestamps and no allocation on suppressed
+//! calls: the macros test the level before formatting.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+pub const ERROR: u8 = 0;
+pub const WARN: u8 = 1;
+pub const INFO: u8 = 2;
+pub const DEBUG: u8 = 3;
+
+static LEVEL: AtomicU8 = AtomicU8::new(INFO);
+
+/// Parse a level name; `None` for unknown names.
+pub fn parse_level(name: &str) -> Option<u8> {
+    match name.trim().to_ascii_lowercase().as_str() {
+        "error" => Some(ERROR),
+        "warn" | "warning" => Some(WARN),
+        "info" => Some(INFO),
+        "debug" | "trace" => Some(DEBUG),
+        _ => None,
+    }
+}
+
+/// Install the global level from `EAT_LOG`, then apply the `--quiet` /
+/// `--verbose` caps. Call once at process start; tests and library users
+/// that never call it get the `info` default.
+pub fn init(quiet: bool, verbose: bool) {
+    let mut level = std::env::var("EAT_LOG")
+        .ok()
+        .and_then(|v| parse_level(&v))
+        .unwrap_or(INFO);
+    if verbose {
+        level = level.max(DEBUG);
+    }
+    if quiet {
+        level = level.min(WARN);
+    }
+    set_level(level);
+}
+
+pub fn set_level(level: u8) {
+    LEVEL.store(level.min(DEBUG), Ordering::Relaxed);
+}
+
+pub fn level() -> u8 {
+    LEVEL.load(Ordering::Relaxed)
+}
+
+/// Would a message at `level` currently be emitted?
+pub fn enabled(level: u8) -> bool {
+    level <= LEVEL.load(Ordering::Relaxed)
+}
+
+/// Log an error-level line to stderr (shown unless filtered by a hook).
+#[macro_export]
+macro_rules! log_error {
+    ($($arg:tt)*) => {
+        if $crate::obs::log::enabled($crate::obs::log::ERROR) {
+            eprintln!($($arg)*);
+        }
+    };
+}
+
+/// Log a warn-level line to stderr (shown even under `--quiet`).
+#[macro_export]
+macro_rules! log_warn {
+    ($($arg:tt)*) => {
+        if $crate::obs::log::enabled($crate::obs::log::WARN) {
+            eprintln!($($arg)*);
+        }
+    };
+}
+
+/// Log an info-level progress line to stderr (default visibility).
+#[macro_export]
+macro_rules! log_info {
+    ($($arg:tt)*) => {
+        if $crate::obs::log::enabled($crate::obs::log::INFO) {
+            eprintln!($($arg)*);
+        }
+    };
+}
+
+/// Log a debug-level line to stderr (needs `EAT_LOG=debug` or `--verbose`).
+#[macro_export]
+macro_rules! log_debug {
+    ($($arg:tt)*) => {
+        if $crate::obs::log::enabled($crate::obs::log::DEBUG) {
+            eprintln!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_level_names() {
+        assert_eq!(parse_level("error"), Some(ERROR));
+        assert_eq!(parse_level("WARN"), Some(WARN));
+        assert_eq!(parse_level(" info "), Some(INFO));
+        assert_eq!(parse_level("debug"), Some(DEBUG));
+        assert_eq!(parse_level("verbose"), None);
+    }
+
+    #[test]
+    fn level_gates_monotonically() {
+        let before = level();
+        set_level(WARN);
+        assert!(enabled(ERROR));
+        assert!(enabled(WARN));
+        assert!(!enabled(INFO));
+        assert!(!enabled(DEBUG));
+        set_level(DEBUG);
+        assert!(enabled(DEBUG));
+        set_level(before);
+    }
+}

@@ -1,0 +1,293 @@
+//! Live metric registry with a Prometheus text-exposition endpoint.
+//!
+//! A [`MetricRegistry`] holds named counters, gauges, and fixed-bucket
+//! histograms (the same buckets as `workload::LatencyHistogram`, so the
+//! endpoint and the offline reports agree on resolution), behind one
+//! mutex so the serving loop, the health monitor, and the scrape server
+//! can share it via `Arc`. [`MetricsServer`] answers every TCP
+//! connection with an HTTP 200 carrying the version 0.0.4 text format —
+//! scrapeable by real Prometheus or a plain `nc`/`curl`, and tested here
+//! over a bare `TcpStream`.
+//!
+//! No ecosystem crates are available offline (see `util/mod.rs`), so both
+//! the registry and the HTTP shim are hand-rolled minimal std.
+
+use crate::workload::LatencyHistogram;
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+enum Metric {
+    Counter(u64),
+    Gauge(f64),
+    Histogram(LatencyHistogram),
+}
+
+struct Entry {
+    help: &'static str,
+    metric: Metric,
+}
+
+/// Shared registry of counters, gauges, and histograms, keyed by
+/// Prometheus metric name. Names are `&'static str` so the hot path
+/// allocates nothing; `BTreeMap` keeps the exposition deterministically
+/// sorted.
+#[derive(Default)]
+pub struct MetricRegistry {
+    inner: Mutex<BTreeMap<&'static str, Entry>>,
+}
+
+impl MetricRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add `n` to a (monotone) counter, creating it at 0 first.
+    pub fn counter_add(&self, name: &'static str, help: &'static str, n: u64) {
+        let mut m = self.inner.lock().unwrap();
+        let e = m.entry(name).or_insert(Entry { help, metric: Metric::Counter(0) });
+        if let Metric::Counter(v) = &mut e.metric {
+            *v += n;
+        }
+    }
+
+    /// Mirror an externally-accumulated monotone count (e.g. the health
+    /// registry's recovery total) into a counter. Never moves backwards.
+    pub fn counter_set(&self, name: &'static str, help: &'static str, v: u64) {
+        let mut m = self.inner.lock().unwrap();
+        let e = m.entry(name).or_insert(Entry { help, metric: Metric::Counter(0) });
+        if let Metric::Counter(cur) = &mut e.metric {
+            *cur = (*cur).max(v);
+        }
+    }
+
+    pub fn gauge_set(&self, name: &'static str, help: &'static str, v: f64) {
+        let mut m = self.inner.lock().unwrap();
+        let e = m.entry(name).or_insert(Entry { help, metric: Metric::Gauge(0.0) });
+        if let Metric::Gauge(cur) = &mut e.metric {
+            *cur = v;
+        }
+    }
+
+    /// Observe a sample into a histogram (created with the default
+    /// latency buckets on first use: 0.5 s resolution out to 2048 s).
+    pub fn observe(&self, name: &'static str, help: &'static str, x: f64) {
+        let mut m = self.inner.lock().unwrap();
+        let e = m.entry(name).or_insert_with(|| Entry {
+            help,
+            metric: Metric::Histogram(LatencyHistogram::default_latency()),
+        });
+        if let Metric::Histogram(h) = &mut e.metric {
+            h.observe(x);
+        }
+    }
+
+    /// Current value of a counter (testing / internal checks).
+    pub fn counter(&self, name: &str) -> u64 {
+        match self.inner.lock().unwrap().get(name).map(|e| match e.metric {
+            Metric::Counter(v) => v,
+            _ => 0,
+        }) {
+            Some(v) => v,
+            None => 0,
+        }
+    }
+
+    /// Render the registry in the Prometheus text exposition format
+    /// (version 0.0.4). Histograms emit cumulative `_bucket{le=...}`
+    /// series over the non-empty prefix of the fixed buckets, plus
+    /// `_sum`/`_count`.
+    pub fn render(&self) -> String {
+        let m = self.inner.lock().unwrap();
+        let mut out = String::new();
+        for (name, e) in m.iter() {
+            out.push_str(&format!("# HELP {name} {}\n", e.help));
+            match &e.metric {
+                Metric::Counter(v) => {
+                    out.push_str(&format!("# TYPE {name} counter\n{name} {v}\n"));
+                }
+                Metric::Gauge(v) => {
+                    out.push_str(&format!("# TYPE {name} gauge\n{name} {}\n", fmt_f64(*v)));
+                }
+                Metric::Histogram(h) => {
+                    out.push_str(&format!("# TYPE {name} histogram\n"));
+                    let counts = h.bucket_counts();
+                    // Every bucket up to the last non-empty one: complete
+                    // enough to reconstruct quantiles, without emitting
+                    // 4096 zero lines per scrape.
+                    let last = counts.iter().rposition(|&c| c > 0).map_or(0, |i| i + 1);
+                    let mut cum = 0u64;
+                    for (i, &c) in counts.iter().take(last).enumerate() {
+                        cum += c;
+                        let le = (i + 1) as f64 * h.bucket_width();
+                        out.push_str(&format!(
+                            "{name}_bucket{{le=\"{}\"}} {cum}\n",
+                            fmt_f64(le)
+                        ));
+                    }
+                    out.push_str(&format!(
+                        "{name}_bucket{{le=\"+Inf\"}} {}\n",
+                        h.count()
+                    ));
+                    out.push_str(&format!("{name}_sum {}\n", fmt_f64(h.sum())));
+                    out.push_str(&format!("{name}_count {}\n", h.count()));
+                }
+            }
+        }
+        out
+    }
+}
+
+fn fmt_f64(x: f64) -> String {
+    if x.is_nan() {
+        "NaN".to_string()
+    } else if x == f64::INFINITY {
+        "+Inf".to_string()
+    } else if x == f64::NEG_INFINITY {
+        "-Inf".to_string()
+    } else {
+        format!("{x}")
+    }
+}
+
+/// Minimal scrape server: accepts TCP connections, consumes whatever
+/// request bytes arrive, and answers with one HTTP/1.0 response carrying
+/// the current exposition. One thread, non-blocking accept loop, stopped
+/// via flag (the same lifecycle idiom as `serving::HealthMonitor`).
+pub struct MetricsServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl MetricsServer {
+    /// Bind `addr` (e.g. `127.0.0.1:9184`, or port 0 for ephemeral) and
+    /// start serving scrapes of `registry`.
+    pub fn bind(addr: &str, registry: Arc<MetricRegistry>) -> anyhow::Result<MetricsServer> {
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| anyhow::anyhow!("metrics endpoint {addr}: {e}"))?;
+        listener.set_nonblocking(true)?;
+        let local = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop_flag = stop.clone();
+        let handle = std::thread::spawn(move || {
+            while !stop_flag.load(Ordering::Relaxed) {
+                match listener.accept() {
+                    Ok((mut stream, _)) => {
+                        stream.set_nonblocking(false).ok();
+                        stream
+                            .set_read_timeout(Some(std::time::Duration::from_millis(250)))
+                            .ok();
+                        // Drain the request head; scrape clients always
+                        // write before reading, but nothing here depends
+                        // on the bytes.
+                        let mut buf = [0u8; 1024];
+                        let _ = stream.read(&mut buf);
+                        let body = registry.render();
+                        let resp = format!(
+                            "HTTP/1.0 200 OK\r\nContent-Type: text/plain; version=0.0.4; charset=utf-8\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+                            body.len()
+                        );
+                        let _ = stream.write_all(resp.as_bytes());
+                    }
+                    Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(std::time::Duration::from_millis(5));
+                    }
+                    Err(_) => break,
+                }
+            }
+        });
+        Ok(MetricsServer {
+            addr: local,
+            stop,
+            handle: Some(handle),
+        })
+    }
+
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop the accept loop and join its thread.
+    pub fn stop(mut self) {
+        self.stop_inner();
+    }
+
+    fn stop_inner(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            h.join().ok();
+        }
+    }
+}
+
+impl Drop for MetricsServer {
+    fn drop(&mut self) {
+        self.stop_inner();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{Read, Write};
+    use std::net::TcpStream;
+
+    #[test]
+    fn registry_renders_counters_gauges_histograms() {
+        let reg = MetricRegistry::new();
+        reg.counter_add("eat_dispatches_total", "gangs dispatched", 3);
+        reg.counter_set("eat_recoveries_total", "worker recoveries", 2);
+        reg.counter_set("eat_recoveries_total", "worker recoveries", 1); // never backwards
+        reg.gauge_set("eat_workers_up", "workers currently up", 4.0);
+        reg.observe("eat_task_latency_seconds", "task latency", 0.2);
+        reg.observe("eat_task_latency_seconds", "task latency", 1.4);
+        let text = reg.render();
+        assert!(text.contains("# TYPE eat_dispatches_total counter"));
+        assert!(text.contains("eat_dispatches_total 3"));
+        assert!(text.contains("eat_recoveries_total 2"));
+        assert!(text.contains("# TYPE eat_workers_up gauge"));
+        assert!(text.contains("eat_workers_up 4"));
+        assert!(text.contains("# TYPE eat_task_latency_seconds histogram"));
+        assert!(text.contains("eat_task_latency_seconds_bucket{le=\"0.5\"} 1"));
+        assert!(text.contains("eat_task_latency_seconds_bucket{le=\"1.5\"} 2"));
+        assert!(text.contains("eat_task_latency_seconds_bucket{le=\"+Inf\"} 2"));
+        assert!(text.contains("eat_task_latency_seconds_count 2"));
+        assert_eq!(reg.counter("eat_dispatches_total"), 3);
+        // Exposition discipline: every series line is HELP, TYPE, or
+        // `name[{labels}] value`.
+        for line in text.lines() {
+            assert!(
+                line.starts_with('#')
+                    || line.split_whitespace().count() == 2,
+                "malformed exposition line: {line:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn scrape_over_plain_tcp_client() {
+        let reg = Arc::new(MetricRegistry::new());
+        reg.counter_add("eat_recoveries_total", "worker recoveries", 1);
+        let srv = MetricsServer::bind("127.0.0.1:0", reg.clone()).unwrap();
+        let addr = srv.local_addr();
+        let mut stream = TcpStream::connect(addr).unwrap();
+        stream.write_all(b"GET /metrics HTTP/1.0\r\n\r\n").unwrap();
+        let mut text = String::new();
+        stream.read_to_string(&mut text).unwrap();
+        assert!(text.starts_with("HTTP/1.0 200 OK"), "bad response: {text:?}");
+        assert!(text.contains("text/plain; version=0.0.4"));
+        assert!(text.contains("eat_recoveries_total 1"));
+        // The registry is live: a second scrape sees the new value.
+        reg.counter_add("eat_recoveries_total", "worker recoveries", 1);
+        let mut stream = TcpStream::connect(addr).unwrap();
+        stream.write_all(b"GET /metrics HTTP/1.0\r\n\r\n").unwrap();
+        let mut text2 = String::new();
+        stream.read_to_string(&mut text2).unwrap();
+        assert!(text2.contains("eat_recoveries_total 2"));
+        srv.stop();
+    }
+}

@@ -1,0 +1,30 @@
+//! Observability: determinism-safe lifecycle tracing, live metrics with a
+//! Prometheus text-exposition endpoint, and a latency-decomposition
+//! analyzer.
+//!
+//! The paper's headline claim (up to 56% inference-latency reduction) is
+//! only auditable if we can say *where* each task's latency came from:
+//! queueing, cold start, execution, straggler slack, or retry rounds. The
+//! simulator and the serving loop emit typed span events into a
+//! [`trace::TraceRecorder`] (bounded ring buffer, allocation-free once
+//! warm, JSONL export); [`analyze`] reconstructs per-task lifecycles from
+//! a trace and decomposes every completed task's measured latency into
+//! components that sum back to it bit-exactly. [`metrics`] is a small
+//! counter/gauge/histogram registry that `eat serve --metrics-addr`
+//! exposes over plain TCP in the Prometheus text format. [`log`] is the
+//! leveled stderr logger (`EAT_LOG=warn|info|debug`, `--quiet`) that
+//! replaces the ad-hoc progress `eprintln!`s.
+//!
+//! Nothing in this module touches an RNG stream: recording is observation
+//! only, so every bit-exactness property (event core vs tick core, trace
+//! replay, CRN pairing) holds with tracing on or off — pinned by tests in
+//! `sim/env.rs`.
+
+pub mod analyze;
+pub mod log;
+pub mod metrics;
+pub mod trace;
+
+pub use analyze::{analyze, analyze_jsonl, Analysis, TaskDecomp};
+pub use metrics::{MetricRegistry, MetricsServer};
+pub use trace::{GangRef, SpanEvent, SpanKind, TraceRecorder};

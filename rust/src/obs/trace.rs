@@ -1,0 +1,486 @@
+//! Per-task lifecycle tracing: typed span events in a bounded ring
+//! buffer, exportable as JSONL.
+//!
+//! Every event is `Copy` (gang members live in a fixed inline array), so
+//! once the ring has grown to capacity, recording allocates nothing — the
+//! hot path is a bounds check and a struct store. Recording never draws
+//! from an RNG stream and never feeds back into scheduling, so a traced
+//! episode is bit-identical to an untraced one (pinned by property tests
+//! in `sim/env.rs`). When the ring wraps, the oldest events are evicted
+//! and counted; the analyzer skips tasks whose lifecycle is incomplete
+//! rather than mis-attributing their latency.
+
+use crate::util::json::{self, Value};
+
+/// Maximum gang members stored inline per event. Gangs beyond this are
+/// truncated (flagged), which the presets never reach (patch counts are
+/// ≤ 8); the analyzer only needs timings, not the full membership.
+pub const MAX_GANG: usize = 16;
+
+/// A gang reference small enough to keep events `Copy`: member ids plus a
+/// warm/cold bit per member (did the server already hold the task's model
+/// at dispatch?).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct GangRef {
+    len: u8,
+    truncated: bool,
+    ids: [u32; MAX_GANG],
+    warm: u16,
+}
+
+impl GangRef {
+    /// Capture a gang; `warm(i)` answers whether member `servers[i]` is
+    /// warm for the task's model.
+    pub fn capture(servers: &[usize], warm: impl Fn(usize) -> bool) -> GangRef {
+        let mut ids = [0u32; MAX_GANG];
+        let mut warm_mask = 0u16;
+        let n = servers.len().min(MAX_GANG);
+        for (i, &s) in servers.iter().take(n).enumerate() {
+            ids[i] = s as u32;
+            if warm(i) {
+                warm_mask |= 1 << i;
+            }
+        }
+        GangRef {
+            len: n as u8,
+            truncated: servers.len() > MAX_GANG,
+            ids,
+            warm: warm_mask,
+        }
+    }
+
+    pub fn members(&self) -> &[u32] {
+        &self.ids[..self.len as usize]
+    }
+
+    pub fn is_warm(&self, i: usize) -> bool {
+        i < self.len as usize && self.warm & (1 << i) != 0
+    }
+
+    pub fn truncated(&self) -> bool {
+        self.truncated
+    }
+}
+
+/// Why a task left the system without completing.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DropReason {
+    /// Shed by admission control on arrival.
+    Admission,
+    /// Killed more than `max_retries` times under churn.
+    RetriesExhausted,
+}
+
+impl DropReason {
+    fn name(&self) -> &'static str {
+        match self {
+            DropReason::Admission => "admission",
+            DropReason::RetriesExhausted => "retries_exhausted",
+        }
+    }
+}
+
+/// The typed span-event vocabulary. Times are simulated seconds in the
+/// simulator and simulated-clock seconds in `eat serve`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum SpanKind {
+    /// Passed admission control (t = the task's arrival instant).
+    Admitted,
+    /// Entered the pending queue; `depth` is the queue length after.
+    Queued { depth: u32 },
+    /// A gang was dispatched for this task. `cold` is the model-load time
+    /// charged to this attempt (0 on full reuse), `exec` its sampled
+    /// execution time, `attempt` the number of earlier kills.
+    Dispatched {
+        gang: GangRef,
+        cold: f64,
+        exec: f64,
+        attempt: u32,
+        speculative: bool,
+    },
+    /// Execution began (same instant as dispatch in the simulator; the
+    /// wire-level serving path may separate them).
+    ExecStart,
+    /// The attempt was killed (member failure, or it lost a speculative
+    /// race); `attempt` counts kills of this task so far.
+    Killed { attempt: u32 },
+    /// The task re-entered the queue after a kill.
+    Retried { attempt: u32 },
+    /// A speculative backup was launched on a warm gang.
+    SpecLaunched { gang: GangRef, exec: f64 },
+    /// The task completed. `response` is the measured latency booked by
+    /// the scheduler; `start` is the winning attempt's dispatch instant
+    /// (matches that attempt's `Dispatched`/`SpecLaunched` event time).
+    Completed {
+        response: f64,
+        start: f64,
+        speculative: bool,
+    },
+    /// The task left without completing.
+    Dropped { reason: DropReason },
+}
+
+impl SpanKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SpanKind::Admitted => "admitted",
+            SpanKind::Queued { .. } => "queued",
+            SpanKind::Dispatched { .. } => "dispatched",
+            SpanKind::ExecStart => "exec_start",
+            SpanKind::Killed { .. } => "killed",
+            SpanKind::Retried { .. } => "retried",
+            SpanKind::SpecLaunched { .. } => "spec_launched",
+            SpanKind::Completed { .. } => "completed",
+            SpanKind::Dropped { .. } => "dropped",
+        }
+    }
+}
+
+/// One recorded span event: when, which task, whose tenant, what.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SpanEvent {
+    pub t: f64,
+    pub task: u64,
+    /// Tenant index, `u32::MAX` when the task has none.
+    pub tenant: u32,
+    pub kind: SpanKind,
+}
+
+pub const NO_TENANT: u32 = u32::MAX;
+
+impl SpanEvent {
+    pub fn tenant_opt(&self) -> Option<u32> {
+        (self.tenant != NO_TENANT).then_some(self.tenant)
+    }
+
+    /// One JSONL line (no trailing newline). Key order is alphabetical
+    /// (the JSON writer's object order), values round-trip f64s bit-exactly.
+    pub fn to_json(&self) -> Value {
+        let mut v = Value::obj();
+        v.set("t", self.t);
+        v.set("task", self.task);
+        v.set("ev", self.kind.name());
+        if let Some(tn) = self.tenant_opt() {
+            v.set("tenant", tn as u64);
+        }
+        match self.kind {
+            SpanKind::Admitted | SpanKind::ExecStart => {}
+            SpanKind::Queued { depth } => v.set("depth", depth as u64),
+            SpanKind::Dispatched {
+                gang,
+                cold,
+                exec,
+                attempt,
+                speculative,
+            } => {
+                set_gang(&mut v, &gang);
+                v.set("cold", cold);
+                v.set("exec", exec);
+                v.set("attempt", attempt as u64);
+                v.set("spec", speculative);
+            }
+            SpanKind::Killed { attempt } => v.set("attempt", attempt as u64),
+            SpanKind::Retried { attempt } => v.set("attempt", attempt as u64),
+            SpanKind::SpecLaunched { gang, exec } => {
+                set_gang(&mut v, &gang);
+                v.set("exec", exec);
+            }
+            SpanKind::Completed {
+                response,
+                start,
+                speculative,
+            } => {
+                v.set("response", response);
+                v.set("start", start);
+                v.set("spec", speculative);
+            }
+            SpanKind::Dropped { reason } => v.set("reason", reason.name()),
+        }
+        v
+    }
+
+    /// Parse one JSONL line back into an event.
+    pub fn from_json(v: &Value) -> anyhow::Result<SpanEvent> {
+        let t = v.req("t")?.as_f64().ok_or_else(|| anyhow::anyhow!("bad t"))?;
+        let task = v.req("task")?.as_f64().ok_or_else(|| anyhow::anyhow!("bad task"))? as u64;
+        let tenant = match v.get("tenant").and_then(Value::as_f64) {
+            Some(tn) => tn as u32,
+            None => NO_TENANT,
+        };
+        let ev = v
+            .req("ev")?
+            .as_str()
+            .ok_or_else(|| anyhow::anyhow!("bad ev"))?
+            .to_string();
+        let f = |key: &str| -> anyhow::Result<f64> {
+            v.req(key)?
+                .as_f64()
+                .ok_or_else(|| anyhow::anyhow!("bad field '{key}'"))
+        };
+        let kind = match ev.as_str() {
+            "admitted" => SpanKind::Admitted,
+            "exec_start" => SpanKind::ExecStart,
+            "queued" => SpanKind::Queued {
+                depth: f("depth")? as u32,
+            },
+            "dispatched" => SpanKind::Dispatched {
+                gang: gang_from(v)?,
+                cold: f("cold")?,
+                exec: f("exec")?,
+                attempt: f("attempt")? as u32,
+                speculative: v.get("spec").and_then(Value::as_bool).unwrap_or(false),
+            },
+            "killed" => SpanKind::Killed {
+                attempt: f("attempt")? as u32,
+            },
+            "retried" => SpanKind::Retried {
+                attempt: f("attempt")? as u32,
+            },
+            "spec_launched" => SpanKind::SpecLaunched {
+                gang: gang_from(v)?,
+                exec: f("exec")?,
+            },
+            "completed" => SpanKind::Completed {
+                response: f("response")?,
+                start: f("start")?,
+                speculative: v.get("spec").and_then(Value::as_bool).unwrap_or(false),
+            },
+            "dropped" => SpanKind::Dropped {
+                reason: match v.req("reason")?.as_str() {
+                    Some("admission") => DropReason::Admission,
+                    Some("retries_exhausted") => DropReason::RetriesExhausted,
+                    other => anyhow::bail!("unknown drop reason {other:?}"),
+                },
+            },
+            other => anyhow::bail!("unknown span event '{other}'"),
+        };
+        Ok(SpanEvent { t, task, tenant, kind })
+    }
+}
+
+fn set_gang(v: &mut Value, gang: &GangRef) {
+    let ids: Vec<u64> = gang.members().iter().map(|&m| m as u64).collect();
+    let warm: Vec<bool> = (0..gang.members().len()).map(|i| gang.is_warm(i)).collect();
+    v.set("gang", ids);
+    v.set("warm", warm);
+    if gang.truncated() {
+        v.set("gang_truncated", true);
+    }
+}
+
+fn gang_from(v: &Value) -> anyhow::Result<GangRef> {
+    let ids = v
+        .req("gang")?
+        .as_arr()
+        .ok_or_else(|| anyhow::anyhow!("bad gang"))?;
+    let warm = v
+        .req("warm")?
+        .as_arr()
+        .ok_or_else(|| anyhow::anyhow!("bad warm"))?;
+    let servers: Vec<usize> = ids
+        .iter()
+        .map(|x| x.as_f64().map(|f| f as usize).ok_or_else(|| anyhow::anyhow!("bad gang id")))
+        .collect::<anyhow::Result<_>>()?;
+    let warm_bits: Vec<bool> = warm.iter().map(|x| x.as_bool().unwrap_or(false)).collect();
+    Ok(GangRef::capture(&servers, |i| {
+        warm_bits.get(i).copied().unwrap_or(false)
+    }))
+}
+
+/// Bounded ring buffer of span events.
+///
+/// `record` is allocation-free once the buffer has grown to capacity:
+/// the backing `Vec` is filled once and then overwritten in place, with
+/// evictions counted so exports can say what was lost.
+#[derive(Clone, Debug)]
+pub struct TraceRecorder {
+    cap: usize,
+    buf: Vec<SpanEvent>,
+    /// Next write position once the buffer is full (ring head).
+    head: usize,
+    evicted: u64,
+}
+
+impl TraceRecorder {
+    pub fn new(cap: usize) -> Self {
+        assert!(cap > 0, "trace capacity must be > 0");
+        TraceRecorder {
+            cap,
+            buf: Vec::with_capacity(cap),
+            head: 0,
+            evicted: 0,
+        }
+    }
+
+    /// Default capacity: enough for every preset episode (< 10 events per
+    /// task) without pre-reserving megabytes.
+    pub fn default_capacity() -> usize {
+        1 << 16
+    }
+
+    pub fn record(&mut self, t: f64, task: u64, tenant: Option<u32>, kind: SpanKind) {
+        let ev = SpanEvent {
+            t,
+            task,
+            tenant: tenant.unwrap_or(NO_TENANT),
+            kind,
+        };
+        if self.buf.len() < self.cap {
+            self.buf.push(ev);
+        } else {
+            self.buf[self.head] = ev;
+            self.head = (self.head + 1) % self.cap;
+            self.evicted += 1;
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Events evicted by ring wrap-around (0 until the buffer fills).
+    pub fn evicted(&self) -> u64 {
+        self.evicted
+    }
+
+    /// Events in recording order (oldest surviving first).
+    pub fn events(&self) -> Vec<SpanEvent> {
+        let mut out = Vec::with_capacity(self.buf.len());
+        out.extend_from_slice(&self.buf[self.head..]);
+        out.extend_from_slice(&self.buf[..self.head]);
+        out
+    }
+
+    /// JSONL export, one event per line, oldest first.
+    pub fn to_jsonl(&self) -> String {
+        let mut out = String::new();
+        for ev in self.events() {
+            out.push_str(&ev.to_json().to_json());
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn write_jsonl(&self, path: &str) -> anyhow::Result<()> {
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        std::fs::write(path, self.to_jsonl())?;
+        Ok(())
+    }
+}
+
+/// Parse a JSONL trace (as written by [`TraceRecorder::to_jsonl`]) back
+/// into events. Blank lines are skipped.
+pub fn parse_jsonl(text: &str) -> anyhow::Result<Vec<SpanEvent>> {
+    let mut out = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let v = json::parse(line)
+            .map_err(|e| anyhow::anyhow!("trace line {}: {e}", lineno + 1))?;
+        out.push(
+            SpanEvent::from_json(&v)
+                .map_err(|e| anyhow::anyhow!("trace line {}: {e}", lineno + 1))?,
+        );
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gang() -> GangRef {
+        GangRef::capture(&[3, 1, 4], |i| i != 1)
+    }
+
+    #[test]
+    fn gang_ref_captures_members_and_warmth() {
+        let g = gang();
+        assert_eq!(g.members(), &[3, 1, 4]);
+        assert!(g.is_warm(0));
+        assert!(!g.is_warm(1));
+        assert!(g.is_warm(2));
+        assert!(!g.is_warm(7));
+        assert!(!g.truncated());
+        let big: Vec<usize> = (0..20).collect();
+        assert!(GangRef::capture(&big, |_| false).truncated());
+    }
+
+    #[test]
+    fn ring_buffer_evicts_oldest_and_counts() {
+        let mut tr = TraceRecorder::new(3);
+        for i in 0..5u64 {
+            tr.record(i as f64, i, None, SpanKind::Admitted);
+        }
+        assert_eq!(tr.len(), 3);
+        assert_eq!(tr.evicted(), 2);
+        let tasks: Vec<u64> = tr.events().iter().map(|e| e.task).collect();
+        assert_eq!(tasks, vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn jsonl_round_trip_is_bit_exact() {
+        let mut tr = TraceRecorder::new(64);
+        tr.record(0.1 + 0.2, 7, Some(1), SpanKind::Admitted);
+        tr.record(1.0 / 3.0, 7, Some(1), SpanKind::Queued { depth: 2 });
+        tr.record(
+            2.5,
+            7,
+            Some(1),
+            SpanKind::Dispatched {
+                gang: gang(),
+                cold: 33.07218471984863,
+                exec: 5.000000000000001,
+                attempt: 0,
+                speculative: false,
+            },
+        );
+        tr.record(2.5, 7, Some(1), SpanKind::ExecStart);
+        tr.record(4.0, 7, Some(1), SpanKind::Killed { attempt: 1 });
+        tr.record(4.0, 7, Some(1), SpanKind::Retried { attempt: 1 });
+        tr.record(
+            6.0,
+            7,
+            Some(1),
+            SpanKind::SpecLaunched { gang: gang(), exec: 5.25 },
+        );
+        tr.record(
+            40.25,
+            7,
+            Some(1),
+            SpanKind::Completed {
+                response: 40.150000000000006,
+                start: 6.0,
+                speculative: true,
+            },
+        );
+        tr.record(
+            1.0,
+            8,
+            None,
+            SpanKind::Dropped { reason: DropReason::Admission },
+        );
+        let text = tr.to_jsonl();
+        let back = parse_jsonl(&text).unwrap();
+        assert_eq!(back.len(), tr.len());
+        for (a, b) in tr.events().iter().zip(&back) {
+            assert_eq!(a.t.to_bits(), b.t.to_bits(), "time drifted: {a:?} vs {b:?}");
+            assert_eq!(a, b, "event did not round-trip");
+        }
+    }
+
+    #[test]
+    fn unknown_event_is_rejected() {
+        assert!(parse_jsonl("{\"t\":0,\"task\":1,\"ev\":\"warped\"}").is_err());
+    }
+}

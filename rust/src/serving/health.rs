@@ -161,6 +161,13 @@ impl HealthRegistry {
         self.state.lock().unwrap().iter().filter(|w| w.up).count()
     }
 
+    /// `(up, total)` under one lock acquisition — the consistent snapshot
+    /// the metrics endpoint exports as `eat_workers_up` / `eat_workers`.
+    pub fn counts(&self) -> (usize, usize) {
+        let state = self.state.lock().unwrap();
+        (state.iter().filter(|w| w.up).count(), state.len())
+    }
+
     pub fn stats(&self) -> HealthStats {
         *self.stats.lock().unwrap()
     }
@@ -255,6 +262,7 @@ mod tests {
         reg.mark_down(1);
         assert!(!reg.up(1));
         assert_eq!(reg.up_count(), 2);
+        assert_eq!(reg.counts(), (2, 3));
         // Repeated marks don't double-count the transition.
         reg.mark_down(1);
         assert_eq!(reg.stats().downs, 1);

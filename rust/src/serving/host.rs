@@ -5,6 +5,7 @@
 //! monitors the server's result port".
 
 use super::protocol::{self, TaskRequest, TaskResult};
+use crate::obs::trace::{DropReason, GangRef, SpanKind, TraceRecorder};
 use crate::workload::MetricsCollector;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpStream};
@@ -250,7 +251,7 @@ impl ServingHost {
     ) -> anyhow::Result<(GangOutcome, Vec<usize>)> {
         self.dispatch_resilient_inner(
             task_id, prompt, steps, model, tenant, gang, spares, timeout, max_rounds, 0.0, 0.0,
-            None,
+            None, 0.0, None,
         )
     }
 
@@ -299,6 +300,51 @@ impl ServingHost {
             time_scale,
             waiting,
             Some(metrics),
+            0.0,
+            None,
+        )
+    }
+
+    /// [`dispatch_resilient_collect`](Self::dispatch_resilient_collect)
+    /// additionally emitting lifecycle span events (`dispatched` per
+    /// round, `killed`/`retried` per failed round, `completed` or
+    /// `dropped`) into `tracer`, all on the caller's simulated clock:
+    /// `sim_now` is the simulated instant the first round starts. The
+    /// serving trace then decomposes under `eat trace analyze` exactly
+    /// like a simulator trace.
+    #[allow(clippy::too_many_arguments)]
+    pub fn dispatch_resilient_traced(
+        &self,
+        task_id: u64,
+        prompt: &str,
+        steps: u32,
+        model: u32,
+        tenant: Option<u32>,
+        gang: &[usize],
+        spares: &[usize],
+        timeout: Duration,
+        max_rounds: usize,
+        time_scale: f64,
+        waiting: f64,
+        metrics: &mut MetricsCollector,
+        sim_now: f64,
+        tracer: &mut TraceRecorder,
+    ) -> anyhow::Result<(GangOutcome, Vec<usize>)> {
+        self.dispatch_resilient_inner(
+            task_id,
+            prompt,
+            steps,
+            model,
+            tenant,
+            gang,
+            spares,
+            timeout,
+            max_rounds,
+            time_scale,
+            waiting,
+            Some(metrics),
+            sim_now,
+            Some(tracer),
         )
     }
 
@@ -317,6 +363,8 @@ impl ServingHost {
         time_scale: f64,
         waiting: f64,
         mut metrics: Option<&mut MetricsCollector>,
+        sim_now: f64,
+        mut tracer: Option<&mut TraceRecorder>,
     ) -> anyhow::Result<(GangOutcome, Vec<usize>)> {
         anyhow::ensure!(!gang.is_empty(), "empty gang");
         anyhow::ensure!(
@@ -337,6 +385,36 @@ impl ServingHost {
             let round_started = Instant::now();
             let (mut results, failed) =
                 self.try_dispatch(task_id, prompt, steps, model, tenant, &current, timeout);
+            if let Some(tr) = tracer.as_deref_mut() {
+                // The round's dispatch instant on the simulated clock:
+                // failed rounds pushed it forward by their charged time.
+                // Cold/exec come from the round's critical member (the
+                // gang completes when its slowest patch does), so the
+                // analyzer's cold + exec reproduce `sim_exec_seconds`.
+                let (cold, exec) = results
+                    .iter()
+                    .map(|r| (r.load_time, r.exec_time))
+                    .max_by(|a, b| (a.0 + a.1).total_cmp(&(b.0 + b.1)))
+                    .unwrap_or((0.0, 0.0));
+                let gref = GangRef::capture(&current, |i| {
+                    results.iter().any(|r| r.worker_id == current[i] && r.reused)
+                });
+                tr.record(
+                    sim_now + lost_sim,
+                    task_id,
+                    tenant,
+                    SpanKind::Dispatched {
+                        gang: gref,
+                        cold,
+                        exec,
+                        attempt: round as u32,
+                        speculative: false,
+                    },
+                );
+                if failed.is_empty() {
+                    tr.record(sim_now + lost_sim, task_id, tenant, SpanKind::ExecStart);
+                }
+            }
             if failed.is_empty() {
                 results.sort_by_key(|r| r.worker_id);
                 let outcome = GangOutcome {
@@ -357,6 +435,20 @@ impl ServingHost {
                     for r in &outcome.results {
                         m.observe_busy(r.worker_id, r.exec_time + r.load_time);
                     }
+                }
+                if let Some(tr) = tracer.as_deref_mut() {
+                    // Same response expression as the metrics book above,
+                    // `start` bit-equal to the winning dispatch's instant.
+                    tr.record(
+                        sim_now + lost_sim + outcome.sim_exec_seconds(),
+                        task_id,
+                        tenant,
+                        SpanKind::Completed {
+                            response: waiting + lost_sim + outcome.sim_exec_seconds(),
+                            start: sim_now + lost_sim,
+                            speculative: false,
+                        },
+                    );
                 }
                 return Ok((outcome, excluded));
             }
@@ -393,6 +485,14 @@ impl ServingHost {
                     m.observe_failure();
                 }
             }
+            if let Some(tr) = tracer.as_deref_mut() {
+                tr.record(
+                    sim_now + lost_sim,
+                    task_id,
+                    tenant,
+                    SpanKind::Killed { attempt: round as u32 },
+                );
+            }
             for (w, _) in &failed {
                 if !excluded.contains(w) {
                     excluded.push(*w);
@@ -416,6 +516,14 @@ impl ServingHost {
                 if let Some(m) = metrics.as_deref_mut() {
                     m.observe_task_failure();
                 }
+                if let Some(tr) = tracer.as_deref_mut() {
+                    tr.record(
+                        sim_now + lost_sim,
+                        task_id,
+                        tenant,
+                        SpanKind::Dropped { reason: DropReason::RetriesExhausted },
+                    );
+                }
                 anyhow::bail!(
                     "task {task_id}: gang needs {} workers but only {} healthy candidates remain \
                      (excluded: {excluded:?})",
@@ -427,11 +535,27 @@ impl ServingHost {
                 if let Some(m) = metrics.as_deref_mut() {
                     m.observe_retry();
                 }
+                if let Some(tr) = tracer.as_deref_mut() {
+                    tr.record(
+                        sim_now + lost_sim,
+                        task_id,
+                        tenant,
+                        SpanKind::Retried { attempt: round as u32 + 1 },
+                    );
+                }
                 current = next;
             }
         }
         if let Some(m) = metrics.as_deref_mut() {
             m.observe_task_failure();
+        }
+        if let Some(tr) = tracer.as_deref_mut() {
+            tr.record(
+                sim_now + lost_sim,
+                task_id,
+                tenant,
+                SpanKind::Dropped { reason: DropReason::RetriesExhausted },
+            );
         }
         anyhow::bail!(
             "task {task_id}: gang dispatch still failing after {rounds} rounds (excluded: {excluded:?})"
@@ -682,6 +806,63 @@ mod tests {
             .is_err());
         assert_eq!(m.task_failures(), 1);
         assert_eq!(m.completed(), 1, "a failed task is not a completion");
+        pool.shutdown();
+    }
+
+    #[test]
+    fn resilient_traced_dispatch_decomposes_exactly() {
+        use crate::obs::analyze::analyze;
+        let mut pool = WorkerPool::spawn(3, ExecModelConfig::default(), 1e-4, 13).unwrap();
+        let host = ServingHost::new(pool.addrs().to_vec());
+        let timeout = Duration::from_secs(2);
+        pool.kill(1);
+        let mut m = MetricsCollector::new(3);
+        let mut tr = TraceRecorder::new(256);
+        let (sim_now, waiting) = (10.0, 1.5);
+        tr.record(sim_now - waiting, 7, None, SpanKind::Admitted);
+        let (out, _) = host
+            .dispatch_resilient_traced(
+                7,
+                "p",
+                20,
+                0,
+                None,
+                &[0, 1],
+                &[2],
+                timeout,
+                3,
+                1e-4,
+                waiting,
+                &mut m,
+                sim_now,
+                &mut tr,
+            )
+            .unwrap();
+        let names: Vec<&str> = tr.events().iter().map(|e| e.kind.name()).collect();
+        assert!(names.contains(&"killed"), "{names:?}");
+        assert!(names.contains(&"retried"), "{names:?}");
+        assert!(names.contains(&"completed"), "{names:?}");
+        let a = analyze(&tr.events());
+        a.check_books().unwrap();
+        assert_eq!(a.tasks.len(), 1);
+        let d = &a.tasks[0];
+        assert_eq!(d.attempts, 2);
+        assert!(d.retry > 0.0, "failed round must book retry latency");
+        assert!(
+            (d.cold + d.exec - out.sim_exec_seconds()).abs() < 1e-9,
+            "critical member's cold+exec {} + {} must equal sim exec {}",
+            d.cold,
+            d.exec,
+            out.sim_exec_seconds()
+        );
+        // A task that exhausts its candidates books a drop.
+        assert!(host
+            .dispatch_resilient_traced(
+                8, "p", 20, 0, None, &[1], &[], timeout, 2, 1e-4, 0.0, &mut m, 20.0, &mut tr,
+            )
+            .is_err());
+        let a2 = analyze(&tr.events());
+        assert_eq!(a2.dropped, 1);
         pool.shutdown();
     }
 

@@ -161,7 +161,7 @@ fn run_worker(
                     let (exec, gpu) = (exec.clone(), gpu.clone());
                     std::thread::spawn(move || {
                         if let Err(e) = handle(stream, worker_id, &exec, &gpu, time_scale) {
-                            eprintln!("worker {worker_id}: {e}");
+                            crate::log_warn!("worker {worker_id}: {e}");
                         }
                     });
                 }
@@ -170,7 +170,7 @@ fn run_worker(
                 std::thread::sleep(std::time::Duration::from_millis(2));
             }
             Err(e) => {
-                eprintln!("worker {worker_id} accept: {e}");
+                crate::log_warn!("worker {worker_id} accept: {e}");
                 break;
             }
         }

@@ -9,6 +9,7 @@
 
 use crate::config::EnvConfig;
 use crate::faults::{FaultEvent, FaultKind, FaultModel, FaultsConfig};
+use crate::obs::trace::{DropReason, GangRef, SpanKind, TraceRecorder};
 use crate::qos::{AdmissionConfig, AdmissionState, PendingQueue, QueueDiscipline, TenantRegistry};
 use crate::sim::cluster::{Cluster, Selection};
 use crate::sim::events::EventQueue;
@@ -286,6 +287,11 @@ pub struct EdgeEnv {
     infeasible: usize,
     total_reward: f64,
     trace: Vec<Scheduled>,
+    /// Optional per-task lifecycle recorder (`obs::trace`). Off by
+    /// default; when on, span events are emitted from both simulator
+    /// cores. Recording never draws from any RNG stream, so episodes are
+    /// bit-identical with tracing on or off (pinned by property tests).
+    tracer: Option<TraceRecorder>,
 }
 
 impl EdgeEnv {
@@ -391,9 +397,39 @@ impl EdgeEnv {
             infeasible: 0,
             total_reward: 0.0,
             trace: Vec::new(),
+            tracer: None,
         };
         env.absorb_arrivals();
         env
+    }
+
+    /// Turn on lifecycle tracing with a ring capacity of `cap` events.
+    /// Construction already absorbed any t ≤ 0 arrivals, so their
+    /// admission spans are retro-emitted here (at their true arrival
+    /// instants) — every queued task has a complete lifecycle no matter
+    /// when tracing was enabled relative to construction.
+    pub fn enable_tracing(&mut self, cap: usize) {
+        let mut tr = TraceRecorder::new(cap);
+        for (depth, task) in self.queue.items().iter().enumerate() {
+            tr.record(task.arrival, task.id, task.tenant, SpanKind::Admitted);
+            tr.record(
+                task.arrival,
+                task.id,
+                task.tenant,
+                SpanKind::Queued { depth: depth as u32 + 1 },
+            );
+        }
+        self.tracer = Some(tr);
+    }
+
+    /// The lifecycle recorder, if tracing is enabled.
+    pub fn tracer(&self) -> Option<&TraceRecorder> {
+        self.tracer.as_ref()
+    }
+
+    /// Detach the lifecycle recorder (e.g. to export JSONL after a run).
+    pub fn take_tracer(&mut self) -> Option<TraceRecorder> {
+        self.tracer.take()
     }
 
     pub fn now(&self) -> f64 {
@@ -488,6 +524,15 @@ impl EdgeEnv {
         while let Some(task) = self.source.pop_if_arrived(self.now) {
             self.metrics.observe_offered(task.tenant);
             if self.admission.admit(task.tenant, self.now, self.queue.len()) {
+                if let Some(tr) = self.tracer.as_mut() {
+                    tr.record(task.arrival, task.id, task.tenant, SpanKind::Admitted);
+                    tr.record(
+                        task.arrival,
+                        task.id,
+                        task.tenant,
+                        SpanKind::Queued { depth: self.queue.len() as u32 + 1 },
+                    );
+                }
                 // Lazy push: the QoS view is rebuilt once per batch below,
                 // not O(queue) per arrival.
                 self.queue.push_lazy(task);
@@ -495,6 +540,14 @@ impl EdgeEnv {
             } else {
                 self.dropped_count += 1;
                 self.metrics.observe_drop(task.tenant);
+                if let Some(tr) = self.tracer.as_mut() {
+                    tr.record(
+                        task.arrival,
+                        task.id,
+                        task.tenant,
+                        SpanKind::Dropped { reason: DropReason::Admission },
+                    );
+                }
             }
         }
         if admitted {
@@ -750,6 +803,12 @@ impl EdgeEnv {
             }
         };
         let duration = exec + init;
+        // Warmth must be captured before `dispatch` mutates residency.
+        let gang_ref = self.tracer.as_ref().map(|_| {
+            GangRef::capture(&servers, |i| {
+                self.cluster.servers[servers[i]].model == Some(task.model)
+            })
+        });
         let gang = self.cluster.dispatch(&servers, duration, task.model, reuse, self.now);
         self.queue.remove(index);
         let waiting = (self.now - task.arrival).max(0.0);
@@ -772,6 +831,26 @@ impl EdgeEnv {
             tenant: task.tenant,
             deadline_met,
         };
+        if let (Some(tr), Some(gref)) = (self.tracer.as_mut(), gang_ref) {
+            let attempt = self
+                .faults
+                .as_ref()
+                .and_then(|fs| fs.attempts.get(&task.id).copied())
+                .unwrap_or(0);
+            tr.record(
+                self.now,
+                task.id,
+                task.tenant,
+                SpanKind::Dispatched {
+                    gang: gref,
+                    cold: init,
+                    exec,
+                    attempt,
+                    speculative: false,
+                },
+            );
+            tr.record(self.now, task.id, task.tenant, SpanKind::ExecStart);
+        }
         if self.faults.is_some() {
             // Under churn an attempt may be killed or stretched, so all
             // per-task accounting is deferred to actual completion
@@ -823,6 +902,18 @@ impl EdgeEnv {
         }
         self.metrics.observe_task(response, waiting, !reuse);
         self.metrics.observe_tenant_task(task.tenant, response, deadline_met);
+        if let Some(tr) = self.tracer.as_mut() {
+            // Completion is certain (no faults): book it at its future
+            // instant now. `response = waiting + duration` with `waiting =
+            // now - arrival`, so the analyzer's queue component reproduces
+            // the booked waiting time bit-exactly.
+            tr.record(
+                self.now + duration,
+                task.id,
+                task.tenant,
+                SpanKind::Completed { response, start: self.now, speculative: false },
+            );
+        }
         self.trace.push(sch.clone());
         Some(sch)
     }
@@ -907,6 +998,10 @@ impl EdgeEnv {
                 abort_attempt(&mut self.cluster, &att, now);
                 self.metrics.observe_gang_kill(att.work());
                 let tid = att.task.id;
+                if let Some(tr) = self.tracer.as_mut() {
+                    let attempt = fs.attempts.get(&tid).copied().unwrap_or(0);
+                    tr.record(now, tid, att.task.tenant, SpanKind::Killed { attempt });
+                }
                 if att.speculative && !self.legacy_scan {
                     // A surviving primary just lost its backup: the old
                     // per-tick scan would reconsider it next tick, so
@@ -925,12 +1020,24 @@ impl EdgeEnv {
                 handled.push(tid);
                 let count = fs.attempts.entry(tid).or_insert(0);
                 *count += 1;
-                if *count > fs.cfg.max_retries {
+                let attempt = *count;
+                if attempt > fs.cfg.max_retries {
                     fs.attempts.remove(&tid);
                     fs.failed_tasks += 1;
                     self.metrics.observe_task_failure();
+                    if let Some(tr) = self.tracer.as_mut() {
+                        tr.record(
+                            now,
+                            tid,
+                            att.task.tenant,
+                            SpanKind::Dropped { reason: DropReason::RetriesExhausted },
+                        );
+                    }
                 } else {
                     self.metrics.observe_retry();
+                    if let Some(tr) = self.tracer.as_mut() {
+                        tr.record(now, tid, att.task.tenant, SpanKind::Retried { attempt });
+                    }
                     self.queue.push_retry(att.task);
                 }
             }
@@ -957,6 +1064,11 @@ impl EdgeEnv {
                     if sib.task.id == tid {
                         abort_attempt(&mut self.cluster, &sib, now);
                         self.metrics.observe_wasted_work(sib.work());
+                        if let Some(tr) = self.tracer.as_mut() {
+                            // Lost a speculative race: the attempt dies,
+                            // the task does not.
+                            tr.record(now, tid, sib.task.tenant, SpanKind::Killed { attempt: 0 });
+                        }
                     } else {
                         keep.push(sib);
                     }
@@ -1002,9 +1114,22 @@ impl EdgeEnv {
                     let exec =
                         self.exec_model
                             .sample_exec(att.steps, att.task.patches, &mut self.rng);
+                    // Backups only land on warm gangs (Selection::Reuse).
+                    // Emitted after the exec draw: recording must never
+                    // reorder or add RNG consumption.
+                    let gang_ref =
+                        self.tracer.as_ref().map(|_| GangRef::capture(&servers, |_| true));
                     let gang = self.cluster.dispatch(&servers, exec, att.task.model, true, now);
                     self.metrics.observe_spec_launch();
                     self.metrics.observe_dispatched_work(exec * servers.len() as f64);
+                    if let (Some(tr), Some(gref)) = (self.tracer.as_mut(), gang_ref) {
+                        tr.record(
+                            now,
+                            att.task.id,
+                            att.task.tenant,
+                            SpanKind::SpecLaunched { gang: gref, exec },
+                        );
+                    }
                     let seq = next_seq;
                     next_seq += 1;
                     backups.push(InFlight {
@@ -1078,6 +1203,17 @@ impl EdgeEnv {
         self.metrics.observe_completed_work(att.work());
         if att.speculative {
             self.metrics.observe_spec_win();
+        }
+        if let Some(tr) = self.tracer.as_mut() {
+            // `start` links the completion to its winning dispatch-like
+            // event; the speculative flag disambiguates a retry dispatch
+            // and a backup launch sharing a tick.
+            tr.record(
+                now,
+                att.task.id,
+                att.task.tenant,
+                SpanKind::Completed { response, start: att.start, speculative: att.speculative },
+            );
         }
         self.trace.push(sch);
     }
@@ -2113,6 +2249,152 @@ mod tests {
         };
         assert_reports_bit_identical(&live_rep, &replay(true));
         assert_reports_bit_identical(&live_rep, &replay(false));
+    }
+
+    // --- lifecycle tracing: determinism, core-agnosticism, exact books ---
+
+    fn churn_cfg() -> EnvConfig {
+        let mut cfg = ExperimentConfig::preset_8node(0.1).env;
+        cfg.tasks_per_episode = 40;
+        cfg.faults = Some(FaultsConfig {
+            mtbf: 150.0,
+            mttr: 60.0,
+            zones: 4,
+            zone_shock_rate: 0.002,
+            straggler_rate: 0.01,
+            spec_beta: 1.5,
+            max_retries: 3,
+            ..FaultsConfig::default()
+        });
+        cfg
+    }
+
+    #[test]
+    fn tracing_on_or_off_is_bit_identical() {
+        // Recording draws from no RNG stream and touches no accounting:
+        // episodes must not move by a bit when tracing is enabled — plain
+        // and under churn, on both cores.
+        for legacy in [false, true] {
+            let cases = [(ExperimentConfig::preset_8node(0.1).env, 71_u64), (churn_cfg(), 72)];
+            for (cfg, seed) in cases {
+                let plain = run_head_first(EdgeEnv::new(cfg.clone(), seed), legacy);
+                let mut e = EdgeEnv::new(cfg, seed);
+                e.enable_tracing(1 << 14);
+                let traced = run_head_first(e, legacy);
+                assert_reports_bit_identical(&plain, &traced);
+            }
+        }
+    }
+
+    #[test]
+    fn event_and_tick_cores_emit_identical_traces() {
+        // The span stream is part of the bit-exactness contract: both
+        // simulator cores must emit byte-identical JSONL.
+        for (cfg, seed) in [(ExperimentConfig::preset_8node(0.1).env, 81_u64), (churn_cfg(), 82)] {
+            let run = |legacy: bool| {
+                let mut e = EdgeEnv::new(cfg.clone(), seed);
+                e.enable_tracing(1 << 14);
+                e.set_legacy_scan(legacy);
+                let l = e.cfg.queue_window;
+                let s_max = e.cfg.s_max;
+                for _ in 0..=e.cfg.step_limit {
+                    while let Some(idx) = e.first_feasible() {
+                        if e.schedule_task_at(idx, s_max).is_none() {
+                            break;
+                        }
+                    }
+                    if e.step(&Action::noop(l)).done {
+                        break;
+                    }
+                }
+                e.take_tracer().unwrap().to_jsonl()
+            };
+            let tick = run(true);
+            let event = run(false);
+            assert!(!tick.is_empty());
+            assert_eq!(tick, event, "span streams diverge between cores");
+        }
+    }
+
+    #[test]
+    fn fault_episode_trace_decomposes_every_task_exactly() {
+        use crate::obs::analyze::analyze;
+        let mut e = EdgeEnv::new(churn_cfg(), 91);
+        e.enable_tracing(1 << 14);
+        let rep = run_head_first(e.clone(), false);
+        // Re-run on the traced env itself (clone above kept the tracer).
+        let rep2 = {
+            let l = e.cfg.queue_window;
+            let s_max = e.cfg.s_max;
+            for _ in 0..=e.cfg.step_limit {
+                while let Some(idx) = e.first_feasible() {
+                    if e.schedule_task_at(idx, s_max).is_none() {
+                        break;
+                    }
+                }
+                if e.step(&Action::noop(l)).done {
+                    break;
+                }
+            }
+            e.report()
+        };
+        assert_reports_bit_identical(&rep, &rep2);
+        let tr = e.take_tracer().unwrap();
+        assert_eq!(tr.evicted(), 0, "ring must be large enough for this episode");
+        let a = analyze(&tr.events());
+        // Books: every completed task decomposes to its measured latency
+        // bit-exactly, through kills, retries and speculative races.
+        a.check_books().unwrap();
+        assert_eq!(a.tasks.len(), rep.completed_tasks, "one decomposition per completion");
+        // Anything not completed/dropped was still queued or in flight
+        // when the episode ended — skipped, never mis-attributed.
+        assert!(
+            a.incomplete <= rep.total_tasks - rep.completed_tasks,
+            "incomplete {} exceeds unresolved tasks",
+            a.incomplete
+        );
+        assert_eq!(a.dropped, rep.dropped_tasks + rep.failed_tasks);
+        assert_eq!(a.suspect, 0, "no materially negative residuals");
+        if rep.retries > 0 {
+            assert!(
+                a.tasks.iter().any(|d| d.retry > 0.0),
+                "an episode with retries must show retry latency"
+            );
+        }
+        if rep.spec_wins > 0 {
+            assert_eq!(a.tasks.iter().filter(|d| d.spec_win).count(), rep.spec_wins);
+        }
+        // JSONL round trip preserves the books bit-exactly.
+        let reparsed = crate::obs::trace::parse_jsonl(&tr.to_jsonl()).unwrap();
+        analyze(&reparsed).check_books().unwrap();
+    }
+
+    #[test]
+    fn traced_speculative_win_is_attributed_to_the_backup() {
+        use crate::obs::analyze::analyze;
+        let mut cfg = scripted_fault_cfg(3, 1.5);
+        cfg.patch_choices = vec![1];
+        cfg.tasks_per_episode = 2;
+        let wl = Workload::fixed(&[(0.0, 1, 0), (1.0, 1, 0)]);
+        let mut e = EdgeEnv::with_workload(cfg, wl, Pcg64::seeded(7));
+        e.enable_tracing(1 << 10);
+        e.script_faults(vec![FaultEvent {
+            t: 2.0,
+            server: 0,
+            kind: FaultKind::SlowStart { factor: 20.0, duration: 1000.0 },
+        }])
+        .unwrap();
+        let rep = run_to_done(&mut e);
+        assert_eq!(rep.spec_wins, 1);
+        let a = analyze(&e.take_tracer().unwrap().events());
+        a.check_books().unwrap();
+        let winner = a.tasks.iter().find(|d| d.spec_win).expect("a spec win must be traced");
+        // The backup launched past beta x nominal: its decomposition books
+        // that lead time as retry latency, warm (no cold component).
+        assert!(winner.retry > 0.0, "retry {}", winner.retry);
+        assert_eq!(winner.cold, 0.0);
+        assert!(!winner.cold_start);
+        assert!(winner.attempts >= 2);
     }
 
     #[test]

@@ -126,6 +126,25 @@ impl LatencyHistogram {
         self.percentile(0.99).unwrap_or(f64::NAN)
     }
 
+    pub fn bucket_width(&self) -> f64 {
+        self.bucket_width
+    }
+
+    /// Per-bucket counts (bucket `i` covers `[i*w, (i+1)*w)`); overflow
+    /// samples beyond the last bucket are in [`overflow`](Self::overflow).
+    pub fn bucket_counts(&self) -> &[u64] {
+        &self.counts
+    }
+
+    pub fn overflow(&self) -> u64 {
+        self.overflow
+    }
+
+    /// Sum of all observed values (the Prometheus `_sum` series).
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
     /// Merge another histogram with identical bucket configuration.
     pub fn merge(&mut self, other: &LatencyHistogram) {
         assert_eq!(self.bucket_width, other.bucket_width, "bucket width mismatch");
@@ -648,6 +667,77 @@ mod tests {
         for q in [0.1, 0.5, 0.9, 0.99] {
             assert_eq!(a.percentile(q), all.percentile(q));
         }
+    }
+
+    #[test]
+    fn sharded_merge_is_bit_identical_to_concatenated_stream() {
+        use crate::util::rng::Pcg64;
+        // Percentiles derive from bucket counts (u64, additive) plus
+        // min/max (associative), so a merge of unevenly-sized shards must
+        // reproduce the concatenated-stream collector bit-for-bit — the
+        // invariant that lets `evaluate` and the sharded sweeps pool
+        // per-episode histograms without storing samples.
+        let mut rng = Pcg64::new(19, 0x5EED);
+        let sizes = [311usize, 7, 1024, 95];
+        let mut whole = MetricsCollector::new(3);
+        let mut merged = MetricsCollector::new(3);
+        for &n in &sizes {
+            let mut shard = MetricsCollector::new(3);
+            for _ in 0..n {
+                // Spread into the overflow bucket too (>2048 s).
+                let resp = rng.next_f64() * 2500.0;
+                let wait = rng.next_f64() * 50.0;
+                let reload = rng.next_f64() < 0.3;
+                whole.observe_task(resp, wait, reload);
+                shard.observe_task(resp, wait, reload);
+            }
+            merged.merge(&shard);
+        }
+        assert_eq!(merged.completed(), whole.completed());
+        assert_eq!(merged.reloads(), whole.reloads());
+        assert_eq!(merged.latency.overflow(), whole.latency.overflow());
+        let pairs = [(&merged.latency, &whole.latency), (&merged.waiting, &whole.waiting)];
+        for q in [0.0, 0.1, 0.5, 0.9, 0.99, 0.999, 1.0] {
+            for (hm, hw) in pairs {
+                let a = hm.percentile(q);
+                let b = hw.percentile(q);
+                assert_eq!(
+                    a.map(f64::to_bits),
+                    b.map(f64::to_bits),
+                    "q={q}: merged {a:?} vs concatenated {b:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fault_counters_are_additive_under_sharded_sweeps() {
+        use crate::util::par;
+        // Shard collectors are built on `par::map_cells` worker threads,
+        // exactly as `faults::sweep_threaded` farms out cells; the pooled
+        // counters must equal the per-shard sums regardless of threading.
+        let shards = par::map_cells(vec![3u64, 5, 7, 11], 3, |n| {
+            let mut m = MetricsCollector::new(2);
+            for i in 0..n {
+                m.observe_failure();
+                m.observe_retry();
+                m.observe_dispatched_work(2.0 * i as f64);
+                if i % 2 == 0 {
+                    m.observe_gang_kill(i as f64);
+                }
+            }
+            m
+        });
+        let mut pooled = MetricsCollector::new(2);
+        for s in &shards {
+            pooled.merge(s);
+        }
+        assert_eq!(pooled.failures(), 26);
+        assert_eq!(pooled.retries(), 26);
+        assert_eq!(pooled.gang_kills(), 2 + 3 + 4 + 6);
+        // Small integers: exactly representable, so sums are exact.
+        assert_eq!(pooled.dispatched_ps(), 6.0 + 20.0 + 42.0 + 110.0);
+        assert_eq!(pooled.wasted_ps(), 2.0 + 6.0 + 12.0 + 30.0);
     }
 
     #[test]
