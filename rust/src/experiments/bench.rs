@@ -10,10 +10,13 @@
 //! scale-level cross-check of the bit-exactness property tests.
 //!
 //! The emitted JSON is the perf trajectory's unit of record: CI runs
-//! `eat bench --quick --check BENCH_sim.json --min-speedup 10` and fails
-//! if event-core throughput regresses more than 20% against the committed
-//! baseline, or if the ≥10k-server speedup over the tick core falls
-//! below the floor.
+//! `eat bench --quick --min-speedup 10` and then
+//! `eat bench compare BENCH_sim.json BENCH_quick.json` — the comparator
+//! matches cells on (servers, tasks), computes new/old event-core
+//! throughput ratios, emits an `eat-bench-compare-v1` verdict document,
+//! and exits non-zero when any cell falls below `--min-ratio` (default
+//! 0.8). The in-process `--check` flag remains for one-shot local gating
+//! against a baseline file without a second invocation.
 
 use crate::config::ExperimentConfig;
 use crate::sim::env::{Action, EdgeEnv};
@@ -264,7 +267,116 @@ pub fn check_speedup(cells: &[(usize, usize, Vec<CellResult>)], min_speedup: f64
     Ok(())
 }
 
+/// Compare two `eat-bench-v1` documents cell-by-cell. Cells are matched
+/// on (servers, tasks); each matched cell's event-core throughput ratio
+/// (new/old) is checked against `min_ratio`. Returns the verdict document
+/// (`eat-bench-compare-v1`) — the caller decides how to exit on `pass`.
+/// Cells present in only one document are skipped, not failed: grids
+/// legitimately differ between `--quick` and full runs.
+pub fn compare_docs(old: &Value, new: &Value, min_ratio: f64) -> anyhow::Result<Value> {
+    for (label, doc) in [("old", old), ("new", new)] {
+        let schema = doc.get("schema").and_then(Value::as_str).unwrap_or("?");
+        anyhow::ensure!(
+            schema == "eat-bench-v1",
+            "{label} document has schema {schema:?}, expected \"eat-bench-v1\""
+        );
+    }
+    let event_tps = |row: &Value| -> Option<f64> {
+        row.get("event").and_then(|e| e.get("tasks_per_s")).and_then(Value::as_f64)
+    };
+    let old_rows = old.req("grid")?.as_arr().unwrap_or(&[]);
+    let new_rows = new.req("grid")?.as_arr().unwrap_or(&[]);
+    let mut cells: Vec<Value> = Vec::new();
+    let mut pass = true;
+    for old_row in old_rows {
+        let (servers, tasks) = (
+            old_row.req("servers")?.as_usize().unwrap_or(0),
+            old_row.req("tasks")?.as_usize().unwrap_or(0),
+        );
+        let Some(old_tps) = event_tps(old_row) else { continue };
+        let Some(new_row) = new_rows.iter().find(|r| {
+            r.get("servers").and_then(Value::as_usize) == Some(servers)
+                && r.get("tasks").and_then(Value::as_usize) == Some(tasks)
+        }) else {
+            continue;
+        };
+        let Some(new_tps) = event_tps(new_row) else { continue };
+        let ratio = if old_tps > 0.0 { new_tps / old_tps } else { f64::INFINITY };
+        let ok = ratio >= min_ratio;
+        pass &= ok;
+        let mut cell = Value::obj();
+        cell.set("servers", servers)
+            .set("tasks", tasks)
+            .set("old_tps", old_tps)
+            .set("new_tps", new_tps)
+            .set("ratio", ratio)
+            .set("verdict", if ok { "ok" } else { "regression" });
+        cells.push(cell);
+    }
+    anyhow::ensure!(
+        !cells.is_empty(),
+        "bench compare matched no grid cells (disjoint grids or schema drift)"
+    );
+    let mut doc = Value::obj();
+    doc.set("schema", "eat-bench-compare-v1")
+        .set("min_ratio", min_ratio)
+        .set("cells", cells)
+        .set("pass", pass);
+    Ok(doc)
+}
+
+/// Render a compare verdict document as a terminal table.
+pub fn render_compare(doc: &Value) -> String {
+    let mut table = crate::util::table::Table::new(
+        "bench compare (event-core tasks/s, new vs old)",
+        &["servers", "tasks", "old", "new", "ratio", "verdict"],
+    );
+    for cell in doc.get("cells").and_then(Value::as_arr).unwrap_or(&[]) {
+        let g = |k: &str| cell.get(k).and_then(Value::as_f64).unwrap_or(0.0);
+        let verdict = cell.get("verdict").and_then(Value::as_str).unwrap_or("?");
+        table.row(vec![
+            format!("{}", g("servers") as usize),
+            format!("{}", g("tasks") as usize),
+            crate::util::table::f(g("old_tps"), 0),
+            crate::util::table::f(g("new_tps"), 0),
+            crate::util::table::f(g("ratio"), 3),
+            verdict.to_string(),
+        ]);
+    }
+    table.render()
+}
+
+/// `eat bench compare OLD.json NEW.json [--min-ratio 0.8] [--out v.json]`.
+fn run_compare(args: &Args) -> anyhow::Result<String> {
+    let (Some(old_path), Some(new_path)) = (args.positional.get(2), args.positional.get(3))
+    else {
+        anyhow::bail!("usage: eat bench compare OLD.json NEW.json [--min-ratio 0.8] [--out v.json]");
+    };
+    let min_ratio = args.get_f64("min-ratio", 0.8);
+    anyhow::ensure!(min_ratio > 0.0, "--min-ratio must be positive, got {min_ratio}");
+    let old = json::parse(&std::fs::read_to_string(old_path)?)?;
+    let new = json::parse(&std::fs::read_to_string(new_path)?)?;
+    let mut doc = compare_docs(&old, &new, min_ratio)?;
+    doc.set("old", old_path.as_str()).set("new", new_path.as_str());
+    let rendered = render_compare(&doc);
+    println!("{rendered}");
+    if let Some(out_path) = args.get("out") {
+        std::fs::write(out_path, format!("{}\n", doc.to_json_pretty()))?;
+        crate::log_info!("wrote {out_path}");
+    }
+    let pass = doc.get("pass").and_then(Value::as_bool) == Some(true);
+    anyhow::ensure!(
+        pass,
+        "bench compare: at least one cell fell below {min_ratio}x of {old_path}"
+    );
+    crate::log_info!("bench compare: all cells >= {min_ratio}x of {old_path}");
+    Ok(rendered)
+}
+
 pub fn run(args: &Args) -> anyhow::Result<String> {
+    if args.positional.get(1).map(String::as_str) == Some("compare") {
+        return run_compare(args);
+    }
     let quick = args.has_flag("quick");
     let seed = args.get_u64("seed", 42);
     let out_path = args.get_or("out", "BENCH_sim.json");
@@ -381,6 +493,59 @@ mod tests {
             // Elsewhere the report must say null, never a fake 0.
             None => assert!(matches!(field, Value::Null)),
         }
+    }
+
+    #[test]
+    fn compare_verdicts_flag_only_regressed_cells() {
+        let doc = |cells: &[(usize, usize, f64)]| {
+            let cells: Vec<_> = cells
+                .iter()
+                .map(|&(servers, tasks, tps)| {
+                    (
+                        servers,
+                        tasks,
+                        vec![CellResult {
+                            servers,
+                            tasks,
+                            mode: "event",
+                            wall_s: 1.0,
+                            ticks: 5,
+                            completed: 10,
+                            tasks_per_s: tps,
+                            decision_p50_us: 1.0,
+                            decision_p99_us: 2.0,
+                        }],
+                    )
+                })
+                .collect();
+            report_json(true, 1, &cells)
+        };
+        // One healthy cell, one regressed cell, one cell only in `old`
+        // (skipped, not failed).
+        let old = doc(&[(8, 100, 1000.0), (1_000, 500, 2000.0), (9, 9, 1.0)]);
+        let new = doc(&[(8, 100, 950.0), (1_000, 500, 1000.0)]);
+        let verdict = compare_docs(&old, &new, 0.8).unwrap();
+        assert_eq!(verdict.req("schema").unwrap().as_str(), Some("eat-bench-compare-v1"));
+        assert_eq!(verdict.req("pass").unwrap().as_bool(), Some(false));
+        let cells = verdict.req("cells").unwrap().as_arr().unwrap();
+        assert_eq!(cells.len(), 2, "unmatched cell must be skipped: {verdict:?}");
+        assert_eq!(cells[0].req("verdict").unwrap().as_str(), Some("ok"));
+        assert_eq!(cells[1].req("verdict").unwrap().as_str(), Some("regression"));
+        let ratio = cells[1].req("ratio").unwrap().as_f64().unwrap();
+        assert!((ratio - 0.5).abs() < 1e-12, "ratio {ratio}");
+        // The same pair passes under a floor below the worst ratio.
+        let lax = compare_docs(&old, &new, 0.4).unwrap();
+        assert_eq!(lax.req("pass").unwrap().as_bool(), Some(true));
+        // The rendered table carries every matched cell and its verdict.
+        let table = render_compare(&verdict);
+        assert!(table.contains("regression"), "{table}");
+        assert!(table.contains("0.500"), "{table}");
+        // Disjoint grids are an error, not a silent pass.
+        assert!(compare_docs(&doc(&[(5, 5, 1.0)]), &new, 0.8).is_err());
+        // Wrong schema is rejected before any cell math.
+        let mut bogus = Value::obj();
+        bogus.set("schema", "something-else").set("grid", Vec::<Value>::new());
+        assert!(compare_docs(&bogus, &new, 0.8).is_err());
     }
 
     #[test]

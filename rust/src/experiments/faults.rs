@@ -277,6 +277,7 @@ pub fn run(args: &Args) -> anyhow::Result<String> {
     template.seed = seed;
     template.env.tasks_per_episode = tasks;
     let tenants_base = TenantsConfig::three_tier(base_rate);
+    let t_sweep = std::time::Instant::now();
     let cells = sweep_threaded(
         &template,
         &tenants_base,
@@ -288,6 +289,11 @@ pub fn run(args: &Args) -> anyhow::Result<String> {
         &modes,
         threads,
     )?;
+    crate::log_info!(
+        "sweep: {} cells x {episodes} episode(s) in {:.2}s wall on {threads} thread(s)",
+        cells.len(),
+        t_sweep.elapsed().as_secs_f64()
+    );
 
     let mut header: Vec<String> = [
         "mtbf", "zshock", "slow", "mode", "done", "fail", "retry", "kills", "spec", "wasted%",
@@ -336,16 +342,27 @@ pub fn run(args: &Args) -> anyhow::Result<String> {
     if let Some(path) = args.get("trace") {
         // Trace the first sweep cell's episode 0 — the same config the
         // sweep just measured — and export it for `eat trace analyze`.
+        // A single episode is inherently serial, so its wall time is
+        // logged on its own line, never folded into the sweep's.
         let mut faults = faults_base.clone();
         faults.mtbf = mtbfs.first().copied().unwrap_or(0.0);
         faults.zone_shock_rate = zone_rates.first().copied().unwrap_or(0.0);
         faults.straggler_rate = straggler_rates.first().copied().unwrap_or(0.0);
         faults.health_aware = modes.first().copied().unwrap_or(true);
+        crate::log_info!(
+            "tracing cell mtbf={} zshock={} slow={} mode={} episode 0 (serial re-run)",
+            faults.mtbf,
+            faults.zone_shock_rate,
+            faults.straggler_rate,
+            if faults.health_aware { "aware" } else { "blind" },
+        );
         let mut cfg = template.clone();
         cfg.env.tenants = Some(tenants_base.clone());
         cfg.env.faults = Some(faults);
         cfg.env.validate()?;
+        let t0 = std::time::Instant::now();
         let tr = traced_episode(&cfg, 20);
+        crate::log_info!("traced re-run: {:.2}s wall", t0.elapsed().as_secs_f64());
         tr.write_jsonl(path)?;
         println!("wrote trace {path} ({} events, {} evicted)", tr.len(), tr.evicted());
     }

@@ -149,6 +149,63 @@ pub fn sweep_threaded(
     }))
 }
 
+/// Re-run episode 0 of `cfg` with lifecycle tracing on and return the
+/// recorder. Recording never perturbs the episode (no RNG draws, no
+/// scheduling feedback — pinned by `tracing_on_or_off_is_bit_identical`
+/// in `sim::env`), so the trace describes exactly what the sweep measured.
+pub fn traced_episode(cfg: &ExperimentConfig, steps: u32) -> crate::obs::trace::TraceRecorder {
+    let mut wl_rng = Pcg64::new(cfg.seed, 0xC0FFEE);
+    let workload = Workload::generate(&cfg.env, &mut wl_rng);
+    let mut env = EdgeEnv::with_workload(cfg.env.clone(), workload, Pcg64::new(cfg.seed, 0xE21));
+    env.enable_tracing(crate::obs::trace::TraceRecorder::default_capacity());
+    let noop = Action::noop(cfg.env.queue_window);
+    loop {
+        while let Some(idx) = env.first_feasible() {
+            if env.schedule_task_at(idx, steps).is_none() {
+                break;
+            }
+        }
+        if env.step(&noop).done {
+            break;
+        }
+    }
+    env.take_tracer().expect("tracing was enabled")
+}
+
+/// Re-run one episode of `cfg` with fleet sampling on and return its
+/// series shard. Like tracing, sampling never perturbs the episode
+/// (pinned by `sampling_on_or_off_is_bit_identical` in `sim::env`), and
+/// each episode's shard is a function of `(cfg.seed, ep)` alone, so
+/// shards can be computed on any thread layout and pooled bit-exactly
+/// with [`crate::obs::FleetSeries::merge`].
+pub fn sampled_episode(
+    cfg: &ExperimentConfig,
+    ep: u64,
+    steps: u32,
+    cadence: f64,
+) -> crate::obs::FleetSeries {
+    let mut wl_rng = Pcg64::new(cfg.seed.wrapping_add(ep), 0xC0FFEE);
+    let workload = Workload::generate(&cfg.env, &mut wl_rng);
+    let mut env = EdgeEnv::with_workload(
+        cfg.env.clone(),
+        workload,
+        Pcg64::new(cfg.seed.wrapping_add(ep), 0xE21),
+    );
+    env.enable_sampling(cadence, crate::obs::FleetSeries::default_capacity());
+    let noop = Action::noop(cfg.env.queue_window);
+    loop {
+        while let Some(idx) = env.first_feasible() {
+            if env.schedule_task_at(idx, steps).is_none() {
+                break;
+            }
+        }
+        if env.step(&noop).done {
+            break;
+        }
+    }
+    env.take_series().expect("sampling was enabled")
+}
+
 fn parse_f64_list(s: &str) -> anyhow::Result<Vec<f64>> {
     s.split(',')
         .map(|x| {
@@ -242,6 +299,60 @@ pub fn run(args: &Args) -> anyhow::Result<String> {
     let out = table.render();
     println!("{out}");
     super::save_csv(&format!("qos_n{nodes}"), &table.to_csv())?;
+    if let Some(path) = args.get("trace") {
+        // Trace the first sweep cell's episode 0 — the same config the
+        // sweep just measured — and export it for `eat trace analyze` /
+        // `eat slo report`. A single episode is inherently serial, so its
+        // wall time is reported on its own line, never folded into the
+        // sweep's.
+        let mut tenants = tenants_base
+            .scaled(overloads.first().copied().unwrap_or(1.0));
+        tenants.admission = admissions.first().cloned().unwrap_or(AdmissionConfig::AdmitAll);
+        tenants.queue = disciplines.first().copied().unwrap_or(QueueDiscipline::Fifo);
+        let mut cfg = template.clone();
+        cfg.env.tenants = Some(tenants);
+        cfg.env.validate()?;
+        crate::log_info!(
+            "tracing cell load={:.1}x admission={} queue={} episode 0 (serial re-run)",
+            overloads.first().copied().unwrap_or(1.0),
+            cfg.env.tenants.as_ref().unwrap().admission.name(),
+            cfg.env.tenants.as_ref().unwrap().queue.name(),
+        );
+        let t0 = std::time::Instant::now();
+        let tr = traced_episode(&cfg, 20);
+        crate::log_info!("traced re-run: {:.2}s wall", t0.elapsed().as_secs_f64());
+        tr.write_jsonl(path)?;
+        println!("wrote trace {path} ({} events, {} evicted)", tr.len(), tr.evicted());
+    }
+    if let Some(path) = args.get("timeseries") {
+        // Sample the first sweep cell's episodes at a fixed cadence and
+        // pool the per-episode shards — across `--threads`, since each
+        // shard is a function of (seed, episode) alone and the merge is
+        // bit-exact. Feeds `eat slo report` and dashboard plotting.
+        let cadence = args.get_f64("cadence", 25.0);
+        anyhow::ensure!(
+            cadence > 0.0 && cadence.is_finite(),
+            "--cadence must be a positive number of simulated seconds"
+        );
+        let mut tenants = tenants_base.scaled(overloads.first().copied().unwrap_or(1.0));
+        tenants.admission = admissions.first().cloned().unwrap_or(AdmissionConfig::AdmitAll);
+        tenants.queue = disciplines.first().copied().unwrap_or(QueueDiscipline::Fifo);
+        let mut cfg = template.clone();
+        cfg.env.tenants = Some(tenants);
+        cfg.env.validate()?;
+        let eps: Vec<u64> = (0..episodes.max(1) as u64).collect();
+        let shards = par::map_cells(eps, threads, |ep| sampled_episode(&cfg, ep, 20, cadence));
+        let mut merged = shards.first().cloned().expect("at least one episode");
+        for s in &shards[1..] {
+            merged.merge(s);
+        }
+        merged.write_jsonl(path)?;
+        println!(
+            "wrote time series {path} ({} windows, cadence {cadence}s, {} episode(s) pooled)",
+            merged.len(),
+            shards.len()
+        );
+    }
     Ok(out)
 }
 
@@ -379,6 +490,48 @@ mod tests {
                 "sweep diverged at {threads} threads"
             );
         }
+    }
+
+    #[test]
+    fn traced_episode_books_balance_and_feed_slo_report() {
+        let mut cfg = light_gang_template(40, 5);
+        cfg.env.tenants = Some(TenantsConfig::three_tier(0.1).scaled(2.0));
+        cfg.env.validate().unwrap();
+        let tr = traced_episode(&cfg, 20);
+        assert!(!tr.is_empty());
+        let a = crate::obs::analyze::analyze_jsonl(&tr.to_jsonl()).unwrap();
+        a.check_books().unwrap();
+        // The trace drives the burn-rate path end to end: every tenant
+        // class appears in the report with a non-empty outcome stream.
+        let classes = crate::obs::slo::SloClass::from_config(&TenantsConfig::three_tier(0.1));
+        let report = crate::obs::slo::report_from_trace(
+            &tr.events(),
+            &classes,
+            crate::obs::slo::SloOptions::default(),
+        );
+        for t in &report.tenants {
+            assert!(t.outcomes > 0, "{}: no outcomes in traced episode", t.name);
+        }
+    }
+
+    #[test]
+    fn sampled_episodes_pool_into_a_series_the_slo_report_reads() {
+        let mut cfg = light_gang_template(30, 5);
+        cfg.env.tenants = Some(TenantsConfig::three_tier(0.1).scaled(2.0));
+        cfg.env.validate().unwrap();
+        let mut merged = sampled_episode(&cfg, 0, 20, 25.0);
+        merged.merge(&sampled_episode(&cfg, 1, 20, 25.0));
+        assert!(!merged.is_empty());
+        let classes = crate::obs::slo::SloClass::from_config(&TenantsConfig::three_tier(0.1));
+        let report = crate::obs::slo::report_from_series(
+            &merged,
+            &classes,
+            crate::obs::slo::SloOptions::default(),
+        );
+        assert!(
+            report.tenants.iter().any(|t| t.outcomes > 0),
+            "pooled series carried no outcomes into the burn-rate report"
+        );
     }
 
     #[test]

@@ -136,6 +136,7 @@ pub fn run(args: &Args) -> anyhow::Result<String> {
             f(s.avg_quality, 3),
         ])
     }
+    let t_sweep = std::time::Instant::now();
     let rows: Vec<Vec<String>> = if let Some(rt) = &rt {
         let mut rows = Vec::with_capacity(jobs.len());
         for (scenario, cfg) in &jobs {
@@ -149,6 +150,16 @@ pub fn run(args: &Args) -> anyhow::Result<String> {
         .into_iter()
         .collect::<anyhow::Result<_>>()?
     };
+    crate::log_info!(
+        "sweep: {} cells x {episodes} episode(s) in {:.2}s wall on {}",
+        rows.len(),
+        t_sweep.elapsed().as_secs_f64(),
+        if rt.is_some() {
+            "1 thread (artifact-backed policies stay sequential)".to_string()
+        } else {
+            format!("{threads} thread(s)")
+        },
+    );
     for row in rows {
         table.row(row);
     }
@@ -159,13 +170,20 @@ pub fn run(args: &Args) -> anyhow::Result<String> {
     if let Some(path) = args.get("trace") {
         // Trace the first (scenario × algorithm) cell's episode 0 — the
         // same CRN streams the sweep used, with the same policy driving
-        // dispatch — and export it for `eat trace analyze`.
+        // dispatch — and export it for `eat trace analyze`. A single
+        // episode is inherently serial, so its wall time is logged on its
+        // own line, never folded into the sweep's.
         let scenario = scenarios.first().map(String::as_str).unwrap_or("poisson");
         let mut cfg = ExperimentConfig::preset(nodes);
         cfg.seed = seed;
         cfg.env.arrival_rate = rate;
         cfg.env.workload = Some(WorkloadConfig::preset(scenario, rate)?);
         cfg.algorithm = *algorithms.first().unwrap_or(&Algorithm::Greedy);
+        crate::log_info!(
+            "tracing cell scenario={scenario} algorithm={} episode 0 (serial re-run)",
+            cfg.algorithm.name(),
+        );
+        let t0 = std::time::Instant::now();
         let mut policy = super::trained_policy(&cfg, rt.as_ref(), train_episodes, verbose)?;
         let mut wl_rng = Pcg64::new(seed, 0xC0FFEE);
         let workload = Workload::generate(&cfg.env, &mut wl_rng);
@@ -173,6 +191,7 @@ pub fn run(args: &Args) -> anyhow::Result<String> {
         env.enable_tracing(crate::obs::trace::TraceRecorder::default_capacity());
         run_episode(&mut env, policy.as_mut(), None);
         let tr = env.take_tracer().expect("tracing was enabled");
+        crate::log_info!("traced re-run: {:.2}s wall", t0.elapsed().as_secs_f64());
         tr.write_jsonl(path)?;
         println!("wrote trace {path} ({} events, {} evicted)", tr.len(), tr.evicted());
     }

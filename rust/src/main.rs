@@ -38,6 +38,11 @@
 //!   eat trace import <csv> <out.jsonl>                      map a CSV
 //!       request log onto a JSONL workload trace (replayable via
 //!       `eat scenarios --replay`)
+//!   eat slo report <file> [--target X] [--window 60]        per-tenant
+//!       error budgets and multi-window burn rates over a lifecycle trace
+//!       or fleet time series; exits non-zero when a budget is exhausted
+//!   eat bench compare OLD.json NEW.json [--min-ratio 0.8]   per-cell
+//!       throughput delta verdicts between two eat-bench-v1 documents
 //!   eat info                                                print artifact
 //!       manifest summary
 
@@ -51,7 +56,7 @@ use eat::{log_info, log_warn};
 
 fn usage() -> ! {
     eprintln!(
-        "usage: eat <experiment|train|eval|serve|scenarios|qos|faults|bench|info> [options]\n\
+        "usage: eat <experiment|train|eval|serve|scenarios|qos|faults|bench|slo|info> [options]\n\
          \n  eat experiment <id>   ids: table1 table2_4 table6 table9 table10 table11\n\
          \x20                          table12 fig4 fig5 fig6 fig7 fig8 grid scenarios all\n\
          \x20     options: --nodes 4|8|12 --episodes K --train-episodes K --algs a,b,c\n\
@@ -71,15 +76,23 @@ fn usage() -> ! {
          \n  eat qos     [--nodes N] [--tasks K] [--episodes E] [--rate R] [--seed S]\n\
          \x20           [--overloads 1.0,3.0] [--admissions admit-all,drop-tail,token-bucket]\n\
          \x20           [--queues fifo,edf] [--max-queue Q] [--bucket-rate R] [--bucket-burst B]\n\
+         \x20           [--threads T] [--trace out.jsonl]\n\
+         \x20           [--timeseries out.jsonl [--cadence 25]]\n\
          \n  eat faults  [--nodes N] [--tasks K] [--episodes E] [--rate R] [--seed S]\n\
          \x20           [--mtbfs 0,600,200] [--zone-rates 0.002] [--straggler-rates 0.005]\n\
          \x20           [--modes aware,blind] [--mttr T] [--zones Z] [--spec-beta B]\n\
          \x20           [--max-retries R] [--threads T] [--trace out.jsonl]\n\
          \n  eat bench   [--quick] [--seed S] [--out BENCH_sim.json]\n\
          \x20           [--check BASELINE.json] [--min-speedup X]\n\
+         \n  eat bench compare OLD.json NEW.json [--min-ratio 0.8] [--out verdict.json]\n\
+         \x20     per-cell throughput deltas between two eat-bench-v1 docs; non-zero\n\
+         \x20     exit when any cell's new/old ratio falls below the floor\n\
          \n  eat trace import <csv> <out.jsonl>\n\
          \n  eat trace analyze <trace.jsonl> [--json]   decompose per-task latency into\n\
          \x20     queue/retry/cold/exec/straggler components (non-zero exit on imbalance)\n\
+         \n  eat slo report <trace.jsonl|series.jsonl> [--config file.json] [--target X]\n\
+         \x20     [--latency-slo S] [--window 60] [--slow-window 300] [--json]\n\
+         \x20     per-tenant error budgets + burn rates; non-zero exit on exhaustion\n\
          \n  eat info\n\
          \nglobal: --quiet caps progress logging at warnings; EAT_LOG=error|warn|info|debug"
     );
@@ -206,6 +219,10 @@ fn main() -> anyhow::Result<()> {
             }
             _ => usage(),
         },
+        "slo" => match args.positional.get(1).map(String::as_str) {
+            Some("report") => slo_report(&args)?,
+            _ => usage(),
+        },
         "info" => {
             let rt = Runtime::new(args.get("artifacts").unwrap_or("artifacts"))?;
             println!("platform: {}", rt.platform());
@@ -219,6 +236,89 @@ fn main() -> anyhow::Result<()> {
         _ => usage(),
     }
     Ok(())
+}
+
+/// `eat slo report <file>` — per-tenant error budgets and burn rates over
+/// a lifecycle trace (`eat-trace-v1`) or a fleet time series
+/// (`eat-timeseries-v1`), detected by the meta line's schema. Tenant SLO
+/// classes default to the three-tier config; `--config file.json` reads a
+/// `tenants` section instead, and `--target` / `--latency-slo` override
+/// every class (so CI can gate the same trace at different strictness).
+/// Exits non-zero when any tenant exhausts its budget.
+fn slo_report(args: &Args) -> anyhow::Result<()> {
+    use eat::obs::slo::{report_from_series, report_from_trace, SloClass, SloOptions};
+    use eat::obs::FleetSeries;
+    use eat::qos::TenantsConfig;
+
+    let Some(path) = args.positional.get(2) else { usage() };
+    let text =
+        std::fs::read_to_string(path).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+    let tenants = match args.get("config") {
+        Some(p) => {
+            let cfg_text =
+                std::fs::read_to_string(p).map_err(|e| anyhow::anyhow!("{p}: {e}"))?;
+            let v = eat::util::json::parse(&cfg_text)?;
+            match v.get("tenants") {
+                Some(_) => TenantsConfig::from_json(&v)?,
+                None => anyhow::bail!("{p}: no \"tenants\" section"),
+            }
+        }
+        None => TenantsConfig::three_tier(0.1),
+    };
+    let mut classes = SloClass::from_config(&tenants);
+    if let Some(t) = args.get("target") {
+        let target: f64 = t.parse().map_err(|e| anyhow::anyhow!("--target {t}: {e}"))?;
+        anyhow::ensure!(target > 0.0 && target < 1.0, "--target must be in (0, 1)");
+        for c in &mut classes {
+            c.target = target;
+        }
+    }
+    if let Some(s) = args.get("latency-slo") {
+        let slo: f64 = s.parse().map_err(|e| anyhow::anyhow!("--latency-slo {s}: {e}"))?;
+        anyhow::ensure!(slo > 0.0, "--latency-slo must be positive");
+        for c in &mut classes {
+            c.latency_slo = slo;
+        }
+    }
+    let opt = SloOptions {
+        fast_window: args.get_f64("window", SloOptions::default().fast_window),
+        slow_window: args.get_f64("slow-window", SloOptions::default().slow_window),
+    };
+    anyhow::ensure!(
+        opt.fast_window > 0.0 && opt.slow_window > 0.0,
+        "burn windows must be positive"
+    );
+    // The meta line's schema decides how to replay the file: a fleet time
+    // series carries pre-classified hits/misses per window, a trace (or a
+    // legacy meta-less trace) replays terminal events against the
+    // latency SLO.
+    let schema = text
+        .lines()
+        .next()
+        .and_then(|l| eat::util::json::parse(l).ok())
+        .and_then(|v| v.get("schema").and_then(|s| s.as_str().map(String::from)));
+    let report = match schema.as_deref() {
+        Some("eat-timeseries-v1") => {
+            let series = FleetSeries::parse_jsonl(&text)?;
+            report_from_series(&series, &classes, opt)
+        }
+        _ => {
+            let doc = eat::obs::trace::parse_jsonl_doc(&text)?;
+            if doc.evicted > 0 {
+                log_warn!(
+                    "{path}: {} events evicted from the trace ring; budgets are a lower bound",
+                    doc.evicted
+                );
+            }
+            report_from_trace(&doc.events, &classes, opt)
+        }
+    };
+    if args.has_flag("json") {
+        println!("{}", report.to_json(path).to_json_pretty());
+    } else {
+        println!("{}", report.render(path));
+    }
+    report.check()
 }
 
 /// End-to-end serving: spawn socket workers, generate a task stream, and
@@ -364,6 +464,12 @@ fn serve(args: &Args) -> anyhow::Result<()> {
         .get("metrics-addr")
         .map(|addr| -> anyhow::Result<_> {
             let reg = Arc::new(eat::obs::MetricRegistry::new());
+            // Which binary produced these series: crate version always,
+            // git hash when the build environment exported one.
+            reg.set_build_info(
+                env!("CARGO_PKG_VERSION"),
+                option_env!("EAT_GIT_HASH").unwrap_or("unknown"),
+            );
             let server = eat::obs::MetricsServer::bind(addr, reg.clone())?;
             log_info!("metrics: exposition live on http://{}/metrics", server.local_addr());
             Ok((reg, server))
@@ -661,6 +767,9 @@ fn serve_loop(
                 (out, excluded)
             }
             None => {
+                // Tracing propagates the task id as a wire trace id, so
+                // workers measure and report their spans in the replies.
+                let trace_id = tracer.as_ref().map(|_| task.id);
                 let out = host
                     .dispatch_collect(
                         task.id,
@@ -668,6 +777,7 @@ fn serve_loop(
                         steps,
                         task.model.0,
                         task.tenant,
+                        trace_id,
                         &gang,
                         waiting,
                         plain_timeout,
@@ -702,6 +812,30 @@ fn serve_loop(
                         },
                     );
                     tr.record(dispatched_at, tid, task.tenant, SpanKind::ExecStart);
+                    // Worker span of the gang's critical member (largest
+                    // host-observed round trip): `eat trace analyze`
+                    // decomposes it into network/lock-wait/load/exec.
+                    if let Some((i, &rtt)) = out
+                        .rtts
+                        .iter()
+                        .enumerate()
+                        .max_by(|a, b| a.1.total_cmp(b.1))
+                    {
+                        let t = out.results[i].timings.unwrap_or_default();
+                        tr.record(
+                            dispatched_at + out.sim_exec_seconds(),
+                            tid,
+                            task.tenant,
+                            SpanKind::WorkerSpan {
+                                rtt,
+                                recv: t.recv,
+                                lock_wait: t.lock_wait,
+                                load: t.load,
+                                exec: t.exec,
+                                reply: t.reply,
+                            },
+                        );
+                    }
                     tr.record(
                         dispatched_at + out.sim_exec_seconds(),
                         tid,

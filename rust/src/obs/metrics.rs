@@ -38,11 +38,21 @@ struct Entry {
 #[derive(Default)]
 pub struct MetricRegistry {
     inner: Mutex<BTreeMap<&'static str, Entry>>,
+    /// (version, git hash) for the `eat_build_info` gauge — the one
+    /// labelled series the endpoint emits, held apart from the map
+    /// because entry names there are `&'static str` label-less keys.
+    build: Mutex<Option<(String, String)>>,
 }
 
 impl MetricRegistry {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Expose `eat_build_info{version=...,git=...} 1` so scrapes can tell
+    /// which binary produced the series (standard build-info idiom).
+    pub fn set_build_info(&self, version: &str, git: &str) {
+        *self.build.lock().unwrap() = Some((version.to_string(), git.to_string()));
     }
 
     /// Add `n` to a (monotone) counter, creating it at 0 first.
@@ -103,6 +113,13 @@ impl MetricRegistry {
     pub fn render(&self) -> String {
         let m = self.inner.lock().unwrap();
         let mut out = String::new();
+        if let Some((version, git)) = self.build.lock().unwrap().as_ref() {
+            out.push_str("# HELP eat_build_info build metadata of the serving binary\n");
+            out.push_str("# TYPE eat_build_info gauge\n");
+            out.push_str(&format!(
+                "eat_build_info{{version=\"{version}\",git=\"{git}\"}} 1\n"
+            ));
+        }
         for (name, e) in m.iter() {
             out.push_str(&format!("# HELP {name} {}\n", e.help));
             match &e.metric {
@@ -174,30 +191,35 @@ impl MetricsServer {
         let stop = Arc::new(AtomicBool::new(false));
         let stop_flag = stop.clone();
         let handle = std::thread::spawn(move || {
-            while !stop_flag.load(Ordering::Relaxed) {
-                match listener.accept() {
-                    Ok((mut stream, _)) => {
-                        stream.set_nonblocking(false).ok();
-                        stream
-                            .set_read_timeout(Some(std::time::Duration::from_millis(250)))
-                            .ok();
-                        // Drain the request head; scrape clients always
-                        // write before reading, but nothing here depends
-                        // on the bytes.
-                        let mut buf = [0u8; 1024];
-                        let _ = stream.read(&mut buf);
-                        let body = registry.render();
-                        let resp = format!(
-                            "HTTP/1.0 200 OK\r\nContent-Type: text/plain; version=0.0.4; charset=utf-8\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
-                            body.len()
-                        );
-                        let _ = stream.write_all(resp.as_bytes());
+            'accept: while !stop_flag.load(Ordering::Relaxed) {
+                // Drain EVERY pending connection before sleeping: under
+                // concurrent scrapers (or a dashboard refreshing several
+                // panels), one-accept-per-5ms-tick queues them ~5 ms
+                // apart each and backs up the listener.
+                loop {
+                    match listener.accept() {
+                        Ok((mut stream, _)) => {
+                            stream.set_nonblocking(false).ok();
+                            stream
+                                .set_read_timeout(Some(std::time::Duration::from_millis(250)))
+                                .ok();
+                            // Drain the request head; scrape clients always
+                            // write before reading, but nothing here depends
+                            // on the bytes.
+                            let mut buf = [0u8; 1024];
+                            let _ = stream.read(&mut buf);
+                            let body = registry.render();
+                            let resp = format!(
+                                "HTTP/1.0 200 OK\r\nContent-Type: text/plain; version=0.0.4; charset=utf-8\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+                                body.len()
+                            );
+                            let _ = stream.write_all(resp.as_bytes());
+                        }
+                        Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                        Err(_) => break 'accept,
                     }
-                    Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                        std::thread::sleep(std::time::Duration::from_millis(5));
-                    }
-                    Err(_) => break,
                 }
+                std::thread::sleep(std::time::Duration::from_millis(5));
             }
         });
         Ok(MetricsServer {
@@ -266,6 +288,55 @@ mod tests {
                 "malformed exposition line: {line:?}"
             );
         }
+    }
+
+    #[test]
+    fn build_info_renders_one_labelled_gauge() {
+        let reg = MetricRegistry::new();
+        reg.set_build_info("0.1.0", "abc1234");
+        reg.counter_add("eat_dispatches_total", "gangs dispatched", 1);
+        let text = reg.render();
+        assert!(text.starts_with("# HELP eat_build_info"), "{text}");
+        assert!(text.contains("# TYPE eat_build_info gauge"), "{text}");
+        assert!(
+            text.contains("eat_build_info{version=\"0.1.0\",git=\"abc1234\"} 1"),
+            "{text}"
+        );
+        // The labelled series still honours the two-field line discipline
+        // (no whitespace inside the label block).
+        for line in text.lines() {
+            assert!(
+                line.starts_with('#') || line.split_whitespace().count() == 2,
+                "malformed exposition line: {line:?}"
+            );
+        }
+        // Without build info the series is absent entirely.
+        assert!(!MetricRegistry::new().render().contains("eat_build_info"));
+    }
+
+    #[test]
+    fn burst_of_concurrent_scrapes_all_answer() {
+        let reg = Arc::new(MetricRegistry::new());
+        reg.counter_add("eat_dispatches_total", "gangs dispatched", 1);
+        let srv = MetricsServer::bind("127.0.0.1:0", reg.clone()).unwrap();
+        let addr = srv.local_addr();
+        // Open the whole burst before reading any reply: the accept loop
+        // must drain every pending connection per poll tick, not answer
+        // one per 5 ms sleep.
+        let mut streams: Vec<TcpStream> = (0..8)
+            .map(|_| {
+                let mut s = TcpStream::connect(addr).unwrap();
+                s.write_all(b"GET /metrics HTTP/1.0\r\n\r\n").unwrap();
+                s
+            })
+            .collect();
+        for s in &mut streams {
+            s.set_read_timeout(Some(std::time::Duration::from_secs(5))).unwrap();
+            let mut text = String::new();
+            s.read_to_string(&mut text).unwrap();
+            assert!(text.contains("eat_dispatches_total 1"), "{text:?}");
+        }
+        srv.stop();
     }
 
     #[test]

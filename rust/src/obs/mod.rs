@@ -1,6 +1,6 @@
-//! Observability: determinism-safe lifecycle tracing, live metrics with a
-//! Prometheus text-exposition endpoint, and a latency-decomposition
-//! analyzer.
+//! Observability: determinism-safe lifecycle tracing, fleet telemetry
+//! time-series, SLO burn-rate monitoring, live metrics with a Prometheus
+//! text-exposition endpoint, and a latency-decomposition analyzer.
 //!
 //! The paper's headline claim (up to 56% inference-latency reduction) is
 //! only auditable if we can say *where* each task's latency came from:
@@ -9,7 +9,11 @@
 //! [`trace::TraceRecorder`] (bounded ring buffer, allocation-free once
 //! warm, JSONL export); [`analyze`] reconstructs per-task lifecycles from
 //! a trace and decomposes every completed task's measured latency into
-//! components that sum back to it bit-exactly. [`metrics`] is a small
+//! components that sum back to it bit-exactly. [`timeseries`] samples the
+//! fleet at a fixed cadence (queue depth, residency churn, per-tenant
+//! deadline hits/misses) into a bounded, mergeable `eat-timeseries-v1`
+//! series; [`slo`] turns traces or series into per-tenant error-budget
+//! burn-rate reports (`eat slo report`). [`metrics`] is a small
 //! counter/gauge/histogram registry that `eat serve --metrics-addr`
 //! exposes over plain TCP in the Prometheus text format. [`log`] is the
 //! leveled stderr logger (`EAT_LOG=warn|info|debug`, `--quiet`) that
@@ -23,8 +27,12 @@
 pub mod analyze;
 pub mod log;
 pub mod metrics;
+pub mod slo;
+pub mod timeseries;
 pub mod trace;
 
 pub use analyze::{analyze, analyze_jsonl, Analysis, TaskDecomp};
 pub use metrics::{MetricRegistry, MetricsServer};
+pub use slo::{SloClass, SloOptions, SloReport};
+pub use timeseries::{FleetSampler, FleetSeries};
 pub use trace::{GangRef, SpanEvent, SpanKind, TraceRecorder};

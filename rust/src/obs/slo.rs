@@ -1,0 +1,485 @@
+//! SLO error budgets and burn-rate monitoring (`eat slo report`).
+//!
+//! Every tenant class carries an attainment target (e.g. 0.9 = 90% of
+//! outcomes inside the latency SLO), which defines an error budget: the
+//! run may miss at most `(1 - target) × outcomes`. This module replays a
+//! per-task trace (`eat-trace-v1` JSONL) or a fleet time series
+//! (`eat-timeseries-v1` JSONL) on the *simulated* clock and reports, per
+//! tenant: the spent budget, the maximum burn rate over fast and slow
+//! tumbling windows (burn rate 1.0 = spending exactly the budget;
+//! multi-window alerting à la SRE practice), and — when the budget runs
+//! out — the simulated time at which it was exhausted.
+//! [`SloReport::check`] fails when any tenant exhausted its budget, so
+//! the command is CI-gateable by exit code.
+
+use crate::obs::trace::{SpanEvent, SpanKind, NO_TENANT};
+use crate::obs::FleetSeries;
+use crate::qos::TenantsConfig;
+use crate::util::json::Value;
+use crate::util::table::{f, Table};
+
+/// One tenant's SLO contract for budget purposes.
+#[derive(Clone, Debug)]
+pub struct SloClass {
+    pub name: String,
+    /// Attainment target in (0, 1): the fraction of outcomes that must
+    /// land inside the latency SLO.
+    pub target: f64,
+    /// Latency budget in simulated seconds (a completion slower than
+    /// this is an error; used only for trace inputs — time series carry
+    /// hits/misses pre-classified).
+    pub latency_slo: f64,
+}
+
+impl SloClass {
+    /// Classes from a tenants config, in registry order.
+    pub fn from_config(cfg: &TenantsConfig) -> Vec<SloClass> {
+        cfg.tenants
+            .iter()
+            .map(|t| SloClass {
+                name: t.name.clone(),
+                target: t.slo_target,
+                latency_slo: t.latency_slo,
+            })
+            .collect()
+    }
+}
+
+/// Fallback contract for untenanted traces and unknown tenant indices.
+const DEFAULT_TARGET: f64 = 0.9;
+const DEFAULT_LATENCY_SLO: f64 = 120.0;
+
+/// (time, outcomes, errors) — one terminal event from a trace, or one
+/// window from a time series.
+type Bucket = (f64, u64, u64);
+
+/// Per-tenant burn-rate summary.
+#[derive(Clone, Debug)]
+pub struct TenantBurn {
+    pub name: String,
+    pub target: f64,
+    /// Terminal outcomes observed (completions + drops).
+    pub outcomes: u64,
+    /// Outcomes that missed: late completions and drops.
+    pub errors: u64,
+    /// Allowed errors: `(1 - target) × outcomes`.
+    pub budget: f64,
+    /// Fraction of the budget spent (`errors / budget`; 0 on an empty
+    /// budget with no errors, infinite with errors).
+    pub budget_spent: f64,
+    pub max_fast_burn: f64,
+    pub max_slow_burn: f64,
+    /// Simulated time at which cumulative errors first exceeded the
+    /// budget; `None` while the budget holds.
+    pub exhausted_at: Option<f64>,
+}
+
+/// The full report over every tenant seen in the input.
+#[derive(Clone, Debug)]
+pub struct SloReport {
+    pub tenants: Vec<TenantBurn>,
+    pub fast_window: f64,
+    pub slow_window: f64,
+}
+
+fn burn_over_windows(buckets: &[Bucket], window: f64, err_frac: f64) -> f64 {
+    // Tumbling windows on the sim clock: bucket t lands in window
+    // floor(t / window). Buckets arrive time-sorted.
+    let mut max_burn = 0.0f64;
+    let mut idx = u64::MAX;
+    let (mut total, mut errors) = (0u64, 0u64);
+    let mut flush = |total: u64, errors: u64, max_burn: &mut f64| {
+        if total > 0 && err_frac > 0.0 {
+            let burn = (errors as f64 / total as f64) / err_frac;
+            if burn > *max_burn {
+                *max_burn = burn;
+            }
+        }
+    };
+    for &(t, n, e) in buckets {
+        let w = (t / window).floor() as u64;
+        if w != idx {
+            flush(total, errors, &mut max_burn);
+            idx = w;
+            total = 0;
+            errors = 0;
+        }
+        total += n;
+        errors += e;
+    }
+    flush(total, errors, &mut max_burn);
+    max_burn
+}
+
+fn burn_for(name: &str, class: &SloClass, mut buckets: Vec<Bucket>, opt: &SloOptions) -> TenantBurn {
+    buckets.sort_by(|a, b| a.0.total_cmp(&b.0));
+    let outcomes: u64 = buckets.iter().map(|b| b.1).sum();
+    let errors: u64 = buckets.iter().map(|b| b.2).sum();
+    let err_frac = 1.0 - class.target;
+    let budget = err_frac * outcomes as f64;
+    let mut exhausted_at = None;
+    let mut cum = 0u64;
+    for &(t, _, e) in &buckets {
+        cum += e;
+        if cum as f64 > budget {
+            exhausted_at = Some(t);
+            break;
+        }
+    }
+    let budget_spent = if budget > 0.0 {
+        errors as f64 / budget
+    } else if errors > 0 {
+        f64::INFINITY
+    } else {
+        0.0
+    };
+    TenantBurn {
+        name: name.to_string(),
+        target: class.target,
+        outcomes,
+        errors,
+        budget,
+        budget_spent,
+        max_fast_burn: burn_over_windows(&buckets, opt.fast_window, err_frac),
+        max_slow_burn: burn_over_windows(&buckets, opt.slow_window, err_frac),
+        exhausted_at,
+    }
+}
+
+/// Windowing knobs for the burn-rate computation.
+#[derive(Clone, Copy, Debug)]
+pub struct SloOptions {
+    pub fast_window: f64,
+    pub slow_window: f64,
+}
+
+impl Default for SloOptions {
+    fn default() -> Self {
+        SloOptions { fast_window: 60.0, slow_window: 300.0 }
+    }
+}
+
+fn class_for(classes: &[SloClass], tenant: u32) -> SloClass {
+    if tenant == NO_TENANT {
+        return SloClass {
+            name: "all".to_string(),
+            target: classes.first().map(|c| c.target).unwrap_or(DEFAULT_TARGET),
+            latency_slo: classes
+                .first()
+                .map(|c| c.latency_slo)
+                .unwrap_or(DEFAULT_LATENCY_SLO),
+        };
+    }
+    classes.get(tenant as usize).cloned().unwrap_or(SloClass {
+        name: format!("tenant-{tenant}"),
+        target: DEFAULT_TARGET,
+        latency_slo: DEFAULT_LATENCY_SLO,
+    })
+}
+
+/// Build the report from per-task trace events. A terminal outcome is a
+/// `completed` (error when `response > latency_slo`) or a `dropped`
+/// (always an error), timestamped at the event's simulated time.
+pub fn report_from_trace(events: &[SpanEvent], classes: &[SloClass], opt: SloOptions) -> SloReport {
+    // Group buckets per tenant id, in first-seen order for stable output.
+    let mut order: Vec<u32> = Vec::new();
+    let mut buckets: std::collections::BTreeMap<u32, Vec<Bucket>> =
+        std::collections::BTreeMap::new();
+    for ev in events {
+        let class = class_for(classes, ev.tenant);
+        let bucket = match &ev.kind {
+            SpanKind::Completed { response, .. } => {
+                Some((ev.t, 1, u64::from(*response > class.latency_slo)))
+            }
+            SpanKind::Dropped { .. } => Some((ev.t, 1, 1)),
+            _ => None,
+        };
+        if let Some(b) = bucket {
+            if !buckets.contains_key(&ev.tenant) {
+                order.push(ev.tenant);
+            }
+            buckets.entry(ev.tenant).or_default().push(b);
+        }
+    }
+    order.sort_unstable();
+    let tenants = order
+        .into_iter()
+        .map(|tenant| {
+            let class = class_for(classes, tenant);
+            burn_for(&class.name, &class, buckets.remove(&tenant).unwrap(), &opt)
+        })
+        .collect();
+    SloReport {
+        tenants,
+        fast_window: opt.fast_window,
+        slow_window: opt.slow_window,
+    }
+}
+
+/// Build the report from a fleet time series: each window contributes
+/// one bucket per tenant (`hits + misses` outcomes, `misses` errors) at
+/// the window's end time.
+pub fn report_from_series(series: &FleetSeries, classes: &[SloClass], opt: SloOptions) -> SloReport {
+    let names = series.tenants();
+    let n = names.len();
+    let mut per_tenant: Vec<Vec<Bucket>> = vec![Vec::new(); n.max(1)];
+    for s in series.samples() {
+        let t = (s.window + 1) as f64 * series.cadence();
+        if n == 0 {
+            // Untenanted series: pool hits/misses (both empty) — nothing
+            // to report, but keep the shape.
+            continue;
+        }
+        for i in 0..n {
+            let hits = s.hits.get(i).copied().unwrap_or(0);
+            let misses = s.misses.get(i).copied().unwrap_or(0);
+            if hits + misses > 0 {
+                per_tenant[i].push((t, hits + misses, misses));
+            }
+        }
+    }
+    let tenants = (0..n)
+        .map(|i| {
+            // Match the series tenant to a class by name first, then by
+            // index, then fall back to defaults.
+            let class = classes
+                .iter()
+                .find(|c| c.name == names[i])
+                .cloned()
+                .unwrap_or_else(|| class_for(classes, i as u32));
+            burn_for(&names[i], &class, per_tenant[i].clone(), &opt)
+        })
+        .collect();
+    SloReport {
+        tenants,
+        fast_window: opt.fast_window,
+        slow_window: opt.slow_window,
+    }
+}
+
+impl SloReport {
+    /// True when any tenant ran out of error budget.
+    pub fn exhausted(&self) -> bool {
+        self.tenants.iter().any(|t| t.exhausted_at.is_some())
+    }
+
+    /// Non-zero-exit gate: errors when any tenant exhausted its budget.
+    pub fn check(&self) -> anyhow::Result<()> {
+        let exhausted: Vec<String> = self
+            .tenants
+            .iter()
+            .filter_map(|t| {
+                t.exhausted_at.map(|at| {
+                    format!(
+                        "{} (target {:.3}, {} errors / budget {:.1}, exhausted at t={:.1}s)",
+                        t.name, t.target, t.errors, t.budget, at
+                    )
+                })
+            })
+            .collect();
+        anyhow::ensure!(
+            exhausted.is_empty(),
+            "error budget exhausted: {}",
+            exhausted.join("; ")
+        );
+        Ok(())
+    }
+
+    /// Human-readable table.
+    pub fn render(&self, source: &str) -> String {
+        let mut table = Table::new(
+            &format!(
+                "SLO burn-rate report: {source} (fast {}s / slow {}s windows)",
+                self.fast_window, self.slow_window
+            ),
+            &[
+                "tenant", "target", "outcomes", "errors", "budget", "spent%", "fast burn",
+                "slow burn", "exhausted@",
+            ],
+        );
+        for t in &self.tenants {
+            table.row(vec![
+                t.name.clone(),
+                f(t.target, 3),
+                format!("{}", t.outcomes),
+                format!("{}", t.errors),
+                f(t.budget, 1),
+                if t.budget_spent.is_finite() {
+                    f(t.budget_spent * 100.0, 1)
+                } else {
+                    "inf".to_string()
+                },
+                f(t.max_fast_burn, 2),
+                f(t.max_slow_burn, 2),
+                match t.exhausted_at {
+                    Some(at) => f(at, 1),
+                    None => "-".to_string(),
+                },
+            ]);
+        }
+        table.render()
+    }
+
+    /// Machine-readable document (`eat-slo-report-v1`).
+    pub fn to_json(&self, source: &str) -> Value {
+        let mut v = Value::obj();
+        v.set("schema", "eat-slo-report-v1")
+            .set("source", source)
+            .set("fast_window", self.fast_window)
+            .set("slow_window", self.slow_window)
+            .set("exhausted", self.exhausted());
+        let tenants: Vec<Value> = self
+            .tenants
+            .iter()
+            .map(|t| {
+                let mut o = Value::obj();
+                o.set("tenant", t.name.clone())
+                    .set("target", t.target)
+                    .set("outcomes", t.outcomes)
+                    .set("errors", t.errors)
+                    .set("budget", t.budget)
+                    .set("budget_spent", t.budget_spent)
+                    .set("max_fast_burn", t.max_fast_burn)
+                    .set("max_slow_burn", t.max_slow_burn);
+                match t.exhausted_at {
+                    Some(at) => o.set("exhausted_at", at),
+                    None => o.set("exhausted_at", Value::Null),
+                };
+                o
+            })
+            .collect();
+        v.set("tenants", Value::Arr(tenants));
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::trace::DropReason;
+
+    fn classes() -> Vec<SloClass> {
+        vec![
+            SloClass { name: "premium".into(), target: 0.9, latency_slo: 100.0 },
+            SloClass { name: "batch".into(), target: 0.5, latency_slo: 100.0 },
+        ]
+    }
+
+    fn completed(t: f64, task: u64, tenant: u32, response: f64) -> SpanEvent {
+        SpanEvent {
+            t,
+            task,
+            tenant,
+            kind: SpanKind::Completed { response, start: t - response, speculative: false },
+        }
+    }
+
+    fn dropped(t: f64, task: u64, tenant: u32) -> SpanEvent {
+        SpanEvent {
+            t,
+            task,
+            tenant,
+            kind: SpanKind::Dropped { reason: DropReason::Admission },
+        }
+    }
+
+    #[test]
+    fn compliant_trace_keeps_its_budget() {
+        // 20 premium outcomes, 1 late: error rate 5% < 10% budget.
+        let mut evs: Vec<SpanEvent> =
+            (0..19).map(|i| completed(10.0 + i as f64, i, 0, 50.0)).collect();
+        evs.push(completed(40.0, 99, 0, 500.0));
+        let rep = report_from_trace(&evs, &classes(), SloOptions::default());
+        assert_eq!(rep.tenants.len(), 1);
+        let t = &rep.tenants[0];
+        assert_eq!(t.name, "premium");
+        assert_eq!(t.outcomes, 20);
+        assert_eq!(t.errors, 1);
+        assert!(t.exhausted_at.is_none());
+        assert!(!rep.exhausted());
+        assert!(rep.check().is_ok());
+        // 1 error in 20 at a 10% budget: half the budget spent.
+        assert!((t.budget_spent - 0.5).abs() < 1e-12, "{}", t.budget_spent);
+        // All outcomes in one 60 s fast window: burn = 0.05 / 0.10 = 0.5.
+        assert!((t.max_fast_burn - 0.5).abs() < 1e-12, "{}", t.max_fast_burn);
+    }
+
+    #[test]
+    fn exhausting_trace_fails_with_a_timeline() {
+        // 10 outcomes, 3 errors against a 10% budget (allowed: 1).
+        let mut evs: Vec<SpanEvent> =
+            (0..7).map(|i| completed(i as f64 * 10.0, i, 0, 10.0)).collect();
+        evs.push(dropped(71.0, 7, 0));
+        evs.push(dropped(72.0, 8, 0));
+        evs.push(completed(95.0, 9, 0, 400.0));
+        let rep = report_from_trace(&evs, &classes(), SloOptions::default());
+        let t = &rep.tenants[0];
+        assert_eq!(t.errors, 3);
+        // Budget is 1.0 error; the second error (t=72) exceeds it.
+        assert_eq!(t.exhausted_at, Some(72.0));
+        assert!(rep.exhausted());
+        let err = rep.check().unwrap_err().to_string();
+        assert!(err.contains("premium"), "{err}");
+        assert!(err.contains("exhausted"), "{err}");
+    }
+
+    #[test]
+    fn burn_rate_peaks_in_the_bad_window() {
+        // Window [0,60): clean. Window [60,120): 2 of 4 outcomes err.
+        let mut evs: Vec<SpanEvent> =
+            (0..8).map(|i| completed(i as f64, i, 1, 10.0)).collect();
+        evs.push(completed(61.0, 10, 1, 10.0));
+        evs.push(completed(62.0, 11, 1, 10.0));
+        evs.push(dropped(63.0, 12, 1));
+        evs.push(dropped(64.0, 13, 1));
+        let rep = report_from_trace(&evs, &classes(), SloOptions::default());
+        let t = &rep.tenants[0];
+        assert_eq!(t.name, "batch");
+        // batch target 0.5 → err_frac 0.5; bad window rate 0.5 → burn 1.0.
+        assert!((t.max_fast_burn - 1.0).abs() < 1e-12, "{}", t.max_fast_burn);
+        // Slow window (300 s) pools everything: 2/12 / 0.5 = 1/3.
+        assert!((t.max_slow_burn - 2.0 / 12.0 / 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn untenanted_and_unknown_tenants_resolve_to_fallback_classes() {
+        let evs = vec![completed(5.0, 1, NO_TENANT, 10.0), dropped(6.0, 2, 7)];
+        let rep = report_from_trace(&evs, &classes(), SloOptions::default());
+        let names: Vec<&str> = rep.tenants.iter().map(|t| t.name.as_str()).collect();
+        assert_eq!(names, vec!["tenant-7", "all"]);
+    }
+
+    #[test]
+    fn series_report_matches_hits_and_misses() {
+        let mut sampler = crate::obs::FleetSampler::new(
+            60.0,
+            64,
+            vec!["premium".into(), "batch".into()],
+        );
+        let cum = crate::obs::timeseries::TenantCum {
+            slo_met: vec![9, 1],
+            completed: vec![10, 4],
+            dropped: vec![0, 2],
+        };
+        sampler.advance(60.0, crate::obs::timeseries::FleetGauges::default(), 0.0, &cum);
+        let series = sampler.into_series();
+        let rep = report_from_series(&series, &classes(), SloOptions::default());
+        assert_eq!(rep.tenants.len(), 2);
+        let premium = &rep.tenants[0];
+        assert_eq!(premium.outcomes, 10);
+        assert_eq!(premium.errors, 1);
+        assert!(premium.exhausted_at.is_none());
+        let batch = &rep.tenants[1];
+        // batch: 4 completed (1 in SLO) + 2 dropped = 6 outcomes, 5 errors
+        // against a 50% budget (3 allowed) → exhausted.
+        assert_eq!(batch.outcomes, 6);
+        assert_eq!(batch.errors, 5);
+        assert!(batch.exhausted_at.is_some());
+        assert!(rep.check().is_err());
+        let doc = rep.to_json("test").to_json();
+        assert!(doc.contains("\"schema\":\"eat-slo-report-v1\""), "{doc}");
+        assert!(doc.contains("\"exhausted\":true"), "{doc}");
+        let text = rep.render("test");
+        assert!(text.contains("premium") && text.contains("batch"), "{text}");
+    }
+}

@@ -1,0 +1,591 @@
+//! Fleet telemetry time-series: a deterministic fixed-cadence sampler.
+//!
+//! [`FleetSampler`] closes one window every `cadence` simulated seconds
+//! and records how the fleet looked at that boundary (queue depth,
+//! busy/up servers, in-flight gangs) plus what happened *during* the
+//! window (cold-start dispatches, per-member model weight loads,
+//! per-tenant deadline hits/misses, wasted patch-seconds). Windowed
+//! counters are diffs of the simulator's cumulative counters, so the
+//! sampler observes without adding any accounting of its own to the hot
+//! paths — and, like tracing, it never touches an RNG stream, so
+//! sampling on/off leaves episodes bit-identical (pinned by property
+//! test in `sim/env.rs`).
+//!
+//! [`FleetSeries`] is the bounded product: a ring of windows (oldest
+//! evicted past capacity, eviction counted), exported as
+//! `eat-timeseries-v1` JSONL — a meta line followed by one JSON object
+//! per window. Series pool across episodes and across sweep shards with
+//! [`FleetSeries::merge`]: windows align by absolute index and every
+//! field adds, in caller order, so an N-shard `--threads` sweep merged
+//! in slot order reproduces the single-shard series bit-for-bit.
+
+use crate::util::json::{self, Value};
+use std::collections::VecDeque;
+
+/// One closed sampling window.
+///
+/// Gauges (`queue_depth`, `busy`, `up`, `inflight`) are point samples at
+/// the window boundary; the remaining fields are totals over the window.
+/// `hits[i]`/`misses[i]` index tenants in registry order: a hit is a
+/// completion inside its deadline, a miss is a late completion or a
+/// drop (admission or retries exhausted).
+#[derive(Clone, Debug, PartialEq)]
+pub struct FleetSample {
+    /// Absolute window index; the window covers
+    /// `[window * cadence, (window + 1) * cadence)` simulated seconds.
+    pub window: u64,
+    pub queue_depth: u64,
+    pub busy: u64,
+    pub up: u64,
+    pub inflight: u64,
+    /// Dispatches this window that required at least one weight load.
+    pub cold_starts: u64,
+    /// Individual gang members that loaded weights this window.
+    pub model_loads: u64,
+    /// Wasted nominal patch-seconds booked this window.
+    pub wasted_ps: f64,
+    pub hits: Vec<u64>,
+    pub misses: Vec<u64>,
+}
+
+impl FleetSample {
+    fn zero(window: u64, tenants: usize) -> FleetSample {
+        FleetSample {
+            window,
+            queue_depth: 0,
+            busy: 0,
+            up: 0,
+            inflight: 0,
+            cold_starts: 0,
+            model_loads: 0,
+            wasted_ps: 0.0,
+            hits: vec![0; tenants],
+            misses: vec![0; tenants],
+        }
+    }
+
+    /// Element-wise accumulate (same window of another shard/episode).
+    fn add(&mut self, other: &FleetSample) {
+        debug_assert_eq!(self.window, other.window);
+        self.queue_depth += other.queue_depth;
+        self.busy += other.busy;
+        self.up += other.up;
+        self.inflight += other.inflight;
+        self.cold_starts += other.cold_starts;
+        self.model_loads += other.model_loads;
+        self.wasted_ps += other.wasted_ps;
+        for (a, b) in self.hits.iter_mut().zip(&other.hits) {
+            *a += b;
+        }
+        for (a, b) in self.misses.iter_mut().zip(&other.misses) {
+            *a += b;
+        }
+    }
+
+    fn to_json(&self, cadence: f64) -> Value {
+        let mut v = Value::obj();
+        v.set("window", self.window)
+            .set("t", (self.window + 1) as f64 * cadence)
+            .set("queue", self.queue_depth)
+            .set("busy", self.busy)
+            .set("up", self.up)
+            .set("inflight", self.inflight)
+            .set("cold_starts", self.cold_starts)
+            .set("model_loads", self.model_loads)
+            .set("wasted_ps", self.wasted_ps)
+            .set("hits", self.hits.clone())
+            .set("misses", self.misses.clone());
+        v
+    }
+
+    fn from_json(v: &Value) -> anyhow::Result<FleetSample> {
+        let n = |key: &str| -> anyhow::Result<f64> {
+            v.req(key)?
+                .as_f64()
+                .ok_or_else(|| anyhow::anyhow!("'{key}' is not a number"))
+        };
+        let counts = |key: &str| -> anyhow::Result<Vec<u64>> {
+            v.req(key)?
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("'{key}' is not an array"))?
+                .iter()
+                .map(|x| {
+                    x.as_f64()
+                        .map(|f| f as u64)
+                        .ok_or_else(|| anyhow::anyhow!("'{key}' entry is not a number"))
+                })
+                .collect()
+        };
+        Ok(FleetSample {
+            window: n("window")? as u64,
+            queue_depth: n("queue")? as u64,
+            busy: n("busy")? as u64,
+            up: n("up")? as u64,
+            inflight: n("inflight")? as u64,
+            cold_starts: n("cold_starts")? as u64,
+            model_loads: n("model_loads")? as u64,
+            wasted_ps: n("wasted_ps")?,
+            hits: counts("hits")?,
+            misses: counts("misses")?,
+        })
+    }
+}
+
+/// Bounded window ring with tenant labels and an eviction count.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FleetSeries {
+    cadence: f64,
+    cap: usize,
+    samples: VecDeque<FleetSample>,
+    evicted: u64,
+    tenants: Vec<String>,
+}
+
+impl FleetSeries {
+    pub fn new(cadence: f64, cap: usize, tenants: Vec<String>) -> FleetSeries {
+        assert!(cadence > 0.0 && cadence.is_finite(), "cadence must be > 0");
+        assert!(cap > 0, "series capacity must be > 0");
+        FleetSeries {
+            cadence,
+            cap,
+            samples: VecDeque::new(),
+            evicted: 0,
+            tenants,
+        }
+    }
+
+    /// Default ring capacity: 2^14 windows.
+    pub fn default_capacity() -> usize {
+        1 << 14
+    }
+
+    pub fn cadence(&self) -> f64 {
+        self.cadence
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    pub fn evicted(&self) -> u64 {
+        self.evicted
+    }
+
+    pub fn tenants(&self) -> &[String] {
+        &self.tenants
+    }
+
+    /// Windows, oldest first.
+    pub fn samples(&self) -> impl Iterator<Item = &FleetSample> {
+        self.samples.iter()
+    }
+
+    fn push(&mut self, s: FleetSample) {
+        if self.samples.len() == self.cap {
+            self.samples.pop_front();
+            self.evicted += 1;
+        }
+        self.samples.push_back(s);
+    }
+
+    /// Pool another series into this one: windows align by absolute
+    /// index and every field adds. Panics on cadence or tenant-shape
+    /// mismatch (series from different configs are not poolable).
+    pub fn merge(&mut self, other: &FleetSeries) {
+        assert_eq!(
+            self.cadence.to_bits(),
+            other.cadence.to_bits(),
+            "cadence mismatch"
+        );
+        assert_eq!(self.tenants, other.tenants, "tenant shape mismatch");
+        for s in &other.samples {
+            match self.samples.iter_mut().find(|m| m.window == s.window) {
+                Some(m) => m.add(s),
+                None => {
+                    // New window: insert keeping ascending order.
+                    let at = self
+                        .samples
+                        .iter()
+                        .position(|m| m.window > s.window)
+                        .unwrap_or(self.samples.len());
+                    self.samples.insert(at, s.clone());
+                }
+            }
+        }
+        self.evicted += other.evicted;
+        while self.samples.len() > self.cap {
+            self.samples.pop_front();
+            self.evicted += 1;
+        }
+    }
+
+    /// Serialize as `eat-timeseries-v1` JSONL: one meta line, then one
+    /// JSON object per window, oldest first.
+    pub fn to_jsonl(&self) -> String {
+        let mut meta = Value::obj();
+        meta.set("schema", "eat-timeseries-v1")
+            .set("cadence", self.cadence)
+            .set("windows", self.samples.len())
+            .set("evicted", self.evicted)
+            .set("tenants", self.tenants.clone());
+        let mut out = meta.to_json();
+        out.push('\n');
+        for s in &self.samples {
+            out.push_str(&s.to_json(self.cadence).to_json());
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn write_jsonl(&self, path: &str) -> anyhow::Result<()> {
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        std::fs::write(path, self.to_jsonl()).map_err(|e| anyhow::anyhow!("{path}: {e}"))
+    }
+
+    /// Parse an `eat-timeseries-v1` JSONL document.
+    pub fn parse_jsonl(text: &str) -> anyhow::Result<FleetSeries> {
+        let mut lines = text.lines().enumerate().filter(|(_, l)| !l.trim().is_empty());
+        let (_, meta_line) = lines
+            .next()
+            .ok_or_else(|| anyhow::anyhow!("empty time-series document"))?;
+        let meta = json::parse(meta_line).map_err(|e| anyhow::anyhow!("meta line: {e}"))?;
+        let schema = meta.req("schema")?.as_str().unwrap_or("");
+        anyhow::ensure!(
+            schema == "eat-timeseries-v1",
+            "unsupported time-series schema '{schema}'"
+        );
+        let cadence = meta
+            .req("cadence")?
+            .as_f64()
+            .ok_or_else(|| anyhow::anyhow!("meta 'cadence' is not a number"))?;
+        let tenants: Vec<String> = meta
+            .req("tenants")?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("meta 'tenants' is not an array"))?
+            .iter()
+            .map(|t| {
+                t.as_str()
+                    .map(str::to_string)
+                    .ok_or_else(|| anyhow::anyhow!("tenant name is not a string"))
+            })
+            .collect::<anyhow::Result<_>>()?;
+        let mut series = FleetSeries::new(cadence, Self::default_capacity(), tenants);
+        series.evicted = meta
+            .get("evicted")
+            .and_then(Value::as_f64)
+            .map(|x| x as u64)
+            .unwrap_or(0);
+        for (i, line) in lines {
+            let v = json::parse(line).map_err(|e| anyhow::anyhow!("line {}: {e}", i + 1))?;
+            series.push(
+                FleetSample::from_json(&v).map_err(|e| anyhow::anyhow!("line {}: {e}", i + 1))?,
+            );
+        }
+        Ok(series)
+    }
+}
+
+/// Point-in-time fleet gauges handed to the sampler at each step
+/// boundary by the environment.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FleetGauges {
+    pub queue_depth: u64,
+    pub busy: u64,
+    pub up: u64,
+    pub inflight: u64,
+}
+
+/// Per-tenant cumulative counters the sampler diffs into windowed
+/// hits/misses (indices follow registry order).
+#[derive(Clone, Debug, Default)]
+pub struct TenantCum {
+    pub slo_met: Vec<u64>,
+    pub completed: Vec<u64>,
+    pub dropped: Vec<u64>,
+}
+
+/// The sampler the environment drives: call
+/// [`record_model_loads`](FleetSampler::record_model_loads) /
+/// [`record_cold_start`](FleetSampler::record_cold_start) from dispatch,
+/// and [`advance`](FleetSampler::advance) with the current simulated
+/// clock and cumulative counters at the end of each step. Every window
+/// boundary the clock has crossed closes into the series: gauges as
+/// point samples, cumulative counters diffed against the previous close.
+#[derive(Clone, Debug)]
+pub struct FleetSampler {
+    cadence: f64,
+    next_window: u64,
+    loads_cum: u64,
+    cold_cum: u64,
+    last_loads: u64,
+    last_cold: u64,
+    last_wasted: f64,
+    last_hits: Vec<u64>,
+    last_completed: Vec<u64>,
+    last_dropped: Vec<u64>,
+    series: FleetSeries,
+}
+
+impl FleetSampler {
+    pub fn new(cadence: f64, cap: usize, tenants: Vec<String>) -> FleetSampler {
+        let n = tenants.len();
+        FleetSampler {
+            cadence,
+            next_window: 0,
+            loads_cum: 0,
+            cold_cum: 0,
+            last_loads: 0,
+            last_cold: 0,
+            last_wasted: 0.0,
+            last_hits: vec![0; n],
+            last_completed: vec![0; n],
+            last_dropped: vec![0; n],
+            series: FleetSeries::new(cadence, cap, tenants),
+        }
+    }
+
+    /// One gang member loaded model weights (counted at dispatch).
+    pub fn record_model_loads(&mut self, n: u64) {
+        self.loads_cum += n;
+    }
+
+    /// One dispatch required at least one weight load.
+    pub fn record_cold_start(&mut self) {
+        self.cold_cum += 1;
+    }
+
+    /// Would [`advance`](Self::advance) close at least one window at
+    /// `now`? Lets callers skip gauge computation between boundaries.
+    pub fn window_pending(&self, now: f64) -> bool {
+        now >= (self.next_window + 1) as f64 * self.cadence
+    }
+
+    /// Close every window boundary `now` has crossed. `wasted_ps` is the
+    /// cumulative wasted patch-seconds; `tenants` the cumulative
+    /// per-tenant counters. Counter diffs land in the first window
+    /// closed this call; later windows (a long step can cross several)
+    /// carry zero deltas with repeated gauges.
+    pub fn advance(&mut self, now: f64, gauges: FleetGauges, wasted_ps: f64, tenants: &TenantCum) {
+        while now >= (self.next_window + 1) as f64 * self.cadence {
+            self.close_window(gauges, wasted_ps, tenants);
+        }
+    }
+
+    /// Close one trailing partial window unconditionally, so counter
+    /// activity after the last boundary is not dropped when the series
+    /// is detached. Call once, after a final [`advance`](Self::advance).
+    pub fn flush(&mut self, gauges: FleetGauges, wasted_ps: f64, tenants: &TenantCum) {
+        self.close_window(gauges, wasted_ps, tenants);
+    }
+
+    fn close_window(&mut self, gauges: FleetGauges, wasted_ps: f64, tenants: &TenantCum) {
+        let mut s = FleetSample::zero(self.next_window, self.last_hits.len());
+        s.queue_depth = gauges.queue_depth;
+        s.busy = gauges.busy;
+        s.up = gauges.up;
+        s.inflight = gauges.inflight;
+        s.cold_starts = self.cold_cum - self.last_cold;
+        s.model_loads = self.loads_cum - self.last_loads;
+        s.wasted_ps = wasted_ps - self.last_wasted;
+        for i in 0..self.last_hits.len() {
+            let met = tenants.slo_met.get(i).copied().unwrap_or(0);
+            let done = tenants.completed.get(i).copied().unwrap_or(0);
+            let dropped = tenants.dropped.get(i).copied().unwrap_or(0);
+            s.hits[i] = met - self.last_hits[i];
+            s.misses[i] = (done - met + dropped) - (self.last_completed[i] - self.last_hits[i])
+                - self.last_dropped[i];
+            self.last_hits[i] = met;
+            self.last_completed[i] = done;
+            self.last_dropped[i] = dropped;
+        }
+        self.last_cold = self.cold_cum;
+        self.last_loads = self.loads_cum;
+        self.last_wasted = wasted_ps;
+        self.series.push(s);
+        self.next_window += 1;
+    }
+
+    pub fn into_series(self) -> FleetSeries {
+        self.series
+    }
+
+    pub fn series(&self) -> &FleetSeries {
+        &self.series
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sampler() -> FleetSampler {
+        FleetSampler::new(10.0, 8, vec!["premium".into(), "batch".into()])
+    }
+
+    #[test]
+    fn windows_close_on_boundaries_and_diff_counters() {
+        let mut s = sampler();
+        let mut cum = TenantCum {
+            slo_met: vec![0, 0],
+            completed: vec![0, 0],
+            dropped: vec![0, 0],
+        };
+        s.record_model_loads(3);
+        s.record_cold_start();
+        // Mid-window: nothing closes.
+        s.advance(9.5, FleetGauges::default(), 0.0, &cum);
+        assert!(s.series().is_empty());
+        cum.slo_met = vec![2, 0];
+        cum.completed = vec![2, 1];
+        cum.dropped = vec![0, 1];
+        let g = FleetGauges { queue_depth: 4, busy: 3, up: 7, inflight: 2 };
+        s.advance(10.0, g, 5.0, &cum);
+        assert_eq!(s.series().len(), 1);
+        let w0 = s.series().samples().next().unwrap().clone();
+        assert_eq!(w0.window, 0);
+        assert_eq!(w0.queue_depth, 4);
+        assert_eq!(w0.model_loads, 3);
+        assert_eq!(w0.cold_starts, 1);
+        assert_eq!(w0.wasted_ps, 5.0);
+        assert_eq!(w0.hits, vec![2, 0]);
+        // batch: 1 late completion + 1 drop = 2 misses.
+        assert_eq!(w0.misses, vec![0, 2]);
+        // Second window: only the *new* activity shows up.
+        s.record_model_loads(1);
+        cum.slo_met = vec![3, 0];
+        cum.completed = vec![3, 1];
+        s.advance(20.0, g, 5.0, &cum);
+        let w1 = s.series().samples().nth(1).unwrap();
+        assert_eq!(w1.model_loads, 1);
+        assert_eq!(w1.cold_starts, 0);
+        assert_eq!(w1.wasted_ps, 0.0);
+        assert_eq!(w1.hits, vec![1, 0]);
+        assert_eq!(w1.misses, vec![0, 0]);
+    }
+
+    #[test]
+    fn long_step_closes_every_crossed_window_once() {
+        let mut s = sampler();
+        let cum = TenantCum {
+            slo_met: vec![0, 0],
+            completed: vec![0, 0],
+            dropped: vec![0, 0],
+        };
+        s.record_cold_start();
+        s.advance(35.0, FleetGauges::default(), 2.0, &cum);
+        // Crossed t=10, 20, 30: three windows; deltas in the first only.
+        assert_eq!(s.series().len(), 3);
+        let windows: Vec<u64> = s.series().samples().map(|w| w.window).collect();
+        assert_eq!(windows, vec![0, 1, 2]);
+        let cold: Vec<u64> = s.series().samples().map(|w| w.cold_starts).collect();
+        assert_eq!(cold, vec![1, 0, 0]);
+        let wasted: Vec<f64> = s.series().samples().map(|w| w.wasted_ps).collect();
+        assert_eq!(wasted, vec![2.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn ring_evicts_oldest_and_counts() {
+        let mut s = FleetSampler::new(1.0, 4, vec![]);
+        let cum = TenantCum::default();
+        s.advance(10.0, FleetGauges::default(), 0.0, &cum);
+        let series = s.into_series();
+        assert_eq!(series.len(), 4);
+        assert_eq!(series.evicted(), 6);
+        let first = series.samples().next().unwrap().window;
+        assert_eq!(first, 6, "oldest retained window after eviction");
+    }
+
+    #[test]
+    fn flush_captures_the_partial_tail_window() {
+        let mut s = sampler();
+        let mut cum = TenantCum {
+            slo_met: vec![1, 0],
+            completed: vec![1, 0],
+            dropped: vec![0, 0],
+        };
+        s.advance(10.0, FleetGauges::default(), 0.0, &cum);
+        assert_eq!(s.series().len(), 1);
+        // Activity lands mid-window; the clock never reaches 20.0.
+        s.record_model_loads(2);
+        cum.slo_met = vec![1, 1];
+        cum.completed = vec![1, 1];
+        s.advance(14.0, FleetGauges::default(), 1.5, &cum);
+        assert_eq!(s.series().len(), 1, "no boundary crossed yet");
+        s.flush(FleetGauges { queue_depth: 1, ..FleetGauges::default() }, 1.5, &cum);
+        let series = s.into_series();
+        assert_eq!(series.len(), 2);
+        let tail = series.samples().nth(1).unwrap();
+        assert_eq!(tail.window, 1);
+        assert_eq!(tail.model_loads, 2);
+        assert_eq!(tail.hits, vec![0, 1]);
+        assert_eq!(tail.wasted_ps, 1.5);
+        assert_eq!(tail.queue_depth, 1);
+    }
+
+    #[test]
+    fn jsonl_round_trip_is_exact() {
+        let mut s = sampler();
+        let cum = TenantCum {
+            slo_met: vec![5, 1],
+            completed: vec![6, 3],
+            dropped: vec![0, 2],
+        };
+        s.record_model_loads(7);
+        s.record_cold_start();
+        s.record_cold_start();
+        let g = FleetGauges { queue_depth: 9, busy: 5, up: 8, inflight: 3 };
+        s.advance(30.0, g, 12.625, &cum);
+        let series = s.into_series();
+        let text = series.to_jsonl();
+        let first = text.lines().next().unwrap();
+        assert!(first.contains("\"schema\":\"eat-timeseries-v1\""), "{first}");
+        assert!(first.contains("\"evicted\":0"), "{first}");
+        let back = FleetSeries::parse_jsonl(&text).unwrap();
+        assert_eq!(back, series);
+        // f64 fields survive bit-exactly (shortest-round-trip writer).
+        let (a, b): (Vec<u64>, Vec<u64>) = (
+            series.samples().map(|w| w.wasted_ps.to_bits()).collect(),
+            back.samples().map(|w| w.wasted_ps.to_bits()).collect(),
+        );
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn merge_adds_by_window_index() {
+        let mk = |windows: &[(u64, u64)]| {
+            let mut s = FleetSeries::new(10.0, 16, vec!["a".into()]);
+            for &(w, hits) in windows {
+                let mut sample = FleetSample::zero(w, 1);
+                sample.queue_depth = w + 1;
+                sample.hits[0] = hits;
+                sample.wasted_ps = hits as f64 * 0.5;
+                s.push(sample);
+            }
+            s
+        };
+        let mut a = mk(&[(0, 1), (1, 2)]);
+        let b = mk(&[(1, 10), (2, 5)]);
+        a.merge(&b);
+        assert_eq!(a.len(), 3);
+        let hits: Vec<u64> = a.samples().map(|w| w.hits[0]).collect();
+        assert_eq!(hits, vec![1, 12, 5]);
+        let queue: Vec<u64> = a.samples().map(|w| w.queue_depth).collect();
+        assert_eq!(queue, vec![1, 4, 3]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn merge_rejects_tenant_shape_mismatch() {
+        let mut a = FleetSeries::new(10.0, 4, vec!["a".into()]);
+        let b = FleetSeries::new(10.0, 4, vec!["b".into()]);
+        a.merge(&b);
+    }
+}

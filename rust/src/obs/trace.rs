@@ -118,6 +118,20 @@ pub enum SpanKind {
     },
     /// The task left without completing.
     Dropped { reason: DropReason },
+    /// Worker-reported timings for the winning attempt's critical member
+    /// (the gang member with the largest wall round-trip), merged
+    /// host-side from the wire reply by `eat serve`. `rtt` is the
+    /// host-measured wall round-trip; the rest are the worker's own
+    /// spans: `recv` read+parse, `lock_wait` GPU-mutex wait, `load`
+    /// weight load, `exec` execution, `reply` serialize+write.
+    WorkerSpan {
+        rtt: f64,
+        recv: f64,
+        lock_wait: f64,
+        load: f64,
+        exec: f64,
+        reply: f64,
+    },
 }
 
 impl SpanKind {
@@ -132,6 +146,7 @@ impl SpanKind {
             SpanKind::SpecLaunched { .. } => "spec_launched",
             SpanKind::Completed { .. } => "completed",
             SpanKind::Dropped { .. } => "dropped",
+            SpanKind::WorkerSpan { .. } => "worker_span",
         }
     }
 }
@@ -195,6 +210,14 @@ impl SpanEvent {
                 v.set("spec", speculative);
             }
             SpanKind::Dropped { reason } => v.set("reason", reason.name()),
+            SpanKind::WorkerSpan { rtt, recv, lock_wait, load, exec, reply } => {
+                v.set("rtt", rtt);
+                v.set("recv", recv);
+                v.set("lock_wait", lock_wait);
+                v.set("load", load);
+                v.set("exec", exec);
+                v.set("reply", reply);
+            }
         }
         v
     }
@@ -251,6 +274,14 @@ impl SpanEvent {
                     Some("retries_exhausted") => DropReason::RetriesExhausted,
                     other => anyhow::bail!("unknown drop reason {other:?}"),
                 },
+            },
+            "worker_span" => SpanKind::WorkerSpan {
+                rtt: f("rtt")?,
+                recv: f("recv")?,
+                lock_wait: f("lock_wait")?,
+                load: f("load")?,
+                exec: f("exec")?,
+                reply: f("reply")?,
             },
             other => anyhow::bail!("unknown span event '{other}'"),
         };
@@ -355,9 +386,17 @@ impl TraceRecorder {
         out
     }
 
-    /// JSONL export, one event per line, oldest first.
+    /// JSONL export: one meta line carrying the surviving-event and
+    /// evicted counts, then one event per line, oldest first. The meta
+    /// line is what lets the analyzer distinguish "this lifecycle is
+    /// corrupt" from "this lifecycle lost its head to ring wrap-around".
     pub fn to_jsonl(&self) -> String {
-        let mut out = String::new();
+        let mut meta = Value::obj();
+        meta.set("schema", "eat-trace-v1")
+            .set("events", self.buf.len())
+            .set("evicted", self.evicted);
+        let mut out = meta.to_json();
+        out.push('\n');
         for ev in self.events() {
             out.push_str(&ev.to_json().to_json());
             out.push('\n');
@@ -376,10 +415,20 @@ impl TraceRecorder {
     }
 }
 
+/// A parsed trace document: the surviving events plus how many the
+/// recorder's ring evicted before export (0 for pre-meta-line traces).
+#[derive(Clone, Debug)]
+pub struct TraceDoc {
+    pub events: Vec<SpanEvent>,
+    pub evicted: u64,
+}
+
 /// Parse a JSONL trace (as written by [`TraceRecorder::to_jsonl`]) back
-/// into events. Blank lines are skipped.
-pub fn parse_jsonl(text: &str) -> anyhow::Result<Vec<SpanEvent>> {
-    let mut out = Vec::new();
+/// into events plus its meta counters. Blank lines are skipped; a
+/// missing meta line (pre-PR-8 trace) parses with `evicted = 0`.
+pub fn parse_jsonl_doc(text: &str) -> anyhow::Result<TraceDoc> {
+    let mut events = Vec::new();
+    let mut evicted = 0u64;
     for (lineno, line) in text.lines().enumerate() {
         let line = line.trim();
         if line.is_empty() {
@@ -387,12 +436,26 @@ pub fn parse_jsonl(text: &str) -> anyhow::Result<Vec<SpanEvent>> {
         }
         let v = json::parse(line)
             .map_err(|e| anyhow::anyhow!("trace line {}: {e}", lineno + 1))?;
-        out.push(
+        if let Some(schema) = v.get("schema").and_then(Value::as_str) {
+            anyhow::ensure!(
+                schema == "eat-trace-v1",
+                "trace line {}: unsupported trace schema '{schema}'",
+                lineno + 1
+            );
+            evicted = v.get("evicted").and_then(Value::as_f64).map(|x| x as u64).unwrap_or(0);
+            continue;
+        }
+        events.push(
             SpanEvent::from_json(&v)
                 .map_err(|e| anyhow::anyhow!("trace line {}: {e}", lineno + 1))?,
         );
     }
-    Ok(out)
+    Ok(TraceDoc { events, evicted })
+}
+
+/// [`parse_jsonl_doc`] discarding the meta counters.
+pub fn parse_jsonl(text: &str) -> anyhow::Result<Vec<SpanEvent>> {
+    Ok(parse_jsonl_doc(text)?.events)
 }
 
 #[cfg(test)]
@@ -470,6 +533,19 @@ mod tests {
             None,
             SpanKind::Dropped { reason: DropReason::Admission },
         );
+        tr.record(
+            40.25,
+            7,
+            Some(1),
+            SpanKind::WorkerSpan {
+                rtt: 0.12345678901234567,
+                recv: 0.001,
+                lock_wait: 0.0625,
+                load: 0.03,
+                exec: 0.025,
+                reply: 0.0005,
+            },
+        );
         let text = tr.to_jsonl();
         let back = parse_jsonl(&text).unwrap();
         assert_eq!(back.len(), tr.len());
@@ -482,5 +558,26 @@ mod tests {
     #[test]
     fn unknown_event_is_rejected() {
         assert!(parse_jsonl("{\"t\":0,\"task\":1,\"ev\":\"warped\"}").is_err());
+    }
+
+    #[test]
+    fn meta_line_carries_eviction_count() {
+        let mut tr = TraceRecorder::new(3);
+        for i in 0..5u64 {
+            tr.record(i as f64, i, None, SpanKind::Admitted);
+        }
+        let text = tr.to_jsonl();
+        let first = text.lines().next().unwrap();
+        assert!(first.contains("\"schema\":\"eat-trace-v1\""), "{first}");
+        assert!(first.contains("\"evicted\":2"), "{first}");
+        let doc = parse_jsonl_doc(&text).unwrap();
+        assert_eq!(doc.evicted, 2);
+        assert_eq!(doc.events.len(), 3);
+        // A meta-less (pre-meta) trace still parses, with evicted = 0.
+        let legacy = parse_jsonl_doc("{\"t\":0,\"task\":1,\"ev\":\"admitted\"}").unwrap();
+        assert_eq!(legacy.evicted, 0);
+        assert_eq!(legacy.events.len(), 1);
+        // A foreign schema is rejected rather than silently skipped.
+        assert!(parse_jsonl_doc("{\"schema\":\"eat-bench-v1\"}").is_err());
     }
 }

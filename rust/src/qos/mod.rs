@@ -80,6 +80,10 @@ pub struct TenantConfig {
     /// Latency SLO budget (s): a task meets its SLO iff response time
     /// (waiting + execution) stays within this budget of its arrival.
     pub latency_slo: f64,
+    /// SLO attainment target in (0, 1): the fraction of outcomes that
+    /// must meet the latency SLO. Defines the tenant's error budget for
+    /// `eat slo report` — `(1 - slo_target) × outcomes` misses allowed.
+    pub slo_target: f64,
     /// Per-task quality floor; becomes each task's `q_min`.
     pub q_min: f64,
     /// This tenant's own arrival process.
@@ -106,6 +110,11 @@ impl TenantConfig {
             "tenant '{}' q_min must be > 0",
             self.name
         );
+        anyhow::ensure!(
+            self.slo_target > 0.0 && self.slo_target < 1.0,
+            "tenant '{}' slo_target must be in (0, 1)",
+            self.name
+        );
         self.arrival.validate()
     }
 
@@ -115,6 +124,7 @@ impl TenantConfig {
             .set("tier", self.tier as usize)
             .set("weight", self.weight)
             .set("latency_slo", self.latency_slo)
+            .set("slo_target", self.slo_target)
             .set("q_min", self.q_min)
             .set("arrival", self.arrival.to_json());
         if self.model_mix != ModelMix::Uniform {
@@ -138,6 +148,9 @@ impl TenantConfig {
             tier: num("tier")? as u8,
             weight: num("weight")?,
             latency_slo: num("latency_slo")?,
+            // Pre-PR-8 configs carry no target; 0.9 is the conventional
+            // "one nine" default.
+            slo_target: v.get("slo_target").and_then(Value::as_f64).unwrap_or(0.9),
             q_min: num("q_min")?,
             arrival: ArrivalConfig::from_json(v.req("arrival")?)?,
             model_mix: match v.get("model_mix") {
@@ -165,20 +178,21 @@ impl TenantsConfig {
     /// overload the attainment ordering must follow the weights.
     pub fn three_tier(total_rate: f64) -> TenantsConfig {
         let lane = total_rate / 3.0;
-        let tenant = |name: &str, tier: u8, weight: f64, q_min: f64| TenantConfig {
+        let tenant = |name: &str, tier: u8, weight: f64, q_min: f64, slo_target: f64| TenantConfig {
             name: name.to_string(),
             tier,
             weight,
             latency_slo: 120.0,
+            slo_target,
             q_min,
             arrival: ArrivalConfig::Poisson { rate: lane },
             model_mix: ModelMix::Uniform,
         };
         TenantsConfig {
             tenants: vec![
-                tenant("premium", 0, 6.0, 0.24),
-                tenant("standard", 1, 3.0, 0.22),
-                tenant("batch", 2, 1.0, 0.20),
+                tenant("premium", 0, 6.0, 0.24, 0.9),
+                tenant("standard", 1, 3.0, 0.22, 0.75),
+                tenant("batch", 2, 1.0, 0.20, 0.5),
             ],
             admission: AdmissionConfig::AdmitAll,
             queue: QueueDiscipline::EdfWfq,
@@ -494,5 +508,25 @@ mod tests {
         let mut cfg = TenantsConfig::three_tier(0.3);
         cfg.tenants[2].latency_slo = -1.0;
         assert!(cfg.validate().is_err());
+        let mut cfg = TenantsConfig::three_tier(0.3);
+        cfg.tenants[0].slo_target = 1.0;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn slo_target_defaults_and_round_trips() {
+        let cfg = TenantsConfig::three_tier(0.3);
+        let targets: Vec<f64> = cfg.tenants.iter().map(|t| t.slo_target).collect();
+        assert_eq!(targets, vec![0.9, 0.75, 0.5]);
+        // A pre-slo_target config document parses with the 0.9 default.
+        let mut doc = cfg.to_json();
+        let Value::Obj(ref mut map) = doc else { panic!("object") };
+        let Some(Value::Arr(tenants)) = map.get_mut("tenants") else { panic!("array") };
+        for t in tenants.iter_mut() {
+            let Value::Obj(ref mut tm) = t else { panic!("object") };
+            tm.remove("slo_target");
+        }
+        let back = TenantsConfig::from_json(&doc).unwrap();
+        assert!(back.tenants.iter().all(|t| t.slo_target == 0.9));
     }
 }

@@ -23,6 +23,11 @@ pub const DEFAULT_DISPATCH_TIMEOUT: Duration = Duration::from_secs(300);
 pub struct GangOutcome {
     pub task_id: u64,
     pub results: Vec<TaskResult>,
+    /// Host-observed wall-clock seconds per gang member of the winning
+    /// round (connect → parsed reply), aligned index-for-index with
+    /// `results`. The per-member round trip that worker-reported span
+    /// timings decompose against.
+    pub rtts: Vec<f64>,
     /// Host-observed wall-clock seconds for the whole gang (max worker).
     pub wall_seconds: f64,
     /// Simulated seconds burnt in failed resilient-dispatch rounds before
@@ -106,13 +111,16 @@ impl ServingHost {
             steps,
             model,
             tenant,
+            None,
             gang,
             DEFAULT_DISPATCH_TIMEOUT,
         )
     }
 
     /// [`dispatch_tagged`](Self::dispatch_tagged) with an explicit
-    /// per-worker socket timeout.
+    /// per-worker socket timeout and an optional trace id: when set, the
+    /// id rides every wire request and workers report their measured span
+    /// timings in the replies ([`TaskResult::timings`]).
     #[allow(clippy::too_many_arguments)]
     pub fn dispatch_tagged_timeout(
         &self,
@@ -121,6 +129,7 @@ impl ServingHost {
         steps: u32,
         model: u32,
         tenant: Option<u32>,
+        trace_id: Option<u64>,
         gang: &[usize],
         timeout: Duration,
     ) -> anyhow::Result<GangOutcome> {
@@ -131,7 +140,7 @@ impl ServingHost {
         );
         let started = Instant::now();
         let (mut results, failed) =
-            self.try_dispatch(task_id, prompt, steps, model, tenant, gang, timeout);
+            self.try_dispatch(task_id, prompt, steps, model, tenant, trace_id, gang, timeout);
         if !failed.is_empty() {
             let detail: Vec<String> = failed
                 .iter()
@@ -144,10 +153,12 @@ impl ServingHost {
                 detail.join("; ")
             );
         }
-        results.sort_by_key(|r| r.worker_id);
+        results.sort_by_key(|(r, _)| r.worker_id);
+        let (results, rtts) = results.into_iter().unzip();
         Ok(GangOutcome {
             task_id,
             results,
+            rtts,
             wall_seconds: started.elapsed().as_secs_f64(),
             retry_seconds: 0.0,
         })
@@ -174,9 +185,11 @@ impl ServingHost {
     }
 
     /// One gang round with per-worker connect/read/write timeouts.
-    /// Returns the successful results plus, per failed worker, the error
-    /// that felled it (connection refused, timeout, a clean close without
-    /// a result, or a garbled reply).
+    /// Returns the successful results — each paired with its host-observed
+    /// round-trip wall seconds (connect → parsed reply) — plus, per failed
+    /// worker, the error that felled it (connection refused, timeout, a
+    /// clean close without a result, or a garbled reply). `trace_id`
+    /// rides every request so workers report their span timings back.
     #[allow(clippy::too_many_arguments)]
     fn try_dispatch(
         &self,
@@ -185,10 +198,11 @@ impl ServingHost {
         steps: u32,
         model: u32,
         tenant: Option<u32>,
+        trace_id: Option<u64>,
         gang: &[usize],
         timeout: Duration,
-    ) -> (Vec<TaskResult>, Vec<(usize, anyhow::Error)>) {
-        let (tx, rx) = mpsc::channel::<(usize, anyhow::Result<TaskResult>)>();
+    ) -> (Vec<(TaskResult, f64)>, Vec<(usize, anyhow::Error)>) {
+        let (tx, rx) = mpsc::channel::<(usize, anyhow::Result<(TaskResult, f64)>)>();
         for (rank, &w) in gang.iter().enumerate() {
             let addr = self.workers[w];
             let req = TaskRequest {
@@ -199,10 +213,12 @@ impl ServingHost {
                 model,
                 rank,
                 tenant,
+                trace_id,
             };
             let tx = tx.clone();
             std::thread::spawn(move || {
-                let send = || -> anyhow::Result<TaskResult> {
+                let send = || -> anyhow::Result<(TaskResult, f64)> {
+                    let t0 = Instant::now();
                     let mut stream = TcpStream::connect_timeout(&addr, timeout)?;
                     stream.set_read_timeout(Some(timeout))?;
                     stream.set_write_timeout(Some(timeout))?;
@@ -211,7 +227,8 @@ impl ServingHost {
                     let mut line = String::new();
                     BufReader::new(stream).read_line(&mut line)?;
                     anyhow::ensure!(!line.trim().is_empty(), "worker closed without a result");
-                    TaskResult::from_json(line.trim())
+                    let res = TaskResult::from_json(line.trim())?;
+                    Ok((res, t0.elapsed().as_secs_f64()))
                 };
                 tx.send((w, send())).ok();
             });
@@ -381,10 +398,15 @@ impl ServingHost {
         // members with no survivors, once the timeout fired — recovered
         // from the round's wall time when time_scale is known.
         let mut lost_sim = 0.0f64;
+        // Tracing wants worker-reported span timings in the replies;
+        // propagate the task id as the trace id so workers know to
+        // measure (untraced dispatches keep the lean wire format).
+        let trace_id = tracer.as_ref().map(|_| task_id);
         for round in 0..rounds {
             let round_started = Instant::now();
-            let (mut results, failed) =
-                self.try_dispatch(task_id, prompt, steps, model, tenant, &current, timeout);
+            let (mut results, failed) = self.try_dispatch(
+                task_id, prompt, steps, model, tenant, trace_id, &current, timeout,
+            );
             if let Some(tr) = tracer.as_deref_mut() {
                 // The round's dispatch instant on the simulated clock:
                 // failed rounds pushed it forward by their charged time.
@@ -393,11 +415,11 @@ impl ServingHost {
                 // analyzer's cold + exec reproduce `sim_exec_seconds`.
                 let (cold, exec) = results
                     .iter()
-                    .map(|r| (r.load_time, r.exec_time))
+                    .map(|(r, _)| (r.load_time, r.exec_time))
                     .max_by(|a, b| (a.0 + a.1).total_cmp(&(b.0 + b.1)))
                     .unwrap_or((0.0, 0.0));
                 let gref = GangRef::capture(&current, |i| {
-                    results.iter().any(|r| r.worker_id == current[i] && r.reused)
+                    results.iter().any(|(r, _)| r.worker_id == current[i] && r.reused)
                 });
                 tr.record(
                     sim_now + lost_sim,
@@ -416,10 +438,12 @@ impl ServingHost {
                 }
             }
             if failed.is_empty() {
-                results.sort_by_key(|r| r.worker_id);
+                results.sort_by_key(|(r, _)| r.worker_id);
+                let (results, rtts) = results.into_iter().unzip();
                 let outcome = GangOutcome {
                     task_id,
                     results,
+                    rtts,
                     wall_seconds: started.elapsed().as_secs_f64(),
                     retry_seconds: lost_sim,
                 };
@@ -437,6 +461,31 @@ impl ServingHost {
                     }
                 }
                 if let Some(tr) = tracer.as_deref_mut() {
+                    // Worker span for the gang's critical member (largest
+                    // host-observed round trip): the analyzer decomposes
+                    // this wall RTT into network/queue/load/exec, with
+                    // network the exact residual against the worker spans.
+                    if let Some((i, &rtt)) = outcome
+                        .rtts
+                        .iter()
+                        .enumerate()
+                        .max_by(|a, b| a.1.total_cmp(b.1))
+                    {
+                        let t = outcome.results[i].timings.unwrap_or_default();
+                        tr.record(
+                            sim_now + lost_sim + outcome.sim_exec_seconds(),
+                            task_id,
+                            tenant,
+                            SpanKind::WorkerSpan {
+                                rtt,
+                                recv: t.recv,
+                                lock_wait: t.lock_wait,
+                                load: t.load,
+                                exec: t.exec,
+                                reply: t.reply,
+                            },
+                        );
+                    }
                     // Same response expression as the metrics book above,
                     // `start` bit-equal to the winning dispatch's instant.
                     tr.record(
@@ -454,7 +503,7 @@ impl ServingHost {
             }
             let partial_sim = results
                 .iter()
-                .map(|r| r.exec_time + r.load_time)
+                .map(|(r, _)| r.exec_time + r.load_time)
                 .fold(0.0, f64::max);
             // Wall-derived charge only when a member actually hit its
             // timeout (the round lasted at least that long): an instantly
@@ -474,10 +523,11 @@ impl ServingHost {
                 // with zero survivors killed nothing that ever executed,
                 // so it is not a gang kill.
                 if !results.is_empty() {
-                    let burnt: f64 = results.iter().map(|r| r.exec_time + r.load_time).sum();
+                    let burnt: f64 =
+                        results.iter().map(|(r, _)| r.exec_time + r.load_time).sum();
                     m.observe_dispatched_work(burnt);
                     m.observe_gang_kill(burnt);
-                    for r in &results {
+                    for (r, _) in &results {
                         m.observe_busy(r.worker_id, r.exec_time + r.load_time);
                     }
                 }
@@ -576,13 +626,14 @@ impl ServingHost {
         steps: u32,
         model: u32,
         tenant: Option<u32>,
+        trace_id: Option<u64>,
         gang: &[usize],
         waiting: f64,
         timeout: Duration,
         metrics: &mut MetricsCollector,
     ) -> anyhow::Result<GangOutcome> {
-        let out =
-            self.dispatch_tagged_timeout(task_id, prompt, steps, model, tenant, gang, timeout)?;
+        let out = self
+            .dispatch_tagged_timeout(task_id, prompt, steps, model, tenant, trace_id, gang, timeout)?;
         metrics.observe_task(waiting + out.sim_exec_seconds(), waiting, out.any_reload());
         // Busy time is per worker: patches run in parallel and each worker
         // is free again after its own exec+load, not after the slowest
@@ -606,6 +657,8 @@ mod tests {
         let host = ServingHost::new(pool.addrs().to_vec());
         let out = host.dispatch(9, "gang test", 20, 0, &[0, 1, 2, 3]).unwrap();
         assert_eq!(out.results.len(), 4);
+        assert_eq!(out.rtts.len(), 4, "one round trip per gang member");
+        assert!(out.rtts.iter().all(|&r| r > 0.0), "{:?}", out.rtts);
         assert!(out.any_reload());
         assert!(out.sim_exec_seconds() > 0.0);
         // Reuse on the second dispatch with same model + gang size.
@@ -778,6 +831,10 @@ mod tests {
             out.retry_seconds > 0.0,
             "the failed round's simulated time must be charged to the task"
         );
+        assert!(
+            out.results.iter().all(|r| r.timings.is_none()),
+            "untraced dispatch must keep the lean wire format"
+        );
         // Serving books mirror the simulator's: dispatched = completed + wasted.
         assert!(
             (m.dispatched_ps() - m.completed_ps() - m.wasted_ps()).abs() < 1e-9,
@@ -855,6 +912,24 @@ mod tests {
             d.exec,
             out.sim_exec_seconds()
         );
+        // The traced dispatch propagated a trace id, so workers reported
+        // span timings and the analyzer decomposed the live round trip:
+        // network + lock_wait + load + exec must rebuild the host-measured
+        // RTT bit-exactly (network is the ulp-walked residual).
+        assert!(
+            out.results.iter().all(|r| r.timings.is_some()),
+            "traced dispatch must elicit worker timings"
+        );
+        assert_eq!(a.live.len(), 1, "one live decomposition per traced task");
+        let live = &a.live[0];
+        assert!(live.balanced(), "live decomposition out of balance: {live:?}");
+        let max_rtt = out.rtts.iter().copied().fold(0.0, f64::max);
+        assert_eq!(
+            live.rtt.to_bits(),
+            max_rtt.to_bits(),
+            "live span must carry the critical member's round trip"
+        );
+        assert!(live.exec > 0.0, "{live:?}");
         // A task that exhausts its candidates books a drop.
         assert!(host
             .dispatch_resilient_traced(
@@ -877,6 +952,7 @@ mod tests {
                 "p",
                 20,
                 0,
+                None,
                 None,
                 &[0, 1],
                 2.5,

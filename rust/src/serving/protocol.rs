@@ -47,6 +47,10 @@ pub struct TaskRequest {
     /// distinct from tenant 0 (a real, configurable tenant) and omitted
     /// from the wire format entirely, so pre-tenant traces stay parseable.
     pub tenant: Option<u32>,
+    /// Host-assigned trace id propagated through the worker so its reply
+    /// timings can be merged into the host-side lifecycle trace. Omitted
+    /// from the wire when tracing is off (pre-span requests stay parseable).
+    pub trace_id: Option<u64>,
 }
 
 impl TaskRequest {
@@ -60,6 +64,9 @@ impl TaskRequest {
             .set("rank", self.rank);
         if let Some(t) = self.tenant {
             v.set("tenant", t as usize);
+        }
+        if let Some(id) = self.trace_id {
+            v.set("trace_id", id);
         }
         v.to_json()
     }
@@ -76,7 +83,50 @@ impl TaskRequest {
             // Absent on the wire for untenanted tasks (and in pre-tenant
             // traces): parses to `None`, never conflated with tenant 0.
             tenant: v.get("tenant").and_then(Value::as_f64).map(|t| t as u32),
+            trace_id: v.get("trace_id").and_then(Value::as_f64).map(|t| t as u64),
         })
+    }
+}
+
+/// Wall-clock spans a worker measured while serving one request, reported
+/// back in the [`TaskResult`] so the host can decompose live latency.
+/// All fields are seconds on the worker's own clock; the host never
+/// compares them against its clock directly — it folds them into the
+/// round trip as a residual, so clock skew cannot unbalance the books.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct WireTimings {
+    /// Reading + parsing the request line off the socket.
+    pub recv: f64,
+    /// Waiting on the worker's GPU mutex behind other ranks.
+    pub lock_wait: f64,
+    /// Simulated weight-load sleep (0 when the model was resident).
+    pub load: f64,
+    /// Simulated denoise/execute sleep.
+    pub exec: f64,
+    /// Serialising + writing the reply line.
+    pub reply: f64,
+}
+
+impl WireTimings {
+    fn to_value(self) -> Value {
+        let mut v = Value::obj();
+        v.set("recv", self.recv)
+            .set("lock_wait", self.lock_wait)
+            .set("load", self.load)
+            .set("exec", self.exec)
+            .set("reply", self.reply);
+        v
+    }
+
+    fn from_value(v: &Value) -> WireTimings {
+        let f = |k: &str| v.get(k).and_then(Value::as_f64).unwrap_or(0.0);
+        WireTimings {
+            recv: f("recv"),
+            lock_wait: f("lock_wait"),
+            load: f("load"),
+            exec: f("exec"),
+            reply: f("reply"),
+        }
     }
 }
 
@@ -93,6 +143,10 @@ pub struct TaskResult {
     pub reused: bool,
     /// Stand-in for the generated image patch (base64 in the real system).
     pub image: String,
+    /// Wall-clock spans measured on the worker, present only when the
+    /// request carried a `trace_id`. Omitted from the wire otherwise so
+    /// pre-span replies stay parseable.
+    pub timings: Option<WireTimings>,
 }
 
 impl TaskResult {
@@ -104,6 +158,9 @@ impl TaskResult {
             .set("load_time", self.load_time)
             .set("reused", self.reused)
             .set("image", self.image.as_str());
+        if let Some(t) = self.timings {
+            v.set("timings", t.to_value());
+        }
         v.to_json()
     }
 
@@ -116,6 +173,7 @@ impl TaskResult {
             load_time: v.req("load_time")?.as_f64().unwrap_or(0.0),
             reused: v.req("reused")?.as_bool().unwrap_or(false),
             image: v.req("image")?.as_str().unwrap_or("").to_string(),
+            timings: v.get("timings").map(WireTimings::from_value),
         })
     }
 }
@@ -134,6 +192,7 @@ mod tests {
             model: 2,
             rank: 3,
             tenant: Some(1),
+            trace_id: Some(9001),
         };
         let back = TaskRequest::from_json(&req.to_json()).unwrap();
         assert_eq!(back, req);
@@ -141,9 +200,10 @@ mod tests {
         // from "no tenant".
         let zero = TaskRequest { tenant: Some(0), ..req.clone() };
         assert_eq!(TaskRequest::from_json(&zero.to_json()).unwrap().tenant, Some(0));
-        let untenanted = TaskRequest { tenant: None, ..req };
+        let untenanted = TaskRequest { tenant: None, trace_id: None, ..req };
         let json = untenanted.to_json();
         assert!(!json.contains("tenant"), "absent tenant must be omitted: {json}");
+        assert!(!json.contains("trace_id"), "absent trace id must be omitted: {json}");
         assert_eq!(TaskRequest::from_json(&json).unwrap(), untenanted);
     }
 
@@ -156,6 +216,7 @@ mod tests {
         )
         .unwrap();
         assert_eq!(req.tenant, None);
+        assert_eq!(req.trace_id, None);
     }
 
     #[test]
@@ -177,8 +238,41 @@ mod tests {
             load_time: 28.0,
             reused: false,
             image: "patch-7-1".into(),
+            timings: None,
+        };
+        let json = res.to_json();
+        assert!(!json.contains("timings"), "absent timings must be omitted: {json}");
+        let back = TaskResult::from_json(&json).unwrap();
+        assert_eq!(back, res);
+    }
+
+    #[test]
+    fn result_timings_roundtrip_bit_exactly() {
+        let res = TaskResult {
+            task_id: 7,
+            worker_id: 1,
+            exec_time: 5.8,
+            load_time: 0.0,
+            reused: true,
+            image: "patch-7-1".into(),
+            timings: Some(WireTimings {
+                recv: 1.25e-4,
+                lock_wait: 0.1 + 0.2, // deliberately non-representable sum
+                load: 0.0,
+                exec: 5.8e-3,
+                reply: 3.0e-5,
+            }),
         };
         let back = TaskResult::from_json(&res.to_json()).unwrap();
         assert_eq!(back, res);
+        let (a, b) = (back.timings.unwrap(), res.timings.unwrap());
+        assert_eq!(a.lock_wait.to_bits(), b.lock_wait.to_bits());
+        // Pre-span replies (no `timings` key) still parse.
+        let legacy = TaskResult::from_json(
+            "{\"task_id\":1,\"worker_id\":0,\"exec_time\":1.0,\"load_time\":0.0,\
+             \"reused\":true,\"image\":\"x\"}",
+        )
+        .unwrap();
+        assert_eq!(legacy.timings, None);
     }
 }

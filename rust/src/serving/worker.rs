@@ -49,6 +49,7 @@ fn handle(
     gpu: &Mutex<GpuState>,
     time_scale: f64,
 ) -> anyhow::Result<()> {
+    let t_recv = std::time::Instant::now();
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut line = String::new();
     reader.read_line(&mut line)?;
@@ -66,12 +67,15 @@ fn handle(
         }
     }
     let req = TaskRequest::from_json(line.trim())?;
+    let recv = t_recv.elapsed().as_secs_f64();
     let want = Loaded {
         model: req.model,
         patches: req.patches,
     };
-    let (reused, load_time, exec_time) = {
+    let (reused, load_time, exec_time, lock_wait, load_span, exec_span) = {
+        let t_lock = std::time::Instant::now();
         let mut g = gpu.lock().unwrap();
+        let lock_wait = t_lock.elapsed().as_secs_f64();
         // Model reuse: a loaded instance matches only if both the model
         // type and the gang size agree (DistriFusion loads per process
         // group).
@@ -83,19 +87,41 @@ fn handle(
         };
         g.loaded = Some(want);
         let exec_time = exec.sample_exec(req.steps, req.patches, &mut g.rng);
-        let simulated = (load_time + exec_time) * time_scale;
         // Sleep while holding the lock: the GPU is busy for the duration.
-        std::thread::sleep(std::time::Duration::from_secs_f64(simulated));
-        (reused, load_time, exec_time)
+        // Weight-load and denoise sleep separately (same total as one
+        // combined sleep) so the reply can report each span's wall time.
+        let t_load = std::time::Instant::now();
+        std::thread::sleep(std::time::Duration::from_secs_f64(load_time * time_scale));
+        let load_span = t_load.elapsed().as_secs_f64();
+        let t_exec = std::time::Instant::now();
+        std::thread::sleep(std::time::Duration::from_secs_f64(exec_time * time_scale));
+        let exec_span = t_exec.elapsed().as_secs_f64();
+        (reused, load_time, exec_time, lock_wait, load_span, exec_span)
     };
-    let result = TaskResult {
+    let mut result = TaskResult {
         task_id: req.task_id,
         worker_id,
         exec_time,
         load_time,
         reused,
         image: format!("image:{}:{}:{}", req.task_id, req.rank, req.prompt.len()),
+        timings: None,
     };
+    if req.trace_id.is_some() {
+        // Reply span: serialisation cost, probed on the timing-less
+        // result (the socket write itself cannot be timed from inside
+        // the payload; it lands in the host's network residual).
+        let t_reply = std::time::Instant::now();
+        let _ = result.to_json();
+        let reply = t_reply.elapsed().as_secs_f64();
+        result.timings = Some(protocol::WireTimings {
+            recv,
+            lock_wait,
+            load: load_span,
+            exec: exec_span,
+            reply,
+        });
+    }
     let mut out = stream;
     out.write_all(result.to_json().as_bytes())?;
     out.write_all(b"\n")?;
@@ -354,6 +380,7 @@ mod tests {
             model: 0,
             rank: 0,
             tenant: None,
+            trace_id: None,
         }
     }
 
@@ -371,6 +398,30 @@ mod tests {
         // Different model: reload.
         let r3 = send_to(addr, &TaskRequest { model: 1, ..request(3) }).unwrap();
         assert!(!r3.reused);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn traced_requests_report_span_timings_untraced_do_not() {
+        let pool = WorkerPool::spawn(1, ExecModelConfig::default(), 1e-4, 7).unwrap();
+        let addr = pool.addrs()[0];
+        let plain = send_to(addr, &request(1)).unwrap();
+        assert_eq!(plain.timings, None, "no trace id, no timings on the wire");
+        let traced =
+            send_to(addr, &TaskRequest { model: 1, trace_id: Some(41), ..request(2) }).unwrap();
+        let t = traced.timings.expect("trace id must elicit timings");
+        // Cold dispatch: both simulated sleeps ran, so each span has real
+        // wall width; recv/lock_wait/reply merely must be sane.
+        assert!(t.load > 0.0, "cold load span: {t:?}");
+        assert!(t.exec > 0.0, "exec span: {t:?}");
+        assert!(t.recv >= 0.0 && t.lock_wait >= 0.0 && t.reply >= 0.0, "{t:?}");
+        // Warm repeat: the load sleep is zero-length, exec still runs.
+        let warm =
+            send_to(addr, &TaskRequest { model: 1, trace_id: Some(42), ..request(3) }).unwrap();
+        assert!(warm.reused);
+        let w = warm.timings.unwrap();
+        assert!(w.exec > 0.0, "{w:?}");
+        assert!(w.load < t.load, "warm load span must shrink: {w:?} vs {t:?}");
         pool.shutdown();
     }
 

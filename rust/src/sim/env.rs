@@ -9,6 +9,7 @@
 
 use crate::config::EnvConfig;
 use crate::faults::{FaultEvent, FaultKind, FaultModel, FaultsConfig};
+use crate::obs::timeseries::{FleetGauges, FleetSampler, FleetSeries, TenantCum};
 use crate::obs::trace::{DropReason, GangRef, SpanKind, TraceRecorder};
 use crate::qos::{AdmissionConfig, AdmissionState, PendingQueue, QueueDiscipline, TenantRegistry};
 use crate::sim::cluster::{Cluster, Selection};
@@ -292,6 +293,11 @@ pub struct EdgeEnv {
     /// cores. Recording never draws from any RNG stream, so episodes are
     /// bit-identical with tracing on or off (pinned by property tests).
     tracer: Option<TraceRecorder>,
+    /// Optional fixed-cadence fleet sampler (`obs::timeseries`). Off by
+    /// default; like the tracer it observes cumulative counters only and
+    /// never draws from an RNG stream, so episodes are bit-identical with
+    /// sampling on or off (pinned by property tests).
+    sampler: Option<FleetSampler>,
 }
 
 impl EdgeEnv {
@@ -398,6 +404,7 @@ impl EdgeEnv {
             total_reward: 0.0,
             trace: Vec::new(),
             tracer: None,
+            sampler: None,
         };
         env.absorb_arrivals();
         env
@@ -430,6 +437,35 @@ impl EdgeEnv {
     /// Detach the lifecycle recorder (e.g. to export JSONL after a run).
     pub fn take_tracer(&mut self) -> Option<TraceRecorder> {
         self.tracer.take()
+    }
+
+    /// Turn on fleet telemetry sampling at a fixed `cadence` (simulated
+    /// seconds per window) with a ring capacity of `cap` windows. Tenant
+    /// labels follow the registry (empty for untenanted configs).
+    pub fn enable_sampling(&mut self, cadence: f64, cap: usize) {
+        let tenants = self.registry.as_ref().map_or_else(Vec::new, |r| {
+            r.config().tenants.iter().map(|t| t.name.clone()).collect()
+        });
+        self.sampler = Some(FleetSampler::new(cadence, cap, tenants));
+    }
+
+    /// Detach the sampled fleet series (e.g. to export JSONL after a
+    /// run). Closes any windows the clock has crossed plus one trailing
+    /// partial window, so activity after the last boundary still lands
+    /// in the export and window sums reconcile with the episode report.
+    pub fn take_series(&mut self) -> Option<FleetSeries> {
+        if self.sampler.is_some() {
+            let (gauges, wasted, cum) = self.fleet_gauges();
+            let sampler = self.sampler.as_mut().unwrap();
+            sampler.advance(self.now, gauges, wasted, &cum);
+            sampler.flush(gauges, wasted, &cum);
+        }
+        self.sampler.take().map(FleetSampler::into_series)
+    }
+
+    /// The fleet sampler's series so far, if sampling is enabled.
+    pub fn series(&self) -> Option<&FleetSeries> {
+        self.sampler.as_ref().map(FleetSampler::series)
     }
 
     pub fn now(&self) -> f64 {
@@ -687,9 +723,65 @@ impl EdgeEnv {
         self.fault_tick(&finished, dt);
         self.finished_buf = finished;
         self.absorb_arrivals();
+        self.sample_fleet();
         self.steps_taken += 1;
         outcome.done = self.is_done();
         outcome
+    }
+
+    /// Close any sampling windows the clock has crossed this step. The
+    /// gauge scan is O(fleet) but runs only when a window actually
+    /// closes, and only with sampling enabled — the hot path pays one
+    /// `Option` check.
+    fn sample_fleet(&mut self) {
+        let pending = match &self.sampler {
+            Some(s) => s.window_pending(self.now),
+            None => return,
+        };
+        if !pending {
+            return;
+        }
+        let (gauges, wasted, cum) = self.fleet_gauges();
+        let sampler = self.sampler.as_mut().expect("checked above");
+        sampler.advance(self.now, gauges, wasted, &cum);
+    }
+
+    /// Snapshot the instantaneous fleet gauges and cumulative per-tenant
+    /// counters for the sampler.
+    fn fleet_gauges(&self) -> (FleetGauges, f64, TenantCum) {
+        let mut busy = 0u64;
+        let mut up = 0u64;
+        let mut gangs: std::collections::BTreeSet<u64> = std::collections::BTreeSet::new();
+        for s in &self.cluster.servers {
+            if s.up {
+                up += 1;
+            }
+            if !s.is_idle() {
+                busy += 1;
+                if let Some(g) = s.gang {
+                    gangs.insert(g.0);
+                }
+            }
+        }
+        let inflight = match &self.faults {
+            // Under churn the fault subsystem tracks attempts directly
+            // (including speculative backups racing on warm gangs).
+            Some(fs) => fs.inflight.len() as u64,
+            None => gangs.len() as u64,
+        };
+        let gauges = FleetGauges {
+            queue_depth: self.queue.len() as u64,
+            busy,
+            up,
+            inflight,
+        };
+        let stats = self.metrics.tenant_stats();
+        let cum = TenantCum {
+            slo_met: stats.iter().map(|t| t.slo_met).collect(),
+            completed: stats.iter().map(|t| t.completed).collect(),
+            dropped: stats.iter().map(|t| t.dropped).collect(),
+        };
+        (gauges, self.metrics.wasted_ps(), cum)
     }
 
     fn is_done(&self) -> bool {
@@ -809,6 +901,20 @@ impl EdgeEnv {
                 self.cluster.servers[servers[i]].model == Some(task.model)
             })
         });
+        if let Some(sampler) = self.sampler.as_mut() {
+            if !reuse {
+                // Like the warmth capture above: residency must be read
+                // before `dispatch` mutates it. Members already holding
+                // the model only rebuild the process group — the weight
+                // loads are the cold members.
+                sampler.record_cold_start();
+                let cold_members = servers
+                    .iter()
+                    .filter(|&&id| self.cluster.servers[id].model != Some(task.model))
+                    .count() as u64;
+                sampler.record_model_loads(cold_members);
+            }
+        }
         let gang = self.cluster.dispatch(&servers, duration, task.model, reuse, self.now);
         self.queue.remove(index);
         let waiting = (self.now - task.arrival).max(0.0);
@@ -2284,6 +2390,125 @@ mod tests {
                 assert_reports_bit_identical(&plain, &traced);
             }
         }
+    }
+
+    #[test]
+    fn sampling_on_or_off_is_bit_identical() {
+        // The sampler reads cumulative counters and draws from no RNG
+        // stream: episodes must not move by a bit when sampling is
+        // enabled — plain, under churn, and with tenants, on both cores.
+        for legacy in [false, true] {
+            let cases = [
+                (ExperimentConfig::preset_8node(0.1).env, 71_u64),
+                (churn_cfg(), 72),
+                (tenant_cfg(0.3), 73),
+            ];
+            for (cfg, seed) in cases {
+                let plain = run_head_first(EdgeEnv::new(cfg.clone(), seed), legacy);
+                let mut e = EdgeEnv::new(cfg, seed);
+                e.enable_sampling(25.0, FleetSeries::default_capacity());
+                let sampled = run_head_first(e, legacy);
+                assert_reports_bit_identical(&plain, &sampled);
+            }
+        }
+    }
+
+    fn sampled_head_first(mut e: EdgeEnv, legacy: bool) -> FleetSeries {
+        e.enable_sampling(25.0, FleetSeries::default_capacity());
+        e.set_legacy_scan(legacy);
+        let l = e.cfg.queue_window;
+        let s_max = e.cfg.s_max;
+        for _ in 0..=e.cfg.step_limit {
+            while let Some(idx) = e.first_feasible() {
+                if e.schedule_task_at(idx, s_max).is_none() {
+                    break;
+                }
+            }
+            if e.step(&Action::noop(l)).done {
+                break;
+            }
+        }
+        e.take_series().unwrap()
+    }
+
+    #[test]
+    fn both_cores_sample_identical_series() {
+        for (cfg, seed) in [(ExperimentConfig::preset_8node(0.1).env, 81_u64), (tenant_cfg(0.3), 83)] {
+            let tick = sampled_head_first(EdgeEnv::new(cfg.clone(), seed), true).to_jsonl();
+            let event = sampled_head_first(EdgeEnv::new(cfg.clone(), seed), false).to_jsonl();
+            assert!(tick.lines().count() > 1, "no windows sampled:\n{tick}");
+            assert_eq!(tick, event, "fleet series diverge between cores");
+        }
+    }
+
+    #[test]
+    fn sharded_series_merge_is_bit_identical_across_thread_counts() {
+        // N episodes sampled under par::map_cells fan-out, merged in
+        // slot order: the pooled series must be byte-identical no matter
+        // how many threads ran the shards.
+        let episode =
+            |ep: u64| sampled_head_first(EdgeEnv::new(tenant_cfg(0.3), 100 + ep), false);
+        let merged_with = |threads: usize| {
+            let shards =
+                crate::util::par::map_cells((0..6u64).collect::<Vec<_>>(), threads, episode);
+            let mut pooled: Option<FleetSeries> = None;
+            for s in &shards {
+                match pooled.as_mut() {
+                    Some(p) => p.merge(s),
+                    None => pooled = Some(s.clone()),
+                }
+            }
+            pooled.unwrap().to_jsonl()
+        };
+        let single = merged_with(1);
+        assert!(single.lines().count() > 1, "no windows sampled");
+        for threads in [3usize, 4] {
+            assert_eq!(single, merged_with(threads), "merge diverges at {threads} threads");
+        }
+    }
+
+    #[test]
+    fn sampled_series_counters_reconcile_with_the_report() {
+        // Window sums must add back up to the episode's own accounting:
+        // per-tenant hits+misses cover every resolved outcome, and the
+        // wasted patch-seconds total matches the report bit-for-bit in
+        // sum (same fold order as the sampler's diffs).
+        let mut e = EdgeEnv::new(tenant_cfg(0.3), 97);
+        e.enable_sampling(25.0, FleetSeries::default_capacity());
+        let l = e.cfg.queue_window;
+        let s_max = e.cfg.s_max;
+        for _ in 0..=e.cfg.step_limit {
+            while let Some(idx) = e.first_feasible() {
+                if e.schedule_task_at(idx, s_max).is_none() {
+                    break;
+                }
+            }
+            if e.step(&Action::noop(l)).done {
+                break;
+            }
+        }
+        let rep = e.report();
+        let series = e.take_series().unwrap();
+        assert_eq!(series.tenants(), ["premium", "standard", "batch"]);
+        let mut hits = vec![0u64; 3];
+        let mut misses = vec![0u64; 3];
+        let mut loads = 0u64;
+        for w in series.samples() {
+            for i in 0..3 {
+                hits[i] += w.hits[i];
+                misses[i] += w.misses[i];
+            }
+            loads += w.model_loads;
+        }
+        for (i, tr) in rep.tenant_reports.iter().enumerate() {
+            assert_eq!(hits[i], tr.slo_met, "tenant {i} hits");
+            assert_eq!(
+                hits[i] + misses[i],
+                tr.completed + tr.dropped,
+                "tenant {i} outcomes"
+            );
+        }
+        assert!(loads > 0, "an episode with reloads must sample model loads");
     }
 
     #[test]
