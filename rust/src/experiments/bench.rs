@@ -288,19 +288,27 @@ pub fn compare_docs(old: &Value, new: &Value, min_ratio: f64) -> anyhow::Result<
     let new_rows = new.req("grid")?.as_arr().unwrap_or(&[]);
     let mut cells: Vec<Value> = Vec::new();
     let mut pass = true;
+    let mut skipped = 0usize;
     for old_row in old_rows {
         let (servers, tasks) = (
             old_row.req("servers")?.as_usize().unwrap_or(0),
             old_row.req("tasks")?.as_usize().unwrap_or(0),
         );
-        let Some(old_tps) = event_tps(old_row) else { continue };
+        let Some(old_tps) = event_tps(old_row) else {
+            skipped += 1;
+            continue;
+        };
         let Some(new_row) = new_rows.iter().find(|r| {
             r.get("servers").and_then(Value::as_usize) == Some(servers)
                 && r.get("tasks").and_then(Value::as_usize) == Some(tasks)
         }) else {
+            skipped += 1;
             continue;
         };
-        let Some(new_tps) = event_tps(new_row) else { continue };
+        let Some(new_tps) = event_tps(new_row) else {
+            skipped += 1;
+            continue;
+        };
         let ratio = if old_tps > 0.0 { new_tps / old_tps } else { f64::INFINITY };
         let ok = ratio >= min_ratio;
         pass &= ok;
@@ -313,6 +321,26 @@ pub fn compare_docs(old: &Value, new: &Value, min_ratio: f64) -> anyhow::Result<
             .set("verdict", if ok { "ok" } else { "regression" });
         cells.push(cell);
     }
+    // Cells only the new document ran are unmatched in the other
+    // direction; fold them into the same skip count.
+    for new_row in new_rows {
+        let (servers, tasks) = (
+            new_row.get("servers").and_then(Value::as_usize),
+            new_row.get("tasks").and_then(Value::as_usize),
+        );
+        if !old_rows.iter().any(|r| {
+            r.get("servers").and_then(Value::as_usize) == servers
+                && r.get("tasks").and_then(Value::as_usize) == tasks
+        }) {
+            skipped += 1;
+        }
+    }
+    if skipped > 0 {
+        crate::log_warn!(
+            "bench compare: skipped {skipped} unmatched cell(s) — grids differ \
+             (e.g. --quick vs full) or a cell ran only one core"
+        );
+    }
     anyhow::ensure!(
         !cells.is_empty(),
         "bench compare matched no grid cells (disjoint grids or schema drift)"
@@ -321,14 +349,21 @@ pub fn compare_docs(old: &Value, new: &Value, min_ratio: f64) -> anyhow::Result<
     doc.set("schema", "eat-bench-compare-v1")
         .set("min_ratio", min_ratio)
         .set("cells", cells)
+        .set("skipped", skipped)
         .set("pass", pass);
     Ok(doc)
 }
 
 /// Render a compare verdict document as a terminal table.
 pub fn render_compare(doc: &Value) -> String {
+    let skipped = doc.get("skipped").and_then(Value::as_usize).unwrap_or(0);
+    let title = if skipped > 0 {
+        format!("bench compare (event-core tasks/s, new vs old; {skipped} unmatched skipped)")
+    } else {
+        "bench compare (event-core tasks/s, new vs old)".to_string()
+    };
     let mut table = crate::util::table::Table::new(
-        "bench compare (event-core tasks/s, new vs old)",
+        &title,
         &["servers", "tasks", "old", "new", "ratio", "verdict"],
     );
     for cell in doc.get("cells").and_then(Value::as_arr).unwrap_or(&[]) {
@@ -529,6 +564,11 @@ mod tests {
         assert_eq!(verdict.req("pass").unwrap().as_bool(), Some(false));
         let cells = verdict.req("cells").unwrap().as_arr().unwrap();
         assert_eq!(cells.len(), 2, "unmatched cell must be skipped: {verdict:?}");
+        assert_eq!(
+            verdict.req("skipped").unwrap().as_usize(),
+            Some(1),
+            "the old-only (9, 9) cell must be counted, not failed: {verdict:?}"
+        );
         assert_eq!(cells[0].req("verdict").unwrap().as_str(), Some("ok"));
         assert_eq!(cells[1].req("verdict").unwrap().as_str(), Some("regression"));
         let ratio = cells[1].req("ratio").unwrap().as_f64().unwrap();
@@ -536,10 +576,17 @@ mod tests {
         // The same pair passes under a floor below the worst ratio.
         let lax = compare_docs(&old, &new, 0.4).unwrap();
         assert_eq!(lax.req("pass").unwrap().as_bool(), Some(true));
-        // The rendered table carries every matched cell and its verdict.
+        // The rendered table carries every matched cell, its verdict,
+        // and the skip count in the header.
         let table = render_compare(&verdict);
         assert!(table.contains("regression"), "{table}");
         assert!(table.contains("0.500"), "{table}");
+        assert!(table.contains("1 unmatched skipped"), "{table}");
+        // A new-only cell also counts as skipped (one each way here).
+        let widened = doc(&[(8, 100, 950.0), (1_000, 500, 1000.0), (77, 7, 5.0)]);
+        let v2 = compare_docs(&old, &widened, 0.4).unwrap();
+        assert_eq!(v2.req("skipped").unwrap().as_usize(), Some(2));
+        assert_eq!(v2.req("pass").unwrap().as_bool(), Some(true));
         // Disjoint grids are an error, not a silent pass.
         assert!(compare_docs(&doc(&[(5, 5, 1.0)]), &new, 0.8).is_err());
         // Wrong schema is rejected before any cell math.

@@ -17,6 +17,7 @@
 
 use crate::config::ExperimentConfig;
 use crate::faults::FaultsConfig;
+use crate::obs::decisions::DecisionLedger;
 use crate::obs::trace::TraceRecorder;
 use crate::qos::{TenantRegistry, TenantsConfig};
 use crate::sim::env::{Action, EdgeEnv};
@@ -162,6 +163,57 @@ pub fn traced_episode(cfg: &ExperimentConfig, steps: u32) -> TraceRecorder {
         }
     }
     env.take_tracer().expect("tracing was enabled")
+}
+
+/// Record every dispatch decision across a cell's episodes, CRN-seeded
+/// exactly like [`run_cell`] so the ledger describes the very episodes
+/// the sweep measured (recording is bit-inert — pinned by
+/// `decision_recording_on_or_off_is_bit_identical` in `sim::env`).
+/// Episodes fan out across `threads` and merge in episode order, so the
+/// pooled ledger is byte-identical for any thread count.
+pub fn recorded_cell(
+    cfg: &ExperimentConfig,
+    episodes: usize,
+    steps: u32,
+    threads: usize,
+) -> DecisionLedger {
+    let policy = match cfg.env.faults.as_ref() {
+        Some(f) if f.health_aware => "aware",
+        Some(_) => "blind",
+        None => "head-first",
+    };
+    let shards = par::map_cells((0..episodes.max(1) as u64).collect(), threads, |ep| {
+        let mut wl_rng = Pcg64::new(cfg.seed.wrapping_add(ep), 0xC0FFEE);
+        let workload = Workload::generate(&cfg.env, &mut wl_rng);
+        let mut env = EdgeEnv::with_workload(
+            cfg.env.clone(),
+            workload,
+            Pcg64::new(cfg.seed.wrapping_add(ep), 0xE21),
+        );
+        env.enable_decisions(policy, DecisionLedger::default_capacity());
+        let noop = Action::noop(cfg.env.queue_window);
+        loop {
+            while let Some(idx) = env.first_feasible() {
+                if env.schedule_task_at(idx, steps).is_none() {
+                    break;
+                }
+            }
+            if env.step(&noop).done {
+                break;
+            }
+        }
+        let mut led = env.take_decisions().expect("recording was enabled");
+        led.tag_episode(ep);
+        led
+    });
+    let mut pooled: Option<DecisionLedger> = None;
+    for s in &shards {
+        match pooled.as_mut() {
+            Some(p) => p.merge(s),
+            None => pooled = Some(s.clone()),
+        }
+    }
+    pooled.expect("at least one episode")
 }
 
 /// Run the full sweep; one `FaultCell` per combination, in sweep order.
@@ -366,6 +418,36 @@ pub fn run(args: &Args) -> anyhow::Result<String> {
         tr.write_jsonl(path)?;
         println!("wrote trace {path} ({} events, {} evicted)", tr.len(), tr.evicted());
     }
+    if let Some(path) = args.get("decisions") {
+        // Record the first sweep cell's episodes — the same CRN-paired
+        // episodes the sweep pooled — into a decision ledger for
+        // `eat decisions analyze`.
+        let mut faults = faults_base.clone();
+        faults.mtbf = mtbfs.first().copied().unwrap_or(0.0);
+        faults.zone_shock_rate = zone_rates.first().copied().unwrap_or(0.0);
+        faults.straggler_rate = straggler_rates.first().copied().unwrap_or(0.0);
+        faults.health_aware = modes.first().copied().unwrap_or(true);
+        crate::log_info!(
+            "recording decisions for cell mtbf={} zshock={} slow={} mode={} x {episodes} episode(s)",
+            faults.mtbf,
+            faults.zone_shock_rate,
+            faults.straggler_rate,
+            if faults.health_aware { "aware" } else { "blind" },
+        );
+        let mut cfg = template.clone();
+        cfg.env.tenants = Some(tenants_base.clone());
+        cfg.env.faults = Some(faults);
+        cfg.env.validate()?;
+        let t0 = std::time::Instant::now();
+        let ledger = recorded_cell(&cfg, episodes, 20, threads);
+        crate::log_info!("recorded re-run: {:.2}s wall", t0.elapsed().as_secs_f64());
+        ledger.write_jsonl(path)?;
+        println!(
+            "wrote decision ledger {path} ({} decisions, {} evicted)",
+            ledger.len(),
+            ledger.evicted()
+        );
+    }
     Ok(out)
 }
 
@@ -556,6 +638,48 @@ mod tests {
         let a = crate::obs::analyze::analyze_jsonl(&tr.to_jsonl()).unwrap();
         a.check_books().unwrap();
         assert!(!a.tasks.is_empty());
+    }
+
+    #[test]
+    fn recorded_cell_ledger_is_thread_count_independent_and_balances() {
+        let mut cfg = light_gang_template(30, 13);
+        cfg.env.tenants = Some(TenantsConfig::three_tier(0.1));
+        cfg.env.faults = Some(churn_base());
+        cfg.env.validate().unwrap();
+        let single = recorded_cell(&cfg, 3, 20, 1).to_jsonl();
+        for threads in [3, 4] {
+            assert_eq!(
+                single,
+                recorded_cell(&cfg, 3, 20, threads).to_jsonl(),
+                "pooled ledger diverged at {threads} threads"
+            );
+        }
+        let ledger = DecisionLedger::parse_jsonl(&single).unwrap();
+        assert!(!ledger.is_empty(), "churn cell recorded no decisions");
+        crate::obs::decisions::analyze(&ledger).check_books().unwrap();
+    }
+
+    #[test]
+    fn aware_median_regret_does_not_exceed_blind_on_the_crn_paired_cell() {
+        // The CI smoke's gate, pinned here as a test too: on the same
+        // CRN-paired churn cell, health-aware dispatch should not regret
+        // its choices more than fault-blind dispatch does at the median.
+        let make = |aware: bool| {
+            let mut cfg = light_gang_template(120, 42);
+            cfg.env.tenants = Some(TenantsConfig::three_tier(0.1));
+            cfg.env.faults = Some(FaultsConfig { health_aware: aware, ..churn_base() });
+            cfg.env.validate().unwrap();
+            crate::obs::decisions::analyze(&recorded_cell(&cfg, 2, 20, 1))
+        };
+        let (aware, blind) = (make(true), make(false));
+        aware.check_books().unwrap();
+        blind.check_books().unwrap();
+        assert!(
+            aware.median_regret() <= blind.median_regret() + 1e-9,
+            "aware median regret {} exceeds blind {}",
+            aware.median_regret(),
+            blind.median_regret()
+        );
     }
 
     #[test]

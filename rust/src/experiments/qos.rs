@@ -353,6 +353,28 @@ pub fn run(args: &Args) -> anyhow::Result<String> {
             shards.len()
         );
     }
+    if let Some(path) = args.get("decisions") {
+        // Record every dispatch decision of the first sweep cell's
+        // episodes (same CRN pairing as the sweep; recording is
+        // bit-inert) into an `eat-decisions-v1` ledger for
+        // `eat decisions analyze` / `--export-experience`.
+        let mut tenants = tenants_base.scaled(overloads.first().copied().unwrap_or(1.0));
+        tenants.admission = admissions.first().cloned().unwrap_or(AdmissionConfig::AdmitAll);
+        tenants.queue = disciplines.first().copied().unwrap_or(QueueDiscipline::Fifo);
+        let mut cfg = template.clone();
+        cfg.env.tenants = Some(tenants);
+        cfg.env.validate()?;
+        let t0 = std::time::Instant::now();
+        let ledger = super::faults::recorded_cell(&cfg, episodes, 20, threads);
+        crate::log_info!("recorded re-run: {:.2}s wall", t0.elapsed().as_secs_f64());
+        ledger.write_jsonl(path)?;
+        println!(
+            "wrote decision ledger {path} ({} decisions, {} evicted, {} episode(s) pooled)",
+            ledger.len(),
+            ledger.evicted(),
+            episodes.max(1)
+        );
+    }
     Ok(out)
 }
 

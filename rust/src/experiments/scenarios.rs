@@ -195,6 +195,40 @@ pub fn run(args: &Args) -> anyhow::Result<String> {
         tr.write_jsonl(path)?;
         println!("wrote trace {path} ({} events, {} evicted)", tr.len(), tr.evicted());
     }
+    if let Some(path) = args.get("decisions") {
+        // Record the first (scenario × algorithm) cell's episode 0 into a
+        // decision ledger — the same CRN streams the sweep used, labelled
+        // with the policy that drove dispatch, so `eat decisions analyze`
+        // can compare regret across algorithms.
+        let scenario = scenarios.first().map(String::as_str).unwrap_or("poisson");
+        let mut cfg = ExperimentConfig::preset(nodes);
+        cfg.seed = seed;
+        cfg.env.arrival_rate = rate;
+        cfg.env.workload = Some(WorkloadConfig::preset(scenario, rate)?);
+        cfg.algorithm = *algorithms.first().unwrap_or(&Algorithm::Greedy);
+        crate::log_info!(
+            "recording decisions for cell scenario={scenario} algorithm={} episode 0 (serial re-run)",
+            cfg.algorithm.name(),
+        );
+        let t0 = std::time::Instant::now();
+        let mut policy = super::trained_policy(&cfg, rt.as_ref(), train_episodes, verbose)?;
+        let mut wl_rng = Pcg64::new(seed, 0xC0FFEE);
+        let workload = Workload::generate(&cfg.env, &mut wl_rng);
+        let mut env = EdgeEnv::with_workload(cfg.env.clone(), workload, Pcg64::new(seed, 0xE21));
+        env.enable_decisions(
+            cfg.algorithm.name(),
+            crate::obs::decisions::DecisionLedger::default_capacity(),
+        );
+        run_episode(&mut env, policy.as_mut(), None);
+        let ledger = env.take_decisions().expect("recording was enabled");
+        crate::log_info!("recorded re-run: {:.2}s wall", t0.elapsed().as_secs_f64());
+        ledger.write_jsonl(path)?;
+        println!(
+            "wrote decision ledger {path} ({} decisions, {} evicted)",
+            ledger.len(),
+            ledger.evicted()
+        );
+    }
     Ok(out)
 }
 

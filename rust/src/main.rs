@@ -38,6 +38,11 @@
 //!   eat trace import <csv> <out.jsonl>                      map a CSV
 //!       request log onto a JSONL workload trace (replayable via
 //!       `eat scenarios --replay`)
+//!   eat decisions analyze <ledger.jsonl> [--export-experience out.jsonl]
+//!       hindsight-regret and calibration report over a per-decision
+//!       scheduler ledger (`--decisions` on qos/faults/scenarios);
+//!       --export-experience emits (state, action, reward) replay tuples,
+//!       --compare gates one policy's median regret against another's
 //!   eat slo report <file> [--target X] [--window 60]        per-tenant
 //!       error budgets and multi-window burn rates over a lifecycle trace
 //!       or fleet time series; exits non-zero when a budget is exhausted
@@ -56,7 +61,7 @@ use eat::{log_info, log_warn};
 
 fn usage() -> ! {
     eprintln!(
-        "usage: eat <experiment|train|eval|serve|scenarios|qos|faults|bench|slo|info> [options]\n\
+        "usage: eat <experiment|train|eval|serve|scenarios|qos|faults|bench|decisions|slo|info> [options]\n\
          \n  eat experiment <id>   ids: table1 table2_4 table6 table9 table10 table11\n\
          \x20                          table12 fig4 fig5 fig6 fig7 fig8 grid scenarios all\n\
          \x20     options: --nodes 4|8|12 --episodes K --train-episodes K --algs a,b,c\n\
@@ -73,23 +78,32 @@ fn usage() -> ! {
          \n  eat scenarios [--nodes N] [--episodes K] [--rate R] [--algs a,b,c]\n\
          \x20             [--scenarios poisson,bursty,...] [--record dir]\n\
          \x20             [--replay file [--scenario name] [--ep K]] [--trace out.jsonl]\n\
+         \x20             [--decisions out.jsonl]\n\
          \n  eat qos     [--nodes N] [--tasks K] [--episodes E] [--rate R] [--seed S]\n\
          \x20           [--overloads 1.0,3.0] [--admissions admit-all,drop-tail,token-bucket]\n\
          \x20           [--queues fifo,edf] [--max-queue Q] [--bucket-rate R] [--bucket-burst B]\n\
          \x20           [--threads T] [--trace out.jsonl]\n\
-         \x20           [--timeseries out.jsonl [--cadence 25]]\n\
+         \x20           [--timeseries out.jsonl [--cadence 25]] [--decisions out.jsonl]\n\
          \n  eat faults  [--nodes N] [--tasks K] [--episodes E] [--rate R] [--seed S]\n\
          \x20           [--mtbfs 0,600,200] [--zone-rates 0.002] [--straggler-rates 0.005]\n\
          \x20           [--modes aware,blind] [--mttr T] [--zones Z] [--spec-beta B]\n\
          \x20           [--max-retries R] [--threads T] [--trace out.jsonl]\n\
+         \x20           [--decisions out.jsonl]\n\
          \n  eat bench   [--quick] [--seed S] [--out BENCH_sim.json]\n\
          \x20           [--check BASELINE.json] [--min-speedup X]\n\
          \n  eat bench compare OLD.json NEW.json [--min-ratio 0.8] [--out verdict.json]\n\
          \x20     per-cell throughput deltas between two eat-bench-v1 docs; non-zero\n\
          \x20     exit when any cell's new/old ratio falls below the floor\n\
          \n  eat trace import <csv> <out.jsonl>\n\
-         \n  eat trace analyze <trace.jsonl> [--json]   decompose per-task latency into\n\
-         \x20     queue/retry/cold/exec/straggler components (non-zero exit on imbalance)\n\
+         \n  eat trace analyze <trace.jsonl> [--json] [--top N]   decompose per-task latency\n\
+         \x20     into queue/retry/cold/exec/straggler components (non-zero exit on\n\
+         \x20     imbalance); --top lists the N slowest tasks with their decomposition\n\
+         \n  eat decisions analyze <ledger.jsonl> [--json]\n\
+         \x20     [--export-experience out.jsonl] [--compare other.jsonl]\n\
+         \x20     hindsight-regret + calibration report over an eat-decisions-v1 ledger\n\
+         \x20     (non-zero exit on join/books imbalance); --export-experience emits\n\
+         \x20     (state, action, reward) replay tuples; --compare exits non-zero when\n\
+         \x20     this ledger's median regret exceeds the other's\n\
          \n  eat slo report <trace.jsonl|series.jsonl> [--config file.json] [--target X]\n\
          \x20     [--latency-slo S] [--window 60] [--slow-window 300] [--json]\n\
          \x20     per-tenant error budgets + burn rates; non-zero exit on exhaustion\n\
@@ -213,8 +227,52 @@ fn main() -> anyhow::Result<()> {
                 } else {
                     println!("{}", analysis.render(path));
                 }
+                if let Some(n) = args.get_usize_opt("top") {
+                    println!("\n{}", analysis.render_top(n));
+                }
                 // Books invariant: every decomposition must sum to its
                 // measured latency bit-exactly; imbalance exits non-zero.
+                analysis.check_books()?;
+            }
+            _ => usage(),
+        },
+        "decisions" => match args.positional.get(1).map(String::as_str) {
+            Some("analyze") => {
+                let Some(path) = args.positional.get(2) else { usage() };
+                let text = std::fs::read_to_string(path)
+                    .map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+                let ledger = eat::obs::DecisionLedger::parse_jsonl(&text)?;
+                let analysis = eat::obs::decisions::analyze(&ledger);
+                if args.has_flag("json") {
+                    println!("{}", analysis.to_json(path).to_json_pretty());
+                } else {
+                    println!("{}", analysis.render(path));
+                }
+                if let Some(out) = args.get("export-experience") {
+                    let tuples = eat::obs::decisions::export_experience(&ledger)?;
+                    if let Some(dir) = std::path::Path::new(out).parent() {
+                        if !dir.as_os_str().is_empty() {
+                            std::fs::create_dir_all(dir)?;
+                        }
+                    }
+                    std::fs::write(out, &tuples)?;
+                    let n_tuples = tuples.lines().count().saturating_sub(1);
+                    println!("wrote experience export {out} ({n_tuples} tuples)");
+                }
+                if let Some(other_path) = args.get("compare") {
+                    let other_text = std::fs::read_to_string(other_path)
+                        .map_err(|e| anyhow::anyhow!("{other_path}: {e}"))?;
+                    let other_ledger = eat::obs::DecisionLedger::parse_jsonl(&other_text)?;
+                    let other = eat::obs::decisions::analyze(&other_ledger);
+                    let (ours, theirs) = (analysis.median_regret(), other.median_regret());
+                    println!("median regret: {path} {ours:.3} vs {other_path} {theirs:.3}");
+                    anyhow::ensure!(
+                        ours <= theirs + 1e-9,
+                        "median regret regression: {path} ({ours:.3}) exceeds {other_path} ({theirs:.3})"
+                    );
+                }
+                // Books invariant: every resolved decision must join to
+                // exactly one outcome; imbalance exits non-zero.
                 analysis.check_books()?;
             }
             _ => usage(),
@@ -615,6 +673,10 @@ fn serve_loop(
     let timeout = Duration::from_secs_f64(serving.dispatch_timeout);
     let mut faulted: Option<usize> = None;
     let mut fault_injected = false;
+    // Per-tenant deadline outcomes for the labelled endpoint series
+    // (tenant id as the label value, "-" for untenanted tasks).
+    let mut tenant_slo: std::collections::BTreeMap<String, (u64, u64)> =
+        std::collections::BTreeMap::new();
     // Dispatch is synchronous, so model a sequential simulated timeline:
     // a task starts once it has arrived AND the previous dispatch
     // finished. This makes the arrival process matter — bursty/flash
@@ -882,6 +944,36 @@ fn serve_loop(
                 "eat_queue_depth",
                 "arrived tasks awaiting dispatch",
                 backlog as f64,
+            );
+            // Per-tenant deadline hit/miss totals and attainment, labelled
+            // by tenant id. `sim_clock` is this task's completion instant
+            // on the simulated timeline; deadline-less tasks count as hits
+            // (same convention as the simulator's SLO accounting).
+            let label = task.tenant.map_or_else(|| "-".to_string(), |t| t.to_string());
+            let hit = task.deadline.map_or(true, |d| sim_clock <= d);
+            let e = tenant_slo.entry(label.clone()).or_insert((0, 0));
+            if hit {
+                e.0 += 1;
+            } else {
+                e.1 += 1;
+            }
+            mr.tenant_counter_set(
+                "eat_tenant_deadline_hits_total",
+                "completed tasks that met their deadline",
+                &label,
+                e.0,
+            );
+            mr.tenant_counter_set(
+                "eat_tenant_deadline_misses_total",
+                "completed tasks that missed their deadline",
+                &label,
+                e.1,
+            );
+            mr.tenant_gauge_set(
+                "eat_tenant_slo_attainment",
+                "deadline hits / completed tasks",
+                &label,
+                e.0 as f64 / (e.0 + e.1) as f64,
             );
             if let Some(reg) = registry {
                 export_health(mr, reg.stats(), reg.counts());

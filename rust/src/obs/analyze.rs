@@ -481,6 +481,70 @@ impl Analysis {
         out
     }
 
+    /// The `n` completed tasks with the worst response time, slowest
+    /// first. Ties break on task id so the listing is deterministic.
+    pub fn top_tasks(&self, n: usize) -> Vec<&TaskDecomp> {
+        let mut ds: Vec<&TaskDecomp> = self.tasks.iter().collect();
+        ds.sort_by(|a, b| {
+            b.response.total_cmp(&a.response).then_with(|| a.task.cmp(&b.task))
+        });
+        ds.truncate(n);
+        ds
+    }
+
+    /// Worst-offender table (`eat trace analyze --top N`): the N
+    /// slowest tasks with their full per-component decomposition, so a
+    /// tail regression can be traced to queueing, retries, cold starts,
+    /// or stragglers without re-running the sweep.
+    pub fn render_top(&self, n: usize) -> String {
+        let top = self.top_tasks(n);
+        let title = format!(
+            "Worst {} of {} completed tasks by response time",
+            top.len(),
+            self.tasks.len()
+        );
+        let mut t = Table::new(
+            &title,
+            &[
+                "task",
+                "tenant",
+                "response",
+                "queue",
+                "retry",
+                "cold",
+                "exec",
+                "straggler",
+                "tries",
+                "flags",
+            ],
+        );
+        for d in top {
+            let mut flags = String::new();
+            if d.cold_start {
+                flags.push('C');
+            }
+            if d.spec_win {
+                flags.push('S');
+            }
+            if flags.is_empty() {
+                flags.push('-');
+            }
+            t.row(vec![
+                format!("{}", d.task),
+                d.tenant.map_or("-".to_string(), |t| format!("{t}")),
+                f(d.response, 1),
+                f(d.queue, 1),
+                f(d.retry, 1),
+                f(d.cold, 1),
+                f(d.exec, 1),
+                f(d.straggler, 1),
+                format!("{}", d.attempts),
+                flags,
+            ]);
+        }
+        t.render()
+    }
+
     /// Machine-readable report (`eat trace analyze --json`).
     pub fn to_json(&self, source: &str) -> Value {
         let mut v = Value::obj();
@@ -674,6 +738,40 @@ mod tests {
         assert!((d.straggler - 4.0).abs() < 1e-9);
         assert_eq!(d.attempts, 2);
         assert_eq!(a.suspect, 0);
+    }
+
+    #[test]
+    fn top_tasks_rank_by_response_with_deterministic_ties() {
+        let mut tr = TraceRecorder::new(256);
+        // Three clean tasks share one response; the retried task is slower.
+        record_clean_task(&mut tr, 3, Some(1));
+        record_clean_task(&mut tr, 1, Some(0));
+        record_clean_task(&mut tr, 2, None);
+        let gang = GangRef::capture(&[0], |_| true);
+        tr.record(0.0, 9, None, SpanKind::Admitted);
+        tr.record(
+            2.0,
+            9,
+            None,
+            SpanKind::Dispatched { gang, cold: 25.0, exec: 10.0, attempt: 0, speculative: false },
+        );
+        tr.record(
+            47.5,
+            9,
+            None,
+            SpanKind::Completed { response: 47.5, start: 2.0, speculative: false },
+        );
+        let a = analyze(&tr.events());
+        assert_eq!(a.tasks.len(), 4);
+        let top = a.top_tasks(3);
+        assert_eq!(top.iter().map(|d| d.task).collect::<Vec<_>>(), vec![9, 1, 2]);
+        assert!(a.top_tasks(100).len() == 4, "n beyond len clamps to len");
+        let rendered = a.render_top(2);
+        assert!(rendered.contains("Worst 2 of 4"), "header missing in:\n{rendered}");
+        for needle in ["task", "tenant", "response", "queue", "straggler", "tries", "flags"] {
+            assert!(rendered.contains(needle), "missing column {needle} in:\n{rendered}");
+        }
+        assert!(rendered.contains('9') && rendered.contains("47.5"), "worst task row:\n{rendered}");
     }
 
     #[test]

@@ -38,9 +38,13 @@ struct Entry {
 #[derive(Default)]
 pub struct MetricRegistry {
     inner: Mutex<BTreeMap<&'static str, Entry>>,
-    /// (version, git hash) for the `eat_build_info` gauge — the one
-    /// labelled series the endpoint emits, held apart from the map
-    /// because entry names there are `&'static str` label-less keys.
+    /// Per-tenant series, keyed (metric name, tenant label value). Held
+    /// apart from the label-less map so its hot-path names stay
+    /// allocation-free; `BTreeMap` ordering groups a name's tenants
+    /// together so HELP/TYPE render once per family.
+    tenant: Mutex<BTreeMap<(&'static str, String), Entry>>,
+    /// (version, git hash) for the `eat_build_info` gauge — labelled like
+    /// the tenant series but singular, so it keeps its own slot.
     build: Mutex<Option<(String, String)>>,
 }
 
@@ -93,6 +97,42 @@ impl MetricRegistry {
         if let Metric::Histogram(h) = &mut e.metric {
             h.observe(x);
         }
+    }
+
+    /// Mirror a per-tenant monotone count into a `{tenant=...}` labelled
+    /// counter. Never moves backwards (same discipline as `counter_set`).
+    pub fn tenant_counter_set(&self, name: &'static str, help: &'static str, tenant: &str, v: u64) {
+        let mut m = self.tenant.lock().unwrap();
+        let e = m
+            .entry((name, tenant.to_string()))
+            .or_insert(Entry { help, metric: Metric::Counter(0) });
+        if let Metric::Counter(cur) = &mut e.metric {
+            *cur = (*cur).max(v);
+        }
+    }
+
+    /// Set a `{tenant=...}` labelled gauge.
+    pub fn tenant_gauge_set(&self, name: &'static str, help: &'static str, tenant: &str, v: f64) {
+        let mut m = self.tenant.lock().unwrap();
+        let e = m
+            .entry((name, tenant.to_string()))
+            .or_insert(Entry { help, metric: Metric::Gauge(0.0) });
+        if let Metric::Gauge(cur) = &mut e.metric {
+            *cur = v;
+        }
+    }
+
+    /// Current value of a per-tenant counter (testing / internal checks).
+    pub fn tenant_counter(&self, name: &str, tenant: &str) -> u64 {
+        self.tenant
+            .lock()
+            .unwrap()
+            .iter()
+            .find(|((n, t), _)| *n == name && t == tenant)
+            .map_or(0, |(_, e)| match e.metric {
+                Metric::Counter(v) => v,
+                _ => 0,
+            })
     }
 
     /// Current value of a counter (testing / internal checks).
@@ -152,6 +192,33 @@ impl MetricRegistry {
                     out.push_str(&format!("{name}_sum {}\n", fmt_f64(h.sum())));
                     out.push_str(&format!("{name}_count {}\n", h.count()));
                 }
+            }
+        }
+        // Per-tenant families last: HELP/TYPE once per name, then one
+        // `name{tenant="..."} value` line per tenant (the map's
+        // (name, label) ordering keeps each family contiguous).
+        let t = self.tenant.lock().unwrap();
+        let mut last_name = "";
+        for ((name, label), e) in t.iter() {
+            if *name != last_name {
+                out.push_str(&format!("# HELP {name} {}\n", e.help));
+                let kind = match e.metric {
+                    Metric::Counter(_) => "counter",
+                    Metric::Gauge(_) => "gauge",
+                    Metric::Histogram(_) => "untyped",
+                };
+                out.push_str(&format!("# TYPE {name} {kind}\n"));
+                last_name = name;
+            }
+            let label = label.replace('\\', "\\\\").replace('"', "\\\"");
+            match &e.metric {
+                Metric::Counter(v) => {
+                    out.push_str(&format!("{name}{{tenant=\"{label}\"}} {v}\n"));
+                }
+                Metric::Gauge(v) => {
+                    out.push_str(&format!("{name}{{tenant=\"{label}\"}} {}\n", fmt_f64(*v)));
+                }
+                Metric::Histogram(_) => {}
             }
         }
         out
@@ -312,6 +379,35 @@ mod tests {
         }
         // Without build info the series is absent entirely.
         assert!(!MetricRegistry::new().render().contains("eat_build_info"));
+    }
+
+    #[test]
+    fn tenant_series_render_grouped_and_labelled() {
+        let reg = MetricRegistry::new();
+        reg.tenant_counter_set("eat_tenant_deadline_hits_total", "deadline hits", "premium", 5);
+        reg.tenant_counter_set("eat_tenant_deadline_hits_total", "deadline hits", "batch", 2);
+        reg.tenant_counter_set("eat_tenant_deadline_misses_total", "deadline misses", "batch", 1);
+        reg.tenant_gauge_set("eat_tenant_slo_attainment", "hit fraction", "premium", 1.0);
+        reg.tenant_gauge_set("eat_tenant_slo_attainment", "hit fraction", "batch", 2.0 / 3.0);
+        // Monotone per label: a stale mirror never rolls a tenant back.
+        reg.tenant_counter_set("eat_tenant_deadline_hits_total", "deadline hits", "premium", 3);
+        let text = reg.render();
+        assert!(text.contains("# TYPE eat_tenant_deadline_hits_total counter"));
+        assert!(text.contains("eat_tenant_deadline_hits_total{tenant=\"premium\"} 5"), "{text}");
+        assert!(text.contains("eat_tenant_deadline_hits_total{tenant=\"batch\"} 2"));
+        assert!(text.contains("eat_tenant_deadline_misses_total{tenant=\"batch\"} 1"));
+        assert!(text.contains("eat_tenant_slo_attainment{tenant=\"premium\"} 1"));
+        assert_eq!(reg.tenant_counter("eat_tenant_deadline_hits_total", "premium"), 5);
+        assert_eq!(reg.tenant_counter("eat_tenant_deadline_hits_total", "absent"), 0);
+        // HELP/TYPE render once per family even with several tenants.
+        assert_eq!(text.matches("# TYPE eat_tenant_deadline_hits_total").count(), 1);
+        // The labelled lines keep the two-field exposition discipline.
+        for line in text.lines() {
+            assert!(
+                line.starts_with('#') || line.split_whitespace().count() == 2,
+                "malformed exposition line: {line:?}"
+            );
+        }
     }
 
     #[test]

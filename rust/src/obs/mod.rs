@@ -13,11 +13,16 @@
 //! fleet at a fixed cadence (queue depth, residency churn, per-tenant
 //! deadline hits/misses) into a bounded, mergeable `eat-timeseries-v1`
 //! series; [`slo`] turns traces or series into per-tenant error-budget
-//! burn-rate reports (`eat slo report`). [`metrics`] is a small
-//! counter/gauge/histogram registry that `eat serve --metrics-addr`
-//! exposes over plain TCP in the Prometheus text format. [`log`] is the
-//! leveled stderr logger (`EAT_LOG=warn|info|debug`, `--quiet`) that
-//! replaces the ad-hoc progress `eprintln!`s.
+//! burn-rate reports (`eat slo report`). [`decisions`] records every
+//! dispatch decision — observed state, feasible candidate set with
+//! predicted completions, chosen action, realized outcome — into a
+//! mergeable `eat-decisions-v1` ledger that `eat decisions analyze`
+//! turns into hindsight-regret reports and offline RL experience.
+//! [`metrics`] is a small counter/gauge/histogram registry that
+//! `eat serve --metrics-addr` exposes over plain TCP in the Prometheus
+//! text format. [`log`] is the leveled stderr logger
+//! (`EAT_LOG=warn|info|debug`, `--quiet`) that replaces the ad-hoc
+//! progress `eprintln!`s.
 //!
 //! Nothing in this module touches an RNG stream: recording is observation
 //! only, so every bit-exactness property (event core vs tick core, trace
@@ -25,6 +30,7 @@
 //! `sim/env.rs`.
 
 pub mod analyze;
+pub mod decisions;
 pub mod log;
 pub mod metrics;
 pub mod slo;
@@ -32,6 +38,7 @@ pub mod timeseries;
 pub mod trace;
 
 pub use analyze::{analyze, analyze_jsonl, Analysis, TaskDecomp};
+pub use decisions::{DecisionLedger, DecisionRecord, DecisionRecorder};
 pub use metrics::{MetricRegistry, MetricsServer};
 pub use slo::{SloClass, SloOptions, SloReport};
 pub use timeseries::{FleetSampler, FleetSeries};

@@ -73,6 +73,67 @@ impl ReplayBuffer {
         self.len = (self.len + 1).min(self.capacity);
     }
 
+    /// Load an `eat-experience-v1` JSONL document (as written by
+    /// `obs::decisions::export_experience`): the meta line fixes the
+    /// state/action dims, then one `(s, a, r, s2, done)` tuple per line.
+    /// A recorded `eat qos`/`eat faults` sweep becomes offline training
+    /// data through this path.
+    pub fn from_experience_jsonl(text: &str, capacity: usize) -> anyhow::Result<ReplayBuffer> {
+        use crate::util::json::{self, Value};
+        let mut buf: Option<ReplayBuffer> = None;
+        let floats = |v: &Value, key: &str| -> anyhow::Result<Vec<f32>> {
+            v.req(key)?
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("bad experience array '{key}'"))?
+                .iter()
+                .map(|x| {
+                    x.as_f64()
+                        .map(|f| f as f32)
+                        .ok_or_else(|| anyhow::anyhow!("bad float in '{key}'"))
+                })
+                .collect()
+        };
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let v = json::parse(line)
+                .map_err(|e| anyhow::anyhow!("experience line {}: {e}", lineno + 1))?;
+            if let Some(schema) = v.get("schema").and_then(Value::as_str) {
+                anyhow::ensure!(
+                    schema == "eat-experience-v1",
+                    "experience line {}: unsupported schema '{schema}'",
+                    lineno + 1
+                );
+                let sd = v.req("state_dim")?.as_usize().unwrap_or(0);
+                let ad = v.req("action_dim")?.as_usize().unwrap_or(0);
+                anyhow::ensure!(sd > 0 && ad > 0, "experience meta has zero dims");
+                buf = Some(ReplayBuffer::new(sd, ad, capacity));
+                continue;
+            }
+            let rb = buf
+                .as_mut()
+                .ok_or_else(|| anyhow::anyhow!("experience tuple before the meta line"))?;
+            let s = floats(&v, "s")?;
+            let a = floats(&v, "a")?;
+            let s2 = floats(&v, "s2")?;
+            anyhow::ensure!(
+                s.len() == rb.state_dim && s2.len() == rb.state_dim && a.len() == rb.action_dim,
+                "experience line {}: tuple dims do not match the meta line",
+                lineno + 1
+            );
+            let r = v
+                .req("r")?
+                .as_f64()
+                .ok_or_else(|| anyhow::anyhow!("experience line {}: bad reward", lineno + 1))?
+                as f32;
+            let done = v.get("done").and_then(Value::as_bool).unwrap_or(false);
+            rb.push(&s, &a, r, &s2, done);
+        }
+        buf.ok_or_else(|| anyhow::anyhow!("experience document has no meta line"))
+    }
+
     /// Uniformly sample `batch` transitions (with replacement).
     pub fn sample(&self, batch: usize, rng: &mut Pcg64) -> Batch {
         assert!(self.len > 0, "sampling from empty replay buffer");
@@ -166,6 +227,32 @@ mod tests {
                 }
             }
         });
+    }
+
+    #[test]
+    fn experience_jsonl_loads_and_rejects_mismatches() {
+        let doc = concat!(
+            "{\"schema\":\"eat-experience-v1\",\"state_dim\":2,\"action_dim\":1,\"tuples\":2}\n",
+            "{\"s\":[0.25,0.5],\"a\":[-1],\"r\":0.75,\"s2\":[0.5,1],\"done\":false}\n",
+            "{\"s\":[0.5,1],\"a\":[1],\"r\":-0.1,\"s2\":[0.5,1],\"done\":true}\n",
+        );
+        let rb = ReplayBuffer::from_experience_jsonl(doc, 8).unwrap();
+        assert_eq!(rb.len(), 2);
+        let b = rb.sample(4, &mut Pcg64::seeded(7));
+        assert_eq!(b.s.len(), 8);
+        assert_eq!(b.a.len(), 4);
+        // A tuple whose dims disagree with the meta line is an error, not
+        // a silent truncation; so is a missing meta line.
+        let bad = concat!(
+            "{\"schema\":\"eat-experience-v1\",\"state_dim\":2,\"action_dim\":1,\"tuples\":1}\n",
+            "{\"s\":[0.25],\"a\":[-1],\"r\":0.75,\"s2\":[0.5,1],\"done\":false}\n",
+        );
+        assert!(ReplayBuffer::from_experience_jsonl(bad, 8).is_err());
+        assert!(ReplayBuffer::from_experience_jsonl(
+            "{\"s\":[0.25],\"a\":[-1],\"r\":0.75,\"s2\":[0.5],\"done\":false}\n",
+            8
+        )
+        .is_err());
     }
 
     #[test]

@@ -9,6 +9,10 @@
 
 use crate::config::EnvConfig;
 use crate::faults::{FaultEvent, FaultKind, FaultModel, FaultsConfig};
+use crate::obs::decisions::{
+    Candidate, DecisionLedger, DecisionRecord, DecisionRecorder, Outcome as DecisionOutcome,
+    OutcomeStatus,
+};
 use crate::obs::timeseries::{FleetGauges, FleetSampler, FleetSeries, TenantCum};
 use crate::obs::trace::{DropReason, GangRef, SpanKind, TraceRecorder};
 use crate::qos::{AdmissionConfig, AdmissionState, PendingQueue, QueueDiscipline, TenantRegistry};
@@ -298,6 +302,13 @@ pub struct EdgeEnv {
     /// never draws from an RNG stream, so episodes are bit-identical with
     /// sampling on or off (pinned by property tests).
     sampler: Option<FleetSampler>,
+    /// Optional per-decision ledger recorder (`obs::decisions`). Off by
+    /// default; it captures the observed state, the feasible candidate
+    /// set (deterministic `predict_*` estimates — never a sample), and
+    /// joins realized outcomes by task id. Like the other observers it
+    /// never draws from an RNG stream, so episodes are bit-identical
+    /// with recording on or off (pinned by property tests).
+    decisions: Option<DecisionRecorder>,
 }
 
 impl EdgeEnv {
@@ -405,6 +416,7 @@ impl EdgeEnv {
             trace: Vec::new(),
             tracer: None,
             sampler: None,
+            decisions: None,
         };
         env.absorb_arrivals();
         env
@@ -466,6 +478,24 @@ impl EdgeEnv {
     /// The fleet sampler's series so far, if sampling is enabled.
     pub fn series(&self) -> Option<&FleetSeries> {
         self.sampler.as_ref().map(FleetSampler::series)
+    }
+
+    /// Turn on per-decision ledger recording with a ring capacity of
+    /// `cap` records, labelled with the dispatching `policy` name.
+    pub fn enable_decisions(&mut self, policy: &str, cap: usize) {
+        self.decisions = Some(DecisionRecorder::new(policy, cap));
+    }
+
+    /// The decision recorder, if recording is enabled.
+    pub fn decisions(&self) -> Option<&DecisionRecorder> {
+        self.decisions.as_ref()
+    }
+
+    /// Detach the decision ledger (e.g. to export JSONL after a run).
+    /// Decisions whose tasks are still in flight keep `outcome: None`
+    /// and are reported by the analyzer as in-flight, not lost.
+    pub fn take_decisions(&mut self) -> Option<DecisionLedger> {
+        self.decisions.take().map(DecisionRecorder::into_ledger)
     }
 
     pub fn now(&self) -> f64 {
@@ -864,6 +894,132 @@ impl EdgeEnv {
         self.dispatch_and_record(task, index, steps, server_ids.to_vec(), reuse)
     }
 
+    /// Build the decision record for a dispatch about to happen. Pure
+    /// `&self` queries plus deterministic `predict_*` estimates — it
+    /// never touches an RNG stream — and it must run before
+    /// `Cluster::dispatch` mutates residency, like the tracer's warmth
+    /// capture.
+    fn capture_decision(
+        &self,
+        task: &Task,
+        index: usize,
+        steps: u32,
+        servers: &[usize],
+        reuse: bool,
+    ) -> DecisionRecord {
+        let pred_exec = self.exec_model.predict_exec(steps, task.patches);
+        let full_init = self.exec_model.predict_init(task.patches);
+        let mut candidates: Vec<Candidate> = Vec::new();
+        let mut chosen = None;
+        let mut chosen_sorted: Vec<usize> = servers.to_vec();
+        chosen_sorted.sort_unstable();
+        // Warm alternatives: every intact idle gang of the right shape.
+        // The scan enumeration is deterministic (gang-id order) and reads
+        // the same cluster state on both cores, so the candidate list is
+        // identical under the event and tick cores.
+        for (_gid, members) in self.cluster.idle_gangs_scan(task.model) {
+            if members.len() != task.patches {
+                continue;
+            }
+            if reuse && chosen.is_none() {
+                let mut m = members.clone();
+                m.sort_unstable();
+                if m == chosen_sorted {
+                    chosen = Some(candidates.len());
+                }
+            }
+            candidates.push(Candidate {
+                members: members.iter().map(|&m| m as u32).collect(),
+                reuse: true,
+                predicted: pred_exec,
+                cold: false,
+            });
+        }
+        if reuse && chosen.is_none() {
+            // Explicit-server reuse (`schedule_task_on`) can pick a gang
+            // the shape scan did not enumerate; record it verbatim.
+            chosen = Some(candidates.len());
+            candidates.push(Candidate {
+                members: servers.iter().map(|&m| m as u32).collect(),
+                reuse: true,
+                predicted: pred_exec,
+                cold: false,
+            });
+        }
+        if !reuse {
+            // The chosen fresh placement, with the reload it will be
+            // charged: warm members only rebuild the process group.
+            let frac = self.cfg.exec.group_rebuild_frac.clamp(0.0, 1.0);
+            let pred_init = if frac >= 1.0 {
+                full_init
+            } else {
+                let warm = servers
+                    .iter()
+                    .filter(|&&id| self.cluster.servers[id].model == Some(task.model))
+                    .count() as f64;
+                full_init * (1.0 - warm / servers.len() as f64 * (1.0 - frac))
+            };
+            chosen = Some(candidates.len());
+            candidates.push(Candidate {
+                members: servers.iter().map(|&m| m as u32).collect(),
+                reuse: false,
+                predicted: pred_exec + pred_init,
+                cold: true,
+            });
+        } else {
+            // Hypothetical fresh alternative, costed at a full reload (a
+            // conservative bound: the group-rebuild discount depends on
+            // which servers the selector would have picked).
+            let healthy = matches!(&self.faults, Some(fs) if fs.cfg.health_aware);
+            let idle = self
+                .cluster
+                .servers
+                .iter()
+                .filter(|s| s.is_idle() && (!healthy || s.up))
+                .count();
+            if idle >= task.patches {
+                candidates.push(Candidate {
+                    members: Vec::new(),
+                    reuse: false,
+                    predicted: pred_exec + full_init,
+                    cold: true,
+                });
+            }
+        }
+        let attempt = self
+            .faults
+            .as_ref()
+            .and_then(|fs| fs.attempts.get(&task.id).copied())
+            .unwrap_or(0);
+        // Eq. 8 action layout, synthesized one-hot for the heuristic
+        // dispatch paths (the RL path drives the same slot/steps choice).
+        let mut action = Vec::with_capacity(2 + self.cfg.queue_window);
+        action.push(-1.0f32);
+        action.push(crate::policy::steps_to_raw(steps, self.cfg.s_min, self.cfg.s_max));
+        for j in 0..self.cfg.queue_window {
+            action.push(if j == index { 1.0 } else { 0.0 });
+        }
+        DecisionRecord {
+            seq: 0,                // stamped by the recorder
+            episode: 0,            // stamped by the sweep driver
+            t: self.now,
+            policy: String::new(), // stamped by the recorder
+            task: task.id,
+            tenant: task.tenant,
+            attempt,
+            slot: index,
+            steps,
+            waiting: (self.now - task.arrival).max(0.0),
+            deadline: task.deadline,
+            state: self.state(),
+            action,
+            candidates,
+            chosen: chosen.expect("dispatch decision always has its chosen candidate"),
+            reward: 0.0,           // filled once the Scheduled is built
+            outcome: None,
+        }
+    }
+
     fn dispatch_and_record(
         &mut self,
         task: Task,
@@ -915,6 +1071,14 @@ impl EdgeEnv {
                 sampler.record_model_loads(cold_members);
             }
         }
+        // Decision capture reads residency and enumerates candidates, so
+        // like the two observers above it must run before `dispatch`
+        // mutates the cluster. It draws no RNG: recording on/off is
+        // bit-identical (pinned by property test).
+        let decision = self
+            .decisions
+            .as_ref()
+            .map(|_| self.capture_decision(&task, index, steps, &servers, reuse));
         let gang = self.cluster.dispatch(&servers, duration, task.model, reuse, self.now);
         self.queue.remove(index);
         let waiting = (self.now - task.arrival).max(0.0);
@@ -937,6 +1101,17 @@ impl EdgeEnv {
             tenant: task.tenant,
             deadline_met,
         };
+        // The recorded reward is exactly what `step` reports for this
+        // dispatch (`reward_for` is a pure read of post-removal queue
+        // state), so exported experience tuples match the env's own
+        // reward stream.
+        let decision_seq = decision.map(|mut d| {
+            d.reward = self.reward_for(&sch);
+            self.decisions
+                .as_mut()
+                .expect("decision captured implies recorder present")
+                .record(d)
+        });
         if let (Some(tr), Some(gref)) = (self.tracer.as_mut(), gang_ref) {
             let attempt = self
                 .faults
@@ -992,6 +1167,14 @@ impl EdgeEnv {
                 seq,
             };
             fs.inflight.push(att);
+            if let Some(dseq) = decision_seq {
+                // Under churn the outcome is unknown until the attempt
+                // completes (or exhausts retries): join later by task id.
+                self.decisions
+                    .as_mut()
+                    .expect("decision captured implies recorder present")
+                    .defer(sch.task_id, dseq);
+            }
             return Some(sch);
         }
         // Metrics.
@@ -1008,6 +1191,25 @@ impl EdgeEnv {
         }
         self.metrics.observe_task(response, waiting, !reuse);
         self.metrics.observe_tenant_task(task.tenant, response, deadline_met);
+        if let Some(dseq) = decision_seq {
+            // No faults: the completion just booked above is certain, so
+            // the realized outcome joins immediately.
+            self.decisions
+                .as_mut()
+                .expect("decision captured implies recorder present")
+                .resolve_now(
+                    dseq,
+                    DecisionOutcome {
+                        status: OutcomeStatus::Completed,
+                        response,
+                        duration,
+                        quality,
+                        deadline_met,
+                        cold: !reuse,
+                        spec_win: false,
+                    },
+                );
+        }
         if let Some(tr) = self.tracer.as_mut() {
             // Completion is certain (no faults): book it at its future
             // instant now. `response = waiting + duration` with `waiting =
@@ -1137,6 +1339,23 @@ impl EdgeEnv {
                             tid,
                             att.task.tenant,
                             SpanKind::Dropped { reason: DropReason::RetriesExhausted },
+                        );
+                    }
+                    if let Some(rec) = self.decisions.as_mut() {
+                        // A dropped task still closes its decisions — no
+                        // silent joins. Response covers the whole doomed
+                        // residence; there is no useful exec duration.
+                        rec.resolve_task(
+                            tid,
+                            DecisionOutcome {
+                                status: OutcomeStatus::Dropped,
+                                response: (now - att.task.arrival).max(0.0),
+                                duration: 0.0,
+                                quality: 0.0,
+                                deadline_met: att.task.deadline.map(|_| false),
+                                cold: !att.reuse,
+                                spec_win: false,
+                            },
                         );
                     }
                 } else {
@@ -1319,6 +1538,24 @@ impl EdgeEnv {
                 att.task.id,
                 att.task.tenant,
                 SpanKind::Completed { response, start: att.start, speculative: att.speculative },
+            );
+        }
+        if let Some(rec) = self.decisions.as_mut() {
+            // Joins every deferred decision for this task id: a retried
+            // task's earlier dispatch decisions share the final outcome,
+            // which is exactly what the regret analysis wants (the retry
+            // cost is part of what the original choice realized).
+            rec.resolve_task(
+                att.task.id,
+                DecisionOutcome {
+                    status: OutcomeStatus::Completed,
+                    response,
+                    duration: now - att.start,
+                    quality,
+                    deadline_met,
+                    cold: !att.reuse,
+                    spec_win: att.speculative,
+                },
             );
         }
         self.trace.push(sch);
@@ -2592,6 +2829,149 @@ mod tests {
         // JSONL round trip preserves the books bit-exactly.
         let reparsed = crate::obs::trace::parse_jsonl(&tr.to_jsonl()).unwrap();
         analyze(&reparsed).check_books().unwrap();
+    }
+
+    // --- decision ledger: determinism, joins, regret, shard merge ---
+
+    fn decisions_head_first(mut e: EdgeEnv, legacy: bool) -> DecisionLedger {
+        e.enable_decisions("head-first", DecisionLedger::default_capacity());
+        e.set_legacy_scan(legacy);
+        let l = e.cfg.queue_window;
+        let s_max = e.cfg.s_max;
+        for _ in 0..=e.cfg.step_limit {
+            while let Some(idx) = e.first_feasible() {
+                if e.schedule_task_at(idx, s_max).is_none() {
+                    break;
+                }
+            }
+            if e.step(&Action::noop(l)).done {
+                break;
+            }
+        }
+        e.take_decisions().unwrap()
+    }
+
+    #[test]
+    fn decision_recording_on_or_off_is_bit_identical() {
+        // The recorder draws from no RNG stream and reads cluster state
+        // before `dispatch` mutates it: episodes must not move by a bit
+        // when recording is enabled — plain, under churn, and with
+        // tenants, on both cores.
+        for legacy in [false, true] {
+            let cases = [
+                (ExperimentConfig::preset_8node(0.1).env, 71_u64),
+                (churn_cfg(), 72),
+                (tenant_cfg(0.3), 73),
+            ];
+            for (cfg, seed) in cases {
+                let plain = run_head_first(EdgeEnv::new(cfg.clone(), seed), legacy);
+                let mut e = EdgeEnv::new(cfg, seed);
+                e.enable_decisions("head-first", 1 << 14);
+                let recorded = run_head_first(e, legacy);
+                assert_reports_bit_identical(&plain, &recorded);
+            }
+        }
+    }
+
+    #[test]
+    fn both_cores_record_identical_decision_ledgers() {
+        // Candidate enumeration uses the deterministic gang-id scan, so
+        // the ledger (state, candidates, outcomes) is part of the
+        // core-agnosticism contract: byte-identical JSONL.
+        for (cfg, seed) in [(ExperimentConfig::preset_8node(0.1).env, 84_u64), (churn_cfg(), 85)] {
+            let tick = decisions_head_first(EdgeEnv::new(cfg.clone(), seed), true).to_jsonl();
+            let event = decisions_head_first(EdgeEnv::new(cfg.clone(), seed), false).to_jsonl();
+            assert!(tick.lines().count() > 1, "no decisions recorded:\n{tick}");
+            assert_eq!(tick, event, "decision ledgers diverge between cores");
+        }
+    }
+
+    #[test]
+    fn fault_episode_decisions_join_and_regret_books_balance() {
+        // End-to-end over a churn episode (kills, retries, speculative
+        // races, drops): every decision joins to a realized outcome or is
+        // reported in-flight, regret is non-negative with the oracle
+        // bounded by the realized response, and the experience export
+        // round-trips into the replay buffer at the env's own dims.
+        let mut e = EdgeEnv::new(churn_cfg(), 91);
+        e.enable_decisions("head-first", 1 << 14);
+        let sdim = e.state().len();
+        let adim = 2 + e.cfg.queue_window;
+        let l = e.cfg.queue_window;
+        let s_max = e.cfg.s_max;
+        for _ in 0..=e.cfg.step_limit {
+            while let Some(idx) = e.first_feasible() {
+                if e.schedule_task_at(idx, s_max).is_none() {
+                    break;
+                }
+            }
+            if e.step(&Action::noop(l)).done {
+                break;
+            }
+        }
+        let rep = e.report();
+        let ledger = e.take_decisions().unwrap();
+        assert_eq!(ledger.evicted(), 0, "ring must be large enough for this episode");
+        assert!(
+            ledger.len() >= rep.completed_tasks,
+            "every completion implies at least one dispatch decision"
+        );
+        for r in ledger.records() {
+            assert!(!r.candidates.is_empty(), "decision {} has no candidates", r.seq);
+            assert!(r.chosen < r.candidates.len());
+            if let (Some(oracle), Some(out)) = (r.oracle_response(), r.outcome) {
+                assert!(oracle <= out.response + 1e-12, "oracle beats physics at {}", r.seq);
+                assert!(r.regret().unwrap() >= 0.0, "negative regret at {}", r.seq);
+            }
+        }
+        let a = crate::obs::decisions::analyze(&ledger);
+        a.check_books().unwrap();
+        assert_eq!(
+            a.completed + a.dropped + a.inflight,
+            ledger.len(),
+            "decisions neither joined nor reported in-flight"
+        );
+        assert!(a.dropped > 0 || rep.failed_tasks == 0, "drops must join too");
+        assert!(a.groups[0].count > 0, "aggregate regret group is empty");
+        // JSONL round trip preserves the books.
+        let reparsed = DecisionLedger::parse_jsonl(&ledger.to_jsonl()).unwrap();
+        crate::obs::decisions::analyze(&reparsed).check_books().unwrap();
+        // Offline experience: loads into the RL tier's replay buffer.
+        let text = crate::obs::decisions::export_experience(&ledger).unwrap();
+        let rb = crate::rl::replay::ReplayBuffer::from_experience_jsonl(&text, 1 << 16).unwrap();
+        assert!(!rb.is_empty(), "no experience tuples exported");
+        let b = rb.sample(4, &mut Pcg64::seeded(11));
+        assert_eq!(b.s.len(), 4 * sdim, "state dim differs from the env's");
+        assert_eq!(b.a.len(), 4 * adim, "action dim differs from the env's");
+    }
+
+    #[test]
+    fn sharded_decision_merge_is_bit_identical_across_thread_counts() {
+        // N episodes recorded under par::map_cells fan-out, merged in
+        // slot order: the pooled ledger must be byte-identical no matter
+        // how many threads ran the shards.
+        let episode = |ep: u64| {
+            let mut led = decisions_head_first(EdgeEnv::new(tenant_cfg(0.3), 100 + ep), false);
+            led.tag_episode(ep);
+            led
+        };
+        let merged_with = |threads: usize| {
+            let shards =
+                crate::util::par::map_cells((0..6u64).collect::<Vec<_>>(), threads, episode);
+            let mut pooled: Option<DecisionLedger> = None;
+            for s in &shards {
+                match pooled.as_mut() {
+                    Some(p) => p.merge(s),
+                    None => pooled = Some(s.clone()),
+                }
+            }
+            pooled.unwrap().to_jsonl()
+        };
+        let single = merged_with(1);
+        assert!(single.lines().count() > 1, "no decisions recorded");
+        for threads in [3usize, 4] {
+            assert_eq!(single, merged_with(threads), "merge diverges at {threads} threads");
+        }
     }
 
     #[test]
