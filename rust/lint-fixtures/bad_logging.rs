@@ -1,0 +1,7 @@
+// Violates `logging`: stdio macros outside obs/log.rs without a pragma.
+// A comment saying println! and a string "eprintln!(no)" must NOT flag.
+pub fn progress(done: usize, total: usize) {
+    println!("processed {done}/{total}");
+    let label = "println! in a string is fine";
+    eprintln!("{label}");
+}

@@ -1,0 +1,7 @@
+// Violates `pragma`: the suppression below carries no justification, so
+// it suppresses nothing and is itself a finding (plus the logging finding
+// it failed to suppress).
+pub fn report(total: usize) {
+    // eat-lint: allow(logging)
+    println!("total {total}");
+}

@@ -1,0 +1,4 @@
+// Violates `schema`: an eat-*-vN wire name minted outside obs/schema.rs.
+pub fn meta_line() -> String {
+    format!("{{\"schema\":\"{}\"}}", "eat-bogus-v1")
+}

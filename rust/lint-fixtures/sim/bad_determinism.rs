@@ -1,0 +1,12 @@
+// Violates `determinism`: wall clocks and randomized-iteration
+// containers in a deterministic-tier (sim/) module.
+use std::collections::HashMap;
+use std::time::Instant;
+
+pub fn step(state: &mut HashMap<u64, f64>) -> f64 {
+    let t0 = Instant::now();
+    for (_, v) in state.iter_mut() {
+        *v += 1.0;
+    }
+    t0.elapsed().as_secs_f64()
+}

@@ -1,0 +1,9 @@
+// Violates `rng`: ad-hoc stream-0 seeding in a deterministic-tier
+// module. Substreams must be derived (Pcg64::new(seed, stream) / fork)
+// so CRN-paired runs cannot collide on the same stream.
+use crate::util::rng::Pcg64;
+
+pub fn jitter(seed: u64) -> f64 {
+    let mut rng = Pcg64::seeded(seed);
+    rng.next_f64()
+}

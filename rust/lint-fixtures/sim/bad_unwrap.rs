@@ -1,0 +1,8 @@
+// Violates `unwrap`: undocumented panics on a sim/ hot path. The
+// `.lock().unwrap()` would be exempt (mutex-poisoning idiom); the plain
+// unwrap/expect are not.
+pub fn pick(xs: &[f64]) -> f64 {
+    let first = xs.first().unwrap();
+    let last = xs.last().expect("empty slice");
+    first + last
+}

@@ -1,0 +1,390 @@
+//! A minimal Rust lexer for the lint pass: just enough token structure to
+//! tell code from comments and string contents, with a line number on
+//! every token.
+//!
+//! The rules only ever need identifiers, string literal *values*, and
+//! single-character punctuation — so that is all the lexer models. What it
+//! must get exactly right is what a regex grep cannot: `println!` inside a
+//! string or comment is not a call; `"eat-trace-v1"` inside a doc comment
+//! is not a schema literal; a `//` inside a string does not open a
+//! comment; `'a` is a lifetime while `'a'` is a char literal; raw strings
+//! `r#"…"#` have no escapes; and `\` at end of line continues a string
+//! across a newline (the line counter must still advance there, or every
+//! finding after a multi-line format string drifts).
+//!
+//! Suppression pragmas live in line comments, which token streams erase —
+//! so the lexer collects them as a side channel while scanning.
+
+/// Token kind. `Str` carries the literal's raw contents (escapes kept
+/// verbatim); `Ident` the identifier text; `Punct` one character.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Tok {
+    Ident(String),
+    Str(String),
+    Punct(char),
+    Lifetime,
+    CharLit,
+    Num,
+}
+
+/// One token with the 1-based source line it starts on (for `Str`, the
+/// line it *ends* on — findings point at the close of multi-line
+/// literals, where the suppressing pragma can also live).
+#[derive(Clone, Debug)]
+pub struct Token {
+    pub tok: Tok,
+    pub line: usize,
+}
+
+/// An `// eat-lint: allow(<rule>, "<justification>")` comment.
+/// `justified` is true only when the justification string is present and
+/// non-empty — `allow(rule)` and `allow(rule, "")` both count as bare.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Pragma {
+    pub line: usize,
+    pub rule: String,
+    pub justified: bool,
+}
+
+/// Lexer output: the token stream plus the pragma side channel.
+#[derive(Debug, Default)]
+pub struct Lexed {
+    pub tokens: Vec<Token>,
+    pub pragmas: Vec<Pragma>,
+}
+
+/// Parse the first pragma in a line comment's text, if any. Mirrors the
+/// shape `eat-lint:\s*allow\(\s*rule\s*(,\s*"justification")?\s*\)`; a
+/// malformed tail (unclosed paren, unquoted justification) is no pragma
+/// at all rather than a guess.
+fn parse_pragma(comment: &[char], line: usize) -> Option<Pragma> {
+    let marker: Vec<char> = "eat-lint:".chars().collect();
+    let at = comment
+        .windows(marker.len())
+        .position(|w| w == marker.as_slice())?;
+    let mut i = at + marker.len();
+    let n = comment.len();
+    let skip_ws = |i: &mut usize| {
+        while *i < n && comment[*i].is_whitespace() {
+            *i += 1;
+        }
+    };
+    skip_ws(&mut i);
+    let allow: Vec<char> = "allow(".chars().collect();
+    if n - i < allow.len() || comment[i..i + allow.len()] != allow[..] {
+        return None;
+    }
+    i += allow.len();
+    skip_ws(&mut i);
+    let start = i;
+    while i < n && (comment[i].is_ascii_lowercase() || comment[i] == '-') {
+        i += 1;
+    }
+    if i == start {
+        return None;
+    }
+    let rule: String = comment[start..i].iter().collect();
+    skip_ws(&mut i);
+    if i < n && comment[i] == ')' {
+        return Some(Pragma { line, rule, justified: false });
+    }
+    if i >= n || comment[i] != ',' {
+        return None;
+    }
+    i += 1;
+    skip_ws(&mut i);
+    if i >= n || comment[i] != '"' {
+        return None;
+    }
+    i += 1;
+    let jstart = i;
+    while i < n && comment[i] != '"' {
+        i += 1;
+    }
+    if i >= n {
+        return None;
+    }
+    let justified = i > jstart;
+    i += 1;
+    skip_ws(&mut i);
+    if i < n && comment[i] == ')' {
+        Some(Pragma { line, rule, justified })
+    } else {
+        None
+    }
+}
+
+/// Lex one source file. Never fails: unterminated constructs simply end
+/// at EOF (the lint pass runs on code that may not compile yet).
+pub fn lex(src: &str) -> Lexed {
+    let s: Vec<char> = src.chars().collect();
+    let n = s.len();
+    let mut out = Lexed::default();
+    let mut i = 0usize;
+    let mut line = 1usize;
+    while i < n {
+        let c = s[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        // Line comment (also covers `///` and `//!` docs): scan to EOL,
+        // harvesting a pragma if one is present.
+        if c == '/' && i + 1 < n && s[i + 1] == '/' {
+            let mut j = i;
+            while j < n && s[j] != '\n' {
+                j += 1;
+            }
+            if let Some(p) = parse_pragma(&s[i..j], line) {
+                out.pragmas.push(p);
+            }
+            i = j;
+            continue;
+        }
+        // Block comment, nested per Rust rules.
+        if c == '/' && i + 1 < n && s[i + 1] == '*' {
+            let mut depth = 1usize;
+            i += 2;
+            while i < n && depth > 0 {
+                if s[i] == '/' && i + 1 < n && s[i + 1] == '*' {
+                    depth += 1;
+                    i += 2;
+                } else if s[i] == '*' && i + 1 < n && s[i + 1] == '/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    if s[i] == '\n' {
+                        line += 1;
+                    }
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // Raw (byte) string: b?r#*" … "#* — no escapes inside.
+        if c == 'r' || (c == 'b' && i + 1 < n && s[i + 1] == 'r') {
+            let mut j = i + if c == 'b' { 2 } else { 1 };
+            let mut hashes = 0usize;
+            while j < n && s[j] == '#' {
+                hashes += 1;
+                j += 1;
+            }
+            if j < n && s[j] == '"' {
+                j += 1;
+                let start = j;
+                // Find the closing `"` followed by the same hash count.
+                let end = loop {
+                    if j >= n {
+                        break n;
+                    }
+                    if s[j] == '"' && (0..hashes).all(|k| j + 1 + k < n && s[j + 1 + k] == '#') {
+                        break j;
+                    }
+                    j += 1;
+                };
+                let val: String = s[start..end].iter().collect();
+                line += val.matches('\n').count();
+                out.tokens.push(Token { tok: Tok::Str(val), line });
+                i = (end + 1 + hashes).min(n);
+                continue;
+            }
+            // Not a raw string ("r" / "br" was an identifier prefix);
+            // fall through to identifier lexing below.
+        }
+        // Normal or byte string with escapes.
+        if c == '"' || (c == 'b' && i + 1 < n && s[i + 1] == '"') {
+            if c == 'b' {
+                i += 1;
+            }
+            let mut j = i + 1;
+            let mut buf = String::new();
+            while j < n && s[j] != '"' {
+                if s[j] == '\\' {
+                    // A backslash-newline continuation still crosses a
+                    // physical line: count it or every later finding in
+                    // the file points one line short.
+                    if j + 1 < n && s[j + 1] == '\n' {
+                        line += 1;
+                    }
+                    buf.push(s[j]);
+                    if j + 1 < n {
+                        buf.push(s[j + 1]);
+                    }
+                    j += 2;
+                } else {
+                    if s[j] == '\n' {
+                        line += 1;
+                    }
+                    buf.push(s[j]);
+                    j += 1;
+                }
+            }
+            out.tokens.push(Token { tok: Tok::Str(buf), line });
+            i = j + 1;
+            continue;
+        }
+        // Char literal vs lifetime.
+        if c == '\'' {
+            if i + 1 < n && s[i + 1] == '\\' {
+                let mut j = i + 2;
+                while j < n && s[j] != '\'' {
+                    j += 1;
+                }
+                out.tokens.push(Token { tok: Tok::CharLit, line });
+                i = j + 1;
+                continue;
+            }
+            if i + 2 < n && s[i + 2] == '\'' {
+                out.tokens.push(Token { tok: Tok::CharLit, line });
+                i += 3;
+                continue;
+            }
+            let mut j = i + 1;
+            while j < n && (s[j].is_alphanumeric() || s[j] == '_') {
+                j += 1;
+            }
+            out.tokens.push(Token { tok: Tok::Lifetime, line });
+            i = j;
+            continue;
+        }
+        if c.is_alphabetic() || c == '_' {
+            let mut j = i;
+            while j < n && (s[j].is_alphanumeric() || s[j] == '_') {
+                j += 1;
+            }
+            let name: String = s[i..j].iter().collect();
+            out.tokens.push(Token { tok: Tok::Ident(name), line });
+            i = j;
+            continue;
+        }
+        if c.is_ascii_digit() {
+            let mut j = i;
+            while j < n && (s[j].is_alphanumeric() || s[j] == '.' || s[j] == '_') {
+                j += 1;
+            }
+            out.tokens.push(Token { tok: Tok::Num, line });
+            i = j;
+            continue;
+        }
+        if !c.is_whitespace() {
+            out.tokens.push(Token { tok: Tok::Punct(c), line });
+        }
+        i += 1;
+    }
+    out
+}
+
+impl Lexed {
+    /// Identifier text at `idx`, if that token is an identifier.
+    pub fn ident(&self, idx: usize) -> Option<&str> {
+        match &self.tokens.get(idx)?.tok {
+            Tok::Ident(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// True when token `idx` is the punctuation character `ch`.
+    pub fn punct(&self, idx: usize) -> Option<char> {
+        match self.tokens.get(idx)?.tok {
+            Tok::Punct(c) => Some(c),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        lex(src)
+            .tokens
+            .into_iter()
+            .filter_map(|t| match t.tok {
+                Tok::Ident(s) => Some(s),
+                _ => None,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn tokens_inside_strings_and_comments_are_not_code() {
+        let src = r##"
+            // println!("HashMap") and Instant::now() in a comment
+            /* eprintln! in /* a nested */ block comment */
+            let a = "println! HashMap Instant";
+            let b = r#"thread_rng() in a raw string"#;
+            let c = b"HashSet in a byte string";
+            call(a);
+        "##;
+        let ids = idents(src);
+        for banned in ["println", "eprintln", "HashMap", "HashSet", "Instant", "thread_rng"] {
+            assert!(!ids.iter().any(|s| s == banned), "{banned} leaked out of a literal");
+        }
+        assert!(ids.iter().any(|s| s == "call"));
+    }
+
+    #[test]
+    fn string_values_are_captured_verbatim() {
+        let lexed = lex("let s = \"eat-trace-v1\";");
+        let strs: Vec<_> = lexed
+            .tokens
+            .iter()
+            .filter_map(|t| match &t.tok {
+                Tok::Str(s) => Some(s.as_str()),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(strs, ["eat-trace-v1"]);
+    }
+
+    #[test]
+    fn lifetimes_are_not_char_literals() {
+        let lexed = lex("fn f<'a>(x: &'a str) -> char { 'x' }");
+        let lifetimes = lexed.tokens.iter().filter(|t| t.tok == Tok::Lifetime).count();
+        let chars = lexed.tokens.iter().filter(|t| t.tok == Tok::CharLit).count();
+        assert_eq!((lifetimes, chars), (2, 1));
+    }
+
+    #[test]
+    fn backslash_newline_continuation_still_counts_the_line() {
+        // The continuation inside the string spans two physical lines;
+        // `after` must land on line 3, not 2.
+        let src = "let s = \"a\\\nb\";\nlet after = 1;\n";
+        let lexed = lex(src);
+        let after = lexed
+            .tokens
+            .iter()
+            .find(|t| matches!(&t.tok, Tok::Ident(s) if s == "after"))
+            .expect("ident after");
+        assert_eq!(after.line, 3);
+    }
+
+    #[test]
+    fn pragma_parsing_requires_wellformed_tail() {
+        let ok = lex("// eat-lint: allow(logging, \"table output\")\n");
+        assert_eq!(
+            ok.pragmas,
+            vec![Pragma { line: 1, rule: "logging".into(), justified: true }]
+        );
+        let bare = lex("// eat-lint: allow(logging)\n");
+        assert!(!bare.pragmas[0].justified);
+        let empty = lex("// eat-lint: allow(logging, \"\")\n");
+        assert!(!empty.pragmas[0].justified);
+        let malformed = lex("// eat-lint: allow(logging, unquoted)\n");
+        assert!(malformed.pragmas.is_empty());
+    }
+
+    #[test]
+    fn multiline_raw_string_advances_lines() {
+        let src = "let s = r#\"line1\nline2\"#;\nlet tail = 0;\n";
+        let lexed = lex(src);
+        let tail = lexed
+            .tokens
+            .iter()
+            .find(|t| matches!(&t.tok, Tok::Ident(s) if s == "tail"))
+            .expect("ident tail");
+        assert_eq!(tail.line, 3);
+    }
+}

@@ -1,0 +1,306 @@
+//! `eat lint` — a dependency-free, repo-specific static-analysis pass.
+//!
+//! Every headline property of this reproduction (bit-identical event/tick
+//! cores, CRN-paired fault timelines, byte-identical shard merges,
+//! recording-on/off-invariant ledgers) is a *determinism* invariant that
+//! property tests can only check after the fact. This pass rejects the
+//! classes of code that break them, at CI time:
+//!
+//! | rule          | what it rejects                                              |
+//! |---------------|--------------------------------------------------------------|
+//! | `determinism` | `Instant`/`SystemTime`/`thread_rng`/`HashMap`/`HashSet` in deterministic-tier dirs |
+//! | `logging`     | `println!`/`eprintln!` outside `obs/log.rs`                  |
+//! | `schema`      | `eat-*-vN` string literals outside `obs/schema.rs`           |
+//! | `unwrap`      | `.unwrap()`/`.expect()` in `sim/`/`serving/` (`.lock().unwrap()` exempt) |
+//! | `rng`         | `Pcg64::seeded` (ad-hoc stream 0) in deterministic-tier dirs |
+//!
+//! Any site can be sanctioned with an inline pragma **that must carry a
+//! justification**:
+//!
+//! ```text
+//! // eat-lint: allow(logging, "table output is the command's stdout contract")
+//! println!("{table}");
+//! ```
+//!
+//! A bare `allow(rule)` suppresses nothing and is itself a finding
+//! (`pragma`), so exemptions stay documented. The pass is a hand-rolled
+//! lexer ([`lexer`]) plus a token-level rule engine ([`rules`]) — no new
+//! dependencies, no proc macros, no syn.
+
+pub mod lexer;
+pub mod rules;
+
+use crate::obs::schema;
+use crate::util::json::Value;
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+/// The lint rules. `Pragma` is the meta-rule for malformed suppression
+/// comments; it cannot itself be suppressed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Rule {
+    Determinism,
+    Logging,
+    Schema,
+    Unwrap,
+    Rng,
+    Pragma,
+}
+
+impl Rule {
+    pub fn name(self) -> &'static str {
+        match self {
+            Rule::Determinism => "determinism",
+            Rule::Logging => "logging",
+            Rule::Schema => "schema",
+            Rule::Unwrap => "unwrap",
+            Rule::Rng => "rng",
+            Rule::Pragma => "pragma",
+        }
+    }
+
+    /// Parse a rule name as written in a pragma.
+    pub fn parse(name: &str) -> Option<Rule> {
+        match name {
+            "determinism" => Some(Rule::Determinism),
+            "logging" => Some(Rule::Logging),
+            "schema" => Some(Rule::Schema),
+            "unwrap" => Some(Rule::Unwrap),
+            "rng" => Some(Rule::Rng),
+            "pragma" => Some(Rule::Pragma),
+            _ => None,
+        }
+    }
+
+    /// One-line remediation hint (`--fix-suggestions`).
+    pub fn suggestion(self) -> &'static str {
+        match self {
+            Rule::Determinism => {
+                "use BTreeMap/BTreeSet and the simulated clock; wall-time telemetry needs \
+                 `// eat-lint: allow(determinism, \"why\")`"
+            }
+            Rule::Logging => {
+                "route progress output through log_info!/log_warn! (obs/log.rs); only \
+                 machine-readable stdout may carry a logging pragma"
+            }
+            Rule::Schema => "register the name as a constant in obs/schema.rs and reference it",
+            Rule::Unwrap => {
+                "handle the None/Err case, or state the invariant: \
+                 `// eat-lint: allow(unwrap, \"why this cannot fail\")`"
+            }
+            Rule::Rng => {
+                "derive a dedicated stream with Pcg64::new(seed, stream) or rng.fork(stream) \
+                 so substreams cannot collide"
+            }
+            Rule::Pragma => "add the justification: `// eat-lint: allow(<rule>, \"why\")`",
+        }
+    }
+}
+
+impl fmt::Display for Rule {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// One violation: where, which rule, and what was found.
+#[derive(Clone, Debug)]
+pub struct Finding {
+    /// Path as reported (scan-root-relative label joined to the root).
+    pub file: String,
+    /// 1-based source line.
+    pub line: usize,
+    pub rule: Rule,
+    pub message: String,
+}
+
+/// Result of linting a path set.
+#[derive(Debug, Default)]
+pub struct LintReport {
+    pub files_scanned: usize,
+    pub findings: Vec<Finding>,
+}
+
+impl LintReport {
+    pub fn is_clean(&self) -> bool {
+        self.findings.is_empty()
+    }
+
+    /// Human-readable report: one `file:line: [rule] message` per finding
+    /// plus a summary line.
+    pub fn render(&self, fix_suggestions: bool) -> String {
+        let mut out = String::new();
+        for f in &self.findings {
+            out.push_str(&format!("{}:{}: [{}] {}\n", f.file, f.line, f.rule, f.message));
+            if fix_suggestions {
+                out.push_str(&format!("    fix: {}\n", f.rule.suggestion()));
+            }
+        }
+        out.push_str(&format!(
+            "eat lint: {} finding(s) over {} file(s)",
+            self.findings.len(),
+            self.files_scanned
+        ));
+        out
+    }
+
+    /// Machine-readable document (`eat-lint-v1`).
+    pub fn to_json(&self, fix_suggestions: bool) -> Value {
+        let mut doc = Value::obj();
+        doc.set("schema", schema::LINT)
+            .set("files_scanned", self.files_scanned)
+            .set("clean", self.is_clean());
+        let findings: Vec<Value> = self
+            .findings
+            .iter()
+            .map(|f| {
+                let mut v = Value::obj();
+                v.set("file", f.file.as_str())
+                    .set("line", f.line)
+                    .set("rule", f.rule.name())
+                    .set("message", f.message.as_str());
+                if fix_suggestions {
+                    v.set("suggestion", f.rule.suggestion());
+                }
+                v
+            })
+            .collect();
+        doc.set("findings", findings);
+        doc
+    }
+}
+
+/// Lint a single source text under a path label (relative to a notional
+/// scan root — `sim/env.rs` is deterministic-tier, `bad.rs` is not).
+/// This is the seam the fixture tests drive directly.
+pub fn lint_source(label: &str, src: &str) -> Vec<Finding> {
+    rules::check(label, &lexer::lex(src))
+}
+
+/// Lint every `.rs` file under each path (file or directory), in a
+/// deterministic order. Tier classification uses the path *relative to
+/// the scanned root*, so `eat lint rust/src` and
+/// `cd rust/src && eat lint .` classify identically.
+pub fn lint_paths<P: AsRef<Path>>(paths: &[P]) -> anyhow::Result<LintReport> {
+    let mut report = LintReport::default();
+    for root in paths {
+        let root = root.as_ref();
+        let mut files: Vec<(String, PathBuf)> = Vec::new();
+        if root.is_file() {
+            let label = root
+                .file_name()
+                .map(|f| f.to_string_lossy().into_owned())
+                .unwrap_or_else(|| root.display().to_string());
+            files.push((label, root.to_path_buf()));
+        } else if root.is_dir() {
+            walk(root, root, &mut files)?;
+        } else {
+            anyhow::bail!("lint path {} does not exist", root.display());
+        }
+        files.sort();
+        for (label, path) in files {
+            let src = std::fs::read_to_string(&path)
+                .map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+            report.files_scanned += 1;
+            for mut f in rules::check(&label, &lexer::lex(&src)) {
+                // Report the on-disk path, not the root-relative label.
+                f.file = path.display().to_string();
+                report.findings.push(f);
+            }
+        }
+    }
+    report.findings.sort_by(|a, b| (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule)));
+    Ok(report)
+}
+
+/// Collect `.rs` files under `dir` as (root-relative label, full path).
+fn walk(root: &Path, dir: &Path, out: &mut Vec<(String, PathBuf)>) -> anyhow::Result<()> {
+    let mut entries: Vec<PathBuf> = std::fs::read_dir(dir)
+        .map_err(|e| anyhow::anyhow!("{}: {e}", dir.display()))?
+        .map(|e| e.map(|e| e.path()))
+        .collect::<Result<_, _>>()?;
+    entries.sort();
+    for path in entries {
+        if path.is_dir() {
+            walk(root, &path, out)?;
+        } else if path.extension().is_some_and(|x| x == "rs") {
+            let label = path
+                .strip_prefix(root)
+                .unwrap_or(&path)
+                .to_string_lossy()
+                .into_owned();
+            out.push((label, path));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn repo_root() -> PathBuf {
+        // CARGO_MANIFEST_DIR is the workspace root (Cargo.toml lives
+        // there; sources under rust/src via explicit [lib] path).
+        PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+    }
+
+    #[test]
+    fn repo_is_clean() {
+        let report = lint_paths(&[repo_root().join("rust/src")]).expect("lint run");
+        assert!(report.files_scanned > 50, "scanned {} files", report.files_scanned);
+        assert!(
+            report.is_clean(),
+            "the tree must lint clean:\n{}",
+            report.render(false)
+        );
+    }
+
+    #[test]
+    fn each_bad_fixture_flags_its_rule() {
+        // Lint the fixture corpus under its own root so the sim/ tier
+        // fixtures classify as deterministic-tier/hot-path code.
+        let report = lint_paths(&[repo_root().join("rust/lint-fixtures")]).expect("lint run");
+        for (rel, rule) in [
+            ("sim/bad_determinism.rs", Rule::Determinism),
+            ("sim/bad_rng.rs", Rule::Rng),
+            ("sim/bad_unwrap.rs", Rule::Unwrap),
+            ("bad_logging.rs", Rule::Logging),
+            ("bad_schema.rs", Rule::Schema),
+            ("bad_pragma.rs", Rule::Pragma),
+        ] {
+            assert!(
+                report.findings.iter().any(|f| f.rule == rule && f.file.ends_with(rel)),
+                "{rel}: expected a {rule} finding, got {:?}",
+                report.findings
+            );
+        }
+    }
+
+    #[test]
+    fn fixture_dir_is_entirely_bad() {
+        let report = lint_paths(&[repo_root().join("rust/lint-fixtures")]).expect("lint run");
+        assert!(!report.is_clean(), "the negative-smoke corpus must keep failing");
+        assert_eq!(report.files_scanned, 6);
+    }
+
+    #[test]
+    fn json_report_shape() {
+        let report = lint_paths(&[repo_root().join("rust/lint-fixtures")]).expect("lint run");
+        let doc = report.to_json(true);
+        assert_eq!(doc.req("schema").unwrap().as_str(), Some("eat-lint-v1"));
+        assert_eq!(doc.req("clean").unwrap().as_bool(), Some(false));
+        let findings = doc.req("findings").unwrap().as_arr().unwrap();
+        assert_eq!(findings.len(), report.findings.len());
+        for f in findings {
+            for key in ["file", "line", "rule", "message", "suggestion"] {
+                assert!(f.get(key).is_some(), "finding missing {key}");
+            }
+        }
+    }
+
+    #[test]
+    fn lint_paths_rejects_missing_path() {
+        assert!(lint_paths(&[repo_root().join("no/such/dir")]).is_err());
+    }
+}

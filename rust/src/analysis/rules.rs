@@ -1,0 +1,400 @@
+//! The rule engine: path-based tier classification, `#[test]` masking,
+//! and the per-token checks behind each lint rule.
+//!
+//! Rules fire on the token stream from [`super::lexer`], never on raw
+//! text, so string and comment contents cannot trip them. Test-only code
+//! (items behind `#[test]` / `#[cfg(test, …)]`) is masked out first: test
+//! modules legitimately use wall clocks, `unwrap()`, and pinned schema
+//! literals (pinning the wire format *independently* of `obs/schema.rs`
+//! is exactly what the round-trip tests are for).
+
+use super::lexer::{Lexed, Tok};
+use super::{Finding, Rule};
+
+/// Directories whose modules must stay deterministic: no wall clocks, no
+/// randomized iteration order. Matched against any ancestor directory
+/// component of the scanned path.
+const DET_TIER: &[&str] = &["sim", "faults", "qos", "workload", "obs", "experiments", "coordinator"];
+
+/// Directories where `unwrap()`/`expect()` sit on hot paths and need a
+/// written invariant.
+const UNWRAP_TIER: &[&str] = &["sim", "serving"];
+
+/// Identifiers banned in the deterministic tier. `Instant`/`SystemTime`
+/// read the wall clock; `thread_rng` is OS-seeded; `HashMap`/`HashSet`
+/// iterate in randomized order (all three break replay and CRN pairing).
+const DET_BANNED: &[&str] = &["Instant", "SystemTime", "thread_rng", "HashMap", "HashSet"];
+
+/// Print-to-stdio macros the logging rule owns.
+const LOG_MACROS: &[&str] = &["println", "eprintln", "print", "eprint"];
+
+/// How one file is classified by the rule engine, derived from its path.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FileClass {
+    /// Under a deterministic-tier directory (`DET_TIER`).
+    pub det_tier: bool,
+    /// Under a hot-path directory (`UNWRAP_TIER`).
+    pub unwrap_tier: bool,
+    /// Is `obs/log.rs`, the one sanctioned stdio site.
+    pub log_exempt: bool,
+    /// Is `obs/schema.rs`, the one sanctioned schema-literal site.
+    pub schema_exempt: bool,
+}
+
+/// Classify a path label (e.g. `sim/env.rs`, relative to the scan root).
+pub fn classify(label: &str) -> FileClass {
+    let comps: Vec<&str> = label.split(['/', '\\']).collect();
+    let (dirs, file) = comps.split_at(comps.len().saturating_sub(1));
+    let file = file.first().copied().unwrap_or("");
+    let in_obs = dirs.contains(&"obs");
+    FileClass {
+        det_tier: dirs.iter().any(|d| DET_TIER.contains(d)),
+        unwrap_tier: dirs.iter().any(|d| UNWRAP_TIER.contains(d)),
+        log_exempt: in_obs && file == "log.rs",
+        schema_exempt: in_obs && file == "schema.rs",
+    }
+}
+
+/// True when `s` is shaped like a registered schema name:
+/// `eat-<seg>(-<seg>)*-vN` with lowercase alphanumeric segments.
+pub fn is_schema_name(s: &str) -> bool {
+    let parts: Vec<&str> = s.split('-').collect();
+    if parts.len() < 3 || parts[0] != "eat" {
+        return false;
+    }
+    let ver = parts[parts.len() - 1];
+    if ver.len() < 2 || !ver.starts_with('v') || !ver[1..].bytes().all(|b| b.is_ascii_digit()) {
+        return false;
+    }
+    parts[1..parts.len() - 1].iter().all(|seg| {
+        !seg.is_empty() && seg.bytes().all(|b| b.is_ascii_lowercase() || b.is_ascii_digit())
+    })
+}
+
+/// Mark every token that belongs to test-only code: an item introduced by
+/// a `#[test]` or `#[cfg(test…)]` attribute, through its closing `}` (or
+/// terminating `;`). Inner attributes `#![…]` never start a skip.
+pub fn test_mask(lexed: &Lexed) -> Vec<bool> {
+    let toks = &lexed.tokens;
+    let mut mask = vec![false; toks.len()];
+    let mut i = 0usize;
+    while i < toks.len() {
+        if lexed.punct(i) == Some('#') {
+            if lexed.punct(i + 1) == Some('!') {
+                // Inner attribute: consume the bracket group, no skip.
+                if lexed.punct(i + 2) == Some('[') {
+                    i = consume_brackets(lexed, i + 2) + 1;
+                    continue;
+                }
+            } else if lexed.punct(i + 1) == Some('[') {
+                let close = consume_brackets(lexed, i + 1);
+                if attr_is_test(lexed, i + 2, close) {
+                    for m in mask.iter_mut().take(close.min(toks.len() - 1) + 1).skip(i) {
+                        *m = true;
+                    }
+                    // Any further attributes on the same item are part
+                    // of it too.
+                    let mut p = close + 1;
+                    while lexed.punct(p) == Some('#') && lexed.punct(p + 1) == Some('[') {
+                        let c2 = consume_brackets(lexed, p + 1);
+                        for m in mask.iter_mut().take(c2.min(toks.len() - 1) + 1).skip(p) {
+                            *m = true;
+                        }
+                        p = c2 + 1;
+                    }
+                    // Consume the item: to a `;` at depth 0 before any
+                    // `{`, or to the matching `}` of the first `{`.
+                    let mut depth = 0usize;
+                    let mut started = false;
+                    while p < toks.len() {
+                        mask[p] = true;
+                        match lexed.punct(p) {
+                            Some(';') if depth == 0 && !started => break,
+                            Some('{') => {
+                                depth += 1;
+                                started = true;
+                            }
+                            Some('}') => {
+                                depth = depth.saturating_sub(1);
+                                if started && depth == 0 {
+                                    break;
+                                }
+                            }
+                            _ => {}
+                        }
+                        p += 1;
+                    }
+                    i = p + 1;
+                    continue;
+                }
+                i = close + 1;
+                continue;
+            }
+        }
+        i += 1;
+    }
+    mask
+}
+
+/// Index of the `]` closing the bracket group opened at `open` (which
+/// must point at a `[`); saturates at the last token on malformed input.
+fn consume_brackets(lexed: &Lexed, open: usize) -> usize {
+    let mut depth = 0usize;
+    let mut j = open;
+    while j < lexed.tokens.len() {
+        match lexed.punct(j) {
+            Some('[') => depth += 1,
+            Some(']') => {
+                depth -= 1;
+                if depth == 0 {
+                    return j;
+                }
+            }
+            _ => {}
+        }
+        j += 1;
+    }
+    lexed.tokens.len().saturating_sub(1)
+}
+
+/// Does the attribute body spanning tokens `(start..close)` mark a test?
+/// Matches `test` exactly, or anything starting `cfg(test…`. Deliberately
+/// conservative: `cfg(all(test, …))` does not mask — only a leading
+/// `test` predicate does.
+fn attr_is_test(lexed: &Lexed, start: usize, close: usize) -> bool {
+    let mut body = String::new();
+    for idx in start..close.min(lexed.tokens.len()) {
+        match &lexed.tokens[idx].tok {
+            Tok::Ident(s) => body.push_str(s),
+            Tok::Punct(c) => body.push(*c),
+            Tok::Num => body.push('0'),
+            _ => body.push('_'),
+        }
+    }
+    body == "test" || body.starts_with("cfg(test")
+}
+
+/// Run every rule over one lexed file. `label` is the path relative to
+/// the scan root (used for tier classification and reporting).
+pub fn check(label: &str, lexed: &Lexed) -> Vec<Finding> {
+    let class = classify(label);
+    let mask = test_mask(lexed);
+    let mut findings = Vec::new();
+
+    // Suppression table: (line, rule) -> justified. A bare pragma is
+    // itself a finding and suppresses nothing.
+    let mut sup: Vec<(usize, Rule, bool)> = Vec::new();
+    for p in &lexed.pragmas {
+        if let Some(rule) = Rule::parse(&p.rule) {
+            sup.push((p.line, rule, p.justified));
+            if !p.justified {
+                findings.push(Finding {
+                    file: label.to_string(),
+                    line: p.line,
+                    rule: Rule::Pragma,
+                    message: "suppression pragma without a justification string".to_string(),
+                });
+            }
+        } else {
+            findings.push(Finding {
+                file: label.to_string(),
+                line: p.line,
+                rule: Rule::Pragma,
+                message: format!("pragma names unknown rule '{}'", p.rule),
+            });
+        }
+    }
+    let suppressed = |line: usize, rule: Rule| -> bool {
+        // A justified pragma on the finding's own line wins; otherwise
+        // one on the line directly above. An unjustified pragma matches
+        // first and suppresses nothing (mirrors its own finding).
+        for probe in [line, line.wrapping_sub(1)] {
+            if let Some(&(_, _, j)) = sup.iter().find(|(l, r, _)| *l == probe && *r == rule) {
+                return j;
+            }
+        }
+        false
+    };
+    let mut emit = |findings: &mut Vec<Finding>, line: usize, rule: Rule, message: String| {
+        if !suppressed(line, rule) {
+            findings.push(Finding { file: label.to_string(), line, rule, message });
+        }
+    };
+
+    for (idx, tok) in lexed.tokens.iter().enumerate() {
+        if mask[idx] {
+            continue;
+        }
+        let line = tok.line;
+        match &tok.tok {
+            Tok::Ident(name) => {
+                if class.det_tier && DET_BANNED.contains(&name.as_str()) {
+                    emit(
+                        &mut findings,
+                        line,
+                        Rule::Determinism,
+                        format!("`{name}` in a deterministic-tier module"),
+                    );
+                }
+                if !class.log_exempt
+                    && LOG_MACROS.contains(&name.as_str())
+                    && lexed.punct(idx + 1) == Some('!')
+                {
+                    emit(
+                        &mut findings,
+                        line,
+                        Rule::Logging,
+                        format!("`{name}!` outside obs/log.rs"),
+                    );
+                }
+                if class.unwrap_tier
+                    && (name == "unwrap" || name == "expect")
+                    && lexed.punct(idx + 1) == Some('(')
+                    && idx > 0
+                    && lexed.punct(idx - 1) == Some('.')
+                {
+                    // `.lock().unwrap()` is the sanctioned mutex-poisoning
+                    // idiom (propagate a poisoned lock as a panic).
+                    let is_lock = name == "unwrap"
+                        && idx >= 4
+                        && lexed.ident(idx - 4) == Some("lock")
+                        && lexed.punct(idx - 3) == Some('(')
+                        && lexed.punct(idx - 2) == Some(')');
+                    if !is_lock {
+                        emit(
+                            &mut findings,
+                            line,
+                            Rule::Unwrap,
+                            format!("`.{name}()` on a sim/serving hot path"),
+                        );
+                    }
+                }
+                if class.det_tier
+                    && name == "seeded"
+                    && idx >= 3
+                    && lexed.punct(idx - 1) == Some(':')
+                    && lexed.punct(idx - 2) == Some(':')
+                    && lexed.ident(idx - 3) == Some("Pcg64")
+                {
+                    emit(
+                        &mut findings,
+                        line,
+                        Rule::Rng,
+                        "`Pcg64::seeded` (ad-hoc stream 0) in a deterministic-tier module"
+                            .to_string(),
+                    );
+                }
+            }
+            Tok::Str(val) => {
+                if !class.schema_exempt && is_schema_name(val) {
+                    emit(
+                        &mut findings,
+                        line,
+                        Rule::Schema,
+                        format!("schema literal \"{val}\" outside obs/schema.rs"),
+                    );
+                }
+            }
+            _ => {}
+        }
+    }
+    findings
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::lint_source;
+
+    #[test]
+    fn determinism_rule_fires_only_in_tier() {
+        let src = "use std::collections::HashMap;\nfn f() { let t = Instant::now(); }\n";
+        let in_tier = lint_source("sim/bad.rs", src);
+        assert_eq!(in_tier.len(), 2, "{in_tier:?}");
+        assert!(in_tier.iter().all(|f| f.rule == Rule::Determinism));
+        let out_of_tier = lint_source("util/ok.rs", src);
+        assert!(out_of_tier.is_empty(), "{out_of_tier:?}");
+    }
+
+    #[test]
+    fn logging_rule_exempts_obs_log() {
+        let src = "fn f() { println!(\"x\"); }\n";
+        assert_eq!(lint_source("serving/w.rs", src).len(), 1);
+        assert!(lint_source("obs/log.rs", src).is_empty());
+    }
+
+    #[test]
+    fn schema_rule_exempts_registry_and_non_schema_strings() {
+        let src = "fn f() -> &'static str { \"eat-trace-v1\" }\n";
+        let hit = lint_source("obs/trace.rs", src);
+        assert_eq!(hit.len(), 1);
+        assert_eq!(hit[0].rule, Rule::Schema);
+        assert!(lint_source("obs/schema.rs", src).is_empty());
+        for not_schema in ["eat-v1", "eat-trace", "Eat-Trace-v1", "meat-trace-v1", "eat-trace-vx"] {
+            assert!(!is_schema_name(not_schema), "{not_schema}");
+        }
+        assert!(is_schema_name("eat-bench-compare-v12"));
+    }
+
+    #[test]
+    fn unwrap_rule_requires_method_call_and_exempts_lock() {
+        let src = "fn f(o: Option<u32>) -> u32 { o.unwrap() }\n";
+        assert_eq!(lint_source("sim/x.rs", src).len(), 1);
+        // experiments/ is deterministic-tier but not a hot path.
+        assert!(lint_source("experiments/x.rs", src).is_empty());
+        let lock = "fn f(m: &std::sync::Mutex<u32>) -> u32 { *m.lock().unwrap() }\n";
+        assert!(lint_source("serving/x.rs", lock).is_empty(), "lock().unwrap() is sanctioned");
+        let lock_expect = "fn f(m: &M) -> u32 { *m.lock().expect(\"poisoned\") }\n";
+        assert_eq!(lint_source("serving/x.rs", lock_expect).len(), 1, "expect is not exempt");
+    }
+
+    #[test]
+    fn rng_rule_flags_adhoc_seeding_only() {
+        let bad = "fn f() { let r = Pcg64::seeded(42); }\n";
+        let hits = lint_source("sim/x.rs", bad);
+        assert_eq!(hits.len(), 1);
+        assert_eq!(hits[0].rule, Rule::Rng);
+        let good = "fn f() { let r = Pcg64::new(42, 7); let s = r.fork(3); }\n";
+        assert!(lint_source("sim/x.rs", good).is_empty());
+    }
+
+    #[test]
+    fn test_items_are_masked() {
+        let src = "#[cfg(test)]\nmod tests {\n    fn f() { let t = Instant::now(); x.unwrap(); }\n}\nfn live() { let h: HashMap<u32, u32> = HashMap::new(); }\n";
+        let hits = lint_source("sim/x.rs", src);
+        assert_eq!(hits.len(), 2, "only the live HashMap uses flag: {hits:?}");
+        assert!(hits.iter().all(|f| f.rule == Rule::Determinism && f.line == 5));
+    }
+
+    #[test]
+    fn pragma_round_trip() {
+        let bad = "fn f() { println!(\"x\"); }\n";
+        // Justified pragma on the previous line suppresses.
+        let ok = "fn f() {\n    // eat-lint: allow(logging, \"table output\")\n    println!(\"x\");\n}\n";
+        assert!(lint_source("qos/x.rs", ok).is_empty());
+        // Bare pragma: the original finding stays AND the pragma itself
+        // is flagged.
+        let bare = "fn f() {\n    // eat-lint: allow(logging)\n    println!(\"x\");\n}\n";
+        let hits = lint_source("qos/x.rs", bare);
+        assert_eq!(hits.len(), 2, "{hits:?}");
+        assert!(hits.iter().any(|f| f.rule == Rule::Pragma));
+        assert!(hits.iter().any(|f| f.rule == Rule::Logging));
+        // Wrong-rule pragma does not suppress.
+        let wrong = "fn f() {\n    // eat-lint: allow(unwrap, \"justified\")\n    println!(\"x\");\n}\n";
+        assert_eq!(lint_source("qos/x.rs", wrong).len(), 1);
+        assert_eq!(lint_source("qos/x.rs", bad).len(), 1);
+    }
+
+    #[test]
+    fn classify_matches_nested_paths() {
+        assert!(classify("sim/env.rs").det_tier);
+        assert!(classify("experiments/qos.rs").det_tier);
+        assert!(!classify("experiments/qos.rs").unwrap_tier);
+        assert!(classify("serving/worker.rs").unwrap_tier);
+        assert!(classify("obs/log.rs").log_exempt);
+        assert!(classify("obs/schema.rs").schema_exempt);
+        assert!(!classify("analysis/rules.rs").det_tier);
+        // The file name alone is not a directory component.
+        assert!(!classify("qos.rs").det_tier);
+    }
+}

@@ -10,6 +10,7 @@ pub use eval::{evaluate, EvalSummary};
 
 use crate::policy::Policy;
 use crate::sim::env::{EdgeEnv, EpisodeReport};
+// eat-lint: allow(determinism, "wall-clock decision-latency telemetry; never reaches episode state")
 use std::time::{Duration, Instant};
 
 /// Decision-latency statistics for one episode (Table XII).
@@ -38,6 +39,7 @@ pub fn run_episode(
 ) -> EpisodeReport {
     policy.reset(env);
     loop {
+        // eat-lint: allow(determinism, "times the policy for Table XII; result feeds telemetry only")
         let t0 = Instant::now();
         let action = match policy.decide(env) {
             Ok(a) => a,

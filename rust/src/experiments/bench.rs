@@ -19,6 +19,7 @@
 //! against a baseline file without a second invocation.
 
 use crate::config::ExperimentConfig;
+use crate::obs::schema;
 use crate::sim::env::{Action, EdgeEnv};
 use crate::util::cli::Args;
 use crate::util::json::{self, Value};
@@ -89,9 +90,11 @@ pub fn run_cell(
     env.set_legacy_scan(legacy);
     let noop = Action::noop(env.cfg.queue_window);
     let mut decision_ns: Vec<u64> = Vec::new();
+    // eat-lint: allow(determinism, "the bench harness measures wall time by design")
     let t0 = std::time::Instant::now();
     let mut ticks = 0usize;
     loop {
+        // eat-lint: allow(determinism, "the bench harness measures wall time by design")
         let d0 = std::time::Instant::now();
         while let Some(idx) = env.first_feasible() {
             if env.schedule_task_at(idx, BENCH_STEPS).is_none() {
@@ -180,7 +183,7 @@ pub fn report_json(quick: bool, seed: u64, cells: &[(usize, usize, Vec<CellResul
         grid_rows.push(row);
     }
     let mut doc = Value::obj();
-    doc.set("schema", "eat-bench-v1")
+    doc.set("schema", schema::BENCH)
         .set("bench", "sim")
         .set("quick", quick)
         .set("seed", seed)
@@ -277,8 +280,9 @@ pub fn compare_docs(old: &Value, new: &Value, min_ratio: f64) -> anyhow::Result<
     for (label, doc) in [("old", old), ("new", new)] {
         let schema = doc.get("schema").and_then(Value::as_str).unwrap_or("?");
         anyhow::ensure!(
-            schema == "eat-bench-v1",
-            "{label} document has schema {schema:?}, expected \"eat-bench-v1\""
+            schema == self::schema::BENCH,
+            "{label} document has schema {schema:?}, expected {:?}",
+            self::schema::BENCH
         );
     }
     let event_tps = |row: &Value| -> Option<f64> {
@@ -346,7 +350,7 @@ pub fn compare_docs(old: &Value, new: &Value, min_ratio: f64) -> anyhow::Result<
         "bench compare matched no grid cells (disjoint grids or schema drift)"
     );
     let mut doc = Value::obj();
-    doc.set("schema", "eat-bench-compare-v1")
+    doc.set("schema", schema::BENCH_COMPARE)
         .set("min_ratio", min_ratio)
         .set("cells", cells)
         .set("skipped", skipped)
@@ -394,6 +398,7 @@ fn run_compare(args: &Args) -> anyhow::Result<String> {
     let mut doc = compare_docs(&old, &new, min_ratio)?;
     doc.set("old", old_path.as_str()).set("new", new_path.as_str());
     let rendered = render_compare(&doc);
+    // eat-lint: allow(logging, "verdict table is the command's stdout contract")
     println!("{rendered}");
     if let Some(out_path) = args.get("out") {
         std::fs::write(out_path, format!("{}\n", doc.to_json_pretty()))?;
@@ -455,6 +460,7 @@ pub fn run(args: &Args) -> anyhow::Result<String> {
     }
     let rendered = doc.to_json_pretty();
     std::fs::write(&out_path, format!("{rendered}\n"))?;
+    // eat-lint: allow(logging, "bench results document is the command's stdout contract")
     println!("{rendered}");
     crate::log_info!("wrote {out_path}");
     Ok(rendered)

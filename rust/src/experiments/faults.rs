@@ -329,6 +329,7 @@ pub fn run(args: &Args) -> anyhow::Result<String> {
     template.seed = seed;
     template.env.tasks_per_episode = tasks;
     let tenants_base = TenantsConfig::three_tier(base_rate);
+    // eat-lint: allow(determinism, "wall-time progress telemetry; the sweep itself is CRN-seeded")
     let t_sweep = std::time::Instant::now();
     let cells = sweep_threaded(
         &template,
@@ -388,8 +389,9 @@ pub fn run(args: &Args) -> anyhow::Result<String> {
         table.row(row);
     }
     let out = table.render();
+    // eat-lint: allow(logging, "sweep table is the command's stdout contract")
     println!("{out}");
-    println!("goodput column is completed tasks per 1000 simulated seconds");
+    crate::log_info!("goodput column is completed tasks per 1000 simulated seconds");
     super::save_csv(&format!("faults_n{nodes}"), &table.to_csv())?;
     if let Some(path) = args.get("trace") {
         // Trace the first sweep cell's episode 0 — the same config the
@@ -412,11 +414,12 @@ pub fn run(args: &Args) -> anyhow::Result<String> {
         cfg.env.tenants = Some(tenants_base.clone());
         cfg.env.faults = Some(faults);
         cfg.env.validate()?;
+        // eat-lint: allow(determinism, "wall-time progress telemetry; the re-run is CRN-seeded")
         let t0 = std::time::Instant::now();
         let tr = traced_episode(&cfg, 20);
         crate::log_info!("traced re-run: {:.2}s wall", t0.elapsed().as_secs_f64());
         tr.write_jsonl(path)?;
-        println!("wrote trace {path} ({} events, {} evicted)", tr.len(), tr.evicted());
+        crate::log_info!("wrote trace {path} ({} events, {} evicted)", tr.len(), tr.evicted());
     }
     if let Some(path) = args.get("decisions") {
         // Record the first sweep cell's episodes — the same CRN-paired
@@ -438,11 +441,12 @@ pub fn run(args: &Args) -> anyhow::Result<String> {
         cfg.env.tenants = Some(tenants_base.clone());
         cfg.env.faults = Some(faults);
         cfg.env.validate()?;
+        // eat-lint: allow(determinism, "wall-time progress telemetry; the re-run is CRN-seeded")
         let t0 = std::time::Instant::now();
         let ledger = recorded_cell(&cfg, episodes, 20, threads);
         crate::log_info!("recorded re-run: {:.2}s wall", t0.elapsed().as_secs_f64());
         ledger.write_jsonl(path)?;
-        println!(
+        crate::log_info!(
             "wrote decision ledger {path} ({} decisions, {} evicted)",
             ledger.len(),
             ledger.evicted()

@@ -80,6 +80,7 @@ pub fn run(args: &Args) -> anyhow::Result<String> {
     }
     pool.shutdown();
     let out = t.render();
+    // eat-lint: allow(logging, "paper table is the command's stdout contract")
     println!("{out}");
     super::save_csv(
         "fig4_serving",

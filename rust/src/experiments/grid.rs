@@ -126,6 +126,7 @@ pub fn run(args: &Args) -> anyhow::Result<String> {
     out.push_str(&t_reload.render());
     out.push('\n');
     out.push_str(&t_eff.render());
+    // eat-lint: allow(logging, "paper tables are the command's stdout contract")
     println!("{out}");
     super::save_csv(&format!("table9_quality_n{nodes}"), &t_quality.to_csv())?;
     super::save_csv(&format!("table10_latency_n{nodes}"), &t_latency.to_csv())?;

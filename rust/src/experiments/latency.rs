@@ -48,6 +48,7 @@ pub fn run(args: &Args) -> anyhow::Result<String> {
         t.row(vec![name.clone(), format!("{secs:.2e}")]);
     }
     let out = t.render();
+    // eat-lint: allow(logging, "paper table is the command's stdout contract")
     println!("{out}");
     super::save_csv("table12_decision_latency", &t.to_csv())?;
     Ok(out)

@@ -297,6 +297,7 @@ pub fn run(args: &Args) -> anyhow::Result<String> {
         }
     }
     let out = table.render();
+    // eat-lint: allow(logging, "sweep table is the command's stdout contract")
     println!("{out}");
     super::save_csv(&format!("qos_n{nodes}"), &table.to_csv())?;
     if let Some(path) = args.get("trace") {
@@ -318,11 +319,12 @@ pub fn run(args: &Args) -> anyhow::Result<String> {
             cfg.env.tenants.as_ref().unwrap().admission.name(),
             cfg.env.tenants.as_ref().unwrap().queue.name(),
         );
+        // eat-lint: allow(determinism, "wall-time progress telemetry; the re-run is CRN-seeded")
         let t0 = std::time::Instant::now();
         let tr = traced_episode(&cfg, 20);
         crate::log_info!("traced re-run: {:.2}s wall", t0.elapsed().as_secs_f64());
         tr.write_jsonl(path)?;
-        println!("wrote trace {path} ({} events, {} evicted)", tr.len(), tr.evicted());
+        crate::log_info!("wrote trace {path} ({} events, {} evicted)", tr.len(), tr.evicted());
     }
     if let Some(path) = args.get("timeseries") {
         // Sample the first sweep cell's episodes at a fixed cadence and
@@ -347,7 +349,7 @@ pub fn run(args: &Args) -> anyhow::Result<String> {
             merged.merge(s);
         }
         merged.write_jsonl(path)?;
-        println!(
+        crate::log_info!(
             "wrote time series {path} ({} windows, cadence {cadence}s, {} episode(s) pooled)",
             merged.len(),
             shards.len()
@@ -364,11 +366,12 @@ pub fn run(args: &Args) -> anyhow::Result<String> {
         let mut cfg = template.clone();
         cfg.env.tenants = Some(tenants);
         cfg.env.validate()?;
+        // eat-lint: allow(determinism, "wall-time progress telemetry; the re-run is CRN-seeded")
         let t0 = std::time::Instant::now();
         let ledger = super::faults::recorded_cell(&cfg, episodes, 20, threads);
         crate::log_info!("recorded re-run: {:.2}s wall", t0.elapsed().as_secs_f64());
         ledger.write_jsonl(path)?;
-        println!(
+        crate::log_info!(
             "wrote decision ledger {path} ({} decisions, {} evicted, {} episode(s) pooled)",
             ledger.len(),
             ledger.evicted(),

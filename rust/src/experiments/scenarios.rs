@@ -136,6 +136,7 @@ pub fn run(args: &Args) -> anyhow::Result<String> {
             f(s.avg_quality, 3),
         ])
     }
+    // eat-lint: allow(determinism, "wall-time progress telemetry; the sweep itself is CRN-seeded")
     let t_sweep = std::time::Instant::now();
     let rows: Vec<Vec<String>> = if let Some(rt) = &rt {
         let mut rows = Vec::with_capacity(jobs.len());
@@ -165,6 +166,7 @@ pub fn run(args: &Args) -> anyhow::Result<String> {
     }
 
     let out = table.render();
+    // eat-lint: allow(logging, "sweep table is the command's stdout contract")
     println!("{out}");
     super::save_csv(&format!("scenarios_n{nodes}"), &table.to_csv())?;
     if let Some(path) = args.get("trace") {
@@ -183,6 +185,7 @@ pub fn run(args: &Args) -> anyhow::Result<String> {
             "tracing cell scenario={scenario} algorithm={} episode 0 (serial re-run)",
             cfg.algorithm.name(),
         );
+        // eat-lint: allow(determinism, "wall-time progress telemetry; the re-run is CRN-seeded")
         let t0 = std::time::Instant::now();
         let mut policy = super::trained_policy(&cfg, rt.as_ref(), train_episodes, verbose)?;
         let mut wl_rng = Pcg64::new(seed, 0xC0FFEE);
@@ -193,7 +196,7 @@ pub fn run(args: &Args) -> anyhow::Result<String> {
         let tr = env.take_tracer().expect("tracing was enabled");
         crate::log_info!("traced re-run: {:.2}s wall", t0.elapsed().as_secs_f64());
         tr.write_jsonl(path)?;
-        println!("wrote trace {path} ({} events, {} evicted)", tr.len(), tr.evicted());
+        crate::log_info!("wrote trace {path} ({} events, {} evicted)", tr.len(), tr.evicted());
     }
     if let Some(path) = args.get("decisions") {
         // Record the first (scenario × algorithm) cell's episode 0 into a
@@ -210,6 +213,7 @@ pub fn run(args: &Args) -> anyhow::Result<String> {
             "recording decisions for cell scenario={scenario} algorithm={} episode 0 (serial re-run)",
             cfg.algorithm.name(),
         );
+        // eat-lint: allow(determinism, "wall-time progress telemetry; the re-run is CRN-seeded")
         let t0 = std::time::Instant::now();
         let mut policy = super::trained_policy(&cfg, rt.as_ref(), train_episodes, verbose)?;
         let mut wl_rng = Pcg64::new(seed, 0xC0FFEE);
@@ -223,7 +227,7 @@ pub fn run(args: &Args) -> anyhow::Result<String> {
         let ledger = env.take_decisions().expect("recording was enabled");
         crate::log_info!("recorded re-run: {:.2}s wall", t0.elapsed().as_secs_f64());
         ledger.write_jsonl(path)?;
-        println!(
+        crate::log_info!(
             "wrote decision ledger {path} ({} decisions, {} evicted)",
             ledger.len(),
             ledger.evicted()
@@ -293,6 +297,7 @@ fn replay(args: &Args, path: &str) -> anyhow::Result<String> {
         ]);
     }
     let out = table.render();
+    // eat-lint: allow(logging, "replay summary table is the command's stdout contract")
     println!("{out}");
     Ok(out)
 }

@@ -92,6 +92,7 @@ pub fn run(args: &Args) -> anyhow::Result<String> {
         )?;
     }
     let out = t.render();
+    // eat-lint: allow(logging, "paper table is the command's stdout contract")
     println!("{out}");
     Ok(out)
 }

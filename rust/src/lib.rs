@@ -33,6 +33,7 @@
 //! println!("avg latency {:.1}s quality {:.3}", report.avg_response_latency, report.avg_quality);
 //! ```
 
+pub mod analysis;
 pub mod config;
 pub mod coordinator;
 pub mod experiments;

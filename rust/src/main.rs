@@ -48,6 +48,10 @@
 //!       or fleet time series; exits non-zero when a budget is exhausted
 //!   eat bench compare OLD.json NEW.json [--min-ratio 0.8]   per-cell
 //!       throughput delta verdicts between two eat-bench-v1 documents
+//!   eat lint [--json] [--fix-suggestions] [PATHS…]          repo-specific
+//!       static analysis (determinism tiers, logging discipline, schema
+//!       registry, unwrap audit, RNG hygiene); scans rust/src by default
+//!       and exits non-zero on any finding
 //!   eat info                                                print artifact
 //!       manifest summary
 
@@ -60,8 +64,9 @@ use eat::util::cli::Args;
 use eat::{log_info, log_warn};
 
 fn usage() -> ! {
+    // eat-lint: allow(logging, "usage text must reach the terminal even with --quiet")
     eprintln!(
-        "usage: eat <experiment|train|eval|serve|scenarios|qos|faults|bench|decisions|slo|info> [options]\n\
+        "usage: eat <experiment|train|eval|serve|scenarios|qos|faults|bench|decisions|slo|lint|info> [options]\n\
          \n  eat experiment <id>   ids: table1 table2_4 table6 table9 table10 table11\n\
          \x20                          table12 fig4 fig5 fig6 fig7 fig8 grid scenarios all\n\
          \x20     options: --nodes 4|8|12 --episodes K --train-episodes K --algs a,b,c\n\
@@ -107,6 +112,9 @@ fn usage() -> ! {
          \n  eat slo report <trace.jsonl|series.jsonl> [--config file.json] [--target X]\n\
          \x20     [--latency-slo S] [--window 60] [--slow-window 300] [--json]\n\
          \x20     per-tenant error budgets + burn rates; non-zero exit on exhaustion\n\
+         \n  eat lint [--json] [--fix-suggestions] [PATHS...]   static analysis; scans\n\
+         \x20     rust/src by default and exits non-zero on any finding; suppress a site\n\
+         \x20     with `// eat-lint: allow(<rule>, \"<justification>\")`\n\
          \n  eat info\n\
          \nglobal: --quiet caps progress logging at warnings; EAT_LOG=error|warn|info|debug"
     );
@@ -136,12 +144,12 @@ fn main() -> anyhow::Result<()> {
             let rt = Runtime::new(args.get("artifacts").unwrap_or("artifacts"))?;
             std::fs::create_dir_all(format!("{}/checkpoints", cfg.artifacts_dir)).ok();
             let ckpt = experiments::checkpoint_path(&cfg);
-            println!("training {} on {nodes} nodes for {episodes} episodes...", alg.name());
+            log_info!("training {} on {nodes} nodes for {episodes} episodes...", alg.name());
             let t0 = std::time::Instant::now();
             if alg == Algorithm::Ppo {
                 let mut d = PpoDriver::new(&rt, &cfg)?;
                 d.train_loop(&cfg, episodes, |p| {
-                    println!(
+                    log_info!(
                         "  ep {:>3}: reward {:>8.1} len {:>4} pi_loss {:>8.3}",
                         p.episode, p.reward, p.episode_len, p.actor_loss
                     );
@@ -150,14 +158,14 @@ fn main() -> anyhow::Result<()> {
             } else {
                 let mut d = SacDriver::new(&rt, &cfg)?;
                 d.train_loop(&cfg, episodes, |p| {
-                    println!(
+                    log_info!(
                         "  ep {:>3}: reward {:>8.1} len {:>4} critic {:>8.3} actor {:>8.3}",
                         p.episode, p.reward, p.episode_len, p.critic_loss, p.actor_loss
                     );
                 })?;
                 d.save_actor(&ckpt)?;
             }
-            println!("saved {ckpt} ({:.1}s)", t0.elapsed().as_secs_f64());
+            log_info!("saved {ckpt} ({:.1}s)", t0.elapsed().as_secs_f64());
         }
         "eval" => {
             let alg = Algorithm::parse(&args.get_or("alg", "eat"))?;
@@ -181,6 +189,7 @@ fn main() -> anyhow::Result<()> {
                 args.has_flag("verbose"),
             )?;
             let s = evaluate(&cfg, policy.as_mut(), episodes);
+            // eat-lint: allow(logging, "the eval summary is the command's stdout contract")
             println!(
                 "{}: quality {:.3}  latency {:.1}s  reload {:.3}  efficiency {:.2e}  \
                  reward {:.1}  decision {:.2e}s",
@@ -215,7 +224,7 @@ fn main() -> anyhow::Result<()> {
                     usage()
                 };
                 let n = eat::workload::import::import_file(csv, out)?;
-                println!("imported {n} tasks: {csv} -> {out}");
+                log_info!("imported {n} tasks: {csv} -> {out}");
             }
             Some("analyze") => {
                 let Some(path) = args.positional.get(2) else { usage() };
@@ -223,11 +232,14 @@ fn main() -> anyhow::Result<()> {
                     .map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
                 let analysis = eat::obs::analyze_jsonl(&text)?;
                 if args.has_flag("json") {
+                    // eat-lint: allow(logging, "machine-readable report goes to stdout")
                     println!("{}", analysis.to_json(path).to_json_pretty());
                 } else {
+                    // eat-lint: allow(logging, "analysis report is the command's stdout contract")
                     println!("{}", analysis.render(path));
                 }
                 if let Some(n) = args.get_usize_opt("top") {
+                    // eat-lint: allow(logging, "analysis report is the command's stdout contract")
                     println!("\n{}", analysis.render_top(n));
                 }
                 // Books invariant: every decomposition must sum to its
@@ -244,8 +256,10 @@ fn main() -> anyhow::Result<()> {
                 let ledger = eat::obs::DecisionLedger::parse_jsonl(&text)?;
                 let analysis = eat::obs::decisions::analyze(&ledger);
                 if args.has_flag("json") {
+                    // eat-lint: allow(logging, "machine-readable report goes to stdout")
                     println!("{}", analysis.to_json(path).to_json_pretty());
                 } else {
+                    // eat-lint: allow(logging, "regret report is the command's stdout contract")
                     println!("{}", analysis.render(path));
                 }
                 if let Some(out) = args.get("export-experience") {
@@ -257,7 +271,7 @@ fn main() -> anyhow::Result<()> {
                     }
                     std::fs::write(out, &tuples)?;
                     let n_tuples = tuples.lines().count().saturating_sub(1);
-                    println!("wrote experience export {out} ({n_tuples} tuples)");
+                    log_info!("wrote experience export {out} ({n_tuples} tuples)");
                 }
                 if let Some(other_path) = args.get("compare") {
                     let other_text = std::fs::read_to_string(other_path)
@@ -265,6 +279,7 @@ fn main() -> anyhow::Result<()> {
                     let other_ledger = eat::obs::DecisionLedger::parse_jsonl(&other_text)?;
                     let other = eat::obs::decisions::analyze(&other_ledger);
                     let (ours, theirs) = (analysis.median_regret(), other.median_regret());
+                    // eat-lint: allow(logging, "comparison verdict is the command's stdout contract")
                     println!("median regret: {path} {ours:.3} vs {other_path} {theirs:.3}");
                     anyhow::ensure!(
                         ours <= theirs + 1e-9,
@@ -281,13 +296,39 @@ fn main() -> anyhow::Result<()> {
             Some("report") => slo_report(&args)?,
             _ => usage(),
         },
+        "lint" => {
+            let paths: Vec<&str> = if args.positional.len() > 1 {
+                args.positional[1..].iter().map(String::as_str).collect()
+            } else {
+                vec!["rust/src"]
+            };
+            let suggest = args.has_flag("fix-suggestions");
+            let report = eat::analysis::lint_paths(&paths)?;
+            if args.has_flag("json") {
+                // eat-lint: allow(logging, "machine-readable report goes to stdout")
+                println!("{}", report.to_json(suggest).to_json_pretty());
+            } else {
+                // eat-lint: allow(logging, "findings report is the command's stdout contract")
+                println!("{}", report.render(suggest));
+            }
+            anyhow::ensure!(
+                report.is_clean(),
+                "eat lint: {} finding(s) — see report above",
+                report.findings.len()
+            );
+        }
         "info" => {
             let rt = Runtime::new(args.get("artifacts").unwrap_or("artifacts"))?;
+            // eat-lint: allow(logging, "manifest report is the command's stdout contract")
             println!("platform: {}", rt.platform());
+            // eat-lint: allow(logging, "manifest report is the command's stdout contract")
             println!("batch size: {}", rt.manifest.batch_size);
+            // eat-lint: allow(logging, "manifest report is the command's stdout contract")
             println!("denoise steps: {}", rt.manifest.denoise_steps);
+            // eat-lint: allow(logging, "manifest report is the command's stdout contract")
             println!("entries ({}):", rt.manifest.entries.len());
             for (k, e) in &rt.manifest.entries {
+                // eat-lint: allow(logging, "manifest report is the command's stdout contract")
                 println!("  {k}: {} inputs, {} outputs", e.inputs.len(), e.outputs.len());
             }
         }
@@ -356,7 +397,7 @@ fn slo_report(args: &Args) -> anyhow::Result<()> {
         .and_then(|l| eat::util::json::parse(l).ok())
         .and_then(|v| v.get("schema").and_then(|s| s.as_str().map(String::from)));
     let report = match schema.as_deref() {
-        Some("eat-timeseries-v1") => {
+        Some(eat::obs::schema::TIMESERIES) => {
             let series = FleetSeries::parse_jsonl(&text)?;
             report_from_series(&series, &classes, opt)
         }
@@ -372,8 +413,10 @@ fn slo_report(args: &Args) -> anyhow::Result<()> {
         }
     };
     if args.has_flag("json") {
+        // eat-lint: allow(logging, "machine-readable report goes to stdout")
         println!("{}", report.to_json(path).to_json_pretty());
     } else {
+        // eat-lint: allow(logging, "burn-rate report is the command's stdout contract")
         println!("{}", report.render(path));
     }
     report.check()
@@ -498,7 +541,7 @@ fn serve(args: &Args) -> anyhow::Result<()> {
              the revival would never run"
         );
     }
-    println!(
+    log_info!(
         "spawning {workers} socket workers (time scale {time_scale}{})...",
         if resilient { ", resilient" } else { "" }
     );
@@ -566,6 +609,7 @@ fn serve(args: &Args) -> anyhow::Result<()> {
             // still shows up on the endpoint before teardown.
             export_health(mreg, st, reg.counts());
         }
+        // eat-lint: allow(logging, "serve summary is a stdout contract (CI greps serve.log)")
         println!(
             "health: {} probes  {} downs  {} recoveries  ({}/{} workers up)",
             st.probes,
@@ -575,6 +619,7 @@ fn serve(args: &Args) -> anyhow::Result<()> {
             workers
         );
     }
+    // eat-lint: allow(logging, "serve summary is a stdout contract (CI greps serve.log)")
     println!(
         "\nserved {}/{} tasks in {:.2}s wall; total simulated exec {:.1}s",
         metrics.completed(),
@@ -582,10 +627,12 @@ fn serve(args: &Args) -> anyhow::Result<()> {
         t0.elapsed().as_secs_f64(),
         metrics.sim_time(),
     );
+    // eat-lint: allow(logging, "serve summary is a stdout contract (CI greps serve.log)")
     println!("{}", metrics.summary_line());
     if resilient {
         // The serving books mirror the simulator's invariant:
         // dispatched = completed + wasted (+ in-flight, always 0 here).
+        // eat-lint: allow(logging, "serve summary is a stdout contract (CI greps serve.log)")
         println!(
             "books: dispatched {:.1} patch-s = completed {:.1} + wasted {:.1}",
             metrics.dispatched_ps(),
@@ -595,7 +642,7 @@ fn serve(args: &Args) -> anyhow::Result<()> {
     }
     if let (Some(path), Some(tr)) = (args.get("trace"), tracer.as_ref()) {
         let wrote = tr.write_jsonl(path).map(|()| {
-            println!(
+            log_info!(
                 "wrote trace {path} ({} events, {} evicted)",
                 tr.len(),
                 tr.evicted()

@@ -33,6 +33,7 @@
 //! [`exact_residual`] of the RTT against the worker's own spans, so the
 //! worker's recv/reply serialization and the wire both fold into it.
 
+use super::schema;
 use super::trace::{SpanEvent, SpanKind};
 use crate::util::json::Value;
 use crate::util::table::{f, Table};
@@ -548,7 +549,7 @@ impl Analysis {
     /// Machine-readable report (`eat trace analyze --json`).
     pub fn to_json(&self, source: &str) -> Value {
         let mut v = Value::obj();
-        v.set("schema", "eat-trace-analysis-v1");
+        v.set("schema", schema::TRACE_ANALYSIS);
         v.set("source", source);
         v.set("completed", self.tasks.len());
         v.set("dropped", self.dropped);

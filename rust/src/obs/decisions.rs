@@ -23,6 +23,7 @@
 //! `rl::replay::ReplayBuffer` — offline training data for the paper's
 //! attention+diffusion policy.
 
+use super::schema;
 use crate::util::json::{self, Value};
 use std::collections::VecDeque;
 
@@ -401,7 +402,7 @@ impl DecisionLedger {
     /// bit-exactly (shortest-round-trip writer).
     pub fn to_jsonl(&self) -> String {
         let mut meta = Value::obj();
-        meta.set("schema", "eat-decisions-v1")
+        meta.set("schema", schema::DECISIONS)
             .set("records", self.records.len())
             .set("evicted", self.evicted);
         let mut out = meta.to_json();
@@ -437,7 +438,7 @@ impl DecisionLedger {
                 .map_err(|e| anyhow::anyhow!("decisions line {}: {e}", lineno + 1))?;
             if let Some(schema) = v.get("schema").and_then(Value::as_str) {
                 anyhow::ensure!(
-                    schema == "eat-decisions-v1",
+                    schema == self::schema::DECISIONS,
                     "decisions line {}: unsupported schema '{schema}'",
                     lineno + 1
                 );
@@ -618,7 +619,7 @@ impl DecisionAnalysis {
 
     pub fn to_json(&self, source: &str) -> Value {
         let mut v = Value::obj();
-        v.set("schema", "eat-decisions-analysis-v1");
+        v.set("schema", schema::DECISIONS_ANALYSIS);
         v.set("source", source);
         v.set("records", self.records);
         v.set("completed", self.completed);
@@ -895,7 +896,7 @@ pub fn export_experience(ledger: &DecisionLedger) -> anyhow::Result<String> {
         );
     }
     let mut meta = Value::obj();
-    meta.set("schema", "eat-experience-v1")
+    meta.set("schema", schema::EXPERIENCE)
         .set("state_dim", state_dim)
         .set("action_dim", action_dim)
         .set("tuples", recs.len());

@@ -20,7 +20,9 @@
 //! turns into hindsight-regret reports and offline RL experience.
 //! [`metrics`] is a small counter/gauge/histogram registry that
 //! `eat serve --metrics-addr` exposes over plain TCP in the Prometheus
-//! text format. [`log`] is the leveled stderr logger
+//! text format. [`schema`] is the central registry of `eat-*-vN` wire
+//! schema names (the `schema` lint rule bans literals anywhere else).
+//! [`log`] is the leveled stderr logger
 //! (`EAT_LOG=warn|info|debug`, `--quiet`) that replaces the ad-hoc
 //! progress `eprintln!`s.
 //!
@@ -33,6 +35,7 @@ pub mod analyze;
 pub mod decisions;
 pub mod log;
 pub mod metrics;
+pub mod schema;
 pub mod slo;
 pub mod timeseries;
 pub mod trace;

@@ -1,0 +1,96 @@
+//! Central registry of wire/JSONL schema names.
+//!
+//! Every artifact the binary writes (traces, ledgers, time series, bench
+//! reports, SLO reports, lint reports) self-identifies with a `schema`
+//! field so downstream tooling can version-gate its parsers. Those names
+//! used to be string literals duplicated across the emitting and the
+//! consuming modules — a silent-fork hazard: bump one side and the other
+//! keeps writing (or accepting) the stale name. This module is the single
+//! source of truth; the `schema` lint rule rejects any `eat-*-vN` literal
+//! outside it, so a name cannot drift without the change being visible
+//! here. Tests that pin the *serialized* wire format keep their literals
+//! on purpose (they must fail if a constant is edited carelessly).
+//!
+//! Bumping a version is a deliberate act: add a new `-vN+1` constant,
+//! migrate writers, and keep readers accepting the old name for one
+//! release if the artifact is long-lived (ledgers and traces are).
+
+/// Per-task lifecycle span stream written by `--trace` (JSONL).
+pub const TRACE: &str = "eat-trace-v1";
+/// Latency-decomposition report from `eat trace analyze`.
+pub const TRACE_ANALYSIS: &str = "eat-trace-analysis-v1";
+/// Fleet telemetry time series written by `--timeseries` (JSONL).
+pub const TIMESERIES: &str = "eat-timeseries-v1";
+/// Dispatch decision ledger written by `--decisions` (JSONL).
+pub const DECISIONS: &str = "eat-decisions-v1";
+/// Hindsight-regret report from `eat decisions analyze`.
+pub const DECISIONS_ANALYSIS: &str = "eat-decisions-analysis-v1";
+/// Offline-RL experience export from `--export-experience` (JSONL).
+pub const EXPERIENCE: &str = "eat-experience-v1";
+/// Per-tenant error-budget report from `eat slo report`.
+pub const SLO_REPORT: &str = "eat-slo-report-v1";
+/// Bench grid results written by `eat bench --out`.
+pub const BENCH: &str = "eat-bench-v1";
+/// Per-cell regression verdicts from `eat bench compare`.
+pub const BENCH_COMPARE: &str = "eat-bench-compare-v1";
+/// Static-analysis findings from `eat lint --json`.
+pub const LINT: &str = "eat-lint-v1";
+
+/// Every registered schema name, for exhaustive validity checks.
+pub const ALL: &[&str] = &[
+    TRACE,
+    TRACE_ANALYSIS,
+    TIMESERIES,
+    DECISIONS,
+    DECISIONS_ANALYSIS,
+    EXPERIENCE,
+    SLO_REPORT,
+    BENCH,
+    BENCH_COMPARE,
+    LINT,
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_are_unique_and_well_formed() {
+        let mut seen = std::collections::BTreeSet::new();
+        for name in ALL {
+            assert!(seen.insert(*name), "duplicate schema name {name}");
+            let parts: Vec<&str> = name.split('-').collect();
+            assert!(parts.len() >= 3, "{name}: want eat-<name>-vN");
+            assert_eq!(parts[0], "eat", "{name}: must be eat-prefixed");
+            let ver = parts[parts.len() - 1];
+            assert!(
+                ver.len() >= 2
+                    && ver.starts_with('v')
+                    && ver[1..].bytes().all(|b| b.is_ascii_digit()),
+                "{name}: version suffix must be vN"
+            );
+            for seg in &parts[1..parts.len() - 1] {
+                assert!(
+                    !seg.is_empty()
+                        && seg
+                            .bytes()
+                            .all(|b| b.is_ascii_lowercase() || b.is_ascii_digit()),
+                    "{name}: segment {seg:?} must be lowercase alphanumeric"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn wire_names_are_pinned() {
+        // Renaming a constant must break this test: the serialized names
+        // are a compatibility contract with checked-in artifacts
+        // (BENCH_sim.json) and external consumers.
+        assert_eq!(TRACE, "eat-trace-v1");
+        assert_eq!(TIMESERIES, "eat-timeseries-v1");
+        assert_eq!(DECISIONS, "eat-decisions-v1");
+        assert_eq!(EXPERIENCE, "eat-experience-v1");
+        assert_eq!(BENCH, "eat-bench-v1");
+        assert_eq!(LINT, "eat-lint-v1");
+    }
+}

@@ -12,6 +12,7 @@
 //! [`SloReport::check`] fails when any tenant exhausted its budget, so
 //! the command is CI-gateable by exit code.
 
+use crate::obs::schema;
 use crate::obs::trace::{SpanEvent, SpanKind, NO_TENANT};
 use crate::obs::FleetSeries;
 use crate::qos::TenantsConfig;
@@ -323,7 +324,7 @@ impl SloReport {
     /// Machine-readable document (`eat-slo-report-v1`).
     pub fn to_json(&self, source: &str) -> Value {
         let mut v = Value::obj();
-        v.set("schema", "eat-slo-report-v1")
+        v.set("schema", schema::SLO_REPORT)
             .set("source", source)
             .set("fast_window", self.fast_window)
             .set("slow_window", self.slow_window)

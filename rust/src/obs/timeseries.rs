@@ -19,6 +19,7 @@
 //! field adds, in caller order, so an N-shard `--threads` sweep merged
 //! in slot order reproduces the single-shard series bit-for-bit.
 
+use super::schema;
 use crate::util::json::{self, Value};
 use std::collections::VecDeque;
 
@@ -227,7 +228,7 @@ impl FleetSeries {
     /// JSON object per window, oldest first.
     pub fn to_jsonl(&self) -> String {
         let mut meta = Value::obj();
-        meta.set("schema", "eat-timeseries-v1")
+        meta.set("schema", schema::TIMESERIES)
             .set("cadence", self.cadence)
             .set("windows", self.samples.len())
             .set("evicted", self.evicted)
@@ -259,7 +260,7 @@ impl FleetSeries {
         let meta = json::parse(meta_line).map_err(|e| anyhow::anyhow!("meta line: {e}"))?;
         let schema = meta.req("schema")?.as_str().unwrap_or("");
         anyhow::ensure!(
-            schema == "eat-timeseries-v1",
+            schema == self::schema::TIMESERIES,
             "unsupported time-series schema '{schema}'"
         );
         let cadence = meta

@@ -10,6 +10,7 @@
 //! and counted; the analyzer skips tasks whose lifecycle is incomplete
 //! rather than mis-attributing their latency.
 
+use super::schema;
 use crate::util::json::{self, Value};
 
 /// Maximum gang members stored inline per event. Gangs beyond this are
@@ -392,7 +393,7 @@ impl TraceRecorder {
     /// corrupt" from "this lifecycle lost its head to ring wrap-around".
     pub fn to_jsonl(&self) -> String {
         let mut meta = Value::obj();
-        meta.set("schema", "eat-trace-v1")
+        meta.set("schema", schema::TRACE)
             .set("events", self.buf.len())
             .set("evicted", self.evicted);
         let mut out = meta.to_json();
@@ -438,7 +439,7 @@ pub fn parse_jsonl_doc(text: &str) -> anyhow::Result<TraceDoc> {
             .map_err(|e| anyhow::anyhow!("trace line {}: {e}", lineno + 1))?;
         if let Some(schema) = v.get("schema").and_then(Value::as_str) {
             anyhow::ensure!(
-                schema == "eat-trace-v1",
+                schema == self::schema::TRACE,
                 "trace line {}: unsupported trace schema '{schema}'",
                 lineno + 1
             );

@@ -3,6 +3,7 @@
 //! sampling a batch is a gather with no per-transition allocation — this
 //! sits on the training hot path (§Perf).
 
+use crate::obs::schema;
 use crate::util::rng::Pcg64;
 
 /// Ring buffer of (s, a, r, s', done) transitions with fixed dims.
@@ -102,7 +103,7 @@ impl ReplayBuffer {
                 .map_err(|e| anyhow::anyhow!("experience line {}: {e}", lineno + 1))?;
             if let Some(schema) = v.get("schema").and_then(Value::as_str) {
                 anyhow::ensure!(
-                    schema == "eat-experience-v1",
+                    schema == self::schema::EXPERIENCE,
                     "experience line {}: unsupported schema '{schema}'",
                     lineno + 1
                 );

@@ -196,6 +196,7 @@ impl Cluster {
             }
             (Some(_), Some(g)) => {
                 let gid = g.0;
+                // eat-lint: allow(unwrap, "index invariant: a server's gang ref always resolves; cross-checked by debug_asserts")
                 let gi = self.gangs.get_mut(&gid).expect("gang missing from index");
                 let was_intact = gi.is_intact();
                 gi.idle_count -= 1;
@@ -219,6 +220,7 @@ impl Cluster {
                             self.idle_broken.insert(mkey);
                         }
                     }
+                    // eat-lint: allow(unwrap, "index invariant: the gang was just looked up above")
                     self.gangs.get_mut(&gid).expect("gang vanished").members = members;
                     let had = self.idle_intact.remove(&key);
                     debug_assert!(had, "server {id} missing from idle_intact");
@@ -257,6 +259,7 @@ impl Cluster {
             }
             (Some(_), Some(g)) => {
                 let gid = g.0;
+                // eat-lint: allow(unwrap, "index invariant: a server's gang ref always resolves; cross-checked by debug_asserts")
                 let gi = self.gangs.get_mut(&gid).expect("gang missing from index");
                 gi.idle_count += 1;
                 if gi.is_intact() {
@@ -272,6 +275,7 @@ impl Cluster {
                             self.idle_intact.insert(mkey);
                         }
                     }
+                    // eat-lint: allow(unwrap, "index invariant: the gang was just looked up above")
                     self.gangs.get_mut(&gid).expect("gang vanished").members = members;
                     self.reuse.entry((model.0, size)).or_default().insert(gid);
                     self.idle_intact.insert(key);
@@ -291,6 +295,7 @@ impl Cluster {
         let Some(g) = self.servers[id].gang else {
             return;
         };
+        // eat-lint: allow(unwrap, "index invariant: a server's gang ref always resolves; cross-checked by debug_asserts")
         let gi = self.gangs.get_mut(&g.0).expect("gang missing from index");
         gi.members.retain(|&m| m != id);
         if gi.members.is_empty() {
@@ -383,6 +388,7 @@ impl Cluster {
         //    loaded on any down server — the `down_loaded == 0` fast-path
         //    precondition — an intact gang cannot contain a down member).
         if let Some(set) = self.reuse.get(&(model.0, count)) {
+            // eat-lint: allow(unwrap, "index invariant: empty reuse sets are removed eagerly, never left behind")
             let gid = *set.iter().next().expect("empty reuse entry");
             return Selection::Reuse(self.gangs[&gid].members.clone());
         }
@@ -472,6 +478,7 @@ impl Cluster {
         // Tie-break: LRU (oldest idle first), then id for determinism.
         scored.sort_by(|a, b| {
             a.0.cmp(&b.0)
+                // eat-lint: allow(unwrap, "scores are sums/min of finite inputs; NaN cannot reach the sort")
                 .then(a.1.partial_cmp(&b.1).unwrap())
                 .then(a.2.cmp(&b.2))
         });
@@ -493,6 +500,7 @@ impl Cluster {
         now: f64,
     ) -> GangId {
         let gang = if reuse {
+            // eat-lint: allow(unwrap, "reuse selection only returns members of an intact gang")
             self.servers[server_ids[0]].gang.expect("reuse without gang")
         } else {
             let g = self.fresh_gang_id();

@@ -468,6 +468,7 @@ impl EdgeEnv {
     pub fn take_series(&mut self) -> Option<FleetSeries> {
         if self.sampler.is_some() {
             let (gauges, wasted, cum) = self.fleet_gauges();
+            // eat-lint: allow(unwrap, "guarded by the is_some() check directly above")
             let sampler = self.sampler.as_mut().unwrap();
             sampler.advance(self.now, gauges, wasted, &cum);
             sampler.flush(gauges, wasted, &cum);
@@ -772,6 +773,7 @@ impl EdgeEnv {
             return;
         }
         let (gauges, wasted, cum) = self.fleet_gauges();
+        // eat-lint: allow(unwrap, "guarded by the is_none() early return above")
         let sampler = self.sampler.as_mut().expect("checked above");
         sampler.advance(self.now, gauges, wasted, &cum);
     }
@@ -1014,6 +1016,7 @@ impl EdgeEnv {
             state: self.state(),
             action,
             candidates,
+            // eat-lint: allow(unwrap, "the candidate loop always records the action it chose")
             chosen: chosen.expect("dispatch decision always has its chosen candidate"),
             reward: 0.0,           // filled once the Scheduled is built
             outcome: None,
@@ -1109,6 +1112,7 @@ impl EdgeEnv {
             d.reward = self.reward_for(&sch);
             self.decisions
                 .as_mut()
+                // eat-lint: allow(unwrap, "a decision is only captured while the recorder is enabled")
                 .expect("decision captured implies recorder present")
                 .record(d)
         });
@@ -1143,6 +1147,7 @@ impl EdgeEnv {
             }
             self.metrics.observe_dispatched_work(duration * sch.servers.len() as f64);
             let now = self.now;
+            // eat-lint: allow(unwrap, "guarded by the faults.is_some() branch condition above")
             let fs = self.faults.as_mut().expect("checked above");
             let seq = fs.next_seq;
             fs.next_seq += 1;
@@ -1172,6 +1177,7 @@ impl EdgeEnv {
                 // completes (or exhausts retries): join later by task id.
                 self.decisions
                     .as_mut()
+                    // eat-lint: allow(unwrap, "a decision is only captured while the recorder is enabled")
                     .expect("decision captured implies recorder present")
                     .defer(sch.task_id, dseq);
             }
@@ -1196,6 +1202,7 @@ impl EdgeEnv {
             // the realized outcome joins immediately.
             self.decisions
                 .as_mut()
+                // eat-lint: allow(unwrap, "a decision is only captured while the recorder is enabled")
                 .expect("decision captured implies recorder present")
                 .resolve_now(
                     dseq,

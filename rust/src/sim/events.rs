@@ -58,6 +58,7 @@ impl EventQueue {
             if f64::from_bits(*t) > horizon {
                 break;
             }
+            // eat-lint: allow(unwrap, "pop follows a successful peek on the same heap")
             let Reverse((_, key)) = self.heap.pop().expect("peeked");
             out.push(key);
         }

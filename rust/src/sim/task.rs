@@ -71,6 +71,7 @@ impl Workload {
     /// silently never arrive.
     pub fn fixed(arrivals: &[(f64, usize, u32)]) -> Workload {
         let mut arrivals = arrivals.to_vec();
+        // eat-lint: allow(unwrap, "a NaN arrival time is a caller bug worth a loud panic")
         arrivals.sort_by(|a, b| a.0.partial_cmp(&b.0).expect("NaN arrival"));
         let tasks = arrivals
             .iter()
@@ -94,6 +95,7 @@ impl Workload {
     pub fn from_tasks(mut tasks: Vec<Task>) -> Workload {
         let sorted = tasks.windows(2).all(|w| w[0].arrival <= w[1].arrival);
         if !sorted {
+            // eat-lint: allow(unwrap, "a NaN arrival time is a caller bug worth a loud panic")
             tasks.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).expect("NaN arrival"));
         }
         Workload { tasks }

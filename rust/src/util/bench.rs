@@ -93,6 +93,7 @@ impl Bencher {
             p99_ns: percentile(&samples, 0.99),
             std_ns: w.std(),
         };
+        // eat-lint: allow(logging, "cargo-bench style per-case result line belongs on stdout")
         println!(
             "bench {:<44} {:>12.1} ns/iter  p50 {:>12.1}  p99 {:>12.1}  ({} iters)",
             res.name, res.mean_ns, res.p50_ns, res.p99_ns, res.iters
